@@ -1,0 +1,93 @@
+//! Mapping explorer: sweep the five data mappings (Table VII / VIII) over
+//! every convolution layer of ResNet-18 and print the Table VIII-style
+//! rows, plus a bit-accurate endurance measurement for the CS vs dense
+//! layouts on a real dot-product workload.
+//!
+//!     cargo run --release --example mapping_explorer [layer_index]
+
+use fat_imc::addition::scheme;
+use fat_imc::array::cma::Cma;
+use fat_imc::array::sacu::{DotLayout, Sacu, WeightRegister};
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::mapping::schemes::{evaluate_all, HwParams, MappingKind};
+use fat_imc::nn::resnet::resnet18_conv_layers;
+use fat_imc::report::{ratio, Table};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let arg: Option<usize> = std::env::args().nth(1).and_then(|s| s.parse().ok());
+    let layers = resnet18_conv_layers();
+    let fat = scheme(SaKind::Fat);
+    let hw = HwParams::default();
+
+    let selection: Vec<usize> = match arg {
+        Some(i) if i >= 1 && i <= layers.len() => vec![i - 1],
+        _ => vec![1, 5, 9, 13], // a spread of stages incl. layer 10 (idx 9)
+    };
+
+    for idx in selection {
+        let layer = layers[idx];
+        let costs = evaluate_all(&layer, &hw, fat.as_ref());
+        let direct = costs[0].total_ns();
+        let mut t = Table::new(
+            &format!(
+                "{} — N={} C={} {}x{} KN={} S={} (J={}, I={})",
+                layer.name, layer.n, layer.c, layer.h, layer.w, layer.kn, layer.stride,
+                layer.j_dim(), layer.i_dim()
+            ),
+            &["mapping", "x-load(ns)", "w-load(ns)", "compute(ns)", "total(ns)",
+              "speedup", "par.cols", "util", "energy(nJ)", "maxwrite"],
+        );
+        for c in &costs {
+            t.row(vec![
+                c.kind.name().into(),
+                format!("{:.0}", c.x_load_ns),
+                format!("{:.0}", c.w_load_ns),
+                format!("{:.0}", c.compute_ns),
+                format!("{:.0}", c.total_ns()),
+                ratio(direct / c.total_ns()),
+                format!("{}/256", c.parallel_cols),
+                format!("{:.1}%", c.utilization * 100.0),
+                format!("{:.1}", c.energy_pj() / 1e3),
+                format!("{}x", c.max_cell_write_factor),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // The winner must be CS everywhere; print the measured (not modeled)
+    // endurance difference on an actual in-array workload.
+    let layer10 = layers[9];
+    let best = evaluate_all(&layer10, &hw, fat.as_ref())
+        .into_iter()
+        .min_by(|a, b| a.total_ns().partial_cmp(&b.total_ns()).unwrap())
+        .unwrap();
+    assert_eq!(best.kind, MappingKind::Img2ColCs, "CS must win on layer 10");
+
+    println!("bit-accurate endurance check (2000 accumulations per layout):");
+    let mut rng = Rng::new(3);
+    for (name, layout) in [("dense (IS)", DotLayout::dense(8)), ("interval (CS)", DotLayout::interval(8))] {
+        let sacu = Sacu::new(layout, true);
+        let mut cma = Cma::with_endurance();
+        sacu.init_cma(&mut cma);
+        let n_ops = layout.max_slots();
+        for j in 0..n_ops {
+            let vals: Vec<u64> = (0..64).map(|_| rng.below(256)).collect();
+            sacu.load_slot(&mut cma, j, &vals);
+        }
+        // many dot products against fresh weight vectors (as a layer does)
+        let fat = scheme(SaKind::Fat);
+        for _ in 0..(2000 / n_ops) {
+            let w = rng.ternary_vec(n_ops, 0.5);
+            let reg = WeightRegister::load(&w);
+            sacu.sparse_dot(&mut cma, fat.as_ref(), &reg, 64);
+        }
+        let e = cma.endurance.as_ref().unwrap();
+        println!(
+            "  {name:<14} max single-cell writes = {:>5}, balance factor = {:.1}",
+            e.max_cell_writes(),
+            e.balance_factor()
+        );
+    }
+    println!("mapping_explorer OK");
+}

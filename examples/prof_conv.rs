@@ -1,0 +1,21 @@
+//! Profiling workload for the §Perf pass: 100 conv layers on the chip.
+//! Used with `perf record -g ./target/release/examples/prof_conv`.
+
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::nn::layers::TernaryFilter;
+use fat_imc::nn::resnet::ConvLayer;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBEEF);
+    let layer = ConvLayer { name: "hot", n: 2, c: 16, h: 16, w: 16, kn: 16, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let mut x = Tensor4::zeros(2, 16, 16, 16);
+    x.fill_random_ints(&mut rng, 0, 256);
+    let f = TernaryFilter::new(16, 16, 3, 3, rng.ternary_vec(16 * 144, 0.6));
+    let chip = FatChip::new(ChipConfig::fat());
+    for _ in 0..100 {
+        std::hint::black_box(chip.run_conv_layer(&x, &f, &layer));
+    }
+    println!("prof_conv done");
+}

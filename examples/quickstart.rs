@@ -1,0 +1,71 @@
+//! Quickstart: a sparse ternary dot product on one Computing Memory Array,
+//! cross-checked against the AOT-compiled Pallas kernel via PJRT.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use fat_imc::addition::scheme;
+use fat_imc::array::cma::Cma;
+use fat_imc::array::sacu::{DotLayout, Sacu, WeightRegister};
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::runtime::engine::Engine;
+use fat_imc::runtime::verify::verify_ternary_gemm;
+use fat_imc::ternary;
+use fat_imc::testutil::Rng;
+
+fn main() -> Result<()> {
+    // 1. Ternarize a small weight vector (eq. 7) and inspect its sparsity.
+    let mut rng = Rng::new(7);
+    let raw: Vec<f32> = (0..16).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let th = ternary::twn_threshold(&raw);
+    let weights = ternary::ternarize_all(&raw, -th, th);
+    println!("ternary weights: {weights:?}");
+    println!("sparsity: {:.0}%", ternary::sparsity(&weights) * 100.0);
+
+    // 2. Load activations into a CMA (column-major bit-serial) and run the
+    //    SACU's three-stage sparse dot product with FAT fast addition.
+    let sacu = Sacu::new(DotLayout::interval(8), /*skip_zeros=*/ true);
+    let mut cma = Cma::new();
+    sacu.init_cma(&mut cma);
+    let n_cols = 4; // four independent dot products, one per memory column
+    let activations: Vec<Vec<u64>> = (0..weights.len())
+        .map(|_| (0..n_cols).map(|_| rng.below(256)).collect())
+        .collect();
+    for (j, vals) in activations.iter().enumerate() {
+        sacu.load_slot(&mut cma, j, vals);
+    }
+    let fat = scheme(SaKind::Fat);
+    let reg = WeightRegister::load(&weights);
+    let dot = sacu.sparse_dot(&mut cma, fat.as_ref(), &reg, n_cols);
+
+    // 3. Check against a plain dot product.
+    for col in 0..n_cols {
+        let want: i64 = weights
+            .iter()
+            .zip(&activations)
+            .map(|(&w, row)| w as i64 * row[col] as i64)
+            .sum();
+        assert_eq!(dot.values[col] as i64, want, "column {col}");
+    }
+    println!(
+        "in-array dot products {:?} (exact), {} adds, {} null ops skipped",
+        dot.values, dot.adds, dot.skipped
+    );
+    println!(
+        "simulated: {:.1} ns, {:.1} pJ, {} senses, {} writes",
+        cma.stats.latency_ns, cma.stats.energy_pj, cma.stats.senses, cma.stats.writes
+    );
+
+    // 4. Cross-check the full chip against the XLA-executed Pallas kernel.
+    let engine = Engine::load(&Engine::default_dir())?;
+    let rep = verify_ternary_gemm(&engine, 42, 0.6)?;
+    println!(
+        "PJRT cross-check ({} platform): {} elements, exact = {}",
+        engine.platform(),
+        rep.elements,
+        rep.exact
+    );
+    println!("quickstart OK");
+    Ok(())
+}

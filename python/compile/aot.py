@@ -1,0 +1,118 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``artifacts/``:
+
+  ternary_gemm.hlo.txt   (M=128, K=288, N=32) ternary GEMM tile (L1 kernel)
+  dense_gemm.hlo.txt     same-shape dense f32 GEMM (baseline)
+  twn_cnn.hlo.txt        full TWN CNN forward (L2 model)
+  manifest.txt           machine-readable signature registry for the rust
+                         runtime: ``name|in=f32[2,3],...|out=f32[4,10]``
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ternary_gemm
+
+# Fixed export geometry of the GEMM tile artifact.  K = 288 = 32*3*3 is a
+# realistic J (= C*KH*KW) for a small conv layer; M covers 128 output pixels
+# (memory columns), N covers 32 filters.
+GEMM_M, GEMM_K, GEMM_N = 128, 288, 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals_in, avals_out) -> str:
+    def fmt(a):
+        dt = {"float32": "f32", "int8": "i8", "int32": "i32"}[str(a.dtype)]
+        return f"{dt}[{','.join(str(d) for d in a.shape)}]"
+
+    ins = ";".join(fmt(a) for a in avals_in)
+    outs = ";".join(fmt(a) for a in avals_out)
+    return f"in={ins}|out={outs}"
+
+
+def export_fn(fn, specs, name: str, outdir: str, manifest: list) -> None:
+    """Lower ``fn`` at ``specs`` and write ``<name>.hlo.txt`` + manifest row."""
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = lowered.out_info
+    # out_info is a pytree of ShapeDtypeStruct; flatten it.
+    flat, _ = jax.tree.flatten(out_avals)
+    manifest.append(f"{name}|{_sig(specs, flat)}")
+    print(f"  {name}: {len(text)} chars -> {path}")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="FAT AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    manifest: list[str] = []
+
+    print("[aot] lowering L1 ternary GEMM tile")
+    export_fn(
+        lambda x, w: (ternary_gemm(x, w),),
+        (f32(GEMM_M, GEMM_K), f32(GEMM_K, GEMM_N)),
+        "ternary_gemm",
+        outdir,
+        manifest,
+    )
+
+    print("[aot] lowering dense GEMM baseline")
+    export_fn(
+        lambda x, w: (model.dense_gemm(x, w),),
+        (f32(GEMM_M, GEMM_K), f32(GEMM_K, GEMM_N)),
+        "dense_gemm",
+        outdir,
+        manifest,
+    )
+
+    print("[aot] lowering L2 TWN CNN forward")
+    d = model.DIMS
+    specs = [f32(d.batch, d.in_ch, d.hw, d.hw)]
+    specs += [f32(*shape) for (_, shape, _) in model.twn_cnn_param_shapes(d)]
+    export_fn(
+        lambda *a: (model.twn_cnn_forward(*a),),
+        tuple(specs),
+        "twn_cnn",
+        outdir,
+        manifest,
+    )
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(manifest)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spot (multiply-free ternary GEMM).
+from .ternary_gemm import ternary_gemm, ternary_matvec
+from .ternary_conv import img2col, ternary_conv2d
+
+__all__ = ["ternary_gemm", "ternary_matvec", "img2col", "ternary_conv2d"]

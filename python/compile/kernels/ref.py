@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the FAT ternary kernels.
+
+Every Pallas kernel in this package is validated against these references at
+build time (pytest).  The oracles are written in the most obvious way —
+an actual multiply by the ternary weights — precisely because the kernels
+avoid that multiply (the paper's point): agreement between the two is the
+correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ternary_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference ternary GEMM: ``y = x @ w`` with ``w`` in {-1, 0, +1}.
+
+    ``x``: (M, K) float32 or int32 activations.
+    ``w``: (K, N) int8 ternary weights.
+    Returns (M, N) in the dtype of ``x``.
+    """
+    return jnp.matmul(x, w.astype(x.dtype))
+
+
+def ternary_matvec_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference ternary mat-vec: (M, K) @ (K,) -> (M,)."""
+    return jnp.matmul(x, w.astype(x.dtype))
+
+
+def quantize_ternary_ref(w: jnp.ndarray, th_low: float, th_high: float) -> jnp.ndarray:
+    """Eq. (7) of the paper: threshold ternarization to int8 {-1, 0, +1}."""
+    return jnp.where(
+        w > th_high, jnp.int8(1), jnp.where(w < th_low, jnp.int8(-1), jnp.int8(0))
+    ).astype(jnp.int8)
+
+
+def img2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """Img2Col (Fig. 8): (B, C, H, W) -> (B * OH * OW, C * KH * KW).
+
+    Row i of the result is the flattened receptive field of output pixel i
+    (batch-major, then row-major over output pixels); column order is
+    (c, kh, kw) — the same J ordering the rust mapper uses.
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = xp[:, :, i * stride : i * stride + kh, j * stride : j * stride + kw]
+            cols.append(patch.reshape(b, c * kh * kw))
+    # stacked as (OH*OW, B, J) -> (B, OH*OW, J) -> (B*OH*OW, J)
+    out = jnp.stack(cols, axis=0).transpose(1, 0, 2)
+    return out.reshape(b * oh * ow, c * kh * kw)
+
+
+def ternary_conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, stride: int, pad: int
+) -> jnp.ndarray:
+    """Reference ternary conv: (B,C,H,W) * (KN,C,KH,KW int8) -> (B,KN,OH,OW)."""
+    b, c, h, wdt = x.shape
+    kn, _, kh, kw = w.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wdt + 2 * pad - kw) // stride + 1
+    ax = img2col_ref(x, kh, kw, stride, pad)  # (B*OH*OW, J)
+    aw = w.reshape(kn, c * kh * kw).T  # (J, KN)
+    y = ternary_gemm_ref(ax, aw)  # (B*OH*OW, KN)
+    return y.reshape(b, oh, ow, kn).transpose(0, 3, 1, 2)

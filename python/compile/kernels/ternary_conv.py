@@ -1,0 +1,47 @@
+"""Ternary convolution = Img2Col + ternary GEMM (paper §III-C).
+
+Img2Col (Fig. 8) turns the sliding-window convolution into the GEMM the
+Combined-Stationary mapping wants: activations become an (N·I, J) matrix
+whose columns map to memory columns and whose J = C·KH·KW rows map to memory
+rows.  The GEMM itself is the multiply-free L1 Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ternary_gemm import ternary_gemm
+
+
+def img2col(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """(B, C, H, W) -> (B*OH*OW, C*KH*KW), J ordered (c, kh, kw)."""
+    b, c, h, w = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+    )  # (B, C*KH*KW, OH, OW), feature dim ordered (c, kh, kw)
+    _, j, oh, ow = patches.shape
+    return patches.transpose(0, 2, 3, 1).reshape(b * oh * ow, j)
+
+
+def ternary_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 1,
+    **gemm_kw,
+) -> jnp.ndarray:
+    """Ternary conv: (B,C,H,W) f32 * (KN,C,KH,KW) ternary f32 -> (B,KN,OH,OW)."""
+    b, c, h, wdt = x.shape
+    kn, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wdt + 2 * pad - kw) // stride + 1
+
+    ax = img2col(x, kh, kw, stride, pad)  # (B*OH*OW, J)
+    aw = w.reshape(kn, c * kh * kw).T  # (J, KN)
+    y = ternary_gemm(ax, aw, **gemm_kw)  # (B*OH*OW, KN)
+    return y.reshape(b, oh, ow, kn).transpose(0, 3, 1, 2)

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: ternary GEMM — the FAT compute hot-spot.
+
+The paper's core insight is that a ternary-weight dot product needs *no
+multiplier*: it is two masked accumulations (the +1 partial sum and the -1
+partial sum) followed by one subtraction — exactly the SACU three-stage
+workflow of Fig. 5(d).  This kernel expresses that insight for a TPU-style
+memory hierarchy:
+
+- the N·I (batch x output-pixel) dimension — the paper's "memory columns" —
+  is tiled across the minor axis (lanes);
+- the reduction dimension J — the paper's "memory rows" — is the sequential
+  grid axis, mirroring the HBM->VMEM schedule the paper implements with the
+  CMA grid assignment of Fig. 9;
+- the weight path never multiplies by a weight *value*: the weights only
+  select (`w == +1` / `w == -1`), and the two 0/1 masks drive the
+  accumulations.  On a real MXU the mask-matmul form keeps the systolic
+  array busy with {0,1} operands; under ``interpret=True`` (required for the
+  CPU PJRT plugin — see DESIGN.md) the same HLO runs everywhere.
+
+Weights are carried as float32 holding exact {-1.0, 0.0, +1.0}: f32 keeps
+the rust <-> PJRT interchange to a single dtype and additions of
+integer-valued f32 below 2^24 are exact, so the rust bit-serial simulator
+can be cross-checked bit-for-bit against this kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ternary_gemm_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K (reduction) tiles.
+
+    Stage 1 (SACU "+1 pass"):  acc_pos += x selected by (w == +1)
+    Stage 2 (SACU "-1 pass"):  acc_neg += x selected by (w == -1)
+    Stage 3 (SACU subtract) :  out = acc_pos - acc_neg
+    The subtraction is folded into the accumulation (pos - neg per K tile);
+    associativity over exact integer-valued f32 makes this equivalent.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # Masked accumulation: weights act as row-activation gates (Table III),
+    # never as multiplicands.
+    pos_mask = (w == 1.0).astype(x.dtype)
+    neg_mask = (w == -1.0).astype(x.dtype)
+    acc_pos = jnp.dot(x, pos_mask, preferred_element_type=o_ref.dtype)
+    acc_neg = jnp.dot(x, neg_mask, preferred_element_type=o_ref.dtype)
+    o_ref[...] += acc_pos - acc_neg
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def ternary_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Ternary GEMM ``y = x @ w`` with ``w`` in {-1, 0, +1} (as f32).
+
+    ``x``: (M, K) f32 activations; ``w``: (K, N) f32 ternary weights.
+    Shapes are zero-padded up to block multiples — padding weights with 0 is
+    a null operation (the SACU would simply never activate those rows).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"reduction mismatch: {k} vs {k2}"
+
+    mp, kp, np_ = _round_up(m, block_m), _round_up(k, block_k), _round_up(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_ternary_gemm_kernel, k_steps=k_steps),
+        grid=(mp // block_m, np_ // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def ternary_matvec(x: jnp.ndarray, w: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Ternary mat-vec (M, K) @ (K,) -> (M,): one-column GEMM."""
+    return ternary_gemm(x, w[:, None], **kw)[:, 0]

@@ -1,0 +1,88 @@
+"""L2: the TWN model — ternary CNN forward pass built on the L1 kernels.
+
+A small TWN CNN in the style the paper accelerates (ternary conv blocks with
+folded batch-norm + ReLU, global average pooling, a ternary classifier head).
+The weights of every conv / fc layer are ternary {-1, 0, +1} (carried as
+exact-integer f32, see kernels.ternary_gemm); batch-norm is folded to a
+per-channel scale + shift, matching the paper's DPU which performs only BN
+and activation (no quantizer — weights arrive pre-ternarized, §III-A2).
+
+All parameters are *inputs* of the lowered function so the rust coordinator
+can generate ternary weights at any sparsity and cross-validate the
+bit-serial simulator against the XLA execution of this exact graph.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .kernels import ternary_conv2d, ternary_gemm
+
+
+class TwnCnnDims(NamedTuple):
+    """Static geometry of the exported TWN CNN."""
+
+    batch: int = 4
+    in_ch: int = 3
+    hw: int = 32
+    c1: int = 16
+    c2: int = 32
+    c3: int = 64
+    classes: int = 10
+
+
+DIMS = TwnCnnDims()
+
+
+def twn_block(x, w, gamma, beta, stride):
+    """One TWN basic block: ternary conv -> folded BN -> ReLU (eqs. 4-6)."""
+    y = ternary_conv2d(x, w, stride=stride, pad=1)
+    y = y * gamma[None, :, None, None] + beta[None, :, None, None]
+    return jnp.maximum(y, 0.0)
+
+
+def twn_cnn_forward(
+    x,
+    w1, g1, b1,
+    w2, g2, b2,
+    w3, g3, b3,
+    wfc, bfc,
+):
+    """Forward pass of the exported TWN CNN.
+
+    x:   (B, 3, 32, 32) f32
+    w1:  (c1, 3, 3, 3)   ternary   g1/b1: (c1,) BN scale/shift
+    w2:  (c2, c1, 3, 3)  ternary, stride 2
+    w3:  (c3, c2, 3, 3)  ternary, stride 2
+    wfc: (c3, classes)   ternary   bfc: (classes,)
+    returns logits (B, classes).
+    """
+    y = twn_block(x, w1, g1, b1, stride=1)  # (B, c1, 32, 32)
+    y = twn_block(y, w2, g2, b2, stride=2)  # (B, c2, 16, 16)
+    y = twn_block(y, w3, g3, b3, stride=2)  # (B, c3,  8,  8)
+    y = y.mean(axis=(2, 3))  # global average pool -> (B, c3)
+    return ternary_gemm(y, wfc) + bfc[None, :]  # (B, classes)
+
+
+def twn_cnn_param_shapes(d: TwnCnnDims = DIMS):
+    """(name, shape, is_ternary) for every parameter, in call order."""
+    return [
+        ("w1", (d.c1, d.in_ch, 3, 3), True),
+        ("g1", (d.c1,), False),
+        ("b1", (d.c1,), False),
+        ("w2", (d.c2, d.c1, 3, 3), True),
+        ("g2", (d.c2,), False),
+        ("b2", (d.c2,), False),
+        ("w3", (d.c3, d.c2, 3, 3), True),
+        ("g3", (d.c3,), False),
+        ("b3", (d.c3,), False),
+        ("wfc", (d.c3, d.classes), True),
+        ("bfc", (d.classes,), False),
+    ]
+
+
+def dense_gemm(x, w):
+    """Dense f32 GEMM baseline (what an INT8/FP accelerator would run)."""
+    return jnp.matmul(x, w)

@@ -1,0 +1,75 @@
+"""AOT path tests: HLO text artifacts are well-formed and deterministic."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PYDIR = os.path.dirname(HERE)
+REPO = os.path.dirname(PYDIR)
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+def run_aot(outdir):
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", outdir],
+        cwd=PYDIR,
+        check=True,
+        capture_output=True,
+    )
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    run_aot(out)
+    return out
+
+
+def test_artifacts_exist(built):
+    for name in ("ternary_gemm", "dense_gemm", "twn_cnn"):
+        path = os.path.join(built, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_format(built):
+    lines = open(os.path.join(built, "manifest.txt")).read().strip().splitlines()
+    assert len(lines) == 3
+    names = set()
+    for line in lines:
+        name, ins, outs = line.split("|")
+        names.add(name)
+        assert ins.startswith("in=") and outs.startswith("out=")
+        # every entry is dtype[shape]
+        for sig in ins[3:].split(";"):
+            assert "[" in sig and sig.endswith("]"), sig
+    assert names == {"ternary_gemm", "dense_gemm", "twn_cnn"}
+
+
+def test_twn_cnn_arity(built):
+    line = [
+        l for l in open(os.path.join(built, "manifest.txt")) if l.startswith("twn_cnn|")
+    ][0]
+    ins = line.split("|")[1][3:]
+    # count top-level entries: input + 11 params
+    assert ins.count("[") == 12
+
+
+def test_no_custom_calls(built):
+    """interpret=True must lower pallas to plain HLO (no Mosaic custom-call)."""
+    for name in ("ternary_gemm", "twn_cnn"):
+        text = open(os.path.join(built, f"{name}.hlo.txt")).read()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_deterministic(built, tmp_path):
+    out2 = str(tmp_path / "again")
+    run_aot(out2)
+    a = open(os.path.join(built, "ternary_gemm.hlo.txt")).read()
+    b = open(os.path.join(out2, "ternary_gemm.hlo.txt")).read()
+    assert a == b

@@ -1,0 +1,175 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+The Pallas ternary GEMM must agree with an actual multiply by the ternary
+weights, over randomized shapes / sparsities / block configurations
+(hypothesis drives the sweep).  Additions of integer-valued f32 are exact
+below 2^24, so integer-valued cases are compared exactly.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import img2col, ternary_gemm, ternary_matvec, ternary_conv2d
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def ternary(rng, shape, sparsity=0.5):
+    """Random ternary weights (as exact f32) at a given zero fraction."""
+    w = rng.choice([-1.0, 1.0], size=shape)
+    mask = rng.random(shape) < sparsity
+    return jnp.asarray(np.where(mask, 0.0, w), dtype=jnp.float32)
+
+
+class TestTernaryGemm:
+    def test_identity_weights(self):
+        x = jnp.arange(16.0).reshape(4, 4)
+        w = jnp.eye(4, dtype=jnp.float32)
+        np.testing.assert_array_equal(ternary_gemm(x, w), x)
+
+    def test_all_zero_weights_give_zero(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 32)), dtype=jnp.float32)
+        w = jnp.zeros((32, 8), dtype=jnp.float32)
+        np.testing.assert_array_equal(ternary_gemm(x, w), jnp.zeros((8, 8)))
+
+    def test_negation_weights(self):
+        x = jnp.arange(12.0).reshape(3, 4)
+        w = -jnp.eye(4, dtype=jnp.float32)
+        np.testing.assert_array_equal(ternary_gemm(x, w), -x)
+
+    def test_matches_ref_exact_integers(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.integers(-128, 128, size=(64, 96)), dtype=jnp.float32)
+        w = ternary(rng, (96, 48), sparsity=0.6)
+        got = ternary_gemm(x, w)
+        want = ref.ternary_gemm_ref(x, w)
+        np.testing.assert_array_equal(got, want)  # integer-exact
+
+    def test_matches_ref_float(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(40, 70)), dtype=jnp.float32)
+        w = ternary(rng, (70, 30), sparsity=0.4)
+        np.testing.assert_allclose(
+            ternary_gemm(x, w), ref.ternary_gemm_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 90),
+        n=st.integers(1, 50),
+        sparsity=st.sampled_from([0.0, 0.4, 0.8, 1.0]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref_any_shape(self, m, k, n, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-64, 64, size=(m, k)), dtype=jnp.float32)
+        w = ternary(rng, (k, n), sparsity=sparsity)
+        got = ternary_gemm(x, w, block_m=32, block_n=32, block_k=32)
+        np.testing.assert_array_equal(got, ref.ternary_gemm_ref(x, w))
+
+    @given(
+        bm=st.sampled_from([16, 32, 64]),
+        bn=st.sampled_from([16, 32]),
+        bk=st.sampled_from([16, 32, 64]),
+    )
+    def test_property_block_config_invariance(self, bm, bn, bk):
+        """The result must not depend on the BlockSpec tiling."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.integers(-32, 32, size=(48, 80)), dtype=jnp.float32)
+        w = ternary(rng, (80, 24), sparsity=0.5)
+        got = ternary_gemm(x, w, block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_array_equal(got, ref.ternary_gemm_ref(x, w))
+
+    def test_matvec(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.integers(-16, 16, size=(20, 64)), dtype=jnp.float32)
+        w = ternary(rng, (64,), sparsity=0.5)
+        np.testing.assert_array_equal(
+            ternary_matvec(x, w), ref.ternary_matvec_ref(x, w)
+        )
+
+    def test_sparsity_extremes_bwn_mode(self):
+        """sparsity=0 is exactly the BWN configuration (§III-B1)."""
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.integers(-16, 16, size=(16, 32)), dtype=jnp.float32)
+        w = ternary(rng, (32, 16), sparsity=0.0)
+        assert not (np.asarray(w) == 0).any()
+        np.testing.assert_array_equal(ternary_gemm(x, w), ref.ternary_gemm_ref(x, w))
+
+
+class TestImg2Col:
+    @given(
+        b=st.integers(1, 3),
+        c=st.integers(1, 8),
+        h=st.sampled_from([6, 8, 12]),
+        k=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        pad=st.sampled_from([0, 1]),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_matches_ref(self, b, c, h, k, stride, pad, seed):
+        if h + 2 * pad < k:
+            return
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, c, h, h)), dtype=jnp.float32)
+        got = img2col(x, k, k, stride, pad)
+        want = ref.img2col_ref(x, k, k, stride, pad)
+        np.testing.assert_array_equal(got, want)
+
+    def test_shape(self):
+        x = jnp.zeros((5, 128, 28, 28), dtype=jnp.float32)
+        # ResNet-18 layer 10 geometry: K=3, S=2, pad=1 -> OH=OW=14, J=1152
+        cols = img2col(x, 3, 3, 2, 1)
+        assert cols.shape == (5 * 14 * 14, 128 * 3 * 3)
+
+
+class TestTernaryConv:
+    @given(
+        stride=st.sampled_from([1, 2]),
+        pad=st.sampled_from([0, 1]),
+        sparsity=st.sampled_from([0.0, 0.5, 0.9]),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_matches_ref(self, stride, pad, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-8, 8, size=(2, 4, 10, 10)), dtype=jnp.float32)
+        w = ternary(rng, (6, 4, 3, 3), sparsity=sparsity)
+        got = ternary_conv2d(x, w, stride=stride, pad=pad, block_m=32, block_k=32)
+        want = ref.ternary_conv2d_ref(x, w, stride, pad)
+        np.testing.assert_array_equal(got, want)
+
+    def test_conv_matches_lax_conv(self):
+        """Cross-check the oracle itself against jax.lax convolution."""
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(2, 3, 12, 12)), dtype=jnp.float32)
+        w = ternary(rng, (5, 3, 3, 3), sparsity=0.5)
+        want = jax.lax.conv_general_dilated(
+            x, w, window_strides=(2, 2), padding=((1, 1), (1, 1)),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        got = ref.ternary_conv2d_ref(x, w, 2, 1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestQuantizeRef:
+    @given(seed=st.integers(0, 1000))
+    def test_property_output_is_ternary(self, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(64,)), dtype=jnp.float32)
+        q = ref.quantize_ternary_ref(w, -0.3, 0.3)
+        assert set(np.unique(np.asarray(q))).issubset({-1, 0, 1})
+
+    def test_thresholds(self):
+        w = jnp.asarray([-1.0, -0.3, -0.29, 0.0, 0.29, 0.3, 1.0], dtype=jnp.float32)
+        q = np.asarray(ref.quantize_ternary_ref(w, -0.3, 0.3))
+        np.testing.assert_array_equal(q, [-1, 0, 0, 0, 0, 0, 1])

@@ -1,0 +1,71 @@
+"""L2 model tests: shapes, numerics, and the multiply-free equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(rng, dims=model.DIMS, sparsity=0.5):
+    params = []
+    for name, shape, is_ternary in model.twn_cnn_param_shapes(dims):
+        if is_ternary:
+            w = rng.choice([-1.0, 1.0], size=shape)
+            w = np.where(rng.random(shape) < sparsity, 0.0, w)
+            params.append(jnp.asarray(w, dtype=jnp.float32))
+        elif name.startswith("g"):
+            params.append(jnp.asarray(rng.uniform(0.5, 1.5, shape), jnp.float32))
+        else:
+            params.append(jnp.asarray(rng.normal(0, 0.1, shape), jnp.float32))
+    return params
+
+
+class TestTwnCnn:
+    def test_forward_shape(self):
+        rng = np.random.default_rng(0)
+        d = model.DIMS
+        x = jnp.asarray(rng.normal(size=(d.batch, d.in_ch, d.hw, d.hw)), jnp.float32)
+        logits = model.twn_cnn_forward(x, *make_params(rng))
+        assert logits.shape == (d.batch, d.classes)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_block_matches_reference_pipeline(self):
+        """twn_block == ref conv -> scale/shift -> relu."""
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(2, 3, 8, 8)), jnp.float32)
+        w = jnp.asarray(
+            np.where(rng.random((4, 3, 3, 3)) < 0.5, 0.0, rng.choice([-1.0, 1.0], (4, 3, 3, 3))),
+            jnp.float32,
+        )
+        g = jnp.asarray(rng.uniform(0.5, 1.5, (4,)), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 0.1, (4,)), jnp.float32)
+        got = model.twn_block(x, w, g, b, stride=2)
+        conv = ref.ternary_conv2d_ref(x, w, 2, 1)
+        want = jnp.maximum(conv * g[None, :, None, None] + b[None, :, None, None], 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_input_gives_bias_path(self):
+        """x=0 propagates only BN shifts; the fc bias must appear in logits."""
+        rng = np.random.default_rng(2)
+        d = model.DIMS
+        params = make_params(rng)
+        x = jnp.zeros((d.batch, d.in_ch, d.hw, d.hw), jnp.float32)
+        logits = model.twn_cnn_forward(x, *params)
+        assert logits.shape == (d.batch, d.classes)
+        # all batch rows identical for identical inputs
+        np.testing.assert_allclose(logits[0], logits[1], rtol=1e-6)
+
+    def test_jit_matches_eager(self):
+        rng = np.random.default_rng(3)
+        d = model.DIMS
+        x = jnp.asarray(rng.normal(size=(d.batch, d.in_ch, d.hw, d.hw)), jnp.float32)
+        params = make_params(rng)
+        eager = model.twn_cnn_forward(x, *params)
+        jitted = jax.jit(model.twn_cnn_forward)(x, *params)
+        np.testing.assert_allclose(eager, jitted, rtol=1e-5, atol=1e-5)
+
+    def test_param_shapes_cover_forward_arity(self):
+        d = model.DIMS
+        assert len(model.twn_cnn_param_shapes(d)) == 11

@@ -1,0 +1,144 @@
+//! Ablation study — the design choices DESIGN.md calls out, isolated:
+//!
+//! A. carry home: D-latch (FAT) vs in-array write-back (GraphS keeps FAT's
+//!    single-sense step but writes the carry back) — how much of the 2x
+//!    comes from the latch alone;
+//! B. SACU zero skipping on/off at fixed addition scheme;
+//! C. activation bit width (4 / 8 / 16-bit) — where bit-serial addition
+//!    pays;
+//! D. CS interval rows on/off — endurance vs utilization trade;
+//! E. sensing reliability: two- vs three-operand designs (§IV-A3).
+
+use fat_imc::addition::{scheme, AdditionScheme, FatAddition, GraphSAddition};
+use fat_imc::array::cma::Cma;
+use fat_imc::array::sacu::{DotLayout, Sacu, WeightRegister};
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::mtj::MtjParams;
+use fat_imc::circuit::reliability::{addition_error_rate, sense_bit_error_rate};
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::report::{fnum, Table};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("ablation");
+
+    // ---- A: the carry latch in isolation --------------------------------
+    let fat = FatAddition;
+    let graphs = GraphSAddition; // same one-step SUM+carry, but write-back
+    let latch_gain = graphs.vector_add_latency_ns(8, 256) / fat.vector_add_latency_ns(8, 256);
+    let mut ta = Table::new(
+        "A. carry home (8-bit vector add): latch vs in-array write-back",
+        &["carry home", "latency (ns)", "writes/bit", "vs FAT"],
+    );
+    ta.row(vec!["D-latch (FAT)".into(), fnum(fat.vector_add_latency_ns(8, 256), 1), "1".into(), "1.00".into()]);
+    ta.row(vec!["array write-back (GraphS-style)".into(), fnum(graphs.vector_add_latency_ns(8, 256), 1), "2".into(), fnum(latch_gain, 2)]);
+    println!("{}", ta.render());
+    run.check(
+        "the carry latch alone buys ~2x",
+        (1.8..2.2).contains(&latch_gain),
+        format!("{latch_gain}"),
+    );
+
+    // ---- B: zero skipping at fixed scheme (bit-accurate) ----------------
+    let mut rng = Rng::new(0xAB1);
+    let layout = DotLayout::interval(8);
+    let n_ops = layout.max_slots();
+    let cols: Vec<Vec<u64>> = (0..n_ops).map(|_| (0..256).map(|_| rng.below(256)).collect()).collect();
+    let fat_scheme = scheme(SaKind::Fat);
+    let mut tb = Table::new(
+        "B. SACU zero skipping (FAT addition, 25-operand dot, bit-accurate)",
+        &["sparsity", "latency skip=on (ns)", "skip=off (ns)", "gain"],
+    );
+    for s in [0.4, 0.6, 0.8] {
+        let weights = rng.ternary_vec(n_ops, s);
+        let lat = |skip: bool| -> f64 {
+            let sacu = Sacu::new(layout, skip);
+            let mut cma = Cma::new();
+            sacu.init_cma(&mut cma);
+            for (j, v) in cols.iter().enumerate() {
+                sacu.load_slot(&mut cma, j, v);
+            }
+            cma.reset_stats();
+            let reg = WeightRegister::load(&weights);
+            sacu.sparse_dot(&mut cma, fat_scheme.as_ref(), &reg, 256);
+            cma.stats.latency_ns
+        };
+        let (on, off) = (lat(true), lat(false));
+        tb.row(vec![format!("{:.0}%", s * 100.0), fnum(on, 0), fnum(off, 0), fnum(off / on, 2)]);
+        run.check(
+            &format!("skipping pays at {:.0}% sparsity", s * 100.0),
+            off / on > 1.0 / (1.0 - s) * 0.5,
+            format!("{}", off / on),
+        );
+    }
+    println!("{}", tb.render());
+
+    // ---- C: activation bit width ----------------------------------------
+    let mut tc = Table::new(
+        "C. activation bit width (vector add latency, 256 columns)",
+        &["bits", "FAT (ns)", "ParaPIM (ns)", "STT-CiM (ns)", "FAT vs STT-CiM"],
+    );
+    for bits in [4, 8, 16, 32] {
+        let f = scheme(SaKind::Fat).vector_add_latency_ns(bits, 256);
+        let p = scheme(SaKind::ParaPim).vector_add_latency_ns(bits, 256);
+        let s = scheme(SaKind::SttCim).vector_add_latency_ns(bits, 256);
+        tc.row(vec![bits.to_string(), fnum(f, 1), fnum(p, 1), fnum(s, 1), fnum(s / f, 2)]);
+    }
+    println!("{}", tc.render());
+    // the bit-serial advantage over row-ripple grows with width
+    let adv = |bits| scheme(SaKind::SttCim).vector_add_latency_ns(bits, 256)
+        / scheme(SaKind::Fat).vector_add_latency_ns(bits, 256);
+    run.check("FAT's advantage over STT-CiM grows with bit width", adv(32) > adv(8), String::new());
+
+    // ---- D: interval rows on/off (endurance vs utilization) -------------
+    let mut td = Table::new(
+        "D. CS interval rows (2000-accumulation workload, measured)",
+        &["layout", "slots/column", "max cell writes", "balance factor"],
+    );
+    for (name, layout) in [("dense (IS)", DotLayout::dense(8)), ("interval (CS)", DotLayout::interval(8))] {
+        let sacu = Sacu::new(layout, true);
+        let mut cma = Cma::with_endurance();
+        sacu.init_cma(&mut cma);
+        let n = layout.max_slots();
+        for j in 0..n {
+            let vals: Vec<u64> = (0..64).map(|_| rng.below(256)).collect();
+            sacu.load_slot(&mut cma, j, &vals);
+        }
+        for _ in 0..(2000 / n) {
+            let w = rng.ternary_vec(n, 0.5);
+            let reg = WeightRegister::load(&w);
+            sacu.sparse_dot(&mut cma, fat_scheme.as_ref(), &reg, 64);
+        }
+        let e = cma.endurance.as_ref().unwrap();
+        td.row(vec![
+            name.into(),
+            n.to_string(),
+            e.max_cell_writes().to_string(),
+            fnum(e.balance_factor(), 1),
+        ]);
+    }
+    println!("{}", td.render());
+
+    // ---- E: reliability (two- vs three-operand sensing) ------------------
+    let p = MtjParams::default();
+    let mut te = Table::new(
+        "E. sensing reliability (Gaussian noise on V_SL, 8-bit addition)",
+        &["design", "operand rows", "per-sense BER", "per-addition error"],
+    );
+    for kind in SaKind::ALL {
+        te.row(vec![
+            kind.name().into(),
+            fat_imc::circuit::sense_amp::design(kind).add_operand_rows().to_string(),
+            format!("{:.2e}", sense_bit_error_rate(kind, &p)),
+            format!("{:.2e}", addition_error_rate(kind, 8, &p)),
+        ]);
+    }
+    println!("{}", te.render());
+    run.check(
+        "two-operand FAT beats three-operand ParaPIM/GraphS on reliability",
+        sense_bit_error_rate(SaKind::Fat, &p) < sense_bit_error_rate(SaKind::ParaPim, &p)
+            && sense_bit_error_rate(SaKind::Fat, &p) < sense_bit_error_rate(SaKind::GraphS, &p),
+        String::new(),
+    );
+    run.finish();
+}

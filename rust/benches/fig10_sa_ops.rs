@@ -1,0 +1,72 @@
+//! Regenerates **Fig. 10**: normalized critical-path latency and average
+//! dynamic power of the Sense Amplifiers (STT-CiM / ParaPIM / GraphS /
+//! FAT) on the IMC operations READ / AND / OR / XOR / SUM.
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::PAPER_FIG10;
+use fat_imc::circuit::sense_amp::{design, BitOp, SaKind};
+use fat_imc::report::{fnum, Table};
+
+fn main() {
+    let mut run = BenchRun::new("fig10_sa_ops");
+    let fat = design(SaKind::Fat);
+    let ops = [BitOp::Read, BitOp::And, BitOp::Or, BitOp::Xor, BitOp::Sum];
+
+    let mut t = Table::new(
+        "Fig. 10 — SA latency normalized to FAT (and avg dynamic power)",
+        &["design", "READ", "AND", "OR", "XOR", "SUM", "power"],
+    );
+    for kind in SaKind::ALL {
+        let sa = design(kind);
+        let mut cells = vec![kind.name().to_string()];
+        for op in ops {
+            if sa.supports(op) {
+                cells.push(fnum(sa.op_latency_ns(op) / fat.op_latency_ns(op), 3));
+            } else {
+                cells.push("n/a".into());
+            }
+        }
+        // average dynamic power over supported ops, normalized to FAT
+        let avg = |d: &dyn Fn(BitOp) -> f64| {
+            let v: Vec<f64> = ops.iter().filter(|&&o| sa.supports(o)).map(|&o| d(o)).collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        let p = avg(&|o| sa.op_power_uw(o)) / avg(&|o| fat.op_power_uw(o));
+        cells.push(fnum(p, 2));
+        t.row(cells);
+    }
+    println!("{}", t.render());
+
+    // Check the shape against the paper's reported relations.
+    for paper in PAPER_FIG10 {
+        let kind = SaKind::ALL.iter().copied().find(|k| k.name() == paper.name).unwrap();
+        let sa = design(kind);
+        run.check_close(
+            &format!("{} READ ratio", paper.name),
+            sa.op_latency_ns(BitOp::Read) / fat.op_latency_ns(BitOp::Read),
+            paper.read,
+            0.03,
+        );
+        run.check_close(
+            &format!("{} SUM ratio", paper.name),
+            sa.op_latency_ns(BitOp::Sum) / fat.op_latency_ns(BitOp::Sum),
+            paper.sum,
+            0.03,
+        );
+        if let Some(x) = paper.xor {
+            run.check_close(
+                &format!("{} XOR ratio", paper.name),
+                sa.op_latency_ns(BitOp::Xor) / fat.op_latency_ns(BitOp::Xor),
+                x,
+                0.03,
+            );
+        } else {
+            run.check(&format!("{} has no XOR", paper.name), !sa.supports(BitOp::Xor), String::new());
+        }
+    }
+    // power efficiency headlines: 1.22x vs ParaPIM, 1.44x vs GraphS
+    let pw = |k: SaKind| design(k).op_power_uw(BitOp::Sum);
+    run.check_close("power: ParaPIM/FAT", pw(SaKind::ParaPim) / pw(SaKind::Fat), 1.22, 0.02);
+    run.check_close("power: GraphS/FAT", pw(SaKind::GraphS) / pw(SaKind::Fat), 1.44, 0.02);
+    run.finish();
+}

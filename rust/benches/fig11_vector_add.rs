@@ -1,0 +1,77 @@
+//! Regenerates **Fig. 11**: normalized latency, performance/watt, EDP and
+//! power density of 32-bit vector addition (baseline: FAT).
+
+use fat_imc::addition::{all_schemes, scheme};
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::headline;
+use fat_imc::circuit::sense_amp::{design, SaKind};
+use fat_imc::report::{fnum, Table};
+
+fn main() {
+    let mut run = BenchRun::new("fig11_vector_add");
+    let bits = 32;
+    let elems = 256;
+
+    let fat = scheme(SaKind::Fat);
+    let f_lat = fat.vector_add_latency_ns(bits, elems);
+    let f_energy = fat.vector_add_energy_pj(bits, elems);
+    let f_area = design(SaKind::Fat).area_um2();
+
+    let mut t = Table::new(
+        "Fig. 11 — 32-bit vector addition, normalized to FAT = 1.0",
+        &["design", "latency", "perf/watt", "EDP", "power density"],
+    );
+    for s in all_schemes() {
+        let lat = s.vector_add_latency_ns(bits, elems);
+        let energy = s.vector_add_energy_pj(bits, elems);
+        let area = design(s.kind()).area_um2();
+        // perf/watt ~ 1/energy; EDP = energy x delay; power density =
+        // (energy/latency)/area
+        let perf_watt = f_energy / energy;
+        let edp = (energy * lat) / (f_energy * f_lat);
+        let pd = (energy / lat / area) / (f_energy / f_lat / f_area);
+        t.row(vec![
+            s.kind().name().into(),
+            fnum(lat / f_lat, 2),
+            fnum(perf_watt, 2),
+            fnum(edp, 2),
+            fnum(pd, 2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // headline ratios from §IV-A2
+    let lat = |k: SaKind| scheme(k).vector_add_latency_ns(bits, elems);
+    run.check_close("latency: STT-CiM/FAT", lat(SaKind::SttCim) / f_lat, headline::SPEEDUP_ADD_VS_STTCIM, 0.05);
+    run.check_close("latency: ParaPIM/FAT", lat(SaKind::ParaPim) / f_lat, headline::SPEEDUP_ADD_VS_PARAPIM, 0.03);
+    run.check_close("latency: GraphS/FAT", lat(SaKind::GraphS) / f_lat, headline::SPEEDUP_ADD_VS_GRAPHS, 0.03);
+
+    // FAT has the best perf/watt (1.01-2.86x) and the least EDP (1.14-5.69x)
+    let mut worst_pw = f64::INFINITY;
+    let mut best_pw = 0.0f64;
+    let mut worst_edp = 0.0f64;
+    for s in all_schemes() {
+        if s.kind() == SaKind::Fat {
+            continue;
+        }
+        let e = s.vector_add_energy_pj(bits, elems);
+        let l = s.vector_add_latency_ns(bits, elems);
+        let pw = e / f_energy; // FAT advantage
+        worst_pw = worst_pw.min(pw);
+        best_pw = best_pw.max(pw);
+        worst_edp = worst_edp.max(e * l / (f_energy * f_lat));
+    }
+    run.check("FAT perf/watt advantage >= 1.0 everywhere", worst_pw >= 1.0, format!("{worst_pw}"));
+    run.check_close("max perf/watt advantage (paper 2.86x)", best_pw, 2.86, 0.06);
+    run.check_close("max EDP advantage (paper 5.69x)", worst_edp, 5.69, 0.06);
+
+    // power density: FAT below STT-CiM and GraphS (§IV-A2 "fourth")
+    let pd = |k: SaKind| {
+        let s = scheme(k);
+        s.vector_add_energy_pj(bits, elems) / s.vector_add_latency_ns(bits, elems)
+            / design(k).area_um2()
+    };
+    run.check("power density below STT-CiM", pd(SaKind::Fat) < pd(SaKind::SttCim), String::new());
+    run.check("power density below GraphS", pd(SaKind::Fat) < pd(SaKind::GraphS), String::new());
+    run.finish();
+}

@@ -1,0 +1,51 @@
+//! Regenerates **Fig. 13**: normalized area breakdown of the four Sense
+//! Amplifiers (amplifiers / latch / gates / selector / signal drivers).
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::headline;
+use fat_imc::circuit::gates::Component;
+use fat_imc::circuit::sense_amp::{design, SaKind};
+use fat_imc::report::{fnum, Table};
+
+fn main() {
+    let mut run = BenchRun::new("fig13_area");
+    let fat_area = design(SaKind::Fat).area_um2();
+
+    let mut t = Table::new(
+        "Fig. 13 — SA area breakdown, normalized to FAT total = 1.0",
+        &["design", "amps", "latch", "gates", "selector", "signals", "total"],
+    );
+    for kind in SaKind::ALL {
+        let n = design(kind).netlist();
+        let amps = n.area_of(|c| c == Component::OpAmp);
+        let latch = n.area_of(|c| c == Component::DLatch);
+        let gates = n.area_of(|c| {
+            matches!(c, Component::And2 | Component::Or2 | Component::Nor2 | Component::Xor2 | Component::Nand2 | Component::Inv)
+        });
+        let sel = n.area_of(|c| matches!(c, Component::Selector4 | Component::Selector8));
+        let sig = n.area_of(|c| c == Component::SignalDriver);
+        t.row(vec![
+            kind.name().into(),
+            fnum(amps / fat_area, 3),
+            fnum(latch / fat_area, 3),
+            fnum(gates / fat_area, 3),
+            fnum(sel / fat_area, 3),
+            fnum(sig / fat_area, 3),
+            fnum(n.area_um2() / fat_area, 3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let area = |k: SaKind| design(k).area_um2();
+    // paper: FAT 21% larger than STT-CiM (the D-latch), but 1.22x / 1.17x
+    // more area-efficient than ParaPIM / GraphS
+    run.check_close("FAT/STT-CiM area", area(SaKind::Fat) / area(SaKind::SttCim), headline::AREA_VS_STTCIM, 0.05);
+    run.check_close("ParaPIM/FAT area", area(SaKind::ParaPim) / area(SaKind::Fat), headline::AREA_EFF_VS_PARAPIM, 0.05);
+    run.check_close("GraphS/FAT area", area(SaKind::GraphS) / area(SaKind::Fat), headline::AREA_EFF_VS_GRAPHS, 0.05);
+    // structure: the 8:1 selector is why ParaPIM is big; the third OpAmp
+    // is why GraphS is big
+    let sel8 = |k: SaKind| design(k).netlist().count(Component::Selector8);
+    run.check("ParaPIM pays for an 8:1 selector", sel8(SaKind::ParaPim) == 1, String::new());
+    run.check("GraphS pays for a 3rd OpAmp", design(SaKind::GraphS).netlist().count(Component::OpAmp) == 3, String::new());
+    run.finish();
+}

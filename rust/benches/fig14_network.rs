@@ -1,0 +1,81 @@
+//! Regenerates **Fig. 14**: network-level speedup and energy efficiency of
+//! FAT vs ParaPIM across weight sparsity (40% / 60% / 80%), on ResNet-18
+//! via the analytic model, plus a bit-accurate confirmation on a small
+//! layer.
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::headline;
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::scheduler::{analytic_compute_metrics, AnalyticConfig};
+use fat_imc::mapping::schemes::MappingKind;
+use fat_imc::nn::layers::TernaryFilter;
+use fat_imc::nn::resnet::{resnet18_conv_layers, ConvLayer};
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::{fnum, Table};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("fig14_network");
+    let layers = resnet18_conv_layers();
+    let mut fat_cfg = AnalyticConfig::fat();
+    let mut para_cfg = AnalyticConfig::parapim_baseline();
+    // the paper isolates addition + sparsity: same mapping on both sides
+    fat_cfg.mapping = MappingKind::Img2ColIs;
+    para_cfg.mapping = MappingKind::Img2ColIs;
+
+    let mut t = Table::new(
+        "Fig. 14 — ResNet-18 vs ParaPIM across sparsity (analytic, compute path)",
+        &["sparsity", "speedup", "paper", "energy eff", "paper"],
+    );
+    let paper_speedups = headline::NET_SPEEDUP;
+    let paper_energy = headline::NET_ENERGY;
+    for (i, s) in [0.4, 0.6, 0.8].iter().enumerate() {
+        let (mut fat_ns, mut para_ns, mut fat_pj, mut para_pj) = (0.0, 0.0, 0.0, 0.0);
+        for l in &layers {
+            let f = analytic_compute_metrics(l, *s, &fat_cfg);
+            let p = analytic_compute_metrics(l, *s, &para_cfg);
+            fat_ns += f.latency_ns;
+            para_ns += p.latency_ns;
+            fat_pj += f.energy_pj;
+            para_pj += p.energy_pj;
+        }
+        let speedup = para_ns / fat_ns;
+        let eff = para_pj / fat_pj;
+        t.row(vec![
+            format!("{:.0}%", s * 100.0),
+            fnum(speedup, 2),
+            fnum(paper_speedups[i].1, 2),
+            fnum(eff, 2),
+            fnum(paper_energy[i].1, 2),
+        ]);
+        run.check_close(&format!("speedup @ {:.0}%", s * 100.0), speedup, paper_speedups[i].1, 0.05);
+        run.check_close(&format!("energy eff @ {:.0}%", s * 100.0), eff, paper_energy[i].1, 0.10);
+    }
+    println!("{}", t.render());
+
+    // bit-accurate confirmation on a small layer at 80%: the simulated
+    // chips must agree in direction and magnitude band
+    let layer = ConvLayer {
+        name: "confirm", n: 1, c: 8, h: 10, w: 10, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    let mut rng = Rng::new(14);
+    let mut x = Tensor4::zeros(1, 8, 10, 10);
+    x.fill_random_ints(&mut rng, 0, 256);
+    let f = TernaryFilter::new(8, 8, 3, 3, rng.ternary_vec(8 * 72, 0.8));
+    let fat_run = run.time("host: bit-accurate FAT layer", || {
+        FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &layer)
+    });
+    let _ = fat_run;
+    let fat_m = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &layer).metrics;
+    let para_m =
+        FatChip::new(ChipConfig::parapim_baseline()).run_conv_layer(&x, &f, &layer).metrics;
+    let sim_speedup = para_m.latency_ns / fat_m.latency_ns;
+    let sim_eff = para_m.energy_pj / fat_m.energy_pj;
+    println!(
+        "  bit-accurate @80%: speedup {:.2}x, energy eff {:.2}x (incl. loading + carry write-backs)",
+        sim_speedup, sim_eff
+    );
+    run.check("bit-accurate speedup > 5x @80%", sim_speedup > 5.0, format!("{sim_speedup}"));
+    run.check("bit-accurate energy eff > 5x @80%", sim_eff > 5.0, format!("{sim_eff}"));
+    run.finish();
+}

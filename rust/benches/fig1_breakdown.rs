@@ -1,0 +1,57 @@
+//! Regenerates **Fig. 1**: the speedup breakdown of FAT on TWNs with 80%
+//! sparsity — 2.00x from the fast addition scheme times 5.00x from the
+//! SACU's sparsity skip = 10.02x over ParaPIM.
+
+use fat_imc::addition::scheme;
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::headline;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::coordinator::scheduler::{analytic_compute_metrics, AnalyticConfig};
+use fat_imc::mapping::schemes::MappingKind;
+use fat_imc::nn::resnet::resnet18_conv_layers;
+use fat_imc::report::{fnum, Table};
+
+fn main() {
+    let mut run = BenchRun::new("fig1_breakdown");
+    let s = 0.8;
+
+    // factor 1: the addition scheme (vector add latency ratio)
+    let fat_add = scheme(SaKind::Fat).vector_add_latency_ns(8, 256);
+    let para_add = scheme(SaKind::ParaPim).vector_add_latency_ns(8, 256);
+    let addition_speedup = para_add / fat_add;
+
+    // factor 2: the SACU sparsity skip at 80%
+    let layers = resnet18_conv_layers();
+    let mut cfg_sparse = AnalyticConfig::fat();
+    cfg_sparse.mapping = MappingKind::Img2ColIs;
+    let mut cfg_dense = cfg_sparse;
+    cfg_dense.skip_zeros = false;
+    let sparse_ns: f64 = layers.iter().map(|l| analytic_compute_metrics(l, s, &cfg_sparse).latency_ns).sum();
+    let dense_ns: f64 = layers.iter().map(|l| analytic_compute_metrics(l, s, &cfg_dense).latency_ns).sum();
+    let sparsity_speedup = dense_ns / sparse_ns;
+
+    // combined vs ParaPIM
+    let mut para_cfg = AnalyticConfig::parapim_baseline();
+    para_cfg.mapping = MappingKind::Img2ColIs;
+    let para_ns: f64 = layers.iter().map(|l| analytic_compute_metrics(l, s, &para_cfg).latency_ns).sum();
+    let combined = para_ns / sparse_ns;
+
+    let mut t = Table::new(
+        "Fig. 1 — speedup breakdown at 80% sparsity (baseline ParaPIM)",
+        &["component", "ours", "paper"],
+    );
+    t.row(vec!["fast addition (SA level)".into(), fnum(addition_speedup, 2), "2.00".into()]);
+    t.row(vec!["SACU sparsity skip".into(), fnum(sparsity_speedup, 2), "5.00".into()]);
+    t.row(vec!["combined".into(), fnum(combined, 2), "10.02".into()]);
+    println!("{}", t.render());
+
+    run.check_close("fast addition factor", addition_speedup, headline::SPEEDUP_ADD_VS_PARAPIM, 0.03);
+    run.check_close("sparsity factor", sparsity_speedup, 5.0, 0.02);
+    run.check_close("combined factor", combined, 10.02, 0.05);
+    run.check(
+        "combined == addition x sparsity (multiplicative decomposition)",
+        (combined - addition_speedup * sparsity_speedup).abs() / combined < 0.01,
+        format!("{combined} vs {}", addition_speedup * sparsity_speedup),
+    );
+    run.finish();
+}

@@ -1,0 +1,87 @@
+//! Host-performance microbenchmarks of the simulator's hot paths — the
+//! §Perf harness of EXPERIMENTS.md.  Targets:
+//!
+//! 1. the word-parallel bit-serial addition inner loop (FAT scheme),
+//! 2. the SACU sparse dot product,
+//! 3. a full small conv layer on the chip (thread-pool path),
+//! 4. img2col.
+
+use fat_imc::addition::{first_cols_mask, scheme};
+use fat_imc::array::cma::Cma;
+use fat_imc::array::sacu::{DotLayout, Sacu, WeightRegister};
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::mapping::img2col::img2col;
+use fat_imc::nn::layers::TernaryFilter;
+use fat_imc::nn::resnet::ConvLayer;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("hotpath");
+    let mut rng = Rng::new(0xBEEF);
+    let fat = scheme(SaKind::Fat);
+
+    // 1. bit-serial vector add, 16-bit x 256 columns
+    let vals_a: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+    let vals_b: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+    let mut cma = Cma::new();
+    cma.store_vector(0, 16, &vals_a);
+    cma.store_vector(16, 16, &vals_b);
+    let mask = first_cols_mask(256);
+    let m1 = run.time("FAT vector_add 16b x 256 cols", || {
+        fat.vector_add(&mut cma, 0, 16, 32, 16, &mask, false)
+    });
+
+    // 2. SACU sparse dot, 25 operands x 256 columns @ 50% sparsity
+    let layout = DotLayout::interval(8);
+    let sacu = Sacu::new(layout, true);
+    let mut cma2 = Cma::new();
+    sacu.init_cma(&mut cma2);
+    let n_ops = layout.max_slots();
+    for j in 0..n_ops {
+        let vals: Vec<u64> = (0..256).map(|_| rng.below(256)).collect();
+        sacu.load_slot(&mut cma2, j, &vals);
+    }
+    let weights = rng.ternary_vec(n_ops, 0.5);
+    let reg = WeightRegister::load(&weights);
+    let m2 = run.time("SACU sparse_dot 25 ops x 256 cols", || {
+        sacu.sparse_dot(&mut cma2, fat.as_ref(), &reg, 256)
+    });
+
+    // 3. full conv layer on the chip
+    let layer = ConvLayer {
+        name: "hot", n: 2, c: 16, h: 16, w: 16, kn: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    let mut x = Tensor4::zeros(2, 16, 16, 16);
+    x.fill_random_ints(&mut rng, 0, 256);
+    let f = TernaryFilter::new(16, 16, 3, 3, rng.ternary_vec(16 * 144, 0.6));
+    let chip = FatChip::new(ChipConfig::fat());
+    let m3 = run.time("chip conv 2x16x16x16 -> 16 filters", || {
+        chip.run_conv_layer(&x, &f, &layer)
+    });
+
+    // 4. img2col of a mid-size layer
+    let l10ish = ConvLayer {
+        name: "i2c", n: 2, c: 64, h: 28, w: 28, kn: 1, kh: 3, kw: 3, stride: 2, pad: 1,
+    };
+    let mut xi = Tensor4::zeros(2, 64, 28, 28);
+    xi.fill_random_ints(&mut rng, 0, 256);
+    let m4 = run.time("img2col 2x64x28x28 k3 s2", || img2col(&xi, &l10ish));
+
+    // regression guards (generous: CI machines vary)
+    run.check("vector_add under 100us", m1.median_ns < 100_000.0, format!("{}", m1.median_ns));
+    run.check("sparse_dot under 3ms", m2.median_ns < 3_000_000.0, format!("{}", m2.median_ns));
+    run.check("conv layer under 2s", m3.median_ns < 2e9, format!("{}", m3.median_ns));
+    run.check("img2col under 100ms", m4.median_ns < 1e8, format!("{}", m4.median_ns));
+
+    // simulated-time throughput summary (what the chip "achieves")
+    let adds_per_sec = 1e9 / m1.median_ns;
+    println!(
+        "  host throughput: {:.0} simulated 16b x 256 vector-adds/s ({:.1} Gbit-ops/s)",
+        adds_per_sec,
+        adds_per_sec * 16.0 * 256.0 / 1e9
+    );
+    run.finish();
+}

@@ -1,0 +1,60 @@
+//! Regenerates **Table I**'s storage / operator analysis: bitwidth,
+//! operator mix and storage cost per quantization scheme, plus the paper's
+//! §I argument that CSR-style compression *loses* on 2-bit ternary weights.
+//!
+//! (The accuracy column requires ImageNet training and is quoted from the
+//! paper — see EXPERIMENTS.md.)
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::report::{count, fnum, Table};
+use fat_imc::ternary::{dot_op_count, sparsity, storage_cost, synthetic_weights};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("table1_storage");
+    let mut rng = Rng::new(1);
+    // ResNet-18's ~11M conv/fc parameters at RTN-like 60% sparsity
+    let n = 11_000_000;
+    let ws = synthetic_weights(&mut rng, n, 0.6);
+    let c = storage_cost(&ws);
+
+    let mut t = Table::new(
+        "Table I — storage & operators for an 11M-parameter network",
+        &["method", "bitwidth", "operator", "storage", "vs FP32", "dot ops (J=1152)"],
+    );
+    let ops = |q: &str| {
+        let w1152 = &ws[..1152];
+        let oc = dot_op_count(w1152, q);
+        if oc.multiplies > 0 {
+            format!("{} mul + {} add", oc.multiplies, oc.additions)
+        } else {
+            format!("{} add", oc.additions)
+        }
+    };
+    t.row(vec!["FP32".into(), "32".into(), "x, +".into(), count(c.fp32 as u64), "1.0x".into(), ops("fp32")]);
+    t.row(vec!["INT8".into(), "8".into(), "x, +".into(), count(c.int8 as u64), "4.0x".into(), ops("int8")]);
+    t.row(vec!["INT4".into(), "4".into(), "x, +".into(), count(c.int4 as u64), "8.0x".into(), ops("int4")]);
+    t.row(vec!["TWN (FAT)".into(), "2".into(), "+".into(), count(c.ternary_2bit as u64), fnum(c.fp32 as f64 / c.ternary_2bit as f64, 1) + "x", ops("twn")]);
+    t.row(vec!["TWN (CSR)".into(), "2+8 idx".into(), "+".into(), count(c.csr_sparse as u64), fnum(c.fp32 as f64 / c.csr_sparse as f64, 1) + "x", ops("twn")]);
+    t.row(vec!["BWN".into(), "1".into(), "+".into(), count(c.binary_1bit as u64), "32.0x".into(), ops("bwn")]);
+    println!("{}", t.render());
+
+    run.check_close("TWN 2-bit is 16x smaller than FP32", c.fp32 as f64 / c.ternary_2bit as f64, 16.0, 0.01);
+    run.check(
+        "CSR loses to dense 2-bit at 60% sparsity (the §I argument)",
+        c.csr_sparse > c.ternary_2bit,
+        format!("csr {} vs 2-bit {}", c.csr_sparse, c.ternary_2bit),
+    );
+    run.check_close("measured sparsity matches target", sparsity(&ws), 0.6, 0.01);
+
+    // TWN skips ~sparsity of the additions BWN must perform
+    let twn = dot_op_count(&ws[..100_000], "twn");
+    let bwn = dot_op_count(&ws[..100_000], "bwn");
+    run.check_close(
+        "TWN performs (1-s) of BWN's additions",
+        twn.additions as f64 / bwn.additions as f64,
+        0.4,
+        0.02,
+    );
+    run.finish();
+}

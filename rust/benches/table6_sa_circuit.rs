@@ -1,0 +1,78 @@
+//! Regenerates **Table VI**: comparison of the Sense Amplifier circuit
+//! budgets — enable/selector signals, amplifiers, D-latches, Boolean gates.
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::gates::Component;
+use fat_imc::circuit::sense_amp::{design, SaKind};
+use fat_imc::report::Table;
+
+fn main() {
+    let mut run = BenchRun::new("table6_sa_circuit");
+
+    let gates = |k: SaKind| {
+        let n = design(k).netlist();
+        n.count(Component::And2)
+            + n.count(Component::Or2)
+            + n.count(Component::Nor2)
+            + n.count(Component::Xor2)
+            + n.count(Component::Nand2)
+    };
+
+    let mut t = Table::new(
+        "Table VI — SA signal and circuit budgets",
+        &["design", "EN", "Sel", "amplifiers", "D-latch", "boolean gates"],
+    );
+    for kind in SaKind::ALL {
+        let sa = design(kind);
+        let n = sa.netlist();
+        t.row(vec![
+            kind.name().into(),
+            sa.signals().enables.to_string(),
+            sa.signals().selects.to_string(),
+            n.count(Component::OpAmp).to_string(),
+            n.count(Component::DLatch).to_string(),
+            gates(kind).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // the table's exact values
+    let expect: [(SaKind, u32, u32, u32, u32, u32); 4] = [
+        (SaKind::SttCim, 6, 3, 2, 0, 4),
+        (SaKind::ParaPim, 4, 3, 2, 1, 3),
+        (SaKind::GraphS, 6, 3, 3, 0, 1),
+        (SaKind::Fat, 3, 2, 2, 1, 4),
+    ];
+    for (kind, en, sel, amps, latch, g) in expect {
+        let sa = design(kind);
+        let n = sa.netlist();
+        run.check(
+            &format!("{} row matches the paper exactly", kind.name()),
+            sa.signals().enables == en
+                && sa.signals().selects == sel
+                && n.count(Component::OpAmp) == amps
+                && n.count(Component::DLatch) == latch
+                && gates(kind) == g,
+            format!(
+                "got EN={} Sel={} amps={} latch={} gates={}",
+                sa.signals().enables,
+                sa.signals().selects,
+                n.count(Component::OpAmp),
+                n.count(Component::DLatch),
+                gates(kind)
+            ),
+        );
+    }
+    run.check(
+        "FAT has the fewest control signals",
+        SaKind::ALL.iter().all(|&k| {
+            k == SaKind::Fat || {
+                let s = design(k).signals();
+                let f = design(SaKind::Fat).signals();
+                f.enables + f.selects < s.enables + s.selects
+            }
+        }),
+        String::new(),
+    );
+    run.finish();
+}

@@ -1,0 +1,104 @@
+//! Regenerates **Table VII** (analytic mapping formulas) and **Table VIII**
+//! (the ResNet-18 layer-10 showcase: loading, parallel columns,
+//! utilization, speedup, energy, max single-cell write).
+
+use fat_imc::addition::scheme;
+use fat_imc::array::cma::Cma;
+use fat_imc::array::sacu::{DotLayout, Sacu, WeightRegister};
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::headline;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::mapping::schemes::{evaluate_all, HwParams, MappingKind};
+use fat_imc::nn::resnet::resnet18_layer10;
+use fat_imc::report::{count, fnum, ratio, Table};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("table7_8_mapping");
+    let layer = resnet18_layer10();
+    let hw = HwParams::default();
+    let fat = scheme(SaKind::Fat);
+    let costs = evaluate_all(&layer, &hw, fat.as_ref());
+
+    let mut t7 = Table::new(
+        "Table VII — mapping formulas on layer 10 (loads / occupancy)",
+        &["mapping", "x-loads", "x-writes", "w-loads", "par.cols", "occupied CMAs", "waves"],
+    );
+    for c in &costs {
+        t7.row(vec![
+            c.kind.name().into(),
+            c.x_load_times.to_string(),
+            count(c.x_writes),
+            c.w_load_times.to_string(),
+            format!("{}/256", c.parallel_cols),
+            c.occupied_cmas.to_string(),
+            c.waves.to_string(),
+        ]);
+    }
+    println!("{}", t7.render());
+
+    let direct = costs[0].total_ns();
+    let direct_e = costs[0].energy_pj();
+    let mut t8 = Table::new(
+        "Table VIII — layer 10 of ResNet-18, 4096 CMAs (paper speedups: 1.00/1.17/4.88/1.18/6.86)",
+        &["mapping", "x-load(ns)", "w-load(ns)", "total(ns)", "speedup", "util", "E ratio", "max cell write"],
+    );
+    for c in &costs {
+        t8.row(vec![
+            c.kind.name().into(),
+            fnum(c.x_load_ns, 0),
+            fnum(c.w_load_ns, 0),
+            fnum(c.total_ns(), 0),
+            ratio(direct / c.total_ns()),
+            format!("{:.2}%", c.utilization * 100.0),
+            format!("{:.1}%", c.energy_pj() / direct_e * 100.0),
+            format!("{}x", c.max_cell_write_factor),
+        ]);
+    }
+    println!("{}", t8.render());
+
+    let by = |k: MappingKind| costs.iter().find(|c| c.kind == k).unwrap();
+    // paper Table VIII loading times (ns)
+    run.check_close("Direct-OS x-load (paper 21668)", by(MappingKind::DirectOs).x_load_ns, 21668.0, 0.10);
+    run.check_close("Img2Col-OS x-load (paper 48753)", by(MappingKind::Img2ColOs).x_load_ns, 48753.0, 0.10);
+    run.check_close("Img2Col-IS x-load (paper 2708)", by(MappingKind::Img2ColIs).x_load_ns, 2708.0, 0.10);
+    run.check_close("Img2Col-CS x-load (paper 1354)", by(MappingKind::Img2ColCs).x_load_ns, 1354.0, 0.10);
+    run.check_close("Img2Col-IS w-load (paper 2523)", by(MappingKind::Img2ColIs).w_load_ns, 2523.0, 0.10);
+    run.check_close("Img2Col-CS w-load (paper 1259)", by(MappingKind::Img2ColCs).w_load_ns, 1259.0, 0.10);
+    // speedups
+    let speedup = |k: MappingKind| direct / by(k).total_ns();
+    run.check_close("IS speedup (paper 4.88x)", speedup(MappingKind::Img2ColIs), 4.88, 0.10);
+    run.check_close(
+        "CS speedup (paper 6.86x)",
+        speedup(MappingKind::Img2ColCs),
+        headline::CS_MAPPING_SPEEDUP,
+        0.15,
+    );
+    run.check("CS is the fastest mapping", MappingKind::ALL.iter().all(|&k| speedup(k) <= speedup(MappingKind::Img2ColCs)), String::new());
+    // utilization: IS 94.23%, CS half of it (47.11%)
+    run.check_close("IS utilization (paper 94.23%)", by(MappingKind::Img2ColIs).utilization, 0.9423, 0.03);
+    run.check_close("CS utilization (paper 47.11%)", by(MappingKind::Img2ColCs).utilization, 0.4711, 0.03);
+    // endurance: CS 1x, everyone else 64x
+    run.check("CS max cell write 1x", by(MappingKind::Img2ColCs).max_cell_write_factor == 1, String::new());
+    run.check("others 64x", by(MappingKind::DirectOs).max_cell_write_factor == 64, String::new());
+
+    // host-time: bit-accurate endurance measurement per layout
+    let mut rng = Rng::new(9);
+    for (name, layout) in [("dense", DotLayout::dense(8)), ("interval", DotLayout::interval(8))] {
+        run.time(&format!("host: 20 sparse dots ({name} layout)"), || {
+            let sacu = Sacu::new(layout, true);
+            let mut cma = Cma::new();
+            sacu.init_cma(&mut cma);
+            for j in 0..layout.max_slots().min(20) {
+                let vals: Vec<u64> = (0..64).map(|_| rng.below(256)).collect();
+                sacu.load_slot(&mut cma, j, &vals);
+            }
+            for _ in 0..20 {
+                let w = rng.ternary_vec(layout.max_slots().min(20), 0.5);
+                let reg = WeightRegister::load(&w);
+                sacu.sparse_dot(&mut cma, fat.as_ref(), &reg, 64);
+            }
+        });
+    }
+    run.finish();
+}

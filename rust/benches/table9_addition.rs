@@ -1,0 +1,86 @@
+//! Regenerates **Table IX**: critical path and latency of scalar / vector
+//! additions for STT-CiM, ParaPIM, GraphS and FAT, including the
+//! write-back-to-memory overheads.  Also times the *functional* bit-serial
+//! execution on the host to show the simulator's own cost.
+
+use fat_imc::addition::{all_schemes, first_cols_mask, scheme};
+use fat_imc::array::cma::Cma;
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::calibration::PAPER_TABLE9;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::report::{fnum, Table};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut run = BenchRun::new("table9_addition");
+
+    let mut t = Table::new(
+        "Table IX — CP and latency of addition (ns); paper values in ()",
+        &["design", "scalar 8b", "vec 8b", "vec 16b", "paper s8", "paper v8", "paper v16"],
+    );
+    for (s, paper) in all_schemes().iter().zip(PAPER_TABLE9) {
+        t.row(vec![
+            paper.name.into(),
+            fnum(s.scalar_add_latency_ns(8), 2),
+            fnum(s.vector_add_latency_ns(8, 256), 2),
+            fnum(s.vector_add_latency_ns(16, 256), 2),
+            fnum(paper.scalar_latency, 2),
+            fnum(paper.vec8_latency, 2),
+            fnum(paper.vec16_latency, 2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // modelled latencies land within 10% of the paper's Virtuoso numbers
+    for (s, paper) in all_schemes().iter().zip(PAPER_TABLE9) {
+        run.check_close(
+            &format!("{} vec8 latency", paper.name),
+            s.vector_add_latency_ns(8, 256),
+            paper.vec8_latency,
+            0.10,
+        );
+        run.check_close(
+            &format!("{} vec16 latency", paper.name),
+            s.vector_add_latency_ns(16, 256),
+            paper.vec16_latency,
+            0.10,
+        );
+    }
+    // STT-CiM wins scalars; FAT wins vectors
+    let fat = scheme(SaKind::Fat);
+    let stt = scheme(SaKind::SttCim);
+    run.check(
+        "STT-CiM fastest on one scalar",
+        stt.scalar_add_latency_ns(8) < fat.scalar_add_latency_ns(8),
+        String::new(),
+    );
+    run.check(
+        "FAT fastest on 16-bit vectors",
+        all_schemes()
+            .iter()
+            .all(|s| s.vector_add_latency_ns(16, 256) >= fat.vector_add_latency_ns(16, 256)),
+        String::new(),
+    );
+    run.check(
+        "FAT fastest on 32-bit vectors",
+        all_schemes()
+            .iter()
+            .all(|s| s.vector_add_latency_ns(32, 256) >= fat.vector_add_latency_ns(32, 256)),
+        String::new(),
+    );
+
+    // host-time of the functional (bit-accurate) executions
+    let mut rng = Rng::new(1);
+    let a: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+    let b: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+    for s in all_schemes() {
+        let mut cma = Cma::new();
+        cma.store_vector(0, 16, &a);
+        cma.store_vector(16, 16, &b);
+        let mask = first_cols_mask(256);
+        run.time(&format!("host: {} 16b x 256 functional add", s.kind().name()), || {
+            s.vector_add(&mut cma, 0, 16, 32, 16, &mask, false)
+        });
+    }
+    run.finish();
+}

@@ -1,0 +1,123 @@
+//! The FAT fast-addition scheme — Fig. 3 (d), §III-B2c.
+//!
+//! Bit-serial over columns, with the running carry kept in the SA's D-latch:
+//! one two-row sense + one sum-row write per bit, no carry write-back, no
+//! ripple wait.  `tv_FAT = (t_Read + t_SUM + t_Write) x N` — eq. (3).
+
+use crate::array::cma::{Cma, RowWords, WORDS};
+use crate::circuit::sense_amp::SaKind;
+
+use super::{timing, AdditionScheme};
+
+/// Per-bit SA critical path of the FAT SA during SUM, ns (Table IX).
+const CP_NS: f64 = 1.13;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FatAddition;
+
+impl AdditionScheme for FatAddition {
+    fn kind(&self) -> SaKind {
+        SaKind::Fat
+    }
+
+    fn sa_critical_path_ns(&self) -> f64 {
+        CP_NS
+    }
+
+    fn vector_add_rows(
+        &self,
+        cma: &mut Cma,
+        a_rows: &[usize],
+        b_rows: &[usize],
+        dest_rows: &[usize],
+        mask: &RowWords,
+        carry_in: bool,
+    ) {
+        let bits = a_rows.len();
+        assert_eq!(b_rows.len(), bits, "operand width mismatch");
+        assert!(dest_rows.len() >= bits, "destination too narrow");
+        // The MC initializes the carry D-latches (§III-B2c step 1): 0 for
+        // ADD, 1 for the +1 of a two's-complement SUB (eq. 16).
+        let mut carry = if carry_in { [u64::MAX; WORDS] } else { [0u64; WORDS] };
+        for k in 0..bits {
+            // One simultaneous two-row activation; the SA ladder yields the
+            // per-column AND / OR comparator outputs.
+            let (and, or) = cma.sense_two_rows(a_rows[k], b_rows[k]);
+            // Combining stage (eqs. 11-13), across all columns at once:
+            let mut sum = [0u64; WORDS];
+            let mut carry_next = [0u64; WORDS];
+            for w in 0..WORDS {
+                let xor = or[w] & !and[w];
+                sum[w] = xor ^ carry[w];
+                carry_next[w] = and[w] | (carry[w] & or[w]);
+            }
+            // SA combinational latency (the paper's CP) per bit cycle.
+            cma.stats.latency_ns += CP_NS;
+            // Only the SUM is written back; the carry stays in the latch.
+            cma.write_row_masked(dest_rows[k], &sum, mask);
+            carry = carry_next;
+        }
+        // Drain the final carry into the extra result row (bit growth).
+        if dest_rows.len() > bits {
+            cma.write_row_masked(dest_rows[bits], &carry, mask);
+        }
+    }
+
+    fn vector_add_latency_ns(&self, bits: u32, _elems: u32) -> f64 {
+        let t = timing();
+        (t.t_sense_ns + CP_NS + t.t_write_ns) * bits as f64
+    }
+
+    fn scalar_add_latency_ns(&self, bits: u32) -> f64 {
+        // Bit-serial: a scalar costs the same as a full-width vector.
+        self.vector_add_latency_ns(bits, 1)
+    }
+
+    fn relative_power(&self) -> f64 {
+        1.0
+    }
+
+    fn operand_rows(&self) -> u32 {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::addition::first_cols_mask;
+
+    #[test]
+    fn adds_with_carry_chains() {
+        let mut cma = Cma::new();
+        // 0b0111 + 0b0001 exercises a 3-bit carry chain.
+        cma.store_vector(0, 4, &[7, 15, 0]);
+        cma.store_vector(4, 4, &[1, 15, 0]);
+        FatAddition.vector_add(&mut cma, 0, 4, 8, 4, &first_cols_mask(3), false);
+        assert_eq!(cma.load_vector(8, 5, 3), vec![8, 30, 0]);
+    }
+
+    #[test]
+    fn no_carry_writes_to_array_mid_addition() {
+        // FAT's defining property: writes == bits + 1 (sum rows + final
+        // carry drain), never 2x like ParaPIM/GraphS.
+        let mut cma = Cma::new();
+        cma.store_vector(0, 8, &[100]);
+        cma.store_vector(8, 8, &[100]);
+        cma.reset_stats();
+        FatAddition.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(1), false);
+        assert_eq!(cma.stats.writes, 9);
+        assert_eq!(cma.stats.senses, 8);
+    }
+
+    #[test]
+    fn per_bit_latency_matches_eq3() {
+        // eq. (3): tv = (t_Read + t_SUM + t_Write) * N
+        let t = timing();
+        let per_bit = t.t_sense_ns + CP_NS + t.t_write_ns;
+        let got = FatAddition.vector_add_latency_ns(8, 256);
+        assert!((got - 8.0 * per_bit).abs() < 1e-9);
+        // and lands within 1% of the paper's Table IX 69.13 ns
+        assert!((got - 69.13).abs() / 69.13 < 0.01, "{got}");
+    }
+}

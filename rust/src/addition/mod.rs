@@ -1,0 +1,307 @@
+//! The four in-memory addition schemes of Fig. 3.
+//!
+//! Each scheme is implemented twice, deliberately:
+//!
+//! 1. **Functionally** — a bit-accurate execution over a [`Cma`], producing
+//!    real sums and updating the CMA's latency/energy/write ledger with the
+//!    operations the scheme actually performs (senses, SA critical paths,
+//!    write-backs).  Property tests check every scheme against plain `u64`
+//!    addition.
+//! 2. **Analytically** — closed-form latency/energy formulas (eqs. (1)-(3))
+//!    used by the Table IX / Fig. 11 benches and the mapping cost model.
+//!    The functional ledger and the analytic model agree to within a few
+//!    percent by construction (tested).
+//!
+//! Scheme structure (per result bit, over all 256 columns in parallel):
+//!
+//! | scheme   | senses | SA CP (ns) | array writes | carry home        |
+//! |----------|--------|------------|--------------|-------------------|
+//! | FAT      | 1      | 1.13       | 1 (sum)      | SA D-latch        |
+//! | ParaPIM  | 2      | 2.47 total | 2 (sum+carry)| memory row        |
+//! | GraphS   | 1      | 1.18       | 2 (sum+carry)| memory row        |
+//! | STT-CiM  | (row-major: N-bit scalar per access, vector = N scalars)   |
+
+mod fat;
+mod graphs;
+mod parapim;
+mod stt_cim;
+
+pub use fat::FatAddition;
+pub use graphs::GraphSAddition;
+pub use parapim::ParaPimAddition;
+pub use stt_cim::SttCimAddition;
+
+use crate::array::cma::{Cma, RowWords, WORDS};
+use crate::circuit::calibration::ArrayTiming;
+use crate::circuit::sense_amp::SaKind;
+
+/// Column-selection mask helper: the first `n` columns.
+pub fn first_cols_mask(n: usize) -> RowWords {
+    let mut m = [0u64; WORDS];
+    for c in 0..n {
+        m[c / 64] |= 1 << (c % 64);
+    }
+    m
+}
+
+/// An in-memory vector-addition scheme over a CMA.
+pub trait AdditionScheme: Send + Sync {
+    fn kind(&self) -> SaKind;
+
+    /// Per-bit SA critical path during addition, ns (Table IX "CP" per bit;
+    /// for ParaPIM this is the sum of its two phases).
+    fn sa_critical_path_ns(&self) -> f64;
+
+    /// Functional vector addition over explicit row lists: bit *k* of the
+    /// operands lives at `a_rows[k]` / `b_rows[k]` and the result bit goes
+    /// to `dest_rows[k]`; if `dest_rows` has one extra entry it receives
+    /// the carry-out.  Row lists need not be contiguous — the CS mapping
+    /// stores partial sums in interleaved interval rows (§III-C2).
+    /// Operands narrower than the result are zero-extended by passing a
+    /// reserved all-zero row for the high bits.  Updates the CMA ledger
+    /// with the scheme's real costs.
+    fn vector_add_rows(
+        &self,
+        cma: &mut Cma,
+        a_rows: &[usize],
+        b_rows: &[usize],
+        dest_rows: &[usize],
+        mask: &RowWords,
+        carry_in: bool,
+    );
+
+    /// Contiguous-layout convenience wrapper: operands at `a_base` /
+    /// `b_base`, `bits` wide, result (+ carry row) at `dest_base`.
+    #[allow(clippy::too_many_arguments)]
+    fn vector_add(
+        &self,
+        cma: &mut Cma,
+        a_base: usize,
+        b_base: usize,
+        dest_base: usize,
+        bits: u32,
+        mask: &RowWords,
+        carry_in: bool,
+    ) {
+        let n = bits as usize;
+        let a: Vec<usize> = (a_base..a_base + n).collect();
+        let b: Vec<usize> = (b_base..b_base + n).collect();
+        let d: Vec<usize> = (dest_base..dest_base + n + 1).collect();
+        self.vector_add_rows(cma, &a, &b, &d, mask, carry_in);
+    }
+
+    /// Analytic latency of an N-bit vector addition (any vector length up
+    /// to the column count — bit-serial schemes pay per *bit*, STT-CiM pays
+    /// per *element*), ns.  `elems` only matters for STT-CiM.
+    fn vector_add_latency_ns(&self, bits: u32, elems: u32) -> f64;
+
+    /// Analytic latency of one N-bit scalar addition, ns.
+    fn scalar_add_latency_ns(&self, bits: u32) -> f64;
+
+    /// Analytic energy of an N-bit vector addition over `elems` columns, pJ.
+    /// Modeled as (relative average power) x (latency): the paper's Fig. 11
+    /// efficiency comparisons are power x time products.
+    fn vector_add_energy_pj(&self, bits: u32, elems: u32) -> f64 {
+        self.relative_power() * self.vector_add_latency_ns(bits, elems)
+            * (elems as f64 / 256.0)
+            * E_SCALE_PJ_PER_NS
+    }
+
+    /// Average dynamic power relative to FAT (Fig. 10 right axis).
+    fn relative_power(&self) -> f64;
+
+    /// Rows activated simultaneously during addition (sense-margin proxy).
+    fn operand_rows(&self) -> u32;
+}
+
+/// Nominal 256-column SA bank + array power at the FAT operating point,
+/// expressed as pJ per ns of addition activity.  Sets absolute energy scale
+/// (ratios are what the paper reports).
+pub const E_SCALE_PJ_PER_NS: f64 = 10.0;
+
+/// All four schemes, boxed.
+pub fn scheme(kind: SaKind) -> Box<dyn AdditionScheme> {
+    match kind {
+        SaKind::Fat => Box::new(FatAddition::default()),
+        SaKind::ParaPim => Box::new(ParaPimAddition::default()),
+        SaKind::GraphS => Box::new(GraphSAddition::default()),
+        SaKind::SttCim => Box::new(SttCimAddition::default()),
+    }
+}
+
+pub fn all_schemes() -> Vec<Box<dyn AdditionScheme>> {
+    SaKind::ALL.iter().map(|&k| scheme(k)).collect()
+}
+
+pub(crate) fn timing() -> ArrayTiming {
+    ArrayTiming::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::cma::COLS;
+    use crate::testutil::{prop_check, Rng};
+
+    /// Every scheme must compute exact sums for random vectors and widths.
+    #[test]
+    fn all_schemes_add_exactly() {
+        for s in all_schemes() {
+            prop_check(
+                &format!("{:?} vector_add == u64 add", s.kind()),
+                25,
+                0xADD + s.kind() as u64,
+                |rng: &mut Rng| {
+                    let bits = rng.range(1, 17) as u32;
+                    let n = rng.range(1, COLS + 1);
+                    let a: Vec<u64> = (0..n).map(|_| rng.below(1u64 << bits)).collect();
+                    let b: Vec<u64> = (0..n).map(|_| rng.below(1u64 << bits)).collect();
+                    (bits, a, b)
+                },
+                |(bits, a, b)| {
+                    let mut cma = Cma::new();
+                    cma.store_vector(0, *bits, a);
+                    cma.store_vector(*bits as usize, *bits, b);
+                    let mask = first_cols_mask(a.len());
+                    s.vector_add(&mut cma, 0, *bits as usize, 2 * *bits as usize, *bits, &mask, false);
+                    let got = cma.load_vector(2 * *bits as usize, *bits + 1, a.len());
+                    for i in 0..a.len() {
+                        let want = a[i] + b[i];
+                        if got[i] != want {
+                            return Err(format!(
+                                "col {i}: {} + {} = {} got {}",
+                                a[i], b[i], want, got[i]
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    /// The carry-out row must be correct (sums that overflow `bits`).
+    #[test]
+    fn carry_out_row_is_produced() {
+        for s in all_schemes() {
+            let mut cma = Cma::new();
+            let bits = 8u32;
+            cma.store_vector(0, bits, &[255, 1]);
+            cma.store_vector(8, bits, &[255, 1]);
+            let mask = first_cols_mask(2);
+            s.vector_add(&mut cma, 0, 8, 16, bits, &mask, false);
+            let got = cma.load_vector(16, bits + 1, 2);
+            assert_eq!(got[0], 510, "{:?}", s.kind());
+            assert_eq!(got[1], 2, "{:?}", s.kind());
+        }
+    }
+
+    /// Paper Table IX shape: FAT fastest on vector add; ParaPIM ~ GraphS;
+    /// vector latency for bit-serial schemes is independent of elems.
+    #[test]
+    fn table9_latency_shape() {
+        let fat = scheme(SaKind::Fat);
+        let para = scheme(SaKind::ParaPim);
+        let graphs = scheme(SaKind::GraphS);
+        let stt = scheme(SaKind::SttCim);
+
+        let n = 32;
+        let f = fat.vector_add_latency_ns(n, 256);
+        let p = para.vector_add_latency_ns(n, 256);
+        let g = graphs.vector_add_latency_ns(n, 256);
+        let s = stt.vector_add_latency_ns(n, 256);
+        // headline: 2.00x vs ParaPIM, 1.98x vs GraphS, 1.12x vs STT-CiM
+        assert!((p / f - 2.00).abs() < 0.05, "ParaPIM ratio {}", p / f);
+        assert!((g / f - 1.98).abs() < 0.06, "GraphS ratio {}", g / f);
+        assert!((s / f - 1.12).abs() < 0.10, "STT-CiM ratio {}", s / f);
+
+        // bit-serial schemes: same latency for 1 or 256 elements
+        assert_eq!(
+            fat.vector_add_latency_ns(8, 1),
+            fat.vector_add_latency_ns(8, 256)
+        );
+        // STT-CiM pays per row pass: a full-width 8-bit vector needs 8 of
+        // them (eq. 2), a single element just one.
+        assert!(
+            (stt.vector_add_latency_ns(8, 256) - 8.0 * stt.vector_add_latency_ns(8, 1)).abs()
+                < 1e-9
+        );
+    }
+
+    /// STT-CiM wins on *scalar* addition (paper: "FAT has longer latency
+    /// than STT-CiM series IMC designs on single scalar addition").
+    #[test]
+    fn stt_cim_wins_scalar() {
+        let fat = scheme(SaKind::Fat);
+        let stt = scheme(SaKind::SttCim);
+        assert!(stt.scalar_add_latency_ns(8) < fat.scalar_add_latency_ns(8));
+    }
+
+    /// Energy shape: FAT ~2.44x more energy-efficient than ParaPIM.
+    #[test]
+    fn energy_ratio_vs_parapim() {
+        let fat = scheme(SaKind::Fat);
+        let para = scheme(SaKind::ParaPim);
+        let ef = fat.vector_add_energy_pj(32, 256);
+        let ep = para.vector_add_energy_pj(32, 256);
+        assert!((ep / ef - 2.44).abs() < 0.10, "energy ratio {}", ep / ef);
+    }
+
+    /// The functional ledger must agree with the analytic model within 5%.
+    #[test]
+    fn ledger_matches_analytic_model() {
+        for s in all_schemes() {
+            let mut cma = Cma::new();
+            let bits = 16u32;
+            let vals: Vec<u64> = (0..COLS as u64).collect();
+            cma.store_vector(0, bits, &vals);
+            cma.store_vector(16, bits, &vals);
+            cma.reset_stats();
+            s.vector_add(&mut cma, 0, 16, 32, bits, &[u64::MAX; WORDS], false);
+            let analytic = s.vector_add_latency_ns(bits, COLS as u32);
+            let measured = cma.stats.latency_ns;
+            let err = (measured - analytic).abs() / analytic;
+            assert!(
+                err < 0.05,
+                "{:?}: ledger {measured} vs analytic {analytic} ({err:.1}% off)",
+                s.kind()
+            );
+        }
+    }
+
+    /// FAT writes one row per bit; ParaPIM/GraphS write two (carry row).
+    #[test]
+    fn write_counts_per_scheme() {
+        let bits = 8u32;
+        let counts: Vec<(SaKind, u64)> = all_schemes()
+            .iter()
+            .map(|s| {
+                let mut cma = Cma::new();
+                cma.store_vector(0, bits, &[1, 2, 3]);
+                cma.store_vector(8, bits, &[4, 5, 6]);
+                cma.reset_stats();
+                s.vector_add(&mut cma, 0, 8, 16, bits, &first_cols_mask(3), false);
+                (s.kind(), cma.stats.writes)
+            })
+            .collect();
+        for (kind, writes) in counts {
+            match kind {
+                // 8 sum rows + 1 carry-out row
+                SaKind::Fat => assert_eq!(writes, 9, "{kind:?}"),
+                // two writes per bit (sum + carry row)
+                SaKind::ParaPim | SaKind::GraphS => assert_eq!(writes, 16, "{kind:?}"),
+                // 3 elements of 8 bits fit one row pass
+                SaKind::SttCim => assert_eq!(writes, 1, "{kind:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn first_cols_mask_counts() {
+        let m = first_cols_mask(70);
+        let ones: u32 = m.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(ones, 70);
+        assert_eq!(m[0], u64::MAX);
+        assert_eq!(m[1], (1 << 6) - 1);
+    }
+}

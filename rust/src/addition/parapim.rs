@@ -1,0 +1,142 @@
+//! The ParaPIM addition scheme [29] — Fig. 3 (b).
+//!
+//! Bit-serial over columns like FAT, but with both of the weaknesses FAT
+//! removes (§II-C): (1) SUM and Carry-out are computed in two sequential
+//! sensing phases, and (2) the carry is written back to a memory row so the
+//! next bit can sense it as a third operand.  Per bit: two three-row
+//! senses, the two-phase SA critical path, and two row writes.
+
+use crate::array::cma::{Cma, RowWords, WORDS};
+use crate::circuit::sense_amp::SaKind;
+
+use super::{timing, AdditionScheme};
+
+/// Two-phase SA critical path per bit, ns (Table IX: 2.47 = both phases).
+const CP_NS: f64 = 2.47;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ParaPimAddition;
+
+impl ParaPimAddition {
+    /// Row used as the in-array carry home during an addition.  The CS
+    /// mapping reserves interval rows for exactly this kind of scratch.
+    pub fn carry_row(dest_base: usize, bits: u32) -> usize {
+        dest_base + bits as usize
+    }
+}
+
+impl AdditionScheme for ParaPimAddition {
+    fn kind(&self) -> SaKind {
+        SaKind::ParaPim
+    }
+
+    fn sa_critical_path_ns(&self) -> f64 {
+        CP_NS
+    }
+
+    fn vector_add_rows(
+        &self,
+        cma: &mut Cma,
+        a_rows: &[usize],
+        b_rows: &[usize],
+        dest_rows: &[usize],
+        mask: &RowWords,
+        carry_in: bool,
+    ) {
+        let bits = a_rows.len();
+        assert_eq!(b_rows.len(), bits, "operand width mismatch");
+        assert!(
+            dest_rows.len() > bits,
+            "ParaPIM needs an in-array carry row (dest_rows must have bits+1 entries)"
+        );
+        // The carry lives in the array: use the result's carry-out row as
+        // the scratch row (it ends holding the final carry, which is where
+        // it belongs).
+        let carry_row = dest_rows[bits];
+        if carry_in {
+            // SUB path (eq. 16): the MC pre-writes 1s into the carry row.
+            cma.write_row_masked(carry_row, &[u64::MAX; WORDS], mask);
+        }
+        for k in 0..bits {
+            let (a_row, b_row) = (a_rows[k], b_rows[k]);
+            let two_row_first = k == 0 && !carry_in;
+            // Phase 1: sense A, B and the carry row; produce SUM; write it.
+            let xor3 = if two_row_first {
+                // First bit of an ADD: carry row not yet initialized.
+                let (and, or) = cma.sense_two_rows(a_row, b_row);
+                let mut xor = [0u64; WORDS];
+                for w in 0..WORDS {
+                    xor[w] = or[w] & !and[w];
+                }
+                xor
+            } else {
+                cma.sense_three_rows(a_row, b_row, carry_row).1
+            };
+            cma.stats.latency_ns += CP_NS / 2.0;
+            cma.write_row_masked(dest_rows[k], &xor3, mask);
+
+            // Phase 2: sense again; produce Carry-out; write it back to the
+            // carry row — the extra write FAT avoids.
+            let maj = if two_row_first {
+                let (and, _) = cma.sense_two_rows(a_row, b_row);
+                and
+            } else {
+                cma.sense_three_rows(a_row, b_row, carry_row).0
+            };
+            cma.stats.latency_ns += CP_NS / 2.0;
+            cma.write_row_masked(carry_row, &maj, mask);
+        }
+    }
+
+    fn vector_add_latency_ns(&self, bits: u32, _elems: u32) -> f64 {
+        let t = timing();
+        // per bit: two senses + two-phase SA CP + two writes
+        (2.0 * t.t_sense_ns + CP_NS + 2.0 * t.t_write_ns) * bits as f64
+    }
+
+    fn scalar_add_latency_ns(&self, bits: u32) -> f64 {
+        self.vector_add_latency_ns(bits, 1)
+    }
+
+    fn relative_power(&self) -> f64 {
+        1.22 // Fig. 10: FAT is 1.22x more power-efficient
+    }
+
+    fn operand_rows(&self) -> u32 {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::addition::first_cols_mask;
+
+    #[test]
+    fn adds_via_in_array_carry() {
+        let mut cma = Cma::new();
+        cma.store_vector(0, 8, &[200, 55, 128]);
+        cma.store_vector(8, 8, &[100, 200, 128]);
+        ParaPimAddition.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(3), false);
+        assert_eq!(cma.load_vector(16, 9, 3), vec![300, 255, 256]);
+    }
+
+    #[test]
+    fn writes_twice_per_bit() {
+        let mut cma = Cma::new();
+        cma.store_vector(0, 8, &[1]);
+        cma.store_vector(8, 8, &[2]);
+        cma.reset_stats();
+        ParaPimAddition.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(1), false);
+        assert_eq!(cma.stats.writes, 16, "2 writes x 8 bits");
+        assert_eq!(cma.stats.senses, 16, "2 senses x 8 bits");
+    }
+
+    #[test]
+    fn twice_fat_latency() {
+        use super::super::FatAddition;
+        let p = ParaPimAddition.vector_add_latency_ns(32, 256);
+        let f = FatAddition.vector_add_latency_ns(32, 256);
+        assert!((p / f - 2.0).abs() < 0.05, "{}", p / f);
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-cell write-endurance tracking.
+//!
+//! STT-MRAM cells survive ~10^15 writes (§II-A); the Combined-Stationary
+//! mapping's headline lifetime claim (Table VIII "Max Single Cell Write"
+//! column: 1x vs 64x) is about *balancing* writes across rows.  This module
+//! tracks per-cell write counts so the mapping benches can measure exactly
+//! that.  Tracking is optional — the hot simulation path skips it unless an
+//! [`EnduranceMap`] is attached.
+
+use super::cma::{COLS, ROWS};
+
+/// Write-count map for one CMA: `counts[row * COLS + col]`.
+#[derive(Clone)]
+pub struct EnduranceMap {
+    counts: Vec<u32>,
+}
+
+impl Default for EnduranceMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EnduranceMap {
+    pub fn new() -> Self {
+        Self { counts: vec![0; ROWS * COLS] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, row: usize, col: usize) {
+        self.counts[row * COLS + col] += 1;
+    }
+
+    /// Record a write to every column of `row` selected by the 256-bit mask.
+    pub fn record_row(&mut self, row: usize, mask: &[u64; 4]) {
+        let base = row * COLS;
+        for (w, &word) in mask.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                self.counts[base + w * 64 + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    pub fn count(&self, row: usize, col: usize) -> u32 {
+        self.counts[row * COLS + col]
+    }
+
+    /// The Table VIII metric: the most-written single cell.
+    pub fn max_cell_writes(&self) -> u32 {
+        self.counts.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean writes over cells that were written at least once.
+    pub fn mean_written(&self) -> f64 {
+        let written: Vec<u32> = self.counts.iter().copied().filter(|&c| c > 0).collect();
+        if written.is_empty() {
+            return 0.0;
+        }
+        written.iter().map(|&c| c as f64).sum::<f64>() / written.len() as f64
+    }
+
+    /// Write-balance factor: max / mean — 1.0 is perfectly balanced.
+    pub fn balance_factor(&self) -> f64 {
+        let mean = self.mean_written();
+        if mean == 0.0 {
+            return 1.0;
+        }
+        self.max_cell_writes() as f64 / mean
+    }
+
+    /// Total writes recorded.
+    pub fn total_writes(&self) -> u64 {
+        self.counts.iter().map(|&c| c as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = EnduranceMap::new();
+        m.record(3, 7);
+        m.record(3, 7);
+        m.record(0, 0);
+        assert_eq!(m.count(3, 7), 2);
+        assert_eq!(m.count(0, 0), 1);
+        assert_eq!(m.count(1, 1), 0);
+        assert_eq!(m.max_cell_writes(), 2);
+        assert_eq!(m.total_writes(), 3);
+    }
+
+    #[test]
+    fn record_row_respects_mask() {
+        let mut m = EnduranceMap::new();
+        let mut mask = [0u64; 4];
+        mask[0] = 0b101; // columns 0 and 2
+        mask[3] = 1 << 63; // column 255
+        m.record_row(10, &mask);
+        assert_eq!(m.count(10, 0), 1);
+        assert_eq!(m.count(10, 1), 0);
+        assert_eq!(m.count(10, 2), 1);
+        assert_eq!(m.count(10, 255), 1);
+        assert_eq!(m.total_writes(), 3);
+    }
+
+    #[test]
+    fn balance_factor_detects_hotspots() {
+        let mut hot = EnduranceMap::new();
+        for _ in 0..64 {
+            hot.record(0, 0); // one cell takes all writes
+        }
+        hot.record(1, 0);
+        assert!(hot.balance_factor() > 1.9, "{}", hot.balance_factor());
+
+        let mut even = EnduranceMap::new();
+        for r in 0..64 {
+            even.record(r, 0);
+        }
+        assert!((even.balance_factor() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_ignores_untouched_cells() {
+        let mut m = EnduranceMap::new();
+        m.record(0, 0);
+        m.record(0, 0);
+        assert!((m.mean_written() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,494 @@
+//! The Computing Memory Array: 512 x 256 STT-MRAM cells + per-column SAs.
+//!
+//! Storage is column-major bit-serial (Fig. 3 right; §III-B): an N-bit
+//! operand occupies N consecutive rows of one column, LSB at the lowest
+//! row.  One simulated "row op" (two-row activation + SA + optional write-
+//! back) is the unit of both the functional simulation and the
+//! latency/energy ledger.
+
+use crate::circuit::calibration::{ArrayEnergy, ArrayTiming};
+
+use super::cell::EnduranceMap;
+
+/// Array geometry — kept identical to ParaPIM / GraphS ([29], [33]).
+pub const ROWS: usize = 512;
+pub const COLS: usize = 256;
+/// 256 columns packed into four u64 bit-plane words.
+pub const WORDS: usize = COLS / 64;
+
+/// One row of 256 cells as bit-plane words.
+pub type RowWords = [u64; WORDS];
+
+/// Latency / energy / operation ledger of one CMA.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CmaStats {
+    /// Two-row (or three-row) activations performed.
+    pub senses: u64,
+    /// Row write-backs performed.
+    pub writes: u64,
+    /// Accumulated latency, ns.
+    pub latency_ns: f64,
+    /// Accumulated energy, pJ.
+    pub energy_pj: f64,
+}
+
+impl CmaStats {
+    pub fn add(&mut self, other: &CmaStats) {
+        self.senses += other.senses;
+        self.writes += other.writes;
+        self.latency_ns += other.latency_ns;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+/// One Computing Memory Array.
+#[derive(Clone)]
+pub struct Cma {
+    rows: Vec<RowWords>,
+    pub timing: ArrayTiming,
+    pub energy: ArrayEnergy,
+    pub stats: CmaStats,
+    /// Optional per-cell endurance tracking (off on the hot path).
+    pub endurance: Option<EnduranceMap>,
+    /// Reused transpose buffer for [`Self::store_vector`].
+    scratch_planes: Vec<RowWords>,
+    /// Optional sensing-fault injection: (per-column flip probability per
+    /// sense, RNG).  Models the §IV-A3 reliability analysis at the array
+    /// level — see `circuit::reliability` for where the rate comes from.
+    fault: Option<(f64, crate::testutil::Rng)>,
+}
+
+impl Default for Cma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Cma {
+    pub fn new() -> Self {
+        Self {
+            rows: vec![[0; WORDS]; ROWS],
+            timing: ArrayTiming::default(),
+            energy: ArrayEnergy::default(),
+            stats: CmaStats::default(),
+            endurance: None,
+            scratch_planes: Vec::new(),
+            fault: None,
+        }
+    }
+
+    /// Enable sensing-fault injection at `ber` flips per column per sense.
+    pub fn with_fault_injection(mut self, ber: f64, seed: u64) -> Self {
+        self.fault = Some((ber, crate::testutil::Rng::new(seed)));
+        self
+    }
+
+    /// Corrupt the comparator outputs per the injected bit-error rate:
+    /// a sensing fault flips what the SA ladder resolves for a column.
+    #[inline]
+    fn inject_faults(&mut self, words: &mut [RowWords]) {
+        let Some((ber, rng)) = &mut self.fault else { return };
+        if *ber <= 0.0 {
+            return;
+        }
+        for w in 0..WORDS {
+            for b in 0..64 {
+                if rng.chance(*ber) {
+                    let col_mask = 1u64 << b;
+                    for word in words.iter_mut() {
+                        word[w] ^= col_mask;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn with_endurance() -> Self {
+        let mut c = Self::new();
+        c.endurance = Some(EnduranceMap::new());
+        c
+    }
+
+    // ---- raw cell access (standard memory-device mode) -------------------
+
+    #[inline]
+    pub fn read_bit(&self, row: usize, col: usize) -> bool {
+        debug_assert!(row < ROWS && col < COLS);
+        (self.rows[row][col / 64] >> (col % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, row: usize, col: usize, bit: bool) {
+        debug_assert!(row < ROWS && col < COLS);
+        let word = &mut self.rows[row][col / 64];
+        let mask = 1u64 << (col % 64);
+        if bit {
+            *word |= mask;
+        } else {
+            *word &= !mask;
+        }
+        if let Some(e) = &mut self.endurance {
+            e.record(row, col);
+        }
+    }
+
+    /// Raw row words (no stats, no endurance — simulation internals only).
+    #[inline]
+    pub fn row_words(&self, row: usize) -> &RowWords {
+        &self.rows[row]
+    }
+
+    /// Overwrite a whole row of words, recording one row-write in the
+    /// ledger.  `mask` selects which columns are actually driven (the MCAD
+    /// enables only those bit-lines).
+    pub fn write_row_masked(&mut self, row: usize, value: &RowWords, mask: &RowWords) {
+        for w in 0..WORDS {
+            self.rows[row][w] = (self.rows[row][w] & !mask[w]) | (value[w] & mask[w]);
+        }
+        self.stats.writes += 1;
+        self.stats.latency_ns += self.timing.t_write_ns;
+        // write energy scales with the number of driven columns
+        let driven: u32 = mask.iter().map(|w| w.count_ones()).sum();
+        self.stats.energy_pj += self.energy.e_write_row_pj * driven as f64 / COLS as f64;
+        if let Some(e) = &mut self.endurance {
+            e.record_row(row, mask);
+        }
+    }
+
+    pub fn write_row(&mut self, row: usize, value: &RowWords) {
+        self.write_row_masked(row, value, &[u64::MAX; WORDS]);
+    }
+
+    // ---- IMC sensing ------------------------------------------------------
+
+    /// Activate two rows simultaneously (Fig. 2 (c)): every column's SA
+    /// receives the combined source-line level.  Returns the per-column
+    /// (AND, OR) comparator words — exactly what the reference ladder of
+    /// Fig. 6 (c) can distinguish.  Records one sense in the ledger.
+    pub fn sense_two_rows(&mut self, r1: usize, r2: usize) -> (RowWords, RowWords) {
+        debug_assert!(r1 != r2, "two-row activation needs distinct rows");
+        let mut and = [0u64; WORDS];
+        let mut or = [0u64; WORDS];
+        for w in 0..WORDS {
+            let (a, b) = (self.rows[r1][w], self.rows[r2][w]);
+            and[w] = a & b;
+            or[w] = a | b;
+        }
+        self.stats.senses += 1;
+        self.stats.latency_ns += self.timing.t_sense_ns;
+        self.stats.energy_pj += self.energy.e_sense_row_pj;
+        if self.fault.is_some() {
+            let mut words = [and, or];
+            self.inject_faults(&mut words);
+            return (words[0], words[1]);
+        }
+        (and, or)
+    }
+
+    /// Three-row activation (ParaPIM / GraphS carry-row sensing).  The SA
+    /// distinguishes the count of "1"s among the three cells per column:
+    /// returns (maj, xor3, or3) words — majority is the carry, xor3 the sum.
+    pub fn sense_three_rows(
+        &mut self,
+        r1: usize,
+        r2: usize,
+        r3: usize,
+    ) -> (RowWords, RowWords, RowWords) {
+        let mut maj = [0u64; WORDS];
+        let mut xor3 = [0u64; WORDS];
+        let mut or3 = [0u64; WORDS];
+        for w in 0..WORDS {
+            let (a, b, c) = (self.rows[r1][w], self.rows[r2][w], self.rows[r3][w]);
+            maj[w] = (a & b) | (c & (a | b));
+            xor3[w] = a ^ b ^ c;
+            or3[w] = a | b | c;
+        }
+        self.stats.senses += 1;
+        // three-operand sensing has the same cycle but a tighter margin;
+        // energy rises with the extra activated row.
+        self.stats.latency_ns += self.timing.t_sense_ns;
+        self.stats.energy_pj += self.energy.e_sense_row_pj * 1.5;
+        (maj, xor3, or3)
+    }
+
+    /// Single-row read (standard memory mode), as words.
+    pub fn sense_one_row(&mut self, row: usize) -> RowWords {
+        self.stats.senses += 1;
+        self.stats.latency_ns += self.timing.t_sense_ns;
+        self.stats.energy_pj += self.energy.e_sense_row_pj * 0.7;
+        self.rows[row]
+    }
+
+    // ---- operand helpers (column-major bit-serial layout) ----------------
+
+    /// Store an unsigned operand into `col`, bits at rows `base..base+bits`
+    /// (LSB first).  Counts one row write per bit (each bit of a loaded
+    /// operand is driven on its own row cycle during data loading).
+    pub fn store_operand(&mut self, col: usize, base: usize, bits: u32, value: u64) {
+        assert!(base + bits as usize <= ROWS, "operand exceeds array height");
+        for k in 0..bits {
+            self.write_bit(base + k as usize, col, (value >> k) & 1 == 1);
+        }
+    }
+
+    /// Read back an unsigned operand stored at (`col`, `base..base+bits`).
+    pub fn load_operand(&self, col: usize, base: usize, bits: u32) -> u64 {
+        let mut v = 0u64;
+        for k in 0..bits {
+            if self.read_bit(base + k as usize, col) {
+                v |= 1 << k;
+            }
+        }
+        v
+    }
+
+    /// Store one value per column (vector layout of Fig. 3 right).
+    pub fn store_vector(&mut self, base: usize, bits: u32, values: &[u64]) {
+        assert!(values.len() <= COLS);
+        assert!(bits as usize <= 64);
+        // Transpose values -> bit-plane rows in ONE pass over the data,
+        // zeroing only the planes actually used (perf: this is the
+        // operand-loading hot path — the naive per-bit-row pass over the
+        // values was 48% of a conv layer's host time, and a fixed 64-plane
+        // stack buffer spent most of the remainder on memset).
+        let mut planes = std::mem::take(&mut self.scratch_planes);
+        planes.clear();
+        planes.resize(bits as usize, [0u64; WORDS]);
+        let mut mask = [0u64; WORDS];
+        for (c, &v) in values.iter().enumerate() {
+            let (w, b) = (c / 64, c % 64);
+            mask[w] |= 1 << b;
+            let mut rest = v & ((1u128 << bits) - 1) as u64;
+            while rest != 0 {
+                let k = rest.trailing_zeros() as usize;
+                planes[k][w] |= 1 << b;
+                rest &= rest - 1;
+            }
+        }
+        // loading happens row-stripe by row-stripe: one write per bit row
+        for (k, plane) in planes.iter().enumerate() {
+            self.write_row_masked(base + k, plane, &mask);
+        }
+        self.scratch_planes = planes;
+    }
+
+    /// Load back `n` per-column values.
+    pub fn load_vector(&self, base: usize, bits: u32, n: usize) -> Vec<u64> {
+        (0..n).map(|c| self.load_operand(c, base, bits)).collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CmaStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, Rng};
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut c = Cma::new();
+        c.write_bit(511, 255, true);
+        assert!(c.read_bit(511, 255));
+        assert!(!c.read_bit(511, 254));
+        c.write_bit(511, 255, false);
+        assert!(!c.read_bit(511, 255));
+    }
+
+    #[test]
+    fn operand_roundtrip() {
+        let mut c = Cma::new();
+        c.store_operand(17, 32, 16, 0xBEEF);
+        assert_eq!(c.load_operand(17, 32, 16), 0xBEEF);
+        // neighbours untouched
+        assert_eq!(c.load_operand(16, 32, 16), 0);
+        assert_eq!(c.load_operand(18, 32, 16), 0);
+    }
+
+    #[test]
+    fn vector_roundtrip_property() {
+        prop_check(
+            "store/load vector roundtrip",
+            30,
+            0xC0FFEE,
+            |rng| {
+                let n = rng.range(1, COLS + 1);
+                let bits = rng.range(1, 33) as u32;
+                let vals: Vec<u64> = (0..n).map(|_| rng.below(1u64 << bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let mut c = Cma::new();
+                c.store_vector(0, *bits, vals);
+                let got = c.load_vector(0, *bits, vals.len());
+                if got == *vals {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch: {got:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sense_two_rows_is_and_or() {
+        let mut c = Cma::new();
+        c.write_bit(0, 0, true);
+        c.write_bit(1, 0, true); // col0: 1,1
+        c.write_bit(0, 1, true); // col1: 1,0
+        // col2: 0,0
+        let (and, or) = c.sense_two_rows(0, 1);
+        assert_eq!(and[0] & 0b111, 0b001);
+        assert_eq!(or[0] & 0b111, 0b011);
+    }
+
+    #[test]
+    fn sense_three_rows_majority_and_parity() {
+        let mut c = Cma::new();
+        // col0 = (1,1,0), col1 = (1,0,0), col2 = (1,1,1)
+        c.write_bit(0, 0, true);
+        c.write_bit(1, 0, true);
+        c.write_bit(0, 1, true);
+        c.write_bit(0, 2, true);
+        c.write_bit(1, 2, true);
+        c.write_bit(2, 2, true);
+        let (maj, xor3, or3) = c.sense_three_rows(0, 1, 2);
+        assert_eq!(maj[0] & 0b111, 0b101); // cols 0 and 2 have >=2 ones
+        assert_eq!(xor3[0] & 0b111, 0b110); // odd parity: col1 (one 1), col2 (three 1s)
+        assert_eq!(or3[0] & 0b111, 0b111);
+    }
+
+    #[test]
+    fn sense_three_rows_parity_col1() {
+        // regression for the xor3 expectation above: col1=(1,0,0) parity 1.
+        let mut c = Cma::new();
+        c.write_bit(0, 1, true);
+        let (_, xor3, _) = c.sense_three_rows(0, 1, 2);
+        assert_eq!((xor3[0] >> 1) & 1, 1);
+    }
+
+    #[test]
+    fn ledger_counts_ops() {
+        let mut c = Cma::new();
+        let t = c.timing;
+        c.sense_two_rows(0, 1);
+        c.write_row(2, &[0; WORDS]);
+        assert_eq!(c.stats.senses, 1);
+        assert_eq!(c.stats.writes, 1);
+        let want = t.t_sense_ns + t.t_write_ns;
+        assert!((c.stats.latency_ns - want).abs() < 1e-9);
+        assert!(c.stats.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn masked_write_leaves_other_columns() {
+        let mut c = Cma::new();
+        c.write_bit(5, 0, true);
+        c.write_bit(5, 1, true);
+        let mut mask = [0u64; WORDS];
+        mask[0] = 0b01; // only column 0 driven
+        c.write_row_masked(5, &[0u64; WORDS], &mask);
+        assert!(!c.read_bit(5, 0), "column 0 cleared");
+        assert!(c.read_bit(5, 1), "column 1 untouched");
+    }
+
+    #[test]
+    fn endurance_tracks_stores() {
+        let mut c = Cma::with_endurance();
+        c.store_operand(3, 0, 8, 0xFF);
+        let e = c.endurance.as_ref().unwrap();
+        assert_eq!(e.total_writes(), 8);
+        assert_eq!(e.count(0, 3), 1);
+        assert_eq!(e.max_cell_writes(), 1);
+    }
+
+    #[test]
+    fn store_vector_counts_one_write_per_bit_row() {
+        let mut c = Cma::new();
+        c.store_vector(0, 8, &[1, 2, 3]);
+        assert_eq!(c.stats.writes, 8);
+    }
+
+    #[test]
+    fn word_fastpath_matches_sa_truth_tables() {
+        // The (and, or) words must agree with the per-column SA levels.
+        use crate::circuit::sense_amp::{design, level_of, BitOp, SaKind};
+        let sa = design(SaKind::Fat);
+        let mut rng = Rng::new(42);
+        let mut c = Cma::new();
+        let a: Vec<bool> = (0..COLS).map(|_| rng.chance(0.5)).collect();
+        let b: Vec<bool> = (0..COLS).map(|_| rng.chance(0.5)).collect();
+        for col in 0..COLS {
+            c.write_bit(0, col, a[col]);
+            c.write_bit(1, col, b[col]);
+        }
+        let (and, or) = c.sense_two_rows(0, 1);
+        for col in 0..COLS {
+            let l = level_of(a[col], b[col]);
+            let want_and = sa.compute(BitOp::And, l, false).out;
+            let want_or = sa.compute(BitOp::Or, l, false).out;
+            assert_eq!((and[col / 64] >> (col % 64)) & 1 == 1, want_and, "col {col}");
+            assert_eq!((or[col / 64] >> (col % 64)) & 1 == 1, want_or, "col {col}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod fault_tests {
+    use super::*;
+    use crate::addition::{first_cols_mask, scheme};
+    use crate::circuit::reliability::sense_bit_error_rate;
+    use crate::circuit::sense_amp::SaKind;
+
+    #[test]
+    fn zero_ber_is_transparent() {
+        let mut a = Cma::new().with_fault_injection(0.0, 1);
+        let mut b = Cma::new();
+        a.store_vector(0, 8, &[1, 2, 3]);
+        b.store_vector(0, 8, &[1, 2, 3]);
+        assert_eq!(a.sense_two_rows(0, 1), b.sense_two_rows(0, 1));
+    }
+
+    #[test]
+    fn injected_faults_corrupt_additions_at_high_ber() {
+        // a 10% per-column flip rate must visibly corrupt vector adds
+        let fat = scheme(SaKind::Fat);
+        let mut clean = 0;
+        for seed in 0..20 {
+            let mut cma = Cma::new().with_fault_injection(0.1, seed);
+            cma.store_vector(0, 8, &[100; 64]);
+            cma.store_vector(8, 8, &[55; 64]);
+            fat.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(64), false);
+            if cma.load_vector(16, 9, 64).iter().all(|&v| v == 155) {
+                clean += 1;
+            }
+        }
+        assert!(clean < 3, "10% BER should rarely leave 64 columns clean ({clean}/20)");
+    }
+
+    #[test]
+    fn two_operand_ber_is_negligible_three_operand_is_not() {
+        // close the loop with §IV-A3: run the same addition at each
+        // design's modeled sensing BER; FAT's two-operand margin keeps the
+        // arithmetic exact, a three-operand-margin device corrupts it.
+        let p = crate::circuit::mtj::MtjParams::default();
+        let fat_scheme = scheme(SaKind::Fat);
+        let run = |ber: f64| -> usize {
+            let mut wrong = 0;
+            for seed in 0..10 {
+                let mut cma = Cma::new().with_fault_injection(ber, 100 + seed);
+                cma.store_vector(0, 8, &[200; 64]);
+                cma.store_vector(8, 8, &[55; 64]);
+                fat_scheme.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(64), false);
+                wrong += cma.load_vector(16, 9, 64).iter().filter(|&&v| v != 255).count();
+            }
+            wrong
+        };
+        let two_op = run(sense_bit_error_rate(SaKind::Fat, &p));
+        let three_op = run(sense_bit_error_rate(SaKind::ParaPim, &p));
+        assert_eq!(two_op, 0, "two-operand margin: exact arithmetic");
+        assert!(three_op > 50, "three-operand margin corrupts ({three_op} wrong)");
+    }
+}

@@ -1,0 +1,194 @@
+//! The Memory Controller (MC) — Fig. 5 (a).
+//!
+//! The MC receives instructions (from a CPU in the two memory modes, or
+//! from the chip coordinator in TWN-accelerator mode), decodes them into
+//! enable / selector signals for the Sense Amplifiers (Tables IV & V) and
+//! row/column activations for the MRAD / MCAD, and sequences multi-cycle
+//! operations (bit-serial addition, the SACU sparse dot product).
+
+use crate::addition::{scheme, AdditionScheme};
+use crate::circuit::sense_amp::{BitOp, SaKind};
+
+use super::cma::{Cma, RowWords, WORDS};
+
+/// Operating mode of a CMA (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Standard memory device: Read / Write only.
+    Memory,
+    /// Traditional IMC device: Boolean functions + addition.
+    Imc,
+    /// TWN accelerator: SACU-driven sparse dot products.
+    TwnAccelerator,
+}
+
+/// A Memory Controller bound to one CMA.
+pub struct MemoryController {
+    pub mode: Mode,
+    pub sa_kind: SaKind,
+    addition: Box<dyn AdditionScheme>,
+}
+
+impl MemoryController {
+    pub fn new(mode: Mode, sa_kind: SaKind) -> Self {
+        Self { mode, sa_kind, addition: scheme(sa_kind) }
+    }
+
+    pub fn fat(mode: Mode) -> Self {
+        Self::new(mode, SaKind::Fat)
+    }
+
+    pub fn addition(&self) -> &dyn AdditionScheme {
+        self.addition.as_ref()
+    }
+
+    /// Standard read of one row (any mode).
+    pub fn read_row(&self, cma: &mut Cma, row: usize) -> RowWords {
+        cma.sense_one_row(row)
+    }
+
+    /// Standard write of one row (any mode).
+    pub fn write_row(&self, cma: &mut Cma, row: usize, value: &RowWords) {
+        cma.write_row(row, value);
+    }
+
+    /// Two-row Boolean function across all columns (IMC / TWN modes).
+    /// Returns the SA OUT words.  Panics in `Memory` mode or if the bound
+    /// SA design does not support `op`.
+    pub fn bool_op(&self, cma: &mut Cma, op: BitOp, r1: usize, r2: usize) -> RowWords {
+        assert!(
+            self.mode != Mode::Memory,
+            "Boolean functions unavailable in standard memory mode"
+        );
+        let sa = crate::circuit::sense_amp::design(self.sa_kind);
+        assert!(sa.supports(op), "{:?} does not support {op:?}", self.sa_kind);
+        let (and, or) = cma.sense_two_rows(r1, r2);
+        let mut out = [0u64; WORDS];
+        for w in 0..WORDS {
+            out[w] = match op {
+                BitOp::And => and[w],
+                BitOp::Nand => !and[w],
+                BitOp::Or | BitOp::Read => or[w],
+                BitOp::Nor => !or[w],
+                BitOp::Xor | BitOp::Not => or[w] & !and[w],
+                BitOp::Sum => unreachable!("use vector_add"),
+            };
+        }
+        cma.stats.latency_ns += sa.op_latency_ns(op);
+        out
+    }
+
+    /// Bit-serial N-bit vector addition using the bound scheme
+    /// (IMC / TWN modes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn vector_add(
+        &self,
+        cma: &mut Cma,
+        a_base: usize,
+        b_base: usize,
+        dest_base: usize,
+        bits: u32,
+        mask: &RowWords,
+        carry_in: bool,
+    ) {
+        assert!(
+            self.mode != Mode::Memory,
+            "addition unavailable in standard memory mode"
+        );
+        self.addition.vector_add(cma, a_base, b_base, dest_base, bits, mask, carry_in);
+    }
+
+    /// NOT of a whole operand region: per bit, sense (src, ones_row) and
+    /// write the XOR result — eq. (14).  Needs a row of 1s at `ones_row`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vector_not(
+        &self,
+        cma: &mut Cma,
+        src_base: usize,
+        ones_row: usize,
+        dest_base: usize,
+        bits: u32,
+        mask: &RowWords,
+    ) {
+        for k in 0..bits as usize {
+            let out = self.bool_op(cma, BitOp::Not, src_base + k, ones_row);
+            cma.write_row_masked(dest_base + k, &out, mask);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::addition::first_cols_mask;
+
+    #[test]
+    fn bool_ops_match_word_logic() {
+        let mc = MemoryController::fat(Mode::Imc);
+        let mut cma = Cma::new();
+        cma.write_bit(0, 0, true);
+        cma.write_bit(0, 1, true);
+        cma.write_bit(1, 1, true);
+        // col0: (1,0)  col1: (1,1)  col2: (0,0)
+        let and = mc.bool_op(&mut cma, BitOp::And, 0, 1);
+        let or = mc.bool_op(&mut cma, BitOp::Or, 0, 1);
+        let xor = mc.bool_op(&mut cma, BitOp::Xor, 0, 1);
+        let nand = mc.bool_op(&mut cma, BitOp::Nand, 0, 1);
+        assert_eq!(and[0] & 0b111, 0b010);
+        assert_eq!(or[0] & 0b111, 0b011);
+        assert_eq!(xor[0] & 0b111, 0b001);
+        assert_eq!(nand[0] & 0b111, !0b010u64 & 0b111);
+    }
+
+    #[test]
+    #[should_panic(expected = "standard memory mode")]
+    fn memory_mode_rejects_compute() {
+        let mc = MemoryController::fat(Mode::Memory);
+        let mut cma = Cma::new();
+        mc.bool_op(&mut cma, BitOp::And, 0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn graphs_rejects_xor() {
+        let mc = MemoryController::new(Mode::Imc, SaKind::GraphS);
+        let mut cma = Cma::new();
+        mc.bool_op(&mut cma, BitOp::Xor, 0, 1);
+    }
+
+    #[test]
+    fn vector_not_inverts() {
+        let mc = MemoryController::fat(Mode::Imc);
+        let mut cma = Cma::new();
+        let ones_row = 100;
+        cma.write_row(ones_row, &[u64::MAX; WORDS]);
+        cma.store_vector(0, 8, &[0b1010_1010, 0]);
+        mc.vector_not(&mut cma, 0, ones_row, 8, 8, &first_cols_mask(2));
+        assert_eq!(cma.load_vector(8, 8, 2), vec![0b0101_0101, 0xFF]);
+    }
+
+    #[test]
+    fn controller_addition_adds() {
+        let mc = MemoryController::fat(Mode::TwnAccelerator);
+        let mut cma = Cma::new();
+        cma.store_vector(0, 8, &[11, 22]);
+        cma.store_vector(8, 8, &[33, 44]);
+        mc.vector_add(&mut cma, 0, 8, 16, 8, &first_cols_mask(2), false);
+        assert_eq!(cma.load_vector(16, 9, 2), vec![44, 66]);
+    }
+
+    #[test]
+    fn sub_via_not_add_carry_in() {
+        // SUB = A + NOT(B) + 1 (eq. 16), 8-bit two's complement.
+        let mc = MemoryController::fat(Mode::Imc);
+        let mut cma = Cma::new();
+        let ones = 120;
+        cma.write_row(ones, &[u64::MAX; WORDS]);
+        cma.store_vector(0, 8, &[200, 50]); // A
+        cma.store_vector(8, 8, &[60, 50]); // B
+        mc.vector_not(&mut cma, 8, ones, 16, 8, &first_cols_mask(2));
+        mc.vector_add(&mut cma, 0, 16, 24, 8, &first_cols_mask(2), true);
+        let got = cma.load_vector(24, 8, 2); // low 8 bits = A - B
+        assert_eq!(got, vec![140, 0]);
+    }
+}

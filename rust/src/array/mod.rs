@@ -1,0 +1,21 @@
+//! The Computing Memory Array (CMA) substrate — §III-B of the paper.
+//!
+//! A CMA is a 512-row x 256-column STT-MRAM array with a Memory Controller
+//! (MC), row/column address decoders (MRAD / MCAD), and one Sense Amplifier
+//! per column.  Data is stored **column-major bit-serial**: bit *k* of the
+//! operand in column *c* lives at row `base + k`, so one two-row activation
+//! performs a 1-bit operation across all 256 columns at once.
+//!
+//! For simulation speed the 256 columns of one row are packed into four
+//! `u64` bit-plane words; the word-parallel fast path is validated against
+//! the per-column [`circuit::SenseAmplifier`] truth tables in tests.
+
+pub mod cell;
+pub mod cma;
+pub mod controller;
+pub mod sacu;
+
+pub use cell::EnduranceMap;
+pub use cma::{Cma, CmaStats, RowWords, COLS, ROWS, WORDS};
+pub use controller::{MemoryController, Mode};
+pub use sacu::{Sacu, SparseDotPlan, WeightRegister};

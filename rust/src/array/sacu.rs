@@ -1,0 +1,711 @@
+//! The Sparse Addition Control Unit (SACU) — §III-B1, Fig. 5 (a)/(d).
+//!
+//! The SACU lives in the Memory Controller.  The 2-bit ternary weights are
+//! loaded into its SRAM weight registers and *directly gate row activation*
+//! (Table III): rows whose weight is 0 are simply never activated — the
+//! null operations are skipped with no compressed sparse format, and the
+//! 2-bit encoding keeps the 16x storage saving.
+//!
+//! The addition-based sparse dot product has three stages (Fig. 5 (d)):
+//!
+//! 1. accumulate the operands whose weight is +1 into a partial sum,
+//! 2. accumulate the operands whose weight is -1 into a second partial sum,
+//! 3. one subtraction (SUB = NOT + ADD with carry-in 1, eq. 16) of the two
+//!    partials — so every activation operand costs an *addition*, and the
+//!    only subtraction is on partials, which is cheaper and more reliable.
+//!
+//! Operand layout inside the CMA (column-major bit-serial):
+//!
+//! - operand slot `j` occupies rows `j*stride .. j*stride + op_bits`;
+//! - `stride == op_bits` is the dense layout (Img2Col-IS baseline): partial
+//!   sums ping-pong between *fixed* accumulator regions, so those rows take
+//!   every accumulation write (the 64x hotspot of Table VIII);
+//! - `stride == 2*op_bits` reserves an *interval* the height of one operand
+//!   above every slot (§III-C2, the Combined-Stationary layout): partial
+//!   sums rotate through the interval rows, spreading the accumulation
+//!   writes over half the array — the mapping's endurance win.
+
+use crate::addition::AdditionScheme;
+use crate::array::cma::{Cma, RowWords, COLS, WORDS};
+use crate::circuit::sense_amp::BitOp;
+
+/// First reserved row: operand slots live below this.
+pub const DATA_TOP: usize = 400;
+/// Fixed 17-row accumulator regions used by the dense layout.
+pub const FIXED_REGIONS: [usize; 6] = [400, 417, 434, 451, 468, 485];
+/// Never-written rows used to zero-extend narrow operands.
+pub const ZERO_A: usize = 504;
+pub const ZERO_B: usize = 505;
+/// All-ones row (written once at init) for NOT via XOR (eq. 14).
+pub const ONES: usize = 511;
+
+/// Table III: 2-bit signed encoding of a ternary weight.
+/// (sign bit, data bit); data=0 masks the row activation entirely.
+pub fn encode_weight(w: i8) -> (bool, bool) {
+    match w {
+        1 => (false, true),  // +1 = 01: Add, activate
+        0 => (false, false), //  0 = 00: Null, skip
+        -1 => (true, true),  // -1 = 11: Sub, activate
+        _ => panic!("not a ternary weight: {w}"),
+    }
+}
+
+/// Inverse of [`encode_weight`].
+pub fn decode_weight(sign: bool, data: bool) -> i8 {
+    match (sign, data) {
+        (false, true) => 1,
+        (true, true) => -1,
+        (_, false) => 0,
+    }
+}
+
+/// The SACU's SRAM weight register file: packed 2-bit ternary weights.
+#[derive(Debug, Clone, Default)]
+pub struct WeightRegister {
+    packed: Vec<u8>, // four weights per byte
+    len: usize,
+}
+
+impl WeightRegister {
+    pub fn load(weights: &[i8]) -> Self {
+        let mut packed = vec![0u8; weights.len().div_ceil(4)];
+        for (i, &w) in weights.iter().enumerate() {
+            let (sign, data) = encode_weight(w);
+            let code = (sign as u8) << 1 | data as u8;
+            packed[i / 4] |= code << ((i % 4) * 2);
+        }
+        Self { packed, len: weights.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> i8 {
+        assert!(i < self.len);
+        let code = (self.packed[i / 4] >> ((i % 4) * 2)) & 0b11;
+        decode_weight(code & 0b10 != 0, code & 0b01 != 0)
+    }
+
+    /// Storage bytes — the 16x-vs-FP32 saving of Table I.
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len()
+    }
+}
+
+/// Operand slot layout of one dot product inside a CMA.
+#[derive(Debug, Clone, Copy)]
+pub struct DotLayout {
+    /// Operand bit width (8-bit activations in the paper).
+    pub op_bits: u32,
+    /// Partial-sum / result bit width.
+    pub acc_bits: u32,
+    /// Row stride between operand slots.
+    pub stride: usize,
+    /// Rotate partial sums through the interval rows (CS mapping) instead
+    /// of the fixed accumulator regions (dense layouts).
+    pub rotate_partials: bool,
+}
+
+impl DotLayout {
+    /// Dense layout (Img2Col-IS / OS / WS): stride = op_bits, fixed
+    /// accumulators.
+    pub fn dense(op_bits: u32) -> Self {
+        Self { op_bits, acc_bits: 2 * op_bits, stride: op_bits as usize, rotate_partials: false }
+    }
+
+    /// Combined-Stationary layout: an interval the height of one operand
+    /// above each slot; partials rotate through the intervals.
+    /// Effective MH halves (64 -> 32 in the paper's terms).
+    pub fn interval(op_bits: u32) -> Self {
+        Self {
+            op_bits,
+            acc_bits: 2 * op_bits,
+            stride: 2 * op_bits as usize,
+            rotate_partials: true,
+        }
+    }
+
+    /// Operand slots available per column.
+    pub fn max_slots(&self) -> usize {
+        DATA_TOP / self.stride
+    }
+
+    /// Rows of operand slot `j` (LSB first).
+    pub fn slot_rows(&self, j: usize) -> Vec<usize> {
+        self.slot_rows_iter(j).collect()
+    }
+
+    /// Iterator over the rows of operand slot `j` (allocation-free).
+    pub fn slot_rows_iter(&self, j: usize) -> std::ops::Range<usize> {
+        let base = j * self.stride;
+        base..base + self.op_bits as usize
+    }
+}
+
+/// Row-activation plan derived from the weight registers.
+#[derive(Debug, Clone, Default)]
+pub struct SparseDotPlan {
+    /// Slots with weight +1 (stage 1).
+    pub pos: Vec<usize>,
+    /// Slots with weight -1 (stage 2).
+    pub neg: Vec<usize>,
+    /// Null operations skipped (weight 0).
+    pub skipped: usize,
+}
+
+impl SparseDotPlan {
+    pub fn from_weights(w: &WeightRegister) -> Self {
+        let mut plan = Self::default();
+        for i in 0..w.len() {
+            match w.get(i) {
+                1 => plan.pos.push(i),
+                -1 => plan.neg.push(i),
+                _ => plan.skipped += 1,
+            }
+        }
+        plan
+    }
+
+    /// Additions the three-stage pipeline performs (incl. the final SUB's
+    /// ADD, excl. its NOT).
+    pub fn additions(&self) -> usize {
+        let accum = self.pos.len().saturating_sub(1) + self.neg.len().saturating_sub(1);
+        let sub = usize::from(!self.neg.is_empty() && !self.pos.is_empty())
+            + usize::from(!self.neg.is_empty() && self.pos.is_empty());
+        accum + sub
+    }
+}
+
+/// Result of one in-array sparse dot product.
+#[derive(Debug, Clone)]
+pub struct DotResult {
+    /// Per-column dot-product values (two's complement, sign-extended).
+    pub values: Vec<i32>,
+    /// Vector additions executed.
+    pub adds: usize,
+    /// Null operations skipped thanks to the SACU.
+    pub skipped: usize,
+}
+
+/// A term in an accumulation: a real operand slot or a zero operand (how a
+/// dense BWN-style baseline processes a weight it cannot skip).
+#[derive(Debug, Clone, Copy)]
+enum Term {
+    Slot(usize),
+    Zero,
+}
+
+/// The Sparse Addition Control Unit.
+pub struct Sacu {
+    pub layout: DotLayout,
+    /// Skip null operations (the FAT SACU).  `false` models a dense
+    /// BWN-style accelerator (ParaPIM) that performs every operation.
+    pub skip_zeros: bool,
+    /// Rotating interval-row allocator cursor (CS layout).
+    next_chunk: std::cell::Cell<usize>,
+}
+
+impl Sacu {
+    pub fn new(layout: DotLayout, skip_zeros: bool) -> Self {
+        Self { layout, skip_zeros, next_chunk: std::cell::Cell::new(0) }
+    }
+
+    /// One-time CMA preparation: the all-ones row for NOT (eq. 14).
+    pub fn init_cma(&self, cma: &mut Cma) {
+        cma.write_row(ONES, &[u64::MAX; WORDS]);
+    }
+
+    /// Load one operand vector (one value per column) into slot `j`.
+    pub fn load_slot(&self, cma: &mut Cma, j: usize, values: &[u64]) {
+        assert!(j < self.layout.max_slots(), "slot {j} out of range");
+        cma.store_vector(j * self.layout.stride, self.layout.op_bits, values);
+    }
+
+    /// Allocate `n` partial-sum rows that do not collide with any row in
+    /// `avoid` (live partials).  Dense layout: first free fixed region.
+    /// CS layout: rotate through the 8-row interval chunks.
+    fn alloc_rows(&self, n: usize, avoid: &[usize]) -> Vec<usize> {
+        assert!(n <= 17, "partial wider than a region");
+        if !self.layout.rotate_partials {
+            for base in FIXED_REGIONS {
+                if !avoid.iter().any(|&r| (base..base + n).contains(&r)) {
+                    return (base..base + n).collect();
+                }
+            }
+            panic!("no free accumulator region");
+        }
+        // CS: hand out interval chunks round-robin, skipping chunks that
+        // hold live partial rows.  Chunk c covers rows
+        // c*stride + op_bits .. c*stride + 2*op_bits.  The live set is
+        // precomputed as a bitmask (perf: per-chunk scans of the avoid
+        // list were 7% of a conv layer's host time).
+        let chunk_h = self.layout.op_bits as usize;
+        let chunks = DATA_TOP / self.layout.stride;
+        debug_assert!(chunks <= 64);
+        let mut live_mask = 0u64;
+        for &r in avoid {
+            if r < DATA_TOP && r % self.layout.stride >= self.layout.op_bits as usize {
+                live_mask |= 1 << (r / self.layout.stride);
+            }
+        }
+        let mut rows = Vec::with_capacity(n);
+        let mut c = self.next_chunk.get();
+        let mut visited = 0;
+        while rows.len() < n {
+            assert!(visited <= 2 * chunks, "interval allocator exhausted");
+            if live_mask >> c & 1 == 0 {
+                let base = c * self.layout.stride + self.layout.op_bits as usize;
+                for r in base..base + chunk_h {
+                    if rows.len() == n {
+                        break;
+                    }
+                    rows.push(r);
+                }
+            }
+            c = (c + 1) % chunks;
+            visited += 1;
+        }
+        self.next_chunk.set(c);
+        rows
+    }
+
+    /// Rows of a term's operand, zero-extended to `width` with a reserved
+    /// zero row (`ZERO_A` for the a-side, `ZERO_B` for the b-side so the
+    /// two-row activation never addresses the same physical row twice).
+    fn term_rows(&self, t: Term, width: usize, a_side: bool) -> Vec<usize> {
+        let zero = if a_side { ZERO_A } else { ZERO_B };
+        let mut rows = match t {
+            Term::Slot(j) => self.layout.slot_rows(j),
+            Term::Zero => Vec::new(),
+        };
+        while rows.len() < width {
+            rows.push(zero);
+        }
+        rows
+    }
+
+    /// Accumulate `terms` into a partial sum; returns its rows (acc_bits
+    /// wide) or `None` when there are no terms.  `avoid` holds rows of
+    /// other live partials that must not be overwritten.
+    fn accumulate(
+        &self,
+        cma: &mut Cma,
+        scheme: &dyn AdditionScheme,
+        terms: &[Term],
+        mask: &RowWords,
+        avoid: &[usize],
+        adds: &mut usize,
+    ) -> Option<Vec<usize>> {
+        let width = self.layout.acc_bits as usize;
+        let (first, rest) = terms.split_first()?;
+        let mut partial = self.term_rows(*first, width, true);
+        // buffers reused across the accumulation chain (perf pass: the
+        // per-add Vec churn showed up in the conv-layer profile)
+        let mut b: Vec<usize> = Vec::with_capacity(width);
+        let mut live: Vec<usize> = Vec::with_capacity(avoid.len() + width);
+        for t in rest {
+            b.clear();
+            match *t {
+                Term::Slot(j) => b.extend(self.layout.slot_rows_iter(j)),
+                Term::Zero => {}
+            }
+            b.resize(width, ZERO_B);
+            live.clear();
+            live.extend_from_slice(avoid);
+            live.extend_from_slice(&partial);
+            let mut dest = self.alloc_rows(width + 1, &live);
+            scheme.vector_add_rows(cma, &partial, &b, &dest, mask, false);
+            *adds += 1;
+            dest.truncate(width);
+            partial = dest;
+        }
+        Some(partial)
+    }
+
+    /// In-array NOT of `src` rows (eq. 14): per bit, sense (src, ONES) and
+    /// write the XOR.  Used by the SUB stage.
+    fn vector_not_rows(&self, cma: &mut Cma, src: &[usize], dest: &[usize], mask: &RowWords) {
+        let sa = crate::circuit::sense_amp::design(crate::circuit::sense_amp::SaKind::Fat);
+        for (s, d) in src.iter().zip(dest) {
+            let (and, or) = cma.sense_two_rows(*s, ONES);
+            let mut out = [0u64; WORDS];
+            for w in 0..WORDS {
+                out[w] = or[w] & !and[w];
+            }
+            cma.stats.latency_ns += sa.op_latency_ns(BitOp::Not);
+            cma.write_row_masked(*d, &out, mask);
+        }
+    }
+
+    /// The addition-based sparse dot product (Fig. 5 (d)) over the first
+    /// `n_cols` columns.  `weights[j]` applies to operand slot `j`.
+    pub fn sparse_dot(
+        &self,
+        cma: &mut Cma,
+        scheme: &dyn AdditionScheme,
+        weights: &WeightRegister,
+        n_cols: usize,
+    ) -> DotResult {
+        assert!(weights.len() <= self.layout.max_slots());
+        assert!(n_cols <= COLS);
+        let plan = SparseDotPlan::from_weights(weights);
+        let mask = crate::addition::first_cols_mask(n_cols);
+        let width = self.layout.acc_bits as usize;
+        let mut adds = 0usize;
+
+        // Dense baselines perform the null operations as zero-additions.
+        let (pos_terms, neg_terms, skipped): (Vec<Term>, Vec<Term>, usize) = if self.skip_zeros
+        {
+            (
+                plan.pos.iter().map(|&j| Term::Slot(j)).collect(),
+                plan.neg.iter().map(|&j| Term::Slot(j)).collect(),
+                plan.skipped,
+            )
+        } else {
+            let mut pos: Vec<Term> = plan.pos.iter().map(|&j| Term::Slot(j)).collect();
+            pos.extend(std::iter::repeat_n(Term::Zero, plan.skipped));
+            (pos, plan.neg.iter().map(|&j| Term::Slot(j)).collect(), 0)
+        };
+
+        // Stage 1: +1 partial sum.  Stage 2: -1 partial sum (must not
+        // clobber the +1 partial).
+        let pos_rows = self.accumulate(cma, scheme, &pos_terms, &mask, &[], &mut adds);
+        let pos_live = pos_rows.clone().unwrap_or_default();
+        let neg_rows = self.accumulate(cma, scheme, &neg_terms, &mask, &pos_live, &mut adds);
+
+        // Stage 3: one subtraction between the partials (eq. 16).
+        let result_rows: Option<Vec<usize>> = match (pos_rows, neg_rows) {
+            (Some(p), Some(n)) => {
+                let mut live = p.clone();
+                live.extend_from_slice(&n);
+                let not_dest = self.alloc_rows(width, &live);
+                self.vector_not_rows(cma, &n, &not_dest, &mask);
+                live.extend_from_slice(&not_dest);
+                let dest = self.alloc_rows(width + 1, &live);
+                scheme.vector_add_rows(cma, &p, &not_dest, &dest, &mask, true);
+                adds += 1;
+                Some(dest[..width].to_vec())
+            }
+            (Some(p), None) => Some(p),
+            (None, Some(n)) => {
+                // 0 - neg: NOT(neg) + 1 via an add with the zero rows.
+                let not_dest = self.alloc_rows(width, &n);
+                self.vector_not_rows(cma, &n, &not_dest, &mask);
+                let zeros = vec![ZERO_B; width];
+                let dest = self.alloc_rows(width + 1, &not_dest);
+                scheme.vector_add_rows(cma, &not_dest, &zeros, &dest, &mask, true);
+                adds += 1;
+                Some(dest[..width].to_vec())
+            }
+            (None, None) => None,
+        };
+
+        // Read out the per-column results (two's complement, `width` bits).
+        // Word-parallel transpose: walk each result row's bit-plane words
+        // and scatter the set bits (perf: per-(col, row) read_bit calls
+        // were 22% of a conv layer's host time).
+        let values = match result_rows {
+            None => vec![0i32; n_cols],
+            Some(rows) => {
+                let mut acc = vec![0u32; n_cols];
+                for (k, &r) in rows.iter().enumerate() {
+                    let words = cma.row_words(r);
+                    for (w, &word) in words.iter().enumerate() {
+                        let mut bits = word;
+                        while bits != 0 {
+                            let col = w * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            if col < n_cols {
+                                acc[col] |= 1 << k;
+                            }
+                        }
+                    }
+                }
+                let shift = 32 - width;
+                acc.into_iter().map(|v| ((v << shift) as i32) >> shift).collect()
+            }
+        };
+
+        DotResult { values, adds, skipped }
+    }
+
+    /// The SACU's digital reduction unit: accumulates per-column partial
+    /// sums from different CMAs (Fig. 5 (a)).  Returns (sum, ns, pJ) —
+    /// a CMOS adder tree in the MC, not an in-array operation.
+    pub fn reduce(&self, partials: &[i64]) -> (i64, f64, f64) {
+        if partials.is_empty() {
+            return (0, 0.0, 0.0);
+        }
+        let sum = partials.iter().sum();
+        let adds = (partials.len() - 1) as f64;
+        (sum, adds * 0.5, adds * 0.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::addition::{scheme, AdditionScheme};
+    use crate::circuit::sense_amp::SaKind;
+    use crate::testutil::{prop_check, Rng};
+
+    fn fat() -> Box<dyn AdditionScheme> {
+        scheme(SaKind::Fat)
+    }
+
+    #[test]
+    fn weight_encoding_matches_table3() {
+        assert_eq!(encode_weight(1), (false, true));
+        assert_eq!(encode_weight(0), (false, false));
+        assert_eq!(encode_weight(-1), (true, true));
+        for w in [-1i8, 0, 1] {
+            let (s, d) = encode_weight(w);
+            assert_eq!(decode_weight(s, d), w);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_activates() {
+        // data bit = 0 <=> the row is masked out (Table III last column)
+        let (_, data) = encode_weight(0);
+        assert!(!data);
+    }
+
+    #[test]
+    fn weight_register_roundtrip_and_storage() {
+        let w: Vec<i8> = vec![1, 0, -1, 0, 0, 1, -1, -1, 1];
+        let reg = WeightRegister::load(&w);
+        assert_eq!(reg.len(), 9);
+        for (i, &wi) in w.iter().enumerate() {
+            assert_eq!(reg.get(i), wi, "index {i}");
+        }
+        // 2 bits per weight: 9 weights -> 3 bytes (vs 36 bytes FP32)
+        assert_eq!(reg.storage_bytes(), 3);
+    }
+
+    #[test]
+    fn plan_splits_by_sign_and_counts_skips() {
+        let reg = WeightRegister::load(&[1, 0, -1, 1, 0, 0]);
+        let plan = SparseDotPlan::from_weights(&reg);
+        assert_eq!(plan.pos, vec![0, 3]);
+        assert_eq!(plan.neg, vec![2]);
+        assert_eq!(plan.skipped, 3);
+        // (2-1) pos adds + (1-1) neg adds + 1 sub = 2
+        assert_eq!(plan.additions(), 2);
+    }
+
+    fn run_dot(
+        layout: DotLayout,
+        skip: bool,
+        weights: &[i8],
+        cols: &[Vec<u64>],
+    ) -> (DotResult, Cma) {
+        let sacu = Sacu::new(layout, skip);
+        let mut cma = Cma::new();
+        sacu.init_cma(&mut cma);
+        for (j, vals) in cols.iter().enumerate() {
+            sacu.load_slot(&mut cma, j, vals);
+        }
+        let reg = WeightRegister::load(weights);
+        let r = sacu.sparse_dot(&mut cma, fat().as_ref(), &reg, cols[0].len());
+        (r, cma)
+    }
+
+    #[test]
+    fn sparse_dot_matches_plain_dot_product() {
+        // Fig. 5 (d)'s example shape: weights (0,+1,+1,-1,0,-1).
+        let weights = [0i8, 1, 1, -1, 0, -1];
+        let cols = vec![
+            vec![10, 200], // slot 0 (skipped)
+            vec![1, 2],
+            vec![3, 50],
+            vec![2, 100],
+            vec![99, 99], // skipped
+            vec![1, 1],
+        ];
+        let (r, _) = run_dot(DotLayout::interval(8), true, &weights, &cols);
+        // col a: 1 + 3 - 2 - 1 = 1 ; col b: 2 + 50 - 100 - 1 = -49
+        assert_eq!(r.values, vec![1, -49]);
+        assert_eq!(r.skipped, 2);
+        // stage1: 1 add, stage2: 1 add, stage3: 1 sub-add
+        assert_eq!(r.adds, 3);
+    }
+
+    #[test]
+    fn property_sparse_dot_equals_reference() {
+        for layout in [DotLayout::dense(8), DotLayout::interval(8)] {
+            prop_check(
+                "sacu sparse dot == i64 dot",
+                20,
+                0x5AC0 + layout.stride as u64,
+                |rng: &mut Rng| {
+                    let n_ops = rng.range(1, layout.max_slots().min(24) + 1);
+                    let n_cols = rng.range(1, 40);
+                    let weights = rng.ternary_vec(n_ops, 0.5);
+                    let cols: Vec<Vec<u64>> = (0..n_ops)
+                        .map(|_| (0..n_cols).map(|_| rng.below(256)).collect())
+                        .collect();
+                    (weights, cols)
+                },
+                |(weights, cols)| {
+                    let (r, _) = run_dot(layout, true, weights, cols);
+                    for c in 0..cols[0].len() {
+                        let want: i64 = weights
+                            .iter()
+                            .zip(cols)
+                            .map(|(&w, col)| w as i64 * col[c] as i64)
+                            .sum();
+                        if r.values[c] as i64 != want {
+                            return Err(format!(
+                                "col {c}: want {want} got {} (weights {weights:?})",
+                                r.values[c]
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn dense_mode_computes_same_values_but_more_slowly() {
+        let weights = [1i8, 0, -1, 0, 0, 1, 0, 0];
+        let cols: Vec<Vec<u64>> =
+            (0..8).map(|j| vec![(j * 7 + 3) as u64, (j * 13 + 1) as u64]).collect();
+
+        let (sparse, sparse_cma) = run_dot(DotLayout::interval(8), true, &weights, &cols);
+        let (dense, dense_cma) = run_dot(DotLayout::interval(8), false, &weights, &cols);
+
+        assert_eq!(sparse.values, dense.values, "same math");
+        assert_eq!(sparse.skipped, 5);
+        assert_eq!(dense.skipped, 0);
+        assert!(dense.adds > sparse.adds);
+        assert!(
+            dense_cma.stats.latency_ns > 1.5 * sparse_cma.stats.latency_ns,
+            "dense {} vs sparse {}",
+            dense_cma.stats.latency_ns,
+            sparse_cma.stats.latency_ns
+        );
+    }
+
+    #[test]
+    fn all_negative_weights_work() {
+        let weights = [-1i8, -1];
+        let cols = vec![vec![5, 250], vec![7, 250]];
+        let (r, _) = run_dot(DotLayout::interval(8), true, &weights, &cols);
+        assert_eq!(r.values, vec![-12, -500]);
+    }
+
+    #[test]
+    fn all_zero_weights_yield_zero_and_no_adds() {
+        let weights = [0i8, 0, 0];
+        let cols = vec![vec![5], vec![7], vec![9]];
+        let (r, cma) = run_dot(DotLayout::interval(8), true, &weights, &cols);
+        assert_eq!(r.values, vec![0]);
+        assert_eq!(r.adds, 0);
+        assert_eq!(r.skipped, 3);
+        // only the init (ones row) + loads touched the array
+        assert_eq!(cma.stats.senses, 0);
+    }
+
+    #[test]
+    fn single_positive_weight_is_identity() {
+        let weights = [0i8, 1, 0];
+        let cols = vec![vec![1, 2], vec![123, 45], vec![9, 9]];
+        let (r, _) = run_dot(DotLayout::interval(8), true, &weights, &cols);
+        assert_eq!(r.values, vec![123, 45]);
+        assert_eq!(r.adds, 0, "a lone +1 partial needs no addition");
+    }
+
+    #[test]
+    fn heavy_dot_products_do_not_corrupt_operands() {
+        // Many accumulations force the CS allocator to wrap around; the
+        // avoid-list must protect live partials and the operand data rows
+        // must never be touched.
+        let layout = DotLayout::interval(8);
+        let n_ops = layout.max_slots(); // 25 slots
+        let mut rng = Rng::new(99);
+        let weights: Vec<i8> = (0..n_ops).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let cols: Vec<Vec<u64>> =
+            (0..n_ops).map(|_| (0..8).map(|_| rng.below(256)).collect()).collect();
+        let (r, cma) = run_dot(layout, true, &weights, &cols);
+        for c in 0..8 {
+            let want: i64 = weights
+                .iter()
+                .zip(&cols)
+                .map(|(&w, col)| w as i64 * col[c] as i64)
+                .sum();
+            assert_eq!(r.values[c] as i64, want, "col {c}");
+        }
+        // operand slots unchanged after the dot product
+        for (j, col_vals) in cols.iter().enumerate() {
+            for (c, &v) in col_vals.iter().enumerate() {
+                assert_eq!(
+                    cma.load_operand(c, j * layout.stride, 8),
+                    v,
+                    "slot {j} col {c} corrupted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interval_layout_balances_writes() {
+        // CS rotation must spread accumulation writes far better than the
+        // dense fixed-accumulator layout (Table VIII: 1x vs 64x).
+        let n_ops = 24;
+        let weights: Vec<i8> = (0..n_ops).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let cols: Vec<Vec<u64>> = (0..n_ops).map(|j| vec![j as u64 + 1; 16]).collect();
+
+        let max_write = |layout: DotLayout| -> u32 {
+            let sacu = Sacu::new(layout, true);
+            let mut cma = Cma::with_endurance();
+            sacu.init_cma(&mut cma);
+            for (j, vals) in cols.iter().enumerate() {
+                sacu.load_slot(&mut cma, j, vals);
+            }
+            let reg = WeightRegister::load(&weights);
+            sacu.sparse_dot(&mut cma, fat().as_ref(), &reg, 16);
+            cma.endurance.as_ref().unwrap().max_cell_writes()
+        };
+
+        let dense = max_write(DotLayout::dense(8));
+        let interval = max_write(DotLayout::interval(8));
+        assert!(
+            dense >= 3 * interval,
+            "dense hotspot {dense} should dwarf interval {interval}"
+        );
+    }
+
+    #[test]
+    fn reduction_unit_sums() {
+        let sacu = Sacu::new(DotLayout::interval(8), true);
+        let (sum, ns, pj) = sacu.reduce(&[10, -3, 7]);
+        assert_eq!(sum, 14);
+        assert!(ns > 0.0 && pj > 0.0);
+        assert_eq!(sacu.reduce(&[]).0, 0);
+    }
+
+    #[test]
+    fn works_with_all_four_schemes() {
+        let weights = [1i8, -1, 1, 0];
+        let cols = vec![vec![100, 1], vec![30, 2], vec![7, 3], vec![50, 4]];
+        for kind in SaKind::ALL {
+            let sacu = Sacu::new(DotLayout::interval(8), kind == SaKind::Fat);
+            let mut cma = Cma::new();
+            sacu.init_cma(&mut cma);
+            for (j, vals) in cols.iter().enumerate() {
+                sacu.load_slot(&mut cma, j, vals);
+            }
+            let reg = WeightRegister::load(&weights);
+            let r = sacu.sparse_dot(&mut cma, scheme(kind).as_ref(), &reg, 2);
+            assert_eq!(r.values, vec![77, 2], "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! In-house benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this
+//! module: warmup, N timed samples, median + MAD reporting, and a tiny
+//! assertion API so benches double as regression checks.  Every bench also
+//! renders the paper table/figure it regenerates via [`crate::report`].
+
+use std::time::Instant;
+
+/// One measured statistic.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median_ns: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad_ns: f64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn human(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f` with `warmup` discarded runs and `samples` timed runs.
+pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_nanos() as f64
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement { median_ns: median, mad_ns: devs[devs.len() / 2], samples }
+}
+
+/// Bench-run context: named sections + pass/fail assertions that do not
+/// abort the remaining sections.
+pub struct BenchRun {
+    name: String,
+    failures: Vec<String>,
+    t0: Instant,
+}
+
+impl BenchRun {
+    pub fn new(name: &str) -> Self {
+        println!("\n#### bench: {name} ####");
+        Self { name: name.to_string(), failures: Vec::new(), t0: Instant::now() }
+    }
+
+    /// Record and print a host-time measurement.
+    pub fn time<T>(&mut self, label: &str, f: impl FnMut() -> T) -> Measurement {
+        let m = measure(2, 7, f);
+        println!("  {label:<44} {:>12}  (±{})", m.human(), fmt_ns(m.mad_ns));
+        m
+    }
+
+    /// Check an expectation; failures are collected, not fatal.
+    pub fn check(&mut self, label: &str, ok: bool, detail: String) {
+        if ok {
+            println!("  [ok]   {label}");
+        } else {
+            println!("  [FAIL] {label}: {detail}");
+            self.failures.push(format!("{label}: {detail}"));
+        }
+    }
+
+    /// Check a value lies within `tol` (relative) of the paper's value.
+    pub fn check_close(&mut self, label: &str, got: f64, paper: f64, tol: f64) {
+        let err = (got - paper).abs() / paper.abs().max(1e-12);
+        self.check(
+            label,
+            err <= tol,
+            format!("got {got:.4}, paper {paper:.4} ({:.1}% off, tol {:.0}%)", err * 100.0, tol * 100.0),
+        );
+    }
+
+    /// Finish: print a summary and exit non-zero on failures.
+    pub fn finish(self) {
+        let dt = self.t0.elapsed().as_secs_f64();
+        if self.failures.is_empty() {
+            println!("#### {}: all checks passed ({dt:.1}s) ####", self.name);
+        } else {
+            println!(
+                "#### {}: {} CHECK(S) FAILED ({dt:.1}s) ####",
+                self.name,
+                self.failures.len()
+            );
+            for f in &self.failures {
+                println!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_median() {
+        let m = measure(1, 5, || (0..1000).sum::<u64>());
+        assert!(m.median_ns > 0.0);
+        assert_eq!(m.samples, 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 us");
+        assert_eq!(fmt_ns(12_300_000.0), "12.30 ms");
+        assert_eq!(fmt_ns(2_500_000_000.0), "2.500 s");
+    }
+
+    #[test]
+    fn check_close_tolerates_within_band() {
+        let mut run = BenchRun::new("t");
+        run.check_close("x", 1.05, 1.0, 0.10);
+        assert!(run.failures.is_empty());
+        run.check_close("y", 1.5, 1.0, 0.10);
+        assert_eq!(run.failures.len(), 1);
+    }
+}

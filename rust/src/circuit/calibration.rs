@@ -1,0 +1,162 @@
+//! 45 nm calibration constants — the paper's measured values.
+//!
+//! The paper evaluates its SAs with Cadence Virtuoso (Spectre) on NCSU
+//! FreePDK45 and an STT-MRAM array model from [60].  We cannot run Spectre,
+//! so this module records the paper's published measurements verbatim; the
+//! structural circuit model and the analytic addition/mapping models are
+//! validated against these (see unit tests here and the bench targets).
+//!
+//! Everything downstream (Tables VII/VIII/IX, Figs. 1/10/11/13/14) is
+//! *derived* from scheme structure + the array constants below — the paper
+//! tables are stored only to print "paper vs ours" comparisons.
+
+/// Array-level timing constants (45 nm STT-MRAM, refs [57], [60]).
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayTiming {
+    /// Two-row activation + source-line settle, ns (decoder + sensing).
+    pub t_sense_ns: f64,
+    /// One-row write (switch MTJ free layers across the row), ns.
+    pub t_write_ns: f64,
+    /// Per-bit ripple-carry propagation inside the STT-CiM SA, ns.
+    pub t_carry_ns: f64,
+}
+
+impl Default for ArrayTiming {
+    fn default() -> Self {
+        Self { t_sense_ns: 2.0, t_write_ns: 5.5, t_carry_ns: 0.06 }
+    }
+}
+
+/// Array-level energy constants (pJ), per 256-column row operation.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayEnergy {
+    /// Sensing one two-row activation across a 256-column stripe, pJ.
+    pub e_sense_row_pj: f64,
+    /// Writing one 256-column row, pJ (STT write energy dominates).
+    pub e_write_row_pj: f64,
+    /// SA combinational energy per column per op, pJ.
+    pub e_sa_col_pj: f64,
+}
+
+impl Default for ArrayEnergy {
+    fn default() -> Self {
+        Self { e_sense_row_pj: 12.0, e_write_row_pj: 64.0, e_sa_col_pj: 0.05 }
+    }
+}
+
+/// The paper's Table IX (critical path + latency of addition, ns).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperTable9Row {
+    pub name: &'static str,
+    pub scalar_cp: f64,
+    pub scalar_latency: f64,
+    pub vec8_cp: f64,
+    pub vec8_latency: f64,
+    pub vec16_cp: f64,
+    pub vec16_latency: f64,
+}
+
+pub const PAPER_TABLE9: [PaperTable9Row; 4] = [
+    PaperTable9Row { name: "STT-CiM", scalar_cp: 0.41, scalar_latency: 8.91, vec8_cp: 3.26, vec8_latency: 71.26, vec16_cp: 10.85, vec16_latency: 146.85 },
+    PaperTable9Row { name: "ParaPIM", scalar_cp: 2.47, scalar_latency: 138.47, vec8_cp: 2.47, vec8_latency: 138.47, vec16_cp: 4.95, vec16_latency: 276.95 },
+    PaperTable9Row { name: "GraphS", scalar_cp: 1.18, scalar_latency: 137.18, vec8_cp: 1.18, vec8_latency: 137.18, vec16_cp: 2.36, vec16_latency: 274.36 },
+    PaperTable9Row { name: "FAT", scalar_cp: 1.13, scalar_latency: 69.13, vec8_cp: 1.13, vec8_latency: 69.13, vec16_cp: 2.26, vec16_latency: 138.26 },
+];
+
+/// The paper's headline ratios (abstract + §IV).
+pub mod headline {
+    /// FAT vs ParaPIM, 32-bit vector addition latency.
+    pub const SPEEDUP_ADD_VS_PARAPIM: f64 = 2.00;
+    /// FAT vs STT-CiM, 32-bit vector addition latency.
+    pub const SPEEDUP_ADD_VS_STTCIM: f64 = 1.12;
+    /// FAT vs GraphS, 32-bit vector addition latency.
+    pub const SPEEDUP_ADD_VS_GRAPHS: f64 = 1.98;
+    /// FAT vs ParaPIM, addition power efficiency.
+    pub const POWER_EFF_VS_PARAPIM: f64 = 1.22;
+    /// FAT vs GraphS, addition power efficiency.
+    pub const POWER_EFF_VS_GRAPHS: f64 = 1.44;
+    /// FAT vs ParaPIM area efficiency.
+    pub const AREA_EFF_VS_PARAPIM: f64 = 1.22;
+    /// FAT vs GraphS area efficiency.
+    pub const AREA_EFF_VS_GRAPHS: f64 = 1.17;
+    /// STT-CiM vs FAT area (FAT is 21% larger due to the D-latch).
+    pub const AREA_VS_STTCIM: f64 = 1.21;
+    /// Network-level speedup vs ParaPIM at 40/60/80% sparsity (Fig. 14).
+    pub const NET_SPEEDUP: [(f64, f64); 3] = [(0.4, 3.34), (0.6, 5.01), (0.8, 10.02)];
+    /// Network-level energy efficiency vs ParaPIM at 40/60/80% (Fig. 14).
+    pub const NET_ENERGY: [(f64, f64); 3] = [(0.4, 4.06), (0.6, 6.09), (0.8, 12.19)];
+    /// CS-mapping speedup vs Direct-OS on ResNet-18 layer 10 (Table VIII).
+    pub const CS_MAPPING_SPEEDUP: f64 = 6.86;
+}
+
+/// The paper's Fig. 10 normalized SA-op latencies (FAT = 1.0 per op).
+/// Derived from the prose: STT-CiM within ~1-4% of FAT (lower except XOR);
+/// FAT outperforms ParaPIM by ~30% (Read), >15% (AND/OR/XOR), 14% (SUM);
+/// GraphS: 35% (Read), >15% (AND/OR), 7% *faster* SUM, no XOR.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperFig10Row {
+    pub name: &'static str,
+    pub read: f64,
+    pub and: f64,
+    pub or: f64,
+    pub xor: Option<f64>,
+    pub sum: f64,
+    /// Average dynamic power, normalized to FAT.
+    pub power: f64,
+}
+
+pub const PAPER_FIG10: [PaperFig10Row; 4] = [
+    PaperFig10Row { name: "STT-CiM", read: 0.987, and: 0.963, or: 0.998, xor: Some(1.014), sum: 0.993, power: 1.02 },
+    PaperFig10Row { name: "ParaPIM", read: 1.30, and: 1.18, or: 1.17, xor: Some(1.20), sum: 1.14, power: 1.22 },
+    PaperFig10Row { name: "GraphS", read: 1.35, and: 1.18, or: 1.17, xor: None, sum: 0.93, power: 1.44 },
+    PaperFig10Row { name: "FAT", read: 1.0, and: 1.0, or: 1.0, xor: Some(1.0), sum: 1.0, power: 1.0 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_vector_latencies_are_per_bit_consistent() {
+        // Bit-serial schemes: vec16 = 2 * vec8 exactly in the paper.
+        for row in &PAPER_TABLE9[1..] {
+            let per8 = row.vec8_latency / 8.0;
+            let per16 = row.vec16_latency / 16.0;
+            assert!(
+                (per8 - per16).abs() < 0.01,
+                "{}: {per8} vs {per16}",
+                row.name
+            );
+        }
+    }
+
+    #[test]
+    fn headline_speedup_matches_table9() {
+        let fat = PAPER_TABLE9[3].vec8_latency;
+        let para = PAPER_TABLE9[1].vec8_latency;
+        assert!((para / fat - headline::SPEEDUP_ADD_VS_PARAPIM).abs() < 0.01);
+    }
+
+    #[test]
+    fn network_numbers_follow_the_sparsity_model() {
+        // Fig. 14 is speedup = 2.00/(1-s) and energy = 2.44/(1-s).
+        for (s, v) in headline::NET_SPEEDUP {
+            let model = headline::SPEEDUP_ADD_VS_PARAPIM / (1.0 - s);
+            assert!((v - model).abs() / v < 0.01, "speedup at {s}: {v} vs {model}");
+        }
+        for (s, v) in headline::NET_ENERGY {
+            let model = headline::SPEEDUP_ADD_VS_PARAPIM * headline::POWER_EFF_VS_PARAPIM
+                / (1.0 - s);
+            assert!((v - model).abs() / v < 0.01, "energy at {s}: {v} vs {model}");
+        }
+    }
+
+    #[test]
+    fn defaults_are_physical() {
+        let t = ArrayTiming::default();
+        assert!(t.t_write_ns > t.t_sense_ns, "STT write dominates sensing");
+        assert!(t.t_carry_ns < t.t_sense_ns);
+        let e = ArrayEnergy::default();
+        assert!(e.e_write_row_pj > e.e_sense_row_pj);
+    }
+}

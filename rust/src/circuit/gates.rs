@@ -1,0 +1,174 @@
+//! FreePDK45-class standard-cell library: delay, dynamic energy, area.
+//!
+//! Constants are representative of a 45 nm process (FO4 delay ~ 20 ps,
+//! 2-input NAND ~ 1 um^2) and are used *structurally*: each Sense Amplifier
+//! is a netlist of these components, and its per-operation latency / power /
+//! area is derived by walking the netlist.  Absolute values are then
+//! validated against the paper's measured ratios (`calibration`).
+
+/// A circuit component with timing / energy / area characteristics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// Operational amplifier / comparator in the sensing stage.  Dominates
+    /// both the latency (sensing settle) and the area of every SA design.
+    OpAmp,
+    /// Transparent D-latch (the FAT carry latch).
+    DLatch,
+    Inv,
+    Nand2,
+    Nor2,
+    And2,
+    Or2,
+    Xor2,
+    /// 4-to-1 output selector (two select signals).
+    Selector4,
+    /// 8-to-1 output selector (three select signals).
+    Selector8,
+    /// One enable / select signal driver + routing.
+    SignalDriver,
+}
+
+impl Component {
+    /// Propagation delay, ns.
+    pub fn delay_ns(self) -> f64 {
+        match self {
+            // Sensing settle time of the comparator-style OpAmp.
+            Component::OpAmp => 0.300,
+            Component::DLatch => 0.040,
+            Component::Inv => 0.015,
+            Component::Nand2 => 0.020,
+            Component::Nor2 => 0.025,
+            Component::And2 => 0.030,
+            Component::Or2 => 0.030,
+            Component::Xor2 => 0.045,
+            Component::Selector4 => 0.055,
+            Component::Selector8 => 0.085,
+            Component::SignalDriver => 0.010,
+        }
+    }
+
+    /// Switching (dynamic) energy per activation, fJ.
+    pub fn energy_fj(self) -> f64 {
+        match self {
+            Component::OpAmp => 12.0,
+            Component::DLatch => 0.8,
+            Component::Inv => 0.1,
+            Component::Nand2 => 0.2,
+            Component::Nor2 => 0.2,
+            Component::And2 => 0.3,
+            Component::Or2 => 0.3,
+            Component::Xor2 => 0.5,
+            Component::Selector4 => 0.6,
+            Component::Selector8 => 1.3,
+            Component::SignalDriver => 0.15,
+        }
+    }
+
+    /// Layout area, um^2.  Ratios tuned so the four SA netlists reproduce
+    /// the paper's Fig. 13 area breakdown (see `calibration` tests).
+    pub fn area_um2(self) -> f64 {
+        match self {
+            Component::OpAmp => 2.84,
+            Component::DLatch => 3.50,
+            Component::Inv => 0.35,
+            Component::Nand2 => 0.55,
+            Component::Nor2 => 0.55,
+            Component::And2 => 0.60,
+            Component::Or2 => 0.60,
+            Component::Xor2 => 0.85,
+            Component::Selector4 => 2.40,
+            Component::Selector8 => 6.20,
+            Component::SignalDriver => 0.20,
+        }
+    }
+}
+
+/// A netlist: multiset of components plus named signal paths.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub components: Vec<(Component, u32)>,
+}
+
+impl Netlist {
+    pub fn new(components: &[(Component, u32)]) -> Self {
+        Self { components: components.to_vec() }
+    }
+
+    pub fn count(&self, c: Component) -> u32 {
+        self.components
+            .iter()
+            .filter(|(k, _)| *k == c)
+            .map(|(_, n)| *n)
+            .sum()
+    }
+
+    /// Total layout area, um^2.
+    pub fn area_um2(&self) -> f64 {
+        self.components
+            .iter()
+            .map(|(c, n)| c.area_um2() * *n as f64)
+            .sum()
+    }
+
+    /// Area of a sub-set of components (for Fig. 13's breakdown bars).
+    pub fn area_of(&self, pred: impl Fn(Component) -> bool) -> f64 {
+        self.components
+            .iter()
+            .filter(|(c, _)| pred(*c))
+            .map(|(c, n)| c.area_um2() * *n as f64)
+            .sum()
+    }
+
+    /// Delay of a serial signal path through the given components, ns.
+    pub fn path_delay_ns(path: &[Component]) -> f64 {
+        path.iter().map(|c| c.delay_ns()).sum()
+    }
+
+    /// Energy of activating the given components once, fJ.
+    pub fn activation_energy_fj(active: &[(Component, u32)]) -> f64 {
+        active
+            .iter()
+            .map(|(c, n)| c.energy_fj() * *n as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opamp_dominates_gate_delay() {
+        assert!(Component::OpAmp.delay_ns() > 5.0 * Component::Xor2.delay_ns());
+    }
+
+    #[test]
+    fn selector8_costs_more_than_selector4() {
+        assert!(Component::Selector8.delay_ns() > Component::Selector4.delay_ns());
+        assert!(Component::Selector8.area_um2() > 2.0 * Component::Selector4.area_um2());
+        assert!(Component::Selector8.energy_fj() > Component::Selector4.energy_fj());
+    }
+
+    #[test]
+    fn netlist_counts_and_area() {
+        let n = Netlist::new(&[(Component::OpAmp, 2), (Component::Nor2, 3)]);
+        assert_eq!(n.count(Component::OpAmp), 2);
+        assert_eq!(n.count(Component::Nor2), 3);
+        assert_eq!(n.count(Component::DLatch), 0);
+        let want = 2.0 * Component::OpAmp.area_um2() + 3.0 * Component::Nor2.area_um2();
+        assert!((n.area_um2() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn path_delay_sums() {
+        let d = Netlist::path_delay_ns(&[Component::OpAmp, Component::Nor2]);
+        assert!((d - 0.325).abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_of_filters() {
+        let n = Netlist::new(&[(Component::OpAmp, 2), (Component::DLatch, 1)]);
+        let amps = n.area_of(|c| c == Component::OpAmp);
+        assert!((amps - 2.0 * Component::OpAmp.area_um2()).abs() < 1e-12);
+    }
+}

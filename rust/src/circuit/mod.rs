@@ -1,0 +1,23 @@
+//! Device / circuit substrate: MTJ cells, gate library, Sense Amplifiers.
+//!
+//! The paper evaluates its Sense Amplifier (SA) designs in Cadence Virtuoso
+//! on 45 nm FreePDK45.  We have no PDK, so this module provides (a) a
+//! *structural* model — each SA is described by its actual netlist
+//! (operational amplifiers, latches, Boolean gates, selectors, control
+//! signals: Table VI), from which area, per-op signal paths and dynamic
+//! power are derived with FreePDK45-class gate constants — and (b) a
+//! *calibration* table holding the paper's measured values, against which
+//! the structural model is validated (see `calibration::paper`).
+
+pub mod calibration;
+pub mod gates;
+pub mod mtj;
+pub mod reliability;
+pub mod sa_fat;
+pub mod sa_graphs;
+pub mod sa_parapim;
+pub mod sa_stt_cim;
+pub mod sense_amp;
+
+pub use mtj::{Mtj, MtjState, SensedLevel};
+pub use sense_amp::{BitOp, SaDesign, SaKind, SenseAmplifier};

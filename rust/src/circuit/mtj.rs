@@ -1,0 +1,239 @@
+//! Magnetic-Tunnel-Junction (MTJ) device model — Fig. 2 of the paper.
+//!
+//! A 1T-1MTJ STT-MRAM cell stores a bit in the magnetic orientation of the
+//! MTJ free layer: *parallel* (low resistance, logic "0") or *anti-parallel*
+//! (high resistance, logic "1").  In-memory computing activates one or two
+//! rows simultaneously; the sense amplifier receives the source-line voltage
+//! of eq. (9) and classifies it against the reference ladder of eq. (10) /
+//! Fig. 6.
+
+/// Magnetic state of an MTJ free layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Free layer parallel to the pinned layer: low resistance, logic "0".
+    Parallel,
+    /// Anti-parallel: high resistance, logic "1".
+    AntiParallel,
+}
+
+impl MtjState {
+    pub fn from_bit(bit: bool) -> Self {
+        if bit { MtjState::AntiParallel } else { MtjState::Parallel }
+    }
+
+    pub fn bit(self) -> bool {
+        matches!(self, MtjState::AntiParallel)
+    }
+}
+
+/// Device parameters of the 45 nm STT-MRAM cell (values in the range
+/// reported by [26], [60] for 45 nm 1T-1MTJ arrays).
+#[derive(Debug, Clone, Copy)]
+pub struct MtjParams {
+    /// Parallel-state MTJ resistance (ohm).
+    pub r_parallel: f64,
+    /// Anti-parallel-state MTJ resistance (ohm).
+    pub r_antiparallel: f64,
+    /// Access-transistor on-resistance (ohm).
+    pub r_transistor: f64,
+    /// Reference sensing current (A) — `I_ref` of eq. (9)/(10).
+    pub i_ref: f64,
+}
+
+impl Default for MtjParams {
+    fn default() -> Self {
+        Self {
+            r_parallel: 3_000.0,
+            r_antiparallel: 6_000.0,
+            r_transistor: 1_000.0,
+            i_ref: 30e-6,
+        }
+    }
+}
+
+/// One MTJ with its access transistor.
+#[derive(Debug, Clone, Copy)]
+pub struct Mtj {
+    pub state: MtjState,
+}
+
+impl Mtj {
+    pub fn new(bit: bool) -> Self {
+        Self { state: MtjState::from_bit(bit) }
+    }
+
+    /// Cell resistance seen from BL to SL (MTJ + access transistor), ohms.
+    pub fn resistance(&self, p: &MtjParams) -> f64 {
+        let r_mtj = match self.state {
+            MtjState::Parallel => p.r_parallel,
+            MtjState::AntiParallel => p.r_antiparallel,
+        };
+        r_mtj + p.r_transistor
+    }
+}
+
+/// Discrete level the OpAmp ladder distinguishes when sensing one or two
+/// cells at once (Fig. 6 (b)/(c)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SensedLevel {
+    /// Two cells "00" (or one cell "0"): lowest V_SL.
+    Low,
+    /// Two cells "01"/"10": middle V_SL.  Never produced for single-cell reads.
+    Mid,
+    /// Two cells "11" (or one cell "1"): highest V_SL.
+    High,
+}
+
+/// Sensed source-line voltage for a single activated cell — eq. (9) with
+/// one branch.
+pub fn sense_one(cell: Mtj, p: &MtjParams) -> f64 {
+    p.i_ref * cell.resistance(p)
+}
+
+/// Sensed source-line voltage for two simultaneously activated cells in the
+/// same column — eq. (9): I_ref * (R1 || R2).
+pub fn sense_two(a: Mtj, b: Mtj, p: &MtjParams) -> f64 {
+    let (ra, rb) = (a.resistance(p), b.resistance(p));
+    p.i_ref * (ra * rb / (ra + rb))
+}
+
+/// Reference voltage ladder of Fig. 6 (c) for two-cell sensing.
+/// Returns `(v_or, v_and)`: `v_or` lies between V_{P-P,00} and V_{P-AP,01};
+/// `v_and` lies between V_{P-AP,01} and V_{AP-AP,11}.
+pub fn reference_ladder(p: &MtjParams) -> (f64, f64) {
+    let zero = Mtj::new(false);
+    let one = Mtj::new(true);
+    let v00 = sense_two(zero, zero, p);
+    let v01 = sense_two(zero, one, p);
+    let v11 = sense_two(one, one, p);
+    ((v00 + v01) / 2.0, (v01 + v11) / 2.0)
+}
+
+/// Single-cell read reference — Fig. 6 (b): between V_{P,0} and V_{AP,1}.
+pub fn read_reference(p: &MtjParams) -> f64 {
+    let v0 = sense_one(Mtj::new(false), p);
+    let v1 = sense_one(Mtj::new(true), p);
+    (v0 + v1) / 2.0
+}
+
+/// Classify a two-cell sensed voltage into the three levels the SA's
+/// comparing stage can distinguish.
+pub fn classify_two(v_sl: f64, p: &MtjParams) -> SensedLevel {
+    let (v_or, v_and) = reference_ladder(p);
+    if v_sl > v_and {
+        SensedLevel::High
+    } else if v_sl > v_or {
+        SensedLevel::Mid
+    } else {
+        SensedLevel::Low
+    }
+}
+
+/// Sense margin between adjacent levels when `n_ops` rows are activated
+/// simultaneously.  The paper (§IV-A3) notes two-operand sensing has 2.4x
+/// the margin of three-operand sensing — more simultaneously-activated
+/// rows squeeze the voltage ladder.
+pub fn sense_margin(p: &MtjParams, n_ops: u32) -> f64 {
+    assert!(n_ops >= 1);
+    // With n parallel branches the distinguishable levels are the n+1
+    // possible counts of "1" cells; the worst-case adjacent spacing shrinks
+    // roughly quadratically with n (parallel-resistance compression).
+    let zero = Mtj::new(false).resistance(p);
+    let one = Mtj::new(true).resistance(p);
+    // voltage for k ones among n activated cells
+    let v = |k: u32| -> f64 {
+        let mut inv = 0.0;
+        for _ in 0..k {
+            inv += 1.0 / one;
+        }
+        for _ in 0..(n_ops - k) {
+            inv += 1.0 / zero;
+        }
+        p.i_ref / inv
+    };
+    let mut min_gap = f64::INFINITY;
+    for k in 0..n_ops {
+        min_gap = min_gap.min((v(k + 1) - v(k)).abs());
+    }
+    min_gap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> MtjParams {
+        MtjParams::default()
+    }
+
+    #[test]
+    fn antiparallel_senses_higher_than_parallel() {
+        let v0 = sense_one(Mtj::new(false), &p());
+        let v1 = sense_one(Mtj::new(true), &p());
+        assert!(v1 > v0, "AP must sense higher: {v1} vs {v0}");
+    }
+
+    #[test]
+    fn single_cell_read_threshold_separates_states() {
+        let vref = read_reference(&p());
+        assert!(sense_one(Mtj::new(false), &p()) < vref);
+        assert!(sense_one(Mtj::new(true), &p()) > vref);
+    }
+
+    #[test]
+    fn two_cell_levels_are_ordered() {
+        let params = p();
+        let v00 = sense_two(Mtj::new(false), Mtj::new(false), &params);
+        let v01 = sense_two(Mtj::new(false), Mtj::new(true), &params);
+        let v10 = sense_two(Mtj::new(true), Mtj::new(false), &params);
+        let v11 = sense_two(Mtj::new(true), Mtj::new(true), &params);
+        assert!(v00 < v01 && v01 < v11);
+        assert!((v01 - v10).abs() < 1e-12, "01 and 10 are indistinguishable");
+    }
+
+    #[test]
+    fn classify_two_matches_truth_table() {
+        let params = p();
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let v = sense_two(Mtj::new(a), Mtj::new(b), &params);
+            let lvl = classify_two(v, &params);
+            let want = match (a, b) {
+                (false, false) => SensedLevel::Low,
+                (true, true) => SensedLevel::High,
+                _ => SensedLevel::Mid,
+            };
+            assert_eq!(lvl, want, "({a},{b})");
+        }
+    }
+
+    #[test]
+    fn classification_implements_and_or() {
+        // AND = High level; OR = Mid-or-High — the comparing stage of §III-B2.
+        let params = p();
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let v = sense_two(Mtj::new(a), Mtj::new(b), &params);
+            let lvl = classify_two(v, &params);
+            let and = lvl == SensedLevel::High;
+            let or = lvl != SensedLevel::Low;
+            assert_eq!(and, a && b);
+            assert_eq!(or, a || b);
+        }
+    }
+
+    #[test]
+    fn sense_margin_shrinks_with_operand_count() {
+        let params = p();
+        let m2 = sense_margin(&params, 2);
+        let m3 = sense_margin(&params, 3);
+        assert!(m2 > m3, "two-operand margin {m2} must exceed three-operand {m3}");
+        // paper: ~2.4x ratio; structural model should land in [1.5, 3.5]
+        let ratio = m2 / m3;
+        assert!((1.5..3.5).contains(&ratio), "margin ratio {ratio}");
+    }
+
+    #[test]
+    fn from_bit_roundtrip() {
+        assert!(MtjState::from_bit(true).bit());
+        assert!(!MtjState::from_bit(false).bit());
+    }
+}

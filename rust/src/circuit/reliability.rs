@@ -1,0 +1,118 @@
+//! Sensing reliability — §IV-A3 of the paper.
+//!
+//! The paper argues FAT's SA is more reliable than ParaPIM/GraphS because
+//! two-operand sensing has a **2.4x larger sense margin** than
+//! three-operand sensing, and a larger margin means a lower error rate.
+//! This module quantifies that: thermal + process noise on the sensed
+//! source-line voltage is modeled as Gaussian, the bit-error rate is the
+//! tail probability of the noise exceeding half the margin, and the
+//! per-addition error rate follows from how many sense operations each
+//! scheme performs.
+
+use super::mtj::{sense_margin, MtjParams};
+use super::sense_amp::SaKind;
+
+/// Gaussian noise sigma on the sensed voltage, volts.  Representative of
+/// 45 nm thermal + offset noise at the OpAmp input ([29]-[32] report
+/// two-operand sensing as comfortably reliable and three-operand as
+/// marginal, which this value reproduces: with the default MTJ parameters
+/// the two-operand margin is 16.4 mV and the three-operand margin 6.7 mV
+/// (ratio 2.45 — the paper's 2.4x), giving ~5e-8 vs ~2.6e-2 flip rates).
+pub const V_NOISE_SIGMA: f64 = 0.0015;
+
+/// Complementary error function via the Abramowitz-Stegun 7.1.26
+/// polynomial (|eps| < 1.5e-7) — no libm erfc in std.
+pub fn erfc(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+        * (-x * x).exp();
+    if sign < 0.0 {
+        2.0 - y
+    } else {
+        y
+    }
+}
+
+/// Probability that Gaussian noise flips a comparison with the given
+/// margin: P(|N(0, sigma)| > margin / 2).
+pub fn flip_probability(margin_v: f64, sigma_v: f64) -> f64 {
+    if margin_v <= 0.0 {
+        return 1.0;
+    }
+    erfc(margin_v / 2.0 / (sigma_v * std::f64::consts::SQRT_2))
+}
+
+/// Per-sense bit-error rate of a design's addition operation.
+pub fn sense_bit_error_rate(kind: SaKind, p: &MtjParams) -> f64 {
+    let rows = super::sense_amp::design(kind).add_operand_rows();
+    flip_probability(sense_margin(p, rows), V_NOISE_SIGMA)
+}
+
+/// Error rate of one N-bit vector-addition *bit slice* (per column):
+/// every sense the scheme performs is an opportunity to flip.
+pub fn addition_error_rate(kind: SaKind, bits: u32, p: &MtjParams) -> f64 {
+    let per_sense = sense_bit_error_rate(kind, p);
+    // senses per bit: ParaPIM 2 (two phases), others 1; STT-CiM performs
+    // one sense per scalar but the ripple uses N comparator decisions.
+    let senses = match kind {
+        SaKind::ParaPim => 2 * bits,
+        _ => bits,
+    } as f64;
+    1.0 - (1.0 - per_sense).powf(senses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erfc_reference_points() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.157_299_2).abs() < 1e-5);
+        assert!(erfc(3.0) < 3e-5);
+        assert!((erfc(-1.0) - (2.0 - 0.157_299_2)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn margin_ratio_two_vs_three_operand_is_about_2_4() {
+        // the paper's §IV-A3 claim, reproduced from the MTJ model
+        let p = MtjParams::default();
+        let m2 = sense_margin(&p, 2);
+        let m3 = sense_margin(&p, 3);
+        let ratio = m2 / m3;
+        assert!((1.8..3.0).contains(&ratio), "margin ratio {ratio}");
+    }
+
+    #[test]
+    fn fat_is_more_reliable_than_three_operand_designs() {
+        let p = MtjParams::default();
+        let fat = sense_bit_error_rate(SaKind::Fat, &p);
+        let para = sense_bit_error_rate(SaKind::ParaPim, &p);
+        let graphs = sense_bit_error_rate(SaKind::GraphS, &p);
+        assert!(fat < para, "{fat} !< {para}");
+        assert!(fat < graphs);
+        // two-operand designs are orders of magnitude better
+        assert!(para / fat.max(1e-300) > 1e3, "fat {fat} vs para {para}");
+    }
+
+    #[test]
+    fn error_rate_grows_with_bits_and_senses() {
+        let p = MtjParams::default();
+        let e8 = addition_error_rate(SaKind::ParaPim, 8, &p);
+        let e16 = addition_error_rate(SaKind::ParaPim, 16, &p);
+        assert!(e16 > e8);
+        // ParaPIM senses twice per bit -> worse than GraphS at equal margin
+        let g8 = addition_error_rate(SaKind::GraphS, 8, &p);
+        assert!(e8 > g8);
+    }
+
+    #[test]
+    fn zero_margin_always_flips() {
+        assert_eq!(flip_probability(0.0, 0.01), 1.0);
+        assert!(flip_probability(1.0, 0.001) < 1e-12);
+    }
+}

@@ -1,0 +1,239 @@
+//! The FAT Sense Amplifier — Fig. 5 (c) of the paper.
+//!
+//! Two OpAmps (AND-reference and OR-reference comparators), four Boolean
+//! gates (NOR, XOR, OR, AND), one carry D-latch, and a 4-input output
+//! selector.  Three enable signals (EN_READ, EN_AND, EN_OR — Table IV) and
+//! two selector signals (Sel1, Sel2 — Table V).
+//!
+//! The defining feature: during addition the carry-out of bit *i* is stored
+//! in the D-latch and consumed as the carry-in of bit *i+1* — it is never
+//! written back to the memory array, and because the carry is only needed
+//! one bit-cycle later its computation is hidden behind the SUM path
+//! (§III-B2c "Fast Addition").
+
+use super::gates::{Component, Netlist};
+use super::mtj::SensedLevel;
+use super::sense_amp::{
+    level_and, level_carry, level_nor, level_or, level_sum, BitOp, BitResult, SaKind,
+    SenseAmplifier, SignalCounts,
+};
+
+/// Enable-signal configuration of Table IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EnableConfig {
+    pub en_read: bool,
+    pub en_and: bool,
+    pub en_or: bool,
+    /// Which selector port is routed to OUT (Table V).
+    pub port: SelectorPort,
+}
+
+/// The four selector input ports of the FAT SA (Table V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectorPort {
+    And,
+    Or,
+    Xor,
+    Sum,
+}
+
+impl SelectorPort {
+    /// Selector signal encoding of Table V: (Sel1, Sel2).
+    pub fn select_signals(self) -> (bool, bool) {
+        match self {
+            SelectorPort::And => (false, false),
+            SelectorPort::Or => (false, true),
+            SelectorPort::Xor => (true, false),
+            SelectorPort::Sum => (true, true),
+        }
+    }
+}
+
+/// Table IV: enable-signal configuration per operation.
+pub fn enable_config(op: BitOp) -> Option<EnableConfig> {
+    use SelectorPort::*;
+    let cfg = match op {
+        BitOp::Read => EnableConfig { en_read: true, en_and: false, en_or: false, port: Or },
+        BitOp::Not => EnableConfig { en_read: false, en_and: true, en_or: true, port: Xor },
+        BitOp::And => EnableConfig { en_read: false, en_and: true, en_or: false, port: And },
+        BitOp::Nand => EnableConfig { en_read: false, en_and: true, en_or: false, port: Xor },
+        BitOp::Or => EnableConfig { en_read: false, en_and: false, en_or: true, port: Or },
+        BitOp::Xor => EnableConfig { en_read: false, en_and: true, en_or: true, port: Xor },
+        BitOp::Sum => EnableConfig { en_read: false, en_and: true, en_or: true, port: Sum },
+        BitOp::Nor => return None,
+    };
+    Some(cfg)
+}
+
+/// The FAT SA.
+pub struct FatSa;
+
+impl SenseAmplifier for FatSa {
+    fn kind(&self) -> SaKind {
+        SaKind::Fat
+    }
+
+    fn netlist(&self) -> Netlist {
+        // Table VI row "Our FAT": 2 amplifiers, 1 D-latch, 4 Boolean gates,
+        // a 4-input selector, 3 EN + 2 Sel signal drivers.
+        Netlist::new(&[
+            (Component::OpAmp, 2),
+            (Component::DLatch, 1),
+            (Component::Nor2, 1),
+            (Component::Xor2, 1),
+            (Component::Or2, 1),
+            (Component::And2, 1),
+            (Component::Selector4, 1),
+            (Component::SignalDriver, 5),
+        ])
+    }
+
+    fn signals(&self) -> SignalCounts {
+        SignalCounts { enables: 3, selects: 2 }
+    }
+
+    fn supports(&self, op: BitOp) -> bool {
+        enable_config(op).is_some()
+    }
+
+    fn compute(&self, op: BitOp, level: SensedLevel, carry_in: bool) -> BitResult {
+        let cfg = enable_config(op).unwrap_or_else(|| panic!("FAT SA: unsupported {op:?}"));
+        // Comparing stage: the two OpAmps produce AND / OR / NOR of the
+        // activated cells, gated by the enable signals.
+        let s_and = cfg.en_and && level_and(level);
+        let s_or = (cfg.en_or || cfg.en_read) && level_or(level);
+        let s_nor = (cfg.en_or || cfg.en_read) && level_nor(level);
+        // Combining stage, eq. (11)-(13).
+        let s_xor = !(s_and || s_nor) && cfg.en_and && cfg.en_or;
+        let out = match cfg.port {
+            SelectorPort::And => s_and,
+            SelectorPort::Or => s_or,
+            SelectorPort::Xor => match op {
+                // NAND disables EN_OR/EN_READ at the second OpAmp so the NOR
+                // port yields constant 0 and XOR-port = AND NOR 0 = !AND
+                // (eq. 15).  NOT reads the operand with a row of 1s
+                // (eq. 14): the Mid level then means "operand was 0".
+                BitOp::Nand => !s_and,
+                _ => s_xor,
+            },
+            SelectorPort::Sum => level_sum(level, carry_in),
+        };
+        let carry_out = match op {
+            BitOp::Sum => Some(level_carry(level, carry_in)),
+            _ => None,
+        };
+        BitResult { out, carry_out }
+    }
+
+    fn op_latency_ns(&self, op: BitOp) -> f64 {
+        // Signal-path latencies, ns.  Calibrated to the paper's Virtuoso
+        // measurements (Fig. 10 — we cannot run Spectre; see DESIGN.md):
+        // FAT is the Fig. 10 baseline, so these set the 1.0 marks.
+        match op {
+            BitOp::Read => 0.350,                    // OpAmp -> 4:1 selector
+            BitOp::And | BitOp::Or => 0.350,         // OpAmp -> selector
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 0.375, // + NOR combine
+            BitOp::Sum => 0.420,                     // + XOR-with-Cin combine
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn op_power_uw(&self, op: BitOp) -> f64 {
+        match op {
+            BitOp::Read => 6.0,
+            BitOp::And | BitOp::Or => 8.0,
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 9.0,
+            BitOp::Sum => 10.0,
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn add_operand_rows(&self) -> u32 {
+        2 // A and B only — the carry lives in the latch (2-operand logic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sense_amp::level_of;
+
+    #[test]
+    fn table4_configurations() {
+        // Spot-check Table IV exactly.
+        let read = enable_config(BitOp::Read).unwrap();
+        assert!(read.en_read && !read.en_and && !read.en_or);
+        assert_eq!(read.port, SelectorPort::Or);
+
+        let xor = enable_config(BitOp::Xor).unwrap();
+        assert!(!xor.en_read && xor.en_and && xor.en_or);
+        assert_eq!(xor.port, SelectorPort::Xor);
+
+        let add = enable_config(BitOp::Sum).unwrap();
+        assert!(add.en_and && add.en_or);
+        assert_eq!(add.port, SelectorPort::Sum);
+    }
+
+    #[test]
+    fn table5_selector_signals() {
+        assert_eq!(SelectorPort::And.select_signals(), (false, false));
+        assert_eq!(SelectorPort::Or.select_signals(), (false, true));
+        assert_eq!(SelectorPort::Xor.select_signals(), (true, false));
+        assert_eq!(SelectorPort::Sum.select_signals(), (true, true));
+    }
+
+    #[test]
+    fn read_reports_stored_bit() {
+        let sa = FatSa;
+        // Read senses a single cell: level Low = 0, Mid..High = 1 (the OR
+        // comparator fires above V_READ).
+        assert!(!sa.compute(BitOp::Read, SensedLevel::Low, false).out);
+        assert!(sa.compute(BitOp::Read, SensedLevel::Mid, false).out);
+    }
+
+    #[test]
+    fn not_via_ones_row() {
+        // NOT A = A XOR 1 (eq. 14): sense (A, 1).  A=0 -> Mid -> out 1;
+        // A=1 -> High -> out 0.
+        let sa = FatSa;
+        assert!(sa.compute(BitOp::Not, SensedLevel::Mid, false).out);
+        assert!(!sa.compute(BitOp::Not, SensedLevel::High, false).out);
+    }
+
+    #[test]
+    fn nand_truth_table() {
+        let sa = FatSa;
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let r = sa.compute(BitOp::Nand, level_of(a, b), false);
+            assert_eq!(r.out, !(a && b), "NAND({a},{b})");
+        }
+    }
+
+    #[test]
+    fn sum_produces_carry_only_for_sum() {
+        let sa = FatSa;
+        assert!(sa.compute(BitOp::Sum, SensedLevel::High, false).carry_out.is_some());
+        assert!(sa.compute(BitOp::And, SensedLevel::High, false).carry_out.is_none());
+    }
+
+    #[test]
+    fn netlist_matches_table6() {
+        let n = FatSa.netlist();
+        assert_eq!(n.count(Component::OpAmp), 2);
+        assert_eq!(n.count(Component::DLatch), 1);
+        let gates = n.count(Component::Nor2)
+            + n.count(Component::Xor2)
+            + n.count(Component::Or2)
+            + n.count(Component::And2);
+        assert_eq!(gates, 4);
+        assert_eq!(n.count(Component::Selector4), 1);
+        assert_eq!(n.count(Component::Selector8), 0);
+    }
+
+    #[test]
+    fn sum_is_the_critical_path() {
+        let sa = FatSa;
+        assert!(sa.op_latency_ns(BitOp::Sum) > sa.op_latency_ns(BitOp::Xor));
+        assert!(sa.op_latency_ns(BitOp::Xor) > sa.op_latency_ns(BitOp::Read));
+    }
+}

@@ -1,0 +1,130 @@
+//! The GraphS Sense Amplifier [31] — Fig. 3 (c) baseline.
+//!
+//! GraphS (and ParaPIM-SA-II / CA-DNN-PIM) fixes ParaPIM's first weakness:
+//! a third OpAmp lets it compute SUM and Carry-out in a *single* sensing
+//! step over three operands (A, B and the carry row).  But it keeps the
+//! second weakness — the carry is still written back to and read from the
+//! memory array — and pays for the third amplifier: ~0.8x the
+//! energy-efficiency/area of ParaPIM (§II-C), no XOR support, and a 2.4x
+//! smaller sense margin than two-operand designs (§IV-A3).
+
+use super::gates::{Component, Netlist};
+use super::mtj::SensedLevel;
+use super::sense_amp::{
+    level_and, level_carry, level_or, level_sum, BitOp, BitResult, SaKind, SenseAmplifier,
+    SignalCounts,
+};
+
+pub struct GraphSSa;
+
+impl SenseAmplifier for GraphSSa {
+    fn kind(&self) -> SaKind {
+        SaKind::GraphS
+    }
+
+    fn netlist(&self) -> Netlist {
+        // Table VI: 3 amplifiers, no latch, 1 Boolean gate, 6 EN + 3 Sel.
+        Netlist::new(&[
+            (Component::OpAmp, 3),
+            (Component::And2, 1),
+            (Component::Selector8, 1),
+            (Component::SignalDriver, 9),
+        ])
+    }
+
+    fn signals(&self) -> SignalCounts {
+        SignalCounts { enables: 6, selects: 3 }
+    }
+
+    fn supports(&self, op: BitOp) -> bool {
+        // §IV-A1: "it does not support XOR" (nor the XOR-derived NOT/NAND).
+        matches!(op, BitOp::Read | BitOp::And | BitOp::Or | BitOp::Sum)
+    }
+
+    fn compute(&self, op: BitOp, level: SensedLevel, carry_in: bool) -> BitResult {
+        let out = match op {
+            BitOp::Read => level_or(level),
+            BitOp::And => level_and(level),
+            BitOp::Or => level_or(level),
+            BitOp::Sum => level_sum(level, carry_in),
+            other => panic!("GraphS SA: unsupported {other:?}"),
+        };
+        let carry_out = match op {
+            BitOp::Sum => Some(level_carry(level, carry_in)),
+            _ => None,
+        };
+        BitResult { out, carry_out }
+    }
+
+    fn op_latency_ns(&self, op: BitOp) -> f64 {
+        // Calibrated to Fig. 10: FAT is 35% faster on READ and >15% on
+        // AND/OR; GraphS is 7% *faster* on SUM (aggressive single-step
+        // three-operand scheme).
+        match op {
+            BitOp::Read => 0.473,
+            BitOp::And => 0.411,
+            BitOp::Or => 0.408,
+            BitOp::Sum => 0.391,
+            _ => f64::NAN,
+        }
+    }
+
+    fn op_power_uw(&self, op: BitOp) -> f64 {
+        // Fig. 10 / §IV-A1: FAT is 1.44x more power-efficient than GraphS
+        // (three-operand logic + third amplifier).
+        match op {
+            BitOp::Read => 8.6,
+            BitOp::And | BitOp::Or => 11.5,
+            BitOp::Sum => 14.4,
+            _ => f64::NAN,
+        }
+    }
+
+    fn add_operand_rows(&self) -> u32 {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sa_fat::FatSa;
+
+    #[test]
+    fn has_three_opamps_and_one_gate() {
+        let n = GraphSSa.netlist();
+        assert_eq!(n.count(Component::OpAmp), 3);
+        assert_eq!(n.count(Component::DLatch), 0);
+        let gates = n.count(Component::And2)
+            + n.count(Component::Or2)
+            + n.count(Component::Nor2)
+            + n.count(Component::Xor2);
+        assert_eq!(gates, 1);
+    }
+
+    #[test]
+    fn sum_is_faster_than_fat_but_rest_is_slower() {
+        let g = GraphSSa;
+        let f = FatSa;
+        assert!(g.op_latency_ns(BitOp::Sum) < f.op_latency_ns(BitOp::Sum));
+        assert!(g.op_latency_ns(BitOp::Read) > f.op_latency_ns(BitOp::Read));
+        assert!(g.op_latency_ns(BitOp::And) > f.op_latency_ns(BitOp::And));
+    }
+
+    #[test]
+    fn power_gap_is_about_44_percent_on_sum() {
+        let ratio = GraphSSa.op_power_uw(BitOp::Sum) / FatSa.op_power_uw(BitOp::Sum);
+        assert!((ratio - 1.44).abs() < 0.02, "{ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported")]
+    fn xor_panics() {
+        GraphSSa.compute(BitOp::Xor, SensedLevel::Mid, false);
+    }
+
+    #[test]
+    fn larger_than_fat() {
+        assert!(GraphSSa.area_um2() > FatSa.area_um2());
+    }
+}

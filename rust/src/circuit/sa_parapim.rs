@@ -1,0 +1,131 @@
+//! The ParaPIM Sense Amplifier [29] — Fig. 3 (b) baseline.
+//!
+//! Column-major bit-serial design for BWN acceleration: operands live in
+//! columns and addition proceeds bit by bit across all 256 columns in
+//! parallel.  Its weaknesses (the ones FAT fixes): SUM and Carry-out are
+//! computed *sequentially* (two sensing phases per bit), and the carry is
+//! written back to a memory row so the next bit can sense it as a third
+//! operand — two extra array writes + three-operand sensing per bit.
+
+use super::gates::{Component, Netlist};
+use super::mtj::SensedLevel;
+use super::sense_amp::{
+    level_and, level_carry, level_or, level_sum, level_xor, BitOp, BitResult, SaKind,
+    SenseAmplifier, SignalCounts,
+};
+
+pub struct ParaPimSa;
+
+impl SenseAmplifier for ParaPimSa {
+    fn kind(&self) -> SaKind {
+        SaKind::ParaPim
+    }
+
+    fn netlist(&self) -> Netlist {
+        // Table VI: 2 amplifiers, 1 D-latch, 3 Boolean gates, an 8-input
+        // output selector (seven result ports), 4 EN + 3 Sel.
+        Netlist::new(&[
+            (Component::OpAmp, 2),
+            (Component::DLatch, 1),
+            (Component::Nor2, 1),
+            (Component::Xor2, 1),
+            (Component::And2, 1),
+            (Component::Selector8, 1),
+            (Component::SignalDriver, 7),
+        ])
+    }
+
+    fn signals(&self) -> SignalCounts {
+        SignalCounts { enables: 4, selects: 3 }
+    }
+
+    fn supports(&self, op: BitOp) -> bool {
+        !matches!(op, BitOp::Nor)
+    }
+
+    fn compute(&self, op: BitOp, level: SensedLevel, carry_in: bool) -> BitResult {
+        let out = match op {
+            BitOp::Read => level_or(level),
+            BitOp::Not => level_xor(level),
+            BitOp::And => level_and(level),
+            BitOp::Nand => !level_and(level),
+            BitOp::Or => level_or(level),
+            BitOp::Xor => level_xor(level),
+            BitOp::Sum => level_sum(level, carry_in),
+            BitOp::Nor => panic!("ParaPIM SA: unsupported NOR"),
+        };
+        let carry_out = match op {
+            BitOp::Sum => Some(level_carry(level, carry_in)),
+            _ => None,
+        };
+        BitResult { out, carry_out }
+    }
+
+    fn op_latency_ns(&self, op: BitOp) -> f64 {
+        // Calibrated to Fig. 10: FAT outperforms ParaPIM by ~30% on READ,
+        // >15% on AND/OR/XOR and 14% on SUM — the 8-to-1 output selector
+        // and heavier result ports cost latency on every op.
+        match op {
+            BitOp::Read => 0.455,
+            BitOp::And => 0.413,
+            BitOp::Or => 0.410,
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 0.450,
+            BitOp::Sum => 0.479,
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn op_power_uw(&self, op: BitOp) -> f64 {
+        // Fig. 10 / §IV-A1: FAT is 1.22x more power-efficient than ParaPIM.
+        match op {
+            BitOp::Read => 7.3,
+            BitOp::And | BitOp::Or => 9.8,
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 11.0,
+            BitOp::Sum => 12.2,
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn add_operand_rows(&self) -> u32 {
+        3 // A, B and the carry row — three-operand sensing
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sa_fat::FatSa;
+
+    #[test]
+    fn larger_and_slower_than_fat() {
+        let para = ParaPimSa;
+        let fat = FatSa;
+        assert!(para.area_um2() > fat.area_um2());
+        for op in [BitOp::Read, BitOp::And, BitOp::Or, BitOp::Xor, BitOp::Sum] {
+            assert!(
+                para.op_latency_ns(op) > fat.op_latency_ns(op),
+                "{op:?}: {} !> {}",
+                para.op_latency_ns(op),
+                fat.op_latency_ns(op)
+            );
+        }
+    }
+
+    #[test]
+    fn read_gap_is_about_30_percent() {
+        let ratio = ParaPimSa.op_latency_ns(BitOp::Read) / FatSa.op_latency_ns(BitOp::Read);
+        assert!((ratio - 1.30).abs() < 0.02, "{ratio}");
+    }
+
+    #[test]
+    fn power_gap_is_about_22_percent_on_sum() {
+        let ratio = ParaPimSa.op_power_uw(BitOp::Sum) / FatSa.op_power_uw(BitOp::Sum);
+        assert!((ratio - 1.22).abs() < 0.02, "{ratio}");
+    }
+
+    #[test]
+    fn has_8_input_selector() {
+        assert_eq!(ParaPimSa.netlist().count(Component::Selector8), 1);
+        assert_eq!(ParaPimSa.netlist().count(Component::Selector4), 0);
+    }
+}

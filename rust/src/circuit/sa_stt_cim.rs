@@ -1,0 +1,138 @@
+//! The STT-CiM Sense Amplifier [26] — Fig. 3 (a) baseline.
+//!
+//! Row-major design: operands are stored along rows, and a full N-bit scalar
+//! addition happens in one array access — N column-SAs each produce a local
+//! sum/carry and the carry *ripples* across the SAs.  The SA itself is the
+//! simplest of the four (no latch, 4-input selector) but pays six enable and
+//! three selector signals, and vector addition costs N sequential scalar
+//! additions (Table IX / eq. (2)).
+
+use super::gates::{Component, Netlist};
+use super::mtj::SensedLevel;
+use super::sense_amp::{
+    level_and, level_carry, level_or, level_sum, level_xor, BitOp, BitResult, SaKind,
+    SenseAmplifier, SignalCounts,
+};
+
+pub struct SttCimSa;
+
+impl SenseAmplifier for SttCimSa {
+    fn kind(&self) -> SaKind {
+        SaKind::SttCim
+    }
+
+    fn netlist(&self) -> Netlist {
+        // Table VI: 2 amplifiers, no latch, 4 Boolean gates, 6 EN + 3 Sel.
+        Netlist::new(&[
+            (Component::OpAmp, 2),
+            (Component::Nor2, 1),
+            (Component::Xor2, 1),
+            (Component::Or2, 1),
+            (Component::And2, 1),
+            (Component::Selector4, 1),
+            (Component::SignalDriver, 9),
+        ])
+    }
+
+    fn signals(&self) -> SignalCounts {
+        SignalCounts { enables: 6, selects: 3 }
+    }
+
+    fn supports(&self, op: BitOp) -> bool {
+        !matches!(op, BitOp::Nor)
+    }
+
+    fn compute(&self, op: BitOp, level: SensedLevel, carry_in: bool) -> BitResult {
+        let out = match op {
+            BitOp::Read => level_or(level),
+            BitOp::Not => level_xor(level), // read with a row of 1s
+            BitOp::And => level_and(level),
+            BitOp::Nand => !level_and(level),
+            BitOp::Or => level_or(level),
+            BitOp::Xor => level_xor(level),
+            BitOp::Sum => level_sum(level, carry_in),
+            BitOp::Nor => panic!("STT-CiM SA: unsupported NOR"),
+        };
+        let carry_out = match op {
+            BitOp::Sum => Some(level_carry(level, carry_in)),
+            _ => None,
+        };
+        BitResult { out, carry_out }
+    }
+
+    fn op_latency_ns(&self, op: BitOp) -> f64 {
+        // Calibrated to Fig. 10: STT-CiM is 0.2-3.7% *faster* than FAT on
+        // READ/AND/OR/SUM (simpler output stage) and 1.4% *slower* on XOR
+        // (more loading gates at its XOR port).
+        match op {
+            BitOp::Read => 0.345,
+            BitOp::And => 0.337,
+            BitOp::Or => 0.349,
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 0.380,
+            BitOp::Sum => 0.417,
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn op_power_uw(&self, op: BitOp) -> f64 {
+        // ~2% above FAT on average (four extra control signals to drive).
+        match op {
+            BitOp::Read => 6.1,
+            BitOp::And | BitOp::Or => 8.2,
+            BitOp::Not | BitOp::Nand | BitOp::Xor => 9.2,
+            BitOp::Sum => 10.2,
+            BitOp::Nor => f64::NAN,
+        }
+    }
+
+    fn add_operand_rows(&self) -> u32 {
+        2
+    }
+}
+
+/// Per-bit ripple-carry delay inside the STT-CiM adder chain, ns — the
+/// `t_Carry` of eq. (1).
+pub fn ripple_carry_ns() -> f64 {
+    crate::circuit::calibration::ArrayTiming::default().t_carry_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sense_amp::level_of;
+
+    #[test]
+    fn netlist_has_no_latch() {
+        assert_eq!(SttCimSa.netlist().count(Component::DLatch), 0);
+    }
+
+    #[test]
+    fn smaller_than_fat() {
+        // Fig. 13: STT-CiM's SA is smaller than FAT's (no D-latch) even
+        // though it drives more control signals.
+        let stt = SttCimSa.area_um2();
+        let fat = crate::circuit::sa_fat::FatSa.area_um2();
+        assert!(stt < fat, "{stt} !< {fat}");
+    }
+
+    #[test]
+    fn full_boolean_coverage() {
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let l = level_of(a, b);
+            assert_eq!(SttCimSa.compute(BitOp::And, l, false).out, a && b);
+            assert_eq!(SttCimSa.compute(BitOp::Or, l, false).out, a || b);
+            assert_eq!(SttCimSa.compute(BitOp::Xor, l, false).out, a ^ b);
+            assert_eq!(SttCimSa.compute(BitOp::Nand, l, false).out, !(a && b));
+        }
+    }
+
+    #[test]
+    fn xor_is_slower_than_fat_but_read_is_faster() {
+        let stt = SttCimSa;
+        let fat = crate::circuit::sa_fat::FatSa;
+        use crate::circuit::sense_amp::SenseAmplifier as _;
+        assert!(stt.op_latency_ns(BitOp::Xor) > fat.op_latency_ns(BitOp::Xor));
+        assert!(stt.op_latency_ns(BitOp::Read) < fat.op_latency_ns(BitOp::Read));
+        assert!(stt.op_latency_ns(BitOp::Sum) < fat.op_latency_ns(BitOp::Sum));
+    }
+}

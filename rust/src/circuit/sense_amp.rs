@@ -1,0 +1,294 @@
+//! The Sense Amplifier abstraction shared by all four designs.
+//!
+//! A Sense Amplifier (SA) sits at the bottom of each memory column: it
+//! senses the source-line voltage of one or two activated cells, classifies
+//! it against a reference ladder (the *comparing* stage), combines the
+//! comparator outputs through a small gate network (*combining*), and routes
+//! one result to the output port (*selecting*) — §III-B2 of the paper.
+//!
+//! The four designs differ in which operations they support natively, how
+//! the addition carry is handled, and their circuit budgets (Table VI):
+//!
+//! | design   | EN | Sel | amps | latch | gates | carry handling            |
+//! |----------|----|-----|------|-------|-------|---------------------------|
+//! | STT-CiM  | 6  | 3   | 2    | 0     | 4     | ripple inside the SA      |
+//! | ParaPIM  | 4  | 3   | 2    | 1     | 3     | written back to the array |
+//! | GraphS   | 6  | 3   | 3    | 0     | 1     | written back to the array |
+//! | FAT      | 3  | 2   | 2    | 1     | 4     | kept in the carry D-latch |
+
+use super::gates::Netlist;
+use super::mtj::SensedLevel;
+
+/// Bit-level operation a sense amplifier can be asked to perform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BitOp {
+    Read,
+    Not,
+    And,
+    Nand,
+    Or,
+    Nor,
+    Xor,
+    /// Full-adder step: SUM out, carry handled per design.
+    Sum,
+}
+
+impl BitOp {
+    pub const ALL: [BitOp; 8] = [
+        BitOp::Read,
+        BitOp::Not,
+        BitOp::And,
+        BitOp::Nand,
+        BitOp::Or,
+        BitOp::Nor,
+        BitOp::Xor,
+        BitOp::Sum,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BitOp::Read => "READ",
+            BitOp::Not => "NOT",
+            BitOp::And => "AND",
+            BitOp::Nand => "NAND",
+            BitOp::Or => "OR",
+            BitOp::Nor => "NOR",
+            BitOp::Xor => "XOR",
+            BitOp::Sum => "SUM",
+        }
+    }
+}
+
+/// Which of the four designs an SA instance models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SaKind {
+    SttCim,
+    ParaPim,
+    GraphS,
+    Fat,
+}
+
+impl SaKind {
+    pub const ALL: [SaKind; 4] = [SaKind::SttCim, SaKind::ParaPim, SaKind::GraphS, SaKind::Fat];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SaKind::SttCim => "STT-CiM",
+            SaKind::ParaPim => "ParaPIM",
+            SaKind::GraphS => "GraphS",
+            SaKind::Fat => "FAT",
+        }
+    }
+}
+
+/// Result of one SA bit-operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitResult {
+    /// Value at the OUT port.
+    pub out: bool,
+    /// Carry-out, if the operation produces one.  Where it *goes* is the
+    /// design's addition scheme's business (latch vs array write-back).
+    pub carry_out: Option<bool>,
+}
+
+/// Control-signal budget (Table VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignalCounts {
+    pub enables: u32,
+    pub selects: u32,
+}
+
+/// A sense-amplifier design: functional truth tables + circuit model.
+pub trait SenseAmplifier {
+    fn kind(&self) -> SaKind;
+
+    /// The gate-level netlist (drives area and Table VI counts).
+    fn netlist(&self) -> Netlist;
+
+    /// Control-signal budget (Table VI).
+    fn signals(&self) -> SignalCounts;
+
+    /// Whether the design supports `op` natively.
+    fn supports(&self, op: BitOp) -> bool;
+
+    /// Perform `op` on the sensed level of the activated cell(s).
+    /// `carry_in` is the design-specific carry source (latch or array row).
+    /// Panics on unsupported ops — callers must check [`supports`].
+    fn compute(&self, op: BitOp, level: SensedLevel, carry_in: bool) -> BitResult;
+
+    /// Per-op latency at the SA, ns (sensing settle -> OUT port).
+    fn op_latency_ns(&self, op: BitOp) -> f64;
+
+    /// Per-op average dynamic power, uW.
+    fn op_power_uw(&self, op: BitOp) -> f64;
+
+    /// Layout area, um^2.
+    fn area_um2(&self) -> f64 {
+        self.netlist().area_um2()
+    }
+
+    /// Maximum number of memory rows the design senses simultaneously
+    /// during addition (2-operand vs 3-operand logic; affects sense margin
+    /// and therefore reliability, §IV-A3).
+    fn add_operand_rows(&self) -> u32;
+}
+
+/// Shared truth-table helpers: (a, b) recovered from a 2-cell sensed level.
+/// A `Mid` level means exactly one of the cells holds "1" — the SA cannot
+/// tell which, and none of the supported Boolean ops needs to.
+pub fn level_and(level: SensedLevel) -> bool {
+    level == SensedLevel::High
+}
+
+pub fn level_or(level: SensedLevel) -> bool {
+    level != SensedLevel::Low
+}
+
+pub fn level_nor(level: SensedLevel) -> bool {
+    !level_or(level)
+}
+
+/// XOR via eq. (11): (A AND B) NOR (A NOR B).
+pub fn level_xor(level: SensedLevel) -> bool {
+    !(level_and(level) || level_nor(level))
+}
+
+/// Full-adder SUM via eq. (12): (A XOR B) XOR Cin.
+pub fn level_sum(level: SensedLevel, carry_in: bool) -> bool {
+    level_xor(level) ^ carry_in
+}
+
+/// Full-adder carry via eq. (13): ((A OR B) AND Cin) OR (A AND B).
+pub fn level_carry(level: SensedLevel, carry_in: bool) -> bool {
+    (level_or(level) && carry_in) || level_and(level)
+}
+
+/// Convenience: the sensed level produced by a pair of stored bits.
+pub fn level_of(a: bool, b: bool) -> SensedLevel {
+    match (a, b) {
+        (false, false) => SensedLevel::Low,
+        (true, true) => SensedLevel::High,
+        _ => SensedLevel::Mid,
+    }
+}
+
+/// A boxed design by kind.
+pub fn design(kind: SaKind) -> Box<dyn SenseAmplifier + Send + Sync> {
+    match kind {
+        SaKind::SttCim => Box::new(super::sa_stt_cim::SttCimSa),
+        SaKind::ParaPim => Box::new(super::sa_parapim::ParaPimSa),
+        SaKind::GraphS => Box::new(super::sa_graphs::GraphSSa),
+        SaKind::Fat => Box::new(super::sa_fat::FatSa),
+    }
+}
+
+/// Alias used across the crate.
+pub type SaDesign = Box<dyn SenseAmplifier + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_helpers_match_boolean_algebra() {
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let l = level_of(a, b);
+            assert_eq!(level_and(l), a && b);
+            assert_eq!(level_or(l), a || b);
+            assert_eq!(level_nor(l), !(a || b));
+            assert_eq!(level_xor(l), a ^ b);
+            for cin in [false, true] {
+                let sum = level_sum(l, cin);
+                let cout = level_carry(l, cin);
+                let total = a as u8 + b as u8 + cin as u8;
+                assert_eq!(sum, total & 1 == 1, "sum({a},{b},{cin})");
+                assert_eq!(cout, total >= 2, "carry({a},{b},{cin})");
+            }
+        }
+    }
+
+    #[test]
+    fn all_four_designs_compute_correct_full_adds() {
+        for kind in SaKind::ALL {
+            let sa = design(kind);
+            if !sa.supports(BitOp::Sum) {
+                continue;
+            }
+            for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+                for cin in [false, true] {
+                    let r = sa.compute(BitOp::Sum, level_of(a, b), cin);
+                    let total = a as u8 + b as u8 + cin as u8;
+                    assert_eq!(r.out, total & 1 == 1, "{kind:?} sum({a},{b},{cin})");
+                    assert_eq!(
+                        r.carry_out,
+                        Some(total >= 2),
+                        "{kind:?} carry({a},{b},{cin})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_designs_support_the_basic_boolean_set() {
+        for kind in SaKind::ALL {
+            let sa = design(kind);
+            for op in [BitOp::Read, BitOp::And, BitOp::Or, BitOp::Sum] {
+                assert!(sa.supports(op), "{kind:?} must support {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn graphs_does_not_support_xor() {
+        // §IV-A1: "GraphS ... does not support XOR".
+        assert!(!design(SaKind::GraphS).supports(BitOp::Xor));
+        for kind in [SaKind::SttCim, SaKind::ParaPim, SaKind::Fat] {
+            assert!(design(kind).supports(BitOp::Xor), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn boolean_ops_match_for_all_supporting_designs() {
+        for kind in SaKind::ALL {
+            let sa = design(kind);
+            for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+                let l = level_of(a, b);
+                if sa.supports(BitOp::And) {
+                    assert_eq!(sa.compute(BitOp::And, l, false).out, a && b);
+                }
+                if sa.supports(BitOp::Or) {
+                    assert_eq!(sa.compute(BitOp::Or, l, false).out, a || b);
+                }
+                if sa.supports(BitOp::Xor) {
+                    assert_eq!(sa.compute(BitOp::Xor, l, false).out, a ^ b);
+                }
+                if sa.supports(BitOp::Nand) {
+                    assert_eq!(sa.compute(BitOp::Nand, l, false).out, !(a && b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fat_has_fewest_control_signals() {
+        // Table VI: FAT has the least EN + Sel signals of the four designs.
+        let fat = design(SaKind::Fat).signals();
+        for kind in [SaKind::SttCim, SaKind::ParaPim, SaKind::GraphS] {
+            let other = design(kind).signals();
+            assert!(
+                fat.enables + fat.selects < other.enables + other.selects,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn operand_rows_match_paper() {
+        // FAT & STT-CiM use 2-operand logic; ParaPIM/GraphS 3-operand.
+        assert_eq!(design(SaKind::Fat).add_operand_rows(), 2);
+        assert_eq!(design(SaKind::SttCim).add_operand_rows(), 2);
+        assert_eq!(design(SaKind::ParaPim).add_operand_rows(), 3);
+        assert_eq!(design(SaKind::GraphS).add_operand_rows(), 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! fat <command> [--key value]...
+//!
+//! commands:
+//!   info                         chip + artifact summary
+//!   infer    --sparsity 0.8 --layer 10 [--baseline] [--config f]
+//!   map      --layer 10          Table VII/VIII mapping sweep for a layer
+//!   verify   [--artifacts dir]   simulator vs PJRT cross-check
+//!   serve    --requests 16 --workers 4
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a command plus `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        let mut it = raw.iter().peekable();
+        let command = it
+            .next()
+            .ok_or_else(|| anyhow!("missing command; try `fat help`"))?
+            .clone();
+        if command.starts_with("--") {
+            bail!("expected a command before flags; try `fat help`");
+        }
+        let mut flags = HashMap::new();
+        while let Some(flag) = it.next() {
+            let key = flag
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{flag}`"))?;
+            // boolean flags: next token absent or another flag
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            if flags.insert(key.to_string(), value).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(Self { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not a number: `{v}`")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not an integer: `{v}`")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Reject flags outside the allowed set (typo protection).
+    pub fn allow(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for `{}`", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const HELP: &str = "\
+fat — FAT in-memory TWN accelerator (TCAD'22) simulator
+
+USAGE: fat <command> [--flag value]...
+
+COMMANDS:
+  info                     chip configuration + loaded artifacts
+  infer                    run a ternary conv layer on the simulated chip
+      --sparsity <0..1>    weight sparsity (default 0.8)
+      --layer <1..17>      ResNet-18 conv layer index (default 10)
+      --baseline           use the dense ParaPIM baseline configuration
+      --config <file>      key=value chip config
+  map                      mapping sweep (Tables VII/VIII) for a layer
+      --layer <1..17>      ResNet-18 conv layer index (default 10)
+  verify                   cross-check simulator vs the PJRT artifacts
+      --artifacts <dir>    artifact directory (default ./artifacts)
+      --sparsity <0..1>    weight sparsity for the check (default 0.5)
+  serve                    threaded inference service demo
+      --requests <n>       requests to push (default 16)
+      --workers <n>        worker threads (default 4)
+  help                     this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&v(&["infer", "--sparsity", "0.8", "--baseline"])).unwrap();
+        assert_eq!(a.command, "infer");
+        assert_eq!(a.get("sparsity"), Some("0.8"));
+        assert!(a.get_bool("baseline"));
+        assert_eq!(a.get_f64("sparsity", 0.5).unwrap(), 0.8);
+        assert_eq!(a.get_usize("layer", 10).unwrap(), 10);
+    }
+
+    #[test]
+    fn rejects_missing_command_and_duplicates() {
+        assert!(Args::parse(&v(&[])).is_err());
+        assert!(Args::parse(&v(&["--flag", "x"])).is_err());
+        assert!(Args::parse(&v(&["go", "--a", "1", "--a", "2"])).is_err());
+    }
+
+    #[test]
+    fn allow_catches_typos() {
+        let a = Args::parse(&v(&["infer", "--sparsty", "0.8"])).unwrap();
+        assert!(a.allow(&["sparsity", "layer"]).is_err());
+        let b = Args::parse(&v(&["infer", "--sparsity", "0.8"])).unwrap();
+        assert!(b.allow(&["sparsity", "layer"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let a = Args::parse(&v(&["infer", "--sparsity", "much"])).unwrap();
+        assert!(a.get_f64("sparsity", 0.5).is_err());
+    }
+}

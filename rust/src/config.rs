@@ -1,0 +1,169 @@
+//! Chip configuration + a small key=value config-file format.
+//!
+//! Example config file (see `examples/fat.conf` in the README):
+//!
+//! ```text
+//! # FAT accelerator configuration
+//! cmas = 4096
+//! sa = fat            # fat | parapim | graphs | stt-cim
+//! skip_zeros = true
+//! layout = interval   # interval (CS) | dense (IS)
+//! op_bits = 8
+//! threads = 8
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::array::sacu::DotLayout;
+use crate::circuit::sense_amp::SaKind;
+use crate::coordinator::accelerator::ChipConfig;
+
+/// Top-level configuration of the simulated device.
+#[derive(Debug, Clone, Copy)]
+pub struct FatConfig {
+    pub cmas: usize,
+    pub sa: SaKind,
+    pub skip_zeros: bool,
+    pub interval_layout: bool,
+    pub op_bits: u32,
+    pub threads: usize,
+}
+
+impl Default for FatConfig {
+    fn default() -> Self {
+        Self {
+            cmas: 4096,
+            sa: SaKind::Fat,
+            skip_zeros: true,
+            interval_layout: true,
+            op_bits: 8,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl FatConfig {
+    /// Parse `key = value` lines; `#` starts a comment; unknown keys fail.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        let mut seen = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let (key, value) = (key.trim(), value.trim());
+            if seen.insert(key.to_string(), lineno).is_some() {
+                bail!("line {}: duplicate key `{key}`", lineno + 1);
+            }
+            match key {
+                "cmas" => cfg.cmas = value.parse().context("cmas")?,
+                "op_bits" => cfg.op_bits = value.parse().context("op_bits")?,
+                "threads" => cfg.threads = value.parse().context("threads")?,
+                "skip_zeros" => cfg.skip_zeros = parse_bool(value)?,
+                "sa" => {
+                    cfg.sa = match value.to_ascii_lowercase().as_str() {
+                        "fat" => SaKind::Fat,
+                        "parapim" => SaKind::ParaPim,
+                        "graphs" => SaKind::GraphS,
+                        "stt-cim" | "sttcim" => SaKind::SttCim,
+                        other => bail!("unknown sa `{other}`"),
+                    }
+                }
+                "layout" => {
+                    cfg.interval_layout = match value.to_ascii_lowercase().as_str() {
+                        "interval" | "cs" => true,
+                        "dense" | "is" => false,
+                        other => bail!("unknown layout `{other}`"),
+                    }
+                }
+                other => bail!("line {}: unknown key `{other}`", lineno + 1),
+            }
+        }
+        if cfg.cmas == 0 || cfg.threads == 0 {
+            bail!("cmas and threads must be positive");
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Lower to the chip configuration used by the simulator.
+    pub fn chip(&self) -> ChipConfig {
+        ChipConfig {
+            sa_kind: self.sa,
+            skip_zeros: self.skip_zeros,
+            layout: if self.interval_layout {
+                DotLayout::interval(self.op_bits)
+            } else {
+                DotLayout::dense(self.op_bits)
+            },
+            cmas: self.cmas,
+            threads: self.threads,
+        }
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("not a boolean: `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_paper_configuration() {
+        let c = FatConfig::default();
+        assert_eq!(c.cmas, 4096);
+        assert_eq!(c.sa, SaKind::Fat);
+        assert!(c.skip_zeros);
+        assert!(c.interval_layout);
+        assert_eq!(c.op_bits, 8);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = FatConfig::parse(
+            "# comment\ncmas = 128\nsa = parapim\nskip_zeros = false\nlayout = dense\nop_bits=4\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.cmas, 128);
+        assert_eq!(c.sa, SaKind::ParaPim);
+        assert!(!c.skip_zeros);
+        assert!(!c.interval_layout);
+        assert_eq!(c.op_bits, 4);
+        assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_duplicates() {
+        assert!(FatConfig::parse("bogus = 1").is_err());
+        assert!(FatConfig::parse("cmas = 1\ncmas = 2").is_err());
+        assert!(FatConfig::parse("cmas").is_err());
+        assert!(FatConfig::parse("cmas = 0").is_err());
+        assert!(FatConfig::parse("sa = tpu").is_err());
+    }
+
+    #[test]
+    fn chip_lowering_respects_layout() {
+        let c = FatConfig::parse("layout = dense").unwrap();
+        assert!(!c.chip().layout.rotate_partials);
+        let c = FatConfig::parse("layout = cs").unwrap();
+        assert!(c.chip().layout.rotate_partials);
+    }
+}

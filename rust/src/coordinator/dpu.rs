@@ -1,0 +1,112 @@
+//! The CMOS Data Processing Unit — §III-A2.
+//!
+//! The DPU handles what the memory arrays cannot: batch normalization and
+//! the activation function (eqs. (5)-(6)).  Deliberately *no* hardware
+//! quantizer: TWN weights arrive pre-ternarized (the paper removes the
+//! quantizer of ParaPIM/MRIMA to save area, power and time).  Activations
+//! are requantized to the array's 8-bit unsigned format on the way back to
+//! the CMAs — an affine scale chosen per layer.
+
+/// DPU timing/energy constants (45 nm CMOS ALU lane).
+const T_OP_NS: f64 = 0.8;
+const E_OP_PJ: f64 = 0.05;
+/// Parallel DPU lanes.
+const LANES: usize = 256;
+
+/// The Data Processing Unit.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Dpu;
+
+/// Result of a DPU pass.
+#[derive(Debug, Clone)]
+pub struct DpuPass {
+    pub values: Vec<f32>,
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+}
+
+impl Dpu {
+    /// Batch-norm (folded scale/shift) + ReLU over a channel-major buffer:
+    /// `values[c * per_ch + k]`.
+    pub fn bn_relu(&self, values: &[f32], gamma: &[f32], beta: &[f32], per_ch: usize) -> DpuPass {
+        assert_eq!(values.len(), gamma.len() * per_ch);
+        assert_eq!(gamma.len(), beta.len());
+        let out: Vec<f32> = values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let c = i / per_ch;
+                (v * gamma[c] + beta[c]).max(0.0)
+            })
+            .collect();
+        // 2 ops per element (mul-add + max), LANES-wide
+        let ops = 2 * values.len();
+        DpuPass {
+            values: out,
+            latency_ns: (ops as f64 / LANES as f64) * T_OP_NS,
+            energy_pj: ops as f64 * E_OP_PJ,
+        }
+    }
+
+    /// Requantize activations to the arrays' 8-bit unsigned format with an
+    /// affine scale: `q = clamp(round(v * scale), 0, 255)`.
+    pub fn requantize(&self, values: &[f32], scale: f32) -> DpuPass {
+        let out: Vec<f32> = values
+            .iter()
+            .map(|&v| (v * scale).round().clamp(0.0, 255.0))
+            .collect();
+        let ops = values.len();
+        DpuPass {
+            values: out,
+            latency_ns: (ops as f64 / LANES as f64) * T_OP_NS,
+            energy_pj: ops as f64 * E_OP_PJ,
+        }
+    }
+
+    /// Choose a requantization scale so the max observed value maps near
+    /// full range.
+    pub fn calibrate_scale(values: &[f32]) -> f32 {
+        let max = values.iter().cloned().fold(0.0f32, f32::max);
+        if max <= 0.0 {
+            1.0
+        } else {
+            255.0 / max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bn_relu_applies_per_channel() {
+        let dpu = Dpu;
+        // 2 channels x 2 elements
+        let p = dpu.bn_relu(&[1.0, -1.0, 2.0, 3.0], &[2.0, -1.0], &[0.0, 1.0], 2);
+        assert_eq!(p.values, vec![2.0, 0.0, 0.0, 0.0]);
+        assert!(p.latency_ns > 0.0 && p.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn requantize_clamps_and_rounds() {
+        let dpu = Dpu;
+        let p = dpu.requantize(&[-3.0, 0.4, 100.0, 1e9], 1.0);
+        assert_eq!(p.values, vec![0.0, 0.0, 100.0, 255.0]);
+    }
+
+    #[test]
+    fn calibrate_scale_maps_max_to_255() {
+        let s = Dpu::calibrate_scale(&[0.0, 2.0, 4.0]);
+        assert!((s - 63.75).abs() < 1e-5);
+        assert_eq!(Dpu::calibrate_scale(&[-1.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn latency_scales_with_elements() {
+        let dpu = Dpu;
+        let small = dpu.requantize(&vec![1.0; 256], 1.0);
+        let large = dpu.requantize(&vec![1.0; 2560], 1.0);
+        assert!((large.latency_ns / small.latency_ns - 10.0).abs() < 1e-9);
+    }
+}

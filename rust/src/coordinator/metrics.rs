@@ -1,0 +1,108 @@
+//! Chip-level metric aggregation.
+
+use crate::array::cma::CmaStats;
+
+/// Aggregated execution metrics for a layer or network run.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ChipMetrics {
+    /// Wall-clock latency of the simulated chip, ns (parallel tiles take
+    /// the max within a step; steps add).
+    pub latency_ns: f64,
+    /// Total energy across all CMAs, pJ.
+    pub energy_pj: f64,
+    /// Row senses across all CMAs.
+    pub senses: u64,
+    /// Row writes across all CMAs.
+    pub writes: u64,
+    /// Vector additions executed.
+    pub adds: u64,
+    /// Null operations skipped by the SACUs.
+    pub skipped: u64,
+    /// Reduction-unit (digital) latency, ns, already folded into
+    /// `latency_ns`; kept for the breakdown.
+    pub reduce_ns: f64,
+    /// DPU latency, ns, already folded into `latency_ns`.
+    pub dpu_ns: f64,
+}
+
+impl ChipMetrics {
+    /// Fold a parallel group of per-CMA ledgers into the chip metrics:
+    /// latency advances by the slowest member, energy/counters sum.
+    pub fn absorb_parallel(&mut self, ledgers: &[CmaStats]) {
+        let max_latency = ledgers.iter().map(|l| l.latency_ns).fold(0.0, f64::max);
+        self.latency_ns += max_latency;
+        for l in ledgers {
+            self.energy_pj += l.energy_pj;
+            self.senses += l.senses;
+            self.writes += l.writes;
+        }
+    }
+
+    /// Fold a sequential phase.
+    pub fn absorb_sequential(&mut self, l: &CmaStats) {
+        self.latency_ns += l.latency_ns;
+        self.energy_pj += l.energy_pj;
+        self.senses += l.senses;
+        self.writes += l.writes;
+    }
+
+    pub fn add(&mut self, other: &ChipMetrics) {
+        self.latency_ns += other.latency_ns;
+        self.energy_pj += other.energy_pj;
+        self.senses += other.senses;
+        self.writes += other.writes;
+        self.adds += other.adds;
+        self.skipped += other.skipped;
+        self.reduce_ns += other.reduce_ns;
+        self.dpu_ns += other.dpu_ns;
+    }
+
+    /// Energy-delay product, pJ*ns (Fig. 11's efficiency metric).
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.latency_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(lat: f64, e: f64) -> CmaStats {
+        CmaStats { senses: 1, writes: 2, latency_ns: lat, energy_pj: e }
+    }
+
+    #[test]
+    fn parallel_takes_max_latency_sums_energy() {
+        let mut m = ChipMetrics::default();
+        m.absorb_parallel(&[stats(10.0, 1.0), stats(30.0, 2.0), stats(20.0, 3.0)]);
+        assert_eq!(m.latency_ns, 30.0);
+        assert_eq!(m.energy_pj, 6.0);
+        assert_eq!(m.senses, 3);
+        assert_eq!(m.writes, 6);
+    }
+
+    #[test]
+    fn sequential_adds_latency() {
+        let mut m = ChipMetrics::default();
+        m.absorb_sequential(&stats(10.0, 1.0));
+        m.absorb_sequential(&stats(5.0, 1.0));
+        assert_eq!(m.latency_ns, 15.0);
+    }
+
+    #[test]
+    fn add_combines_everything() {
+        let mut a = ChipMetrics { latency_ns: 1.0, energy_pj: 2.0, adds: 3, ..Default::default() };
+        let b = ChipMetrics { latency_ns: 4.0, energy_pj: 5.0, skipped: 7, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.latency_ns, 5.0);
+        assert_eq!(a.energy_pj, 7.0);
+        assert_eq!(a.adds, 3);
+        assert_eq!(a.skipped, 7);
+    }
+
+    #[test]
+    fn edp_is_product() {
+        let m = ChipMetrics { latency_ns: 10.0, energy_pj: 3.0, ..Default::default() };
+        assert_eq!(m.edp(), 30.0);
+    }
+}

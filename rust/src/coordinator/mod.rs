@@ -1,0 +1,18 @@
+//! The chip-level coordinator: 4096 CMAs + DPU + scheduler + server.
+//!
+//! This is the L3 "leader" of the three-layer stack: it owns the layer
+//! decomposition (via [`crate::mapping`]), drives the CMAs' SACUs, applies
+//! the DPU (batch-norm + activation, §III-A2 — no quantizer), aggregates
+//! metrics, and exposes a thin threaded inference service.
+
+pub mod accelerator;
+pub mod dpu;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use accelerator::{ChipConfig, FatChip, LayerRun};
+pub use dpu::Dpu;
+pub use metrics::ChipMetrics;
+pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
+pub use server::{InferenceServer, Request, Response};

@@ -1,0 +1,215 @@
+//! Network-level scheduling and the analytic performance model.
+//!
+//! The bit-accurate chip ([`super::accelerator`]) is exact but slow for
+//! ImageNet-scale sweeps, so network-level comparisons (Fig. 14, Fig. 1)
+//! use this analytic model: the same mapping/addition cost formulas, with
+//! the SACU's sparsity skip applied to the accumulation step count.  The
+//! two models are cross-checked on small layers in integration tests.
+
+use crate::addition::scheme;
+use crate::circuit::sense_amp::SaKind;
+use crate::mapping::schemes::{evaluate_mapping, HwParams, MappingKind};
+use crate::nn::resnet::ConvLayer;
+
+use super::metrics::ChipMetrics;
+
+/// Analytic device configuration for network-level sweeps.
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyticConfig {
+    pub sa_kind: SaKind,
+    pub skip_zeros: bool,
+    pub mapping: MappingKind,
+    pub hw: HwParams,
+}
+
+impl AnalyticConfig {
+    pub fn fat() -> Self {
+        Self {
+            sa_kind: SaKind::Fat,
+            skip_zeros: true,
+            mapping: MappingKind::Img2ColCs,
+            hw: HwParams::default(),
+        }
+    }
+
+    pub fn parapim_baseline() -> Self {
+        Self {
+            sa_kind: SaKind::ParaPim,
+            skip_zeros: false,
+            mapping: MappingKind::Img2ColIs,
+            ..Self::fat()
+        }
+    }
+}
+
+/// Analytic metrics for one layer at a given weight sparsity.
+///
+/// The SACU skips null operations, scaling the accumulation work by
+/// `(1 - sparsity)`; dense baselines perform every addition.  Loading
+/// costs are unchanged (the paper's dense mapping + fine-grained skip).
+pub fn analytic_layer_metrics(
+    layer: &ConvLayer,
+    sparsity: f64,
+    cfg: &AnalyticConfig,
+) -> ChipMetrics {
+    let sch = scheme(cfg.sa_kind);
+    let cost = evaluate_mapping(cfg.mapping, layer, &cfg.hw, sch.as_ref(), 1);
+    let work_factor = if cfg.skip_zeros { 1.0 - sparsity } else { 1.0 };
+    let compute_ns = cost.compute_ns * work_factor;
+    ChipMetrics {
+        latency_ns: cost.x_load_ns + cost.w_load_ns + compute_ns,
+        energy_pj: cost.load_energy_pj + cost.compute_energy_pj * work_factor,
+        adds: ((layer.macs() as f64) * work_factor) as u64,
+        skipped: ((layer.macs() as f64) * (1.0 - work_factor)) as u64,
+        ..Default::default()
+    }
+}
+
+/// Compute-path-only metrics (the paper's Fig. 14 comparison point:
+/// "the speedup and energy efficiency are independent of layer sizes").
+pub fn analytic_compute_metrics(
+    layer: &ConvLayer,
+    sparsity: f64,
+    cfg: &AnalyticConfig,
+) -> ChipMetrics {
+    let sch = scheme(cfg.sa_kind);
+    let cost = evaluate_mapping(cfg.mapping, layer, &cfg.hw, sch.as_ref(), 1);
+    let work_factor = if cfg.skip_zeros { 1.0 - sparsity } else { 1.0 };
+    ChipMetrics {
+        latency_ns: cost.compute_ns * work_factor,
+        energy_pj: cost.compute_energy_pj * work_factor,
+        ..Default::default()
+    }
+}
+
+/// Network-level analytic report.
+#[derive(Debug, Clone)]
+pub struct AnalyticReport {
+    pub per_layer: Vec<(String, ChipMetrics)>,
+    pub total: ChipMetrics,
+}
+
+/// Evaluate a whole network (e.g. ResNet-18) at uniform sparsity.
+pub fn analytic_network(
+    layers: &[ConvLayer],
+    sparsity: f64,
+    cfg: &AnalyticConfig,
+) -> AnalyticReport {
+    let mut total = ChipMetrics::default();
+    let per_layer: Vec<(String, ChipMetrics)> = layers
+        .iter()
+        .map(|l| {
+            let m = analytic_layer_metrics(l, sparsity, cfg);
+            total.add(&m);
+            (l.name.to_string(), m)
+        })
+        .collect();
+    AnalyticReport { per_layer, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::calibration::headline;
+    use crate::nn::resnet::resnet18_conv_layers;
+
+    /// Fig. 14: compute-path speedup vs ParaPIM is 2.00/(1-s); the same
+    /// mapping is used for both sides so the comparison isolates the
+    /// addition scheme + SACU (the paper's configuration).
+    #[test]
+    fn fig14_speedup_curve() {
+        let layers = resnet18_conv_layers();
+        let mut fat_cfg = AnalyticConfig::fat();
+        let mut para_cfg = AnalyticConfig::parapim_baseline();
+        // isolate scheme+sparsity: same mapping on both sides
+        fat_cfg.mapping = MappingKind::Img2ColIs;
+        para_cfg.mapping = MappingKind::Img2ColIs;
+
+        for (s, want) in headline::NET_SPEEDUP {
+            let fat: f64 = layers
+                .iter()
+                .map(|l| analytic_compute_metrics(l, s, &fat_cfg).latency_ns)
+                .sum();
+            let para: f64 = layers
+                .iter()
+                .map(|l| analytic_compute_metrics(l, s, &para_cfg).latency_ns)
+                .sum();
+            let speedup = para / fat;
+            assert!(
+                (speedup - want).abs() / want < 0.05,
+                "sparsity {s}: speedup {speedup} vs paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig14_energy_curve() {
+        let layers = resnet18_conv_layers();
+        let mut fat_cfg = AnalyticConfig::fat();
+        let mut para_cfg = AnalyticConfig::parapim_baseline();
+        fat_cfg.mapping = MappingKind::Img2ColIs;
+        para_cfg.mapping = MappingKind::Img2ColIs;
+
+        for (s, want) in headline::NET_ENERGY {
+            let fat: f64 = layers
+                .iter()
+                .map(|l| analytic_compute_metrics(l, s, &fat_cfg).energy_pj)
+                .sum();
+            let para: f64 = layers
+                .iter()
+                .map(|l| analytic_compute_metrics(l, s, &para_cfg).energy_pj)
+                .sum();
+            let eff = para / fat;
+            assert!(
+                (eff - want).abs() / want < 0.10,
+                "sparsity {s}: energy eff {eff} vs paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_is_layer_independent() {
+        // paper: "the speedup and energy efficiency are independent of
+        // layer sizes and the model architectures"
+        let layers = resnet18_conv_layers();
+        let mut fat_cfg = AnalyticConfig::fat();
+        let mut para_cfg = AnalyticConfig::parapim_baseline();
+        fat_cfg.mapping = MappingKind::Img2ColIs;
+        para_cfg.mapping = MappingKind::Img2ColIs;
+        let s = 0.6;
+        let ratios: Vec<f64> = layers
+            .iter()
+            .map(|l| {
+                analytic_compute_metrics(l, s, &para_cfg).latency_ns
+                    / analytic_compute_metrics(l, s, &fat_cfg).latency_ns
+            })
+            .collect();
+        let first = ratios[0];
+        for r in &ratios {
+            assert!((r - first).abs() / first < 1e-9, "{ratios:?}");
+        }
+    }
+
+    #[test]
+    fn network_report_totals_match_sum() {
+        let layers = resnet18_conv_layers();
+        let cfg = AnalyticConfig::fat();
+        let rep = analytic_network(&layers, 0.5, &cfg);
+        let sum: f64 = rep.per_layer.iter().map(|(_, m)| m.latency_ns).sum();
+        assert!((rep.total.latency_ns - sum).abs() < 1e-6);
+        assert_eq!(rep.per_layer.len(), layers.len());
+    }
+
+    #[test]
+    fn sparsity_zero_equals_bwn_mode() {
+        // s = 0 (BWN): no benefit from the SACU, speedup = addition only.
+        let layer = resnet18_conv_layers()[9];
+        let mut fat_cfg = AnalyticConfig::fat();
+        let mut para_cfg = AnalyticConfig::parapim_baseline();
+        fat_cfg.mapping = MappingKind::Img2ColIs;
+        para_cfg.mapping = MappingKind::Img2ColIs;
+        let f = analytic_compute_metrics(&layer, 0.0, &fat_cfg).latency_ns;
+        let p = analytic_compute_metrics(&layer, 0.0, &para_cfg).latency_ns;
+        assert!((p / f - headline::SPEEDUP_ADD_VS_PARAPIM).abs() < 0.05);
+    }
+}

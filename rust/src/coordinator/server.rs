@@ -1,0 +1,176 @@
+//! A thin threaded inference service over the simulated chip.
+//!
+//! The image has no tokio (offline vendor set), so the service is a
+//! std-thread worker pool over mpsc channels: requests carry an input
+//! tensor + ternary weights; responses carry the output feature map and
+//! the simulated + wall-clock latency.  This is the "request path" of the
+//! three-layer architecture — no python anywhere.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::nn::layers::TernaryFilter;
+use crate::nn::resnet::ConvLayer;
+use crate::nn::tensor::Tensor4;
+
+use super::accelerator::{ChipConfig, FatChip};
+use super::metrics::ChipMetrics;
+
+/// One inference request: a conv workload for the chip.
+pub struct Request {
+    pub id: u64,
+    pub x: Tensor4,
+    pub filter: TernaryFilter,
+    pub layer: ConvLayer,
+}
+
+/// The server's answer.
+pub struct Response {
+    pub id: u64,
+    pub output: Tensor4,
+    pub metrics: ChipMetrics,
+    /// Host wall-clock service time, microseconds.
+    pub wall_us: f64,
+}
+
+/// Threaded inference server.
+pub struct InferenceServer {
+    tx: Option<mpsc::Sender<Request>>,
+    rx_out: mpsc::Receiver<Response>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Spawn `workers` worker threads, each owning a chip instance.
+    pub fn start(cfg: ChipConfig, workers: usize) -> Self {
+        assert!(workers > 0);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let tx_out = tx_out.clone();
+                let mut worker_cfg = cfg;
+                // each worker simulates a slice of the chip's CMAs
+                worker_cfg.cmas = (cfg.cmas / workers).max(1);
+                worker_cfg.threads = 1;
+                std::thread::spawn(move || {
+                    let chip = FatChip::new(worker_cfg);
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(req) = req else { break };
+                        let t0 = Instant::now();
+                        let run = chip.run_conv_layer(&req.x, &req.filter, &req.layer);
+                        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+                        let _ = tx_out.send(Response {
+                            id: req.id,
+                            output: run.output,
+                            metrics: run.metrics,
+                            wall_us,
+                        });
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), rx_out, workers: handles }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        self.tx.as_ref().expect("server closed").send(req).expect("workers gone");
+    }
+
+    /// Blockingly collect `n` responses (any order).
+    pub fn collect(&self, n: usize) -> Vec<Response> {
+        (0..n).map(|_| self.rx_out.recv().expect("workers gone")).collect()
+    }
+
+    /// Shut down: close the queue and join the workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// p50/p99 summary over wall-clock service times, microseconds.
+pub fn latency_percentiles(mut wall_us: Vec<f64>) -> (f64, f64) {
+    assert!(!wall_us.is_empty());
+    wall_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| wall_us[((wall_us.len() - 1) as f64 * q).round() as usize];
+    (p(0.50), p(0.99))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn request(id: u64, rng: &mut Rng) -> Request {
+        let layer = ConvLayer {
+            name: "srv", n: 1, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let mut x = Tensor4::zeros(1, 3, 8, 8);
+        x.fill_random_ints(rng, 0, 256);
+        let filter =
+            TernaryFilter::new(4, 3, 3, 3, rng.ternary_vec(4 * 27, 0.5));
+        Request { id, x, filter, layer }
+    }
+
+    #[test]
+    fn serves_batch_and_preserves_request_mapping() {
+        let mut rng = Rng::new(0x5E21);
+        let server = InferenceServer::start(ChipConfig::fat(), 2);
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..6u64 {
+            let req = request(id, &mut rng);
+            let want = crate::nn::layers::conv2d_ternary(
+                &req.x, &req.filter, req.layer.stride, req.layer.pad,
+            );
+            wants.insert(id, want);
+            server.submit(req);
+        }
+        let responses = server.collect(6);
+        assert_eq!(responses.len(), 6);
+        let mut seen = std::collections::HashSet::new();
+        for r in &responses {
+            assert!(seen.insert(r.id), "duplicate response {}", r.id);
+            assert_eq!(r.output.data, wants[&r.id].data, "request {} corrupted", r.id);
+            assert!(r.metrics.latency_ns > 0.0);
+            assert!(r.wall_us > 0.0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let (p50, p99) = latency_percentiles(vec![5.0, 1.0, 3.0, 100.0, 2.0]);
+        assert!(p50 <= p99);
+        assert_eq!(p50, 3.0);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let mut rng = Rng::new(1);
+        let server = InferenceServer::start(ChipConfig::fat(), 1);
+        server.submit(request(0, &mut rng));
+        let _ = server.collect(1);
+        drop(server); // must not hang
+    }
+}

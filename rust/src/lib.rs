@@ -1,0 +1,42 @@
+//! # fat-imc — FAT: an In-Memory Accelerator with Fast Addition for TWNs
+//!
+//! Full-system reproduction of *FAT* (Zhu et al., IEEE TCAD 2022,
+//! DOI 10.1109/TCAD.2022.3184276) as the L3 layer of a rust + JAX + Pallas
+//! stack.  The crate contains:
+//!
+//! - [`circuit`] — device/circuit substrate: MTJ model, FreePDK45-class gate
+//!   library, and the four Sense-Amplifier designs (FAT, STT-CiM, ParaPIM,
+//!   GraphS) with functional truth tables plus latency / power / area models
+//!   calibrated to the paper's Virtuoso measurements.
+//! - [`array`] — the Computing Memory Array (CMA): 512x256 STT-MRAM cells in
+//!   column-major bit-serial layout, decoders, memory controller, and the
+//!   Sparse Addition Control Unit (SACU).
+//! - [`addition`] — the four in-memory addition schemes (Fig. 3) as both
+//!   bit-accurate executions over a CMA and analytic timing models.
+//! - [`ternary`] — TWN quantization (eq. 7), Table III weight encoding,
+//!   2-bit packing, sparsity statistics.
+//! - [`nn`] — minimal tensor + CNN layer reference implementations and the
+//!   ResNet-18 geometry table.
+//! - [`mapping`] — Img2Col and the five data-mapping schemes of Table VII
+//!   (Direct-OS, Img2Col-OS/IS/WS/CS) with the CMA grid planner of Fig. 9.
+//! - [`coordinator`] — the 4096-CMA chip: scheduler, DPU (BN + ReLU),
+//!   metrics, and a thread-pool inference server.
+//! - [`runtime`] — PJRT bridge (xla crate): loads the AOT-compiled HLO text
+//!   artifacts produced by `python/compile/aot.py` and cross-validates the
+//!   simulator against XLA execution.  Python never runs on the request path.
+
+pub mod addition;
+pub mod array;
+pub mod bench_harness;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod mapping;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod ternary;
+pub mod testutil;
+
+pub use config::FatConfig;

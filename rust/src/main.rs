@@ -1,0 +1,252 @@
+//! `fat` — leader entrypoint for the FAT accelerator reproduction.
+
+use anyhow::Result;
+
+use fat_imc::addition::scheme;
+use fat_imc::cli::{Args, HELP};
+use fat_imc::config::FatConfig;
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request};
+use fat_imc::mapping::schemes::{evaluate_all, HwParams};
+use fat_imc::nn::layers::TernaryFilter;
+use fat_imc::nn::resnet::{resnet18_conv_layers, ConvLayer};
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::{ratio, Table};
+use fat_imc::runtime::engine::Engine;
+use fat_imc::runtime::verify::verify_ternary_gemm;
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn pick_layer(idx: usize) -> Result<ConvLayer> {
+    let layers = resnet18_conv_layers();
+    if idx == 0 || idx > layers.len() {
+        anyhow::bail!("--layer must be 1..={}", layers.len());
+    }
+    Ok(layers[idx - 1])
+}
+
+/// Shrink an ImageNet-geometry layer to a simulable scale while keeping
+/// channel structure (the full geometry is for the analytic model).
+fn shrink(mut l: ConvLayer) -> ConvLayer {
+    l.n = 1;
+    l.h = l.h.min(14);
+    l.w = l.w.min(14);
+    l.c = l.c.min(32);
+    l.kn = l.kn.min(16);
+    l
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = match Args::parse(raw) {
+        Ok(a) => a,
+        Err(_) => {
+            println!("{HELP}");
+            return Ok(());
+        }
+    };
+    match args.command.as_str() {
+        "help" | "-h" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "infer" => cmd_infer(&args),
+        "map" => cmd_map(&args),
+        "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        other => {
+            println!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.allow(&["config", "artifacts"])?;
+    let cfg = match args.get("config") {
+        Some(p) => FatConfig::from_file(std::path::Path::new(p))?,
+        None => FatConfig::default(),
+    };
+    println!("FAT chip configuration:");
+    println!("  CMAs: {} x 512x256 STT-MRAM ({} MiB)", cfg.cmas, cfg.cmas * 512 * 256 / 8 / 1024 / 1024);
+    println!("  SA design: {:?} | skip zeros: {} | layout: {}", cfg.sa, cfg.skip_zeros,
+        if cfg.interval_layout { "interval (CS)" } else { "dense (IS)" });
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match Engine::load(&dir) {
+        Ok(engine) => {
+            println!("  PJRT platform: {}", engine.platform());
+            let mut names = engine.names();
+            names.sort();
+            for n in names {
+                let info = engine.info(n).unwrap();
+                println!("  artifact `{n}`: {} inputs -> {:?}", info.inputs.len(), info.outputs[0].shape);
+            }
+        }
+        Err(e) => println!("  artifacts: unavailable ({e:#})"),
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    args.allow(&["sparsity", "layer", "baseline", "config"])?;
+    let sparsity = args.get_f64("sparsity", 0.8)?;
+    let layer = shrink(pick_layer(args.get_usize("layer", 10)?)?);
+    let chip_cfg = if args.get_bool("baseline") {
+        ChipConfig::parapim_baseline()
+    } else {
+        match args.get("config") {
+            Some(p) => FatConfig::from_file(std::path::Path::new(p))?.chip(),
+            None => ChipConfig::fat(),
+        }
+    };
+
+    let mut rng = Rng::new(42);
+    let mut x = Tensor4::zeros(layer.n, layer.c, layer.h, layer.w);
+    x.fill_random_ints(&mut rng, 0, 256);
+    let filter = TernaryFilter::new(
+        layer.kn, layer.c, layer.kh, layer.kw,
+        rng.ternary_vec(layer.kn * layer.j_dim(), sparsity),
+    );
+
+    println!(
+        "running {} (shrunk to N={} C={} {}x{} KN={}) at sparsity {:.0}% on {:?}...",
+        layer.name, layer.n, layer.c, layer.h, layer.w, layer.kn, sparsity * 100.0, chip_cfg.sa_kind
+    );
+    let chip = FatChip::new(chip_cfg);
+    let run = chip.run_conv_layer(&x, &filter, &layer);
+    let m = &run.metrics;
+    println!("  simulated latency : {:.1} us", m.latency_ns / 1e3);
+    println!("  simulated energy  : {:.1} nJ", m.energy_pj / 1e3);
+    println!("  vector additions  : {}", m.adds);
+    println!("  null ops skipped  : {}", m.skipped);
+    println!("  array senses/writes: {}/{}", m.senses, m.writes);
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    args.allow(&["layer"])?;
+    let layer = pick_layer(args.get_usize("layer", 10)?)?;
+    let fat = scheme(fat_imc::circuit::sense_amp::SaKind::Fat);
+    let costs = evaluate_all(&layer, &HwParams::default(), fat.as_ref());
+    let direct = costs[0].total_ns();
+    let mut t = Table::new(
+        &format!("Mapping comparison on {} (Table VII/VIII)", layer.name),
+        &["mapping", "x-load(ns)", "w-load(ns)", "compute(ns)", "total(ns)", "speedup", "par.cols", "util", "maxwrite"],
+    );
+    for c in &costs {
+        t.row(vec![
+            c.kind.name().into(),
+            format!("{:.0}", c.x_load_ns),
+            format!("{:.0}", c.w_load_ns),
+            format!("{:.0}", c.compute_ns),
+            format!("{:.0}", c.total_ns()),
+            ratio(direct / c.total_ns()),
+            format!("{}/256", c.parallel_cols),
+            format!("{:.1}%", c.utilization * 100.0),
+            format!("{}x", c.max_cell_write_factor),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    args.allow(&["artifacts", "sparsity"])?;
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let sparsity = args.get_f64("sparsity", 0.5)?;
+    println!("loading artifacts from {dir:?}...");
+    let engine = Engine::load(&dir)?;
+    println!("platform: {}", engine.platform());
+    let rep = verify_ternary_gemm(&engine, 7, sparsity)?;
+    println!(
+        "verify `{}`: {} elements, max |err| = {} -> {}",
+        rep.name,
+        rep.elements,
+        rep.max_abs_err,
+        if rep.exact { "EXACT MATCH (bit-serial simulator == XLA Pallas kernel)" } else { "close" }
+    );
+    Ok(())
+}
+
+/// Fig. 14 from the command line: network-level sparsity sweep.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use fat_imc::coordinator::scheduler::{analytic_compute_metrics, AnalyticConfig};
+    use fat_imc::mapping::schemes::MappingKind;
+    args.allow(&["from", "to", "step"])?;
+    let from = args.get_f64("from", 0.0)?;
+    let to = args.get_f64("to", 0.9)?;
+    let step = args.get_f64("step", 0.1)?;
+    anyhow::ensure!(step > 0.0 && from <= to, "need from <= to and step > 0");
+    let layers = resnet18_conv_layers();
+    let mut fat_cfg = AnalyticConfig::fat();
+    let mut para_cfg = AnalyticConfig::parapim_baseline();
+    fat_cfg.mapping = MappingKind::Img2ColIs;
+    para_cfg.mapping = MappingKind::Img2ColIs;
+    let mut t = Table::new(
+        "ResNet-18 vs ParaPIM across sparsity (Fig. 14 sweep)",
+        &["sparsity", "FAT (us)", "ParaPIM (us)", "speedup", "energy eff"],
+    );
+    let mut s = from;
+    while s <= to + 1e-9 {
+        let (mut f_ns, mut p_ns, mut f_pj, mut p_pj) = (0.0, 0.0, 0.0, 0.0);
+        for l in &layers {
+            let f = analytic_compute_metrics(l, s, &fat_cfg);
+            let p = analytic_compute_metrics(l, s, &para_cfg);
+            f_ns += f.latency_ns;
+            p_ns += p.latency_ns;
+            f_pj += f.energy_pj;
+            p_pj += p.energy_pj;
+        }
+        t.row(vec![
+            format!("{:.0}%", s * 100.0),
+            format!("{:.1}", f_ns / 1e3),
+            format!("{:.1}", p_ns / 1e3),
+            ratio(p_ns / f_ns),
+            ratio(p_pj / f_pj),
+        ]);
+        s += step;
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.allow(&["requests", "workers"])?;
+    let n_req = args.get_usize("requests", 16)?;
+    let workers = args.get_usize("workers", 4)?;
+    let mut rng = Rng::new(7);
+    let layer = ConvLayer { name: "serve", n: 1, c: 8, h: 12, w: 12, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
+
+    println!("starting {workers} workers, pushing {n_req} requests...");
+    let server = InferenceServer::start(ChipConfig::fat(), workers);
+    let t0 = std::time::Instant::now();
+    for id in 0..n_req as u64 {
+        let mut x = Tensor4::zeros(layer.n, layer.c, layer.h, layer.w);
+        x.fill_random_ints(&mut rng, 0, 256);
+        let filter = TernaryFilter::new(
+            layer.kn, layer.c, 3, 3, rng.ternary_vec(layer.kn * layer.j_dim(), 0.7),
+        );
+        server.submit(Request { id, x, filter, layer });
+    }
+    let responses = server.collect(n_req);
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, p99) = latency_percentiles(responses.iter().map(|r| r.wall_us).collect());
+    println!("  served {n_req} requests in {wall:.3}s ({:.1} req/s)", n_req as f64 / wall);
+    println!("  host service time p50/p99: {:.0}/{:.0} us", p50, p99);
+    let sim_ns: f64 = responses.iter().map(|r| r.metrics.latency_ns).sum();
+    println!("  simulated chip time total: {:.1} us", sim_ns / 1e3);
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Data mapping — §III-C of the paper.
+//!
+//! FAT's mapping scenario is unusual: *activations* go into the memory
+//! arrays and *weights* go into the SACU registers in the controller, so
+//! neither ReRAM-crossbar weight mapping nor STT-CiM's both-in-array
+//! mapping applies.  This module provides:
+//!
+//! - [`img2col`]: the Img2Col transform (Fig. 8) that turns convolution
+//!   into the GEMM the memory columns can parallelize;
+//! - [`schemes`]: the analytic cost model of Table VII for Direct-OS and
+//!   the four Img2Col mappings (OS / IS / WS / CS), scaled to the chip's
+//!   4096 CMAs (Table VIII);
+//! - [`planner`]: the grid-based assignment of activation sub-arrays to
+//!   CMAs (Fig. 9), with the CS interval rows and the J-priority
+//!   processing sequence.
+
+pub mod img2col;
+pub mod planner;
+pub mod schemes;
+
+pub use img2col::{img2col, Img2ColMatrix};
+pub use planner::{GridPlan, PlannerConfig};
+pub use schemes::{evaluate_mapping, HwParams, MappingCost, MappingKind};

@@ -1,0 +1,283 @@
+//! Reference layer implementations — eqs. (4)-(6) of the paper.
+//!
+//! `conv2d_ternary` is the direct-convolution oracle (an actual multiply by
+//! the ternary weight); the accelerator path computes the same values with
+//! additions only, and the two are compared in integration tests.
+
+use super::tensor::Tensor4;
+
+/// Ternary weight tensor in (KN, C, KH, KW) layout.
+#[derive(Debug, Clone)]
+pub struct TernaryFilter {
+    pub kn: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub w: Vec<i8>,
+}
+
+impl TernaryFilter {
+    pub fn new(kn: usize, c: usize, kh: usize, kw: usize, w: Vec<i8>) -> Self {
+        assert_eq!(w.len(), kn * c * kh * kw);
+        Self { kn, c, kh, kw, w }
+    }
+
+    #[inline]
+    pub fn get(&self, kn: usize, c: usize, i: usize, j: usize) -> i8 {
+        self.w[((kn * self.c + c) * self.kh + i) * self.kw + j]
+    }
+
+    /// Weights of filter `kn` flattened in (c, kh, kw) order — the J
+    /// ordering of the Img2Col GEMM.
+    pub fn filter_flat(&self, kn: usize) -> Vec<i8> {
+        let len = self.c * self.kh * self.kw;
+        self.w[kn * len..(kn + 1) * len].to_vec()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        crate::ternary::sparsity(&self.w)
+    }
+}
+
+/// Direct ternary convolution (eq. 4), stride `s`, zero padding `p`.
+pub fn conv2d_ternary(x: &Tensor4, f: &TernaryFilter, s: usize, p: usize) -> Tensor4 {
+    assert_eq!(x.c, f.c, "channel mismatch");
+    let oh = (x.h + 2 * p - f.kh) / s + 1;
+    let ow = (x.w + 2 * p - f.kw) / s + 1;
+    let mut y = Tensor4::zeros(x.n, f.kn, oh, ow);
+    for n in 0..x.n {
+        for kn in 0..f.kn {
+            for out_h in 0..oh {
+                for out_w in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..x.c {
+                        for i in 0..f.kh {
+                            for j in 0..f.kw {
+                                let wv = f.get(kn, c, i, j);
+                                if wv == 0 {
+                                    continue;
+                                }
+                                let xv = x.get_padded(
+                                    n,
+                                    c,
+                                    (out_h * s + i) as isize - p as isize,
+                                    (out_w * s + j) as isize - p as isize,
+                                );
+                                acc += wv as f32 * xv;
+                            }
+                        }
+                    }
+                    y.set(n, kn, out_h, out_w, acc);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// ReLU (eq. 5), in place.
+pub fn relu(x: &mut Tensor4) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Folded batch normalization (eq. 6 folded to scale/shift), per channel,
+/// in place — what the paper's DPU applies.
+pub fn batch_norm(x: &mut Tensor4, gamma: &[f32], beta: &[f32]) {
+    assert_eq!(gamma.len(), x.c);
+    assert_eq!(beta.len(), x.c);
+    for n in 0..x.n {
+        for c in 0..x.c {
+            for h in 0..x.h {
+                for w in 0..x.w {
+                    let i = x.idx(n, c, h, w);
+                    x.data[i] = x.data[i] * gamma[c] + beta[c];
+                }
+            }
+        }
+    }
+}
+
+/// Global average pooling: (N, C, H, W) -> per-(n, c) means.
+pub fn global_avg_pool(x: &Tensor4) -> Vec<Vec<f32>> {
+    let denom = (x.h * x.w) as f32;
+    (0..x.n)
+        .map(|n| {
+            (0..x.c)
+                .map(|c| {
+                    let mut s = 0.0;
+                    for h in 0..x.h {
+                        for w in 0..x.w {
+                            s += x.get(n, c, h, w);
+                        }
+                    }
+                    s / denom
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Ternary fully connected layer: y[n][o] = sum_i x[n][i] * w[i][o] + b[o].
+pub fn linear_ternary(x: &[Vec<f32>], w: &[i8], in_dim: usize, out_dim: usize, b: &[f32]) -> Vec<Vec<f32>> {
+    assert_eq!(w.len(), in_dim * out_dim);
+    assert_eq!(b.len(), out_dim);
+    x.iter()
+        .map(|row| {
+            assert_eq!(row.len(), in_dim);
+            (0..out_dim)
+                .map(|o| {
+                    let mut acc = b[o];
+                    for (i, &xv) in row.iter().enumerate() {
+                        let wv = w[i * out_dim + o];
+                        if wv != 0 {
+                            acc += wv as f32 * xv;
+                        }
+                    }
+                    acc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, Rng};
+
+    #[test]
+    fn identity_kernel_convolution() {
+        // 1x1 kernel of +1 reproduces the input
+        let mut x = Tensor4::zeros(1, 1, 3, 3);
+        let mut rng = Rng::new(1);
+        x.fill_random_ints(&mut rng, 0, 10);
+        let f = TernaryFilter::new(1, 1, 1, 1, vec![1]);
+        let y = conv2d_ternary(&x, &f, 1, 0);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn negation_kernel() {
+        let mut x = Tensor4::zeros(1, 1, 2, 2);
+        x.data = vec![1.0, 2.0, 3.0, 4.0];
+        let f = TernaryFilter::new(1, 1, 1, 1, vec![-1]);
+        let y = conv2d_ternary(&x, &f, 1, 0);
+        assert_eq!(y.data, vec![-1.0, -2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn box_sum_kernel_with_padding() {
+        // 3x3 all-ones kernel at the corner of a ones image with pad 1:
+        // only 4 in-bounds taps
+        let x = Tensor4::from_vec(1, 1, 3, 3, vec![1.0; 9]);
+        let f = TernaryFilter::new(1, 1, 3, 3, vec![1; 9]);
+        let y = conv2d_ternary(&x, &f, 1, 1);
+        assert_eq!(y.shape(), (1, 1, 3, 3));
+        assert_eq!(y.get(0, 0, 0, 0), 4.0);
+        assert_eq!(y.get(0, 0, 1, 1), 9.0);
+    }
+
+    #[test]
+    fn stride_two_halves_output() {
+        // ResNet-18 layer 10 geometry: 28x28, k3, s2, p1 -> 14x14
+        let x = Tensor4::zeros(1, 2, 28, 28);
+        let f = TernaryFilter::new(4, 2, 3, 3, vec![1; 4 * 2 * 9]);
+        let y = conv2d_ternary(&x, &f, 2, 1);
+        assert_eq!(y.shape(), (1, 4, 14, 14));
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = Tensor4::from_vec(1, 1, 1, 4, vec![-1.0, 0.0, 2.0, -0.5]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn batch_norm_scale_shift() {
+        let mut x = Tensor4::from_vec(1, 2, 1, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        batch_norm(&mut x, &[2.0, 0.5], &[1.0, -1.0]);
+        assert_eq!(x.data, vec![3.0, 5.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn global_pool_means() {
+        let x = Tensor4::from_vec(1, 2, 1, 2, vec![1.0, 3.0, 10.0, 20.0]);
+        let p = global_avg_pool(&x);
+        assert_eq!(p, vec![vec![2.0, 15.0]]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        // 2 -> 2, w = [[1,-1],[0,1]] (row i = input, col o = output)
+        let y = linear_ternary(
+            &[vec![3.0, 4.0]],
+            &[1, -1, 0, 1],
+            2,
+            2,
+            &[0.5, 0.0],
+        );
+        assert_eq!(y, vec![vec![3.5, 1.0]]);
+    }
+
+    #[test]
+    fn property_zero_weights_give_zero_output() {
+        prop_check(
+            "all-zero filter -> zero output",
+            20,
+            5,
+            |rng| {
+                let mut x = Tensor4::zeros(1, 2, 5, 5);
+                x.fill_random_ints(rng, -10, 10);
+                x
+            },
+            |x| {
+                let f = TernaryFilter::new(3, 2, 3, 3, vec![0; 3 * 2 * 9]);
+                let y = conv2d_ternary(x, &f, 1, 1);
+                if y.data.iter().all(|&v| v == 0.0) {
+                    Ok(())
+                } else {
+                    Err("non-zero output".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_conv_is_linear_in_input() {
+        // conv(x1 + x2) == conv(x1) + conv(x2) for integer-valued inputs
+        prop_check(
+            "conv linearity",
+            10,
+            9,
+            |rng| {
+                let mut x1 = Tensor4::zeros(1, 2, 6, 6);
+                let mut x2 = Tensor4::zeros(1, 2, 6, 6);
+                x1.fill_random_ints(rng, -8, 8);
+                x2.fill_random_ints(rng, -8, 8);
+                let w = rng.ternary_vec(2 * 2 * 9, 0.5);
+                (x1, x2, w)
+            },
+            |(x1, x2, w)| {
+                let f = TernaryFilter::new(2, 2, 3, 3, w.clone());
+                let mut xs = x1.clone();
+                for (a, b) in xs.data.iter_mut().zip(&x2.data) {
+                    *a += b;
+                }
+                let lhs = conv2d_ternary(&xs, &f, 1, 1);
+                let y1 = conv2d_ternary(x1, &f, 1, 1);
+                let y2 = conv2d_ternary(x2, &f, 1, 1);
+                for i in 0..lhs.data.len() {
+                    if (lhs.data[i] - (y1.data[i] + y2.data[i])).abs() > 1e-4 {
+                        return Err(format!("nonlinear at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Minimal NN substrate: tensors, reference layers, network geometry.
+//!
+//! These are the *functional references* the accelerator simulation is
+//! validated against (and the workload definitions the mapping/bench code
+//! sweeps).  The heavy lifting at inference time happens in the CMAs; this
+//! module is deliberately straightforward CPU code.
+
+pub mod layers;
+pub mod resnet;
+pub mod tensor;
+
+pub use resnet::{resnet18_conv_layers, ConvLayer};
+pub use tensor::Tensor4;

@@ -1,0 +1,96 @@
+//! A minimal 4-D tensor (NCHW) over `f32`.
+
+/// Dense NCHW tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor4 {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Self { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    pub fn from_vec(n: usize, c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * c * h * w, "shape/data mismatch");
+        Self { n, c, h, w, data }
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.n, self.c, self.h, self.w)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        debug_assert!(n < self.n && c < self.c && h < self.h && w < self.w);
+        ((n * self.c + c) * self.h + h) * self.w + w
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        self.data[self.idx(n, c, h, w)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.idx(n, c, h, w);
+        self.data[i] = v;
+    }
+
+    /// Padded read: returns 0.0 outside the spatial extent.
+    #[inline]
+    pub fn get_padded(&self, n: usize, c: usize, h: isize, w: isize) -> f32 {
+        if h < 0 || w < 0 || h as usize >= self.h || w as usize >= self.w {
+            0.0
+        } else {
+            self.get(n, c, h as usize, w as usize)
+        }
+    }
+
+    /// Fill with integer values from an RNG (exact under f32 addition).
+    pub fn fill_random_ints(&mut self, rng: &mut crate::testutil::Rng, lo: i64, hi: i64) {
+        for v in &mut self.data {
+            *v = rng.irange(lo, hi) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major_nchw() {
+        let mut t = Tensor4::zeros(2, 3, 4, 5);
+        t.set(1, 2, 3, 4, 7.0);
+        assert_eq!(t.data[((1 * 3 + 2) * 4 + 3) * 5 + 4], 7.0);
+        assert_eq!(t.get(1, 2, 3, 4), 7.0);
+    }
+
+    #[test]
+    fn padded_reads_are_zero_outside() {
+        let mut t = Tensor4::zeros(1, 1, 2, 2);
+        t.set(0, 0, 0, 0, 5.0);
+        assert_eq!(t.get_padded(0, 0, -1, 0), 0.0);
+        assert_eq!(t.get_padded(0, 0, 0, 2), 0.0);
+        assert_eq!(t.get_padded(0, 0, 0, 0), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_len() {
+        Tensor4::from_vec(1, 1, 2, 2, vec![0.0; 3]);
+    }
+}

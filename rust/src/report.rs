@@ -1,0 +1,152 @@
+//! Aligned-column / markdown table rendering used by benches and examples.
+//!
+//! Every bench target regenerates one of the paper's tables or figures;
+//! this module renders them uniformly so `cargo bench` output reads like
+//! the evaluation section.
+
+/// A simple table builder: header row + data rows, rendered right-aligned
+/// for numeric-looking cells and left-aligned otherwise.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` decimals, trimming to a compact cell.
+pub fn fnum(v: f64, digits: usize) -> String {
+    // normalize negative zero so empty breakdowns print as 0.000
+    format!("{:.digits$}", v + 0.0)
+}
+
+/// Format a ratio as `N.NNx`.
+pub fn ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format a large count with SI-ish suffix (K/M/G).
+pub fn count(v: u64) -> String {
+    match v {
+        0..=9_999 => format!("{v}"),
+        10_000..=999_999 => format!("{:.2}K", v as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2}M", v as f64 / 1e6),
+        _ => format!("{:.2}G", v as f64 / 1e9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "123.45".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-name"));
+        // aligned: the header "value" and "123.45" end at the same column
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[4].len());
+    }
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("md", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render_markdown();
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("|---|---|"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn count_suffixes() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(3_290_000), "3.29M");
+        assert_eq!(count(12_000), "12.00K");
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(ratio(10.024), "10.02x");
+    }
+}

@@ -1,0 +1,201 @@
+//! The PJRT execution engine.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed dtype[shape] signature from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl Signature {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad signature `{s}`"))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad signature `{s}`"))?;
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub inputs: Vec<Signature>,
+    pub outputs: Vec<Signature>,
+    pub path: PathBuf,
+}
+
+/// Parse `artifacts/manifest.txt`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ArtifactInfo>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|line| {
+            let mut parts = line.split('|');
+            let name = parts.next().ok_or_else(|| anyhow!("empty line"))?.to_string();
+            let ins = parts.next().and_then(|p| p.strip_prefix("in=")).unwrap_or("");
+            let outs = parts.next().and_then(|p| p.strip_prefix("out=")).unwrap_or("");
+            let parse_sigs = |s: &str| -> Result<Vec<Signature>> {
+                if s.is_empty() {
+                    return Ok(vec![]);
+                }
+                s.split(';').map(Signature::parse).collect()
+            };
+            Ok(ArtifactInfo {
+                path: dir.join(format!("{name}.hlo.txt")),
+                name,
+                inputs: parse_sigs(ins)?,
+                outputs: parse_sigs(outs)?,
+            })
+        })
+        .collect()
+}
+
+/// The engine: a PJRT CPU client plus compiled executables by name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, (ArtifactInfo, xla::PjRtLoadedExecutable)>,
+}
+
+impl Engine {
+    /// Default artifact directory: `$FAT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FAT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        for info in parse_manifest(dir)? {
+            let proto = xla::HloModuleProto::from_text_file(
+                info.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {:?}: {e:?}", info.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
+            artifacts.insert(info.name.clone(), (info, exe));
+        }
+        Ok(Self { client, artifacts })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name).map(|(i, _)| i)
+    }
+
+    /// Execute an artifact with f32 inputs; returns the flattened first
+    /// output (all exported functions return 1-tuples).
+    pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let (info, exe) = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "`{name}` wants {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&info.inputs)
+            .enumerate()
+            .map(|(i, (buf, sig))| {
+                if buf.len() != sig.elements() {
+                    bail!(
+                        "`{name}` input {i}: want {} elements ({:?}), got {}",
+                        sig.elements(),
+                        sig.shape,
+                        buf.len()
+                    );
+                }
+                let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {i}: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // exported with return_tuple=True -> unwrap the 1-tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_parsing() {
+        let s = Signature::parse("f32[128,288]").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.shape, vec![128, 288]);
+        assert_eq!(s.elements(), 128 * 288);
+        let scalar = Signature::parse("f32[]").unwrap();
+        assert_eq!(scalar.shape, Vec::<usize>::new());
+        assert_eq!(scalar.elements(), 1);
+        assert!(Signature::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("fat_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "gemm|in=f32[2,3];f32[3,4]|out=f32[2,4]\n",
+        )
+        .unwrap();
+        let infos = parse_manifest(&dir).unwrap();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].name, "gemm");
+        assert_eq!(infos[0].inputs.len(), 2);
+        assert_eq!(infos[0].outputs[0].shape, vec![2, 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = parse_manifest(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

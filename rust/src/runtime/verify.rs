@@ -1,0 +1,111 @@
+//! Cross-validation: simulator vs XLA execution of the L2/L1 graphs.
+//!
+//! The TWN path is exact over integer-valued f32 (sums stay far below
+//! 2^24), so the bit-serial simulator and the XLA-executed Pallas kernel
+//! must agree **bit for bit** on the GEMM; the full CNN (float BN) is
+//! compared with a tolerance.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::accelerator::{ChipConfig, FatChip};
+use crate::nn::layers::TernaryFilter;
+use crate::nn::resnet::ConvLayer;
+use crate::nn::tensor::Tensor4;
+use crate::testutil::Rng;
+
+use super::engine::Engine;
+
+/// Outcome of one cross-check.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub name: String,
+    pub elements: usize,
+    pub max_abs_err: f32,
+    pub exact: bool,
+}
+
+/// Cross-check the `ternary_gemm` artifact against the bit-serial chip.
+///
+/// Generates integer activations and ternary weights at `sparsity`, runs
+/// the XLA-compiled Pallas kernel and the simulated chip on the same
+/// GEMM, and demands exact agreement.
+pub fn verify_ternary_gemm(engine: &Engine, seed: u64, sparsity: f64) -> Result<VerifyReport> {
+    let info = engine
+        .info("ternary_gemm")
+        .ok_or_else(|| anyhow::anyhow!("artifact `ternary_gemm` missing"))?;
+    let (m, k) = (info.inputs[0].shape[0], info.inputs[0].shape[1]);
+    let n = info.inputs[1].shape[1];
+
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = rng.int_f32_vec(m * k, 0, 256);
+    let w: Vec<i8> = rng.ternary_vec(k * n, sparsity);
+    let w_f32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+
+    // XLA path: the AOT-compiled L1 Pallas kernel.
+    let xla_out = engine.run_f32("ternary_gemm", &[x.clone(), w_f32])?;
+
+    // Simulator path: the GEMM is a 1x1 "convolution" over C=k channels
+    // with kn=n filters and a 1-pixel image per row of x... simpler: treat
+    // each output column as a conv layer is overkill — reuse the chip on a
+    // synthetic layer of geometry (N=m, C=k, H=W=1, KN=n, 1x1 kernel).
+    let layer = ConvLayer {
+        name: "gemm", n: m, c: k, h: 1, w: 1, kn: n, kh: 1, kw: 1, stride: 1, pad: 0,
+    };
+    let xt = Tensor4::from_vec(m, k, 1, 1, x);
+    let mut wt = vec![0i8; n * k];
+    // x @ w uses w[k][n]; the filter layout is (KN, C) = (n, k)
+    for kk in 0..k {
+        for nn in 0..n {
+            wt[nn * k + kk] = w[kk * n + nn];
+        }
+    }
+    let filter = TernaryFilter::new(n, k, 1, 1, wt);
+    let chip = FatChip::new(ChipConfig::fat());
+    let run = chip.run_conv_layer(&xt, &filter, &layer);
+
+    let mut max_err = 0.0f32;
+    for row in 0..m {
+        for col in 0..n {
+            let sim = run.output.get(row, col, 0, 0);
+            let xla = xla_out[row * n + col];
+            max_err = max_err.max((sim - xla).abs());
+        }
+    }
+    if max_err != 0.0 {
+        bail!("ternary_gemm mismatch: max abs err {max_err}");
+    }
+    Ok(VerifyReport {
+        name: "ternary_gemm".into(),
+        elements: m * n,
+        max_abs_err: max_err,
+        exact: true,
+    })
+}
+
+/// Compare two f32 buffers with a tolerance; returns max abs error.
+pub fn compare(a: &[f32], b: &[f32], atol: f32) -> Result<f32> {
+    if a.len() != b.len() {
+        bail!("length mismatch: {} vs {}", a.len(), b.len());
+    }
+    let mut max_err = 0.0f32;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        if err > atol {
+            bail!("element {i}: {x} vs {y} (|err| {err} > atol {atol})");
+        }
+        max_err = max_err.max(err);
+    }
+    Ok(max_err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_accepts_close_and_rejects_far() {
+        assert!(compare(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(compare(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(compare(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

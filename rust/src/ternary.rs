@@ -1,0 +1,218 @@
+//! Ternary Weight Network substrate: quantization, packing, sparsity.
+//!
+//! - Eq. (7): threshold ternarization `w -> {+1, 0, -1}`.
+//! - 2-bit packing: the 16x storage saving over FP32 of Table I, without a
+//!   compressed sparse format (the paper's argument in §I: CSR-style
+//!   formats store 8-bit indices per 2-bit non-zero and *lose* on TWNs).
+//! - Sparsity statistics the SACU exploits, and the BWN extension
+//!   (§III-B1: binary weights become {+1, -1} 2-bit codes, zero benefit
+//!   from sparsity).
+
+use crate::testutil::Rng;
+
+/// Eq. (7): threshold ternarization of one weight.
+pub fn ternarize(w: f32, th_low: f32, th_high: f32) -> i8 {
+    assert!(th_low < th_high, "TH_low must be below TH_high");
+    if w > th_high {
+        1
+    } else if w < th_low {
+        -1
+    } else {
+        0
+    }
+}
+
+/// Ternarize a whole tensor.
+pub fn ternarize_all(ws: &[f32], th_low: f32, th_high: f32) -> Vec<i8> {
+    ws.iter().map(|&w| ternarize(w, th_low, th_high)).collect()
+}
+
+/// Symmetric thresholds from the TWN heuristic `th = 0.7 * mean(|w|)`
+/// (Li et al. [11]).
+pub fn twn_threshold(ws: &[f32]) -> f32 {
+    if ws.is_empty() {
+        return 0.0;
+    }
+    0.7 * ws.iter().map(|w| w.abs()).sum::<f32>() / ws.len() as f32
+}
+
+/// Fraction of zero weights — what the SACU can skip.
+pub fn sparsity(ws: &[i8]) -> f64 {
+    if ws.is_empty() {
+        return 0.0;
+    }
+    ws.iter().filter(|&&w| w == 0).count() as f64 / ws.len() as f64
+}
+
+/// Generate synthetic ternary weights at a controlled sparsity (the
+/// Fig. 14 workloads: the paper's speedups depend only on this knob).
+pub fn synthetic_weights(rng: &mut Rng, n: usize, target_sparsity: f64) -> Vec<i8> {
+    rng.ternary_vec(n, target_sparsity)
+}
+
+/// Extend 1-bit binary weights {+1, -1} to the 2-bit ternary encoding —
+/// the BWN configuration of §III-B1.
+pub fn bwn_extend(ws: &[bool]) -> Vec<i8> {
+    ws.iter().map(|&plus| if plus { 1 } else { -1 }).collect()
+}
+
+/// Storage cost of a weight tensor under different representations, bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorageCost {
+    pub fp32: usize,
+    pub int8: usize,
+    pub int4: usize,
+    /// The FAT representation: dense 2-bit codes.
+    pub ternary_2bit: usize,
+    /// CSR-style: 2-bit values + 8-bit indices for the non-zeros.
+    pub csr_sparse: usize,
+    /// 1-bit binary (BWN).
+    pub binary_1bit: usize,
+}
+
+/// Table I storage analysis for a weight tensor.
+pub fn storage_cost(ws: &[i8]) -> StorageCost {
+    let n = ws.len();
+    let nnz = ws.iter().filter(|&&w| w != 0).count();
+    StorageCost {
+        fp32: 4 * n,
+        int8: n,
+        int4: n.div_ceil(2),
+        ternary_2bit: (2 * n).div_ceil(8),
+        // 2-bit value + 8-bit delta index per non-zero, bit-packed
+        csr_sparse: (10 * nnz).div_ceil(8),
+        binary_1bit: n.div_ceil(8),
+    }
+}
+
+/// Operation count of a dot product of length `n` under each quantization
+/// (Table I "Operator" column): multiplies for FP/INT8/INT4, additions for
+/// TWN/BWN, with TWN skipping the zeros.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCount {
+    pub multiplies: usize,
+    pub additions: usize,
+}
+
+pub fn dot_op_count(ws: &[i8], quantization: &str) -> OpCount {
+    let n = ws.len();
+    let nnz = ws.iter().filter(|&&w| w != 0).count();
+    match quantization {
+        "fp32" | "int8" | "int4" => OpCount { multiplies: n, additions: n - 1 },
+        // BWN: every weight is +-1 -> n additions/subtractions
+        "bwn" => OpCount { multiplies: 0, additions: n },
+        // TWN on FAT: only the non-zeros are touched
+        "twn" => OpCount { multiplies: 0, additions: nnz },
+        other => panic!("unknown quantization {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop_check;
+
+    #[test]
+    fn eq7_thresholds() {
+        assert_eq!(ternarize(0.5, -0.3, 0.3), 1);
+        assert_eq!(ternarize(-0.5, -0.3, 0.3), -1);
+        assert_eq!(ternarize(0.0, -0.3, 0.3), 0);
+        assert_eq!(ternarize(0.3, -0.3, 0.3), 0, "boundary is 0 (strict >)");
+        assert_eq!(ternarize(-0.3, -0.3, 0.3), 0, "boundary is 0 (strict <)");
+    }
+
+    #[test]
+    #[should_panic(expected = "TH_low must be below TH_high")]
+    fn rejects_inverted_thresholds() {
+        ternarize(0.0, 0.3, -0.3);
+    }
+
+    #[test]
+    fn property_output_is_ternary_and_monotone() {
+        prop_check(
+            "ternarize in {-1,0,1}, monotone in w",
+            200,
+            7,
+            |rng| (rng.f32_range(-2.0, 2.0), rng.f32_range(-2.0, 2.0)),
+            |&(w1, w2)| {
+                let (lo, hi) = (-0.25f32, 0.25f32);
+                let (t1, t2) = (ternarize(w1, lo, hi), ternarize(w2, lo, hi));
+                if !(-1..=1).contains(&t1) {
+                    return Err(format!("{t1} not ternary"));
+                }
+                if w1 <= w2 && t1 > t2 {
+                    return Err(format!("not monotone: {w1}->{t1}, {w2}->{t2}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn twn_threshold_scales_with_magnitude() {
+        let small = twn_threshold(&[0.1, -0.1, 0.1, -0.1]);
+        let large = twn_threshold(&[1.0, -1.0, 1.0, -1.0]);
+        assert!((small - 0.07).abs() < 1e-6);
+        assert!((large - 0.7).abs() < 1e-6);
+        assert_eq!(twn_threshold(&[]), 0.0);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity(&[0, 0, 1, -1]), 0.5);
+        assert_eq!(sparsity(&[]), 0.0);
+        assert_eq!(sparsity(&bwn_extend(&[true, false])), 0.0);
+    }
+
+    #[test]
+    fn storage_matches_table1_ratios() {
+        let ws = vec![1i8; 1024];
+        let c = storage_cost(&ws);
+        assert_eq!(c.fp32, 4096);
+        assert_eq!(c.ternary_2bit, 256); // 16x smaller than FP32
+        assert_eq!(c.fp32 / c.ternary_2bit, 16);
+        assert_eq!(c.binary_1bit, 128); // 32x
+        assert_eq!(c.int8, 1024);
+    }
+
+    #[test]
+    fn csr_loses_on_moderately_sparse_twn() {
+        // the paper's §I argument: 8-bit indices per 2-bit non-zero make
+        // CSR bigger than the dense 2-bit format unless extremely sparse
+        let mut rng = Rng::new(3);
+        let ws = synthetic_weights(&mut rng, 4096, 0.6);
+        let c = storage_cost(&ws);
+        assert!(
+            c.csr_sparse > c.ternary_2bit,
+            "CSR {} should exceed dense 2-bit {} at 60% sparsity",
+            c.csr_sparse,
+            c.ternary_2bit
+        );
+        // only at ~80%+ sparsity does CSR break even on storage
+        let ws95 = synthetic_weights(&mut rng, 4096, 0.95);
+        let c95 = storage_cost(&ws95);
+        assert!(c95.csr_sparse < c95.ternary_2bit);
+    }
+
+    #[test]
+    fn op_counts_follow_table1() {
+        let ws: Vec<i8> = vec![1, 0, -1, 0, 0, 1, 0, 0, 0, 0]; // 70% sparse
+        let fp = dot_op_count(&ws, "fp32");
+        let twn = dot_op_count(&ws, "twn");
+        let bwn = dot_op_count(&ws, "bwn");
+        assert_eq!(fp.multiplies, 10);
+        assert_eq!(twn.multiplies, 0);
+        assert_eq!(twn.additions, 3, "only the non-zeros");
+        assert_eq!(bwn.additions, 10, "BWN cannot skip");
+    }
+
+    #[test]
+    fn synthetic_weights_hit_target_sparsity() {
+        let mut rng = Rng::new(11);
+        for target in [0.4, 0.6, 0.8] {
+            let ws = synthetic_weights(&mut rng, 50_000, target);
+            let got = sparsity(&ws);
+            assert!((got - target).abs() < 0.01, "target {target} got {got}");
+        }
+    }
+}
