@@ -3,7 +3,7 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
+use fat_imc::error::Result;
 
 use fat_imc::addition::scheme;
 use fat_imc::array::cma::Cma;
@@ -57,15 +57,19 @@ fn main() -> Result<()> {
         cma.stats.latency_ns, cma.stats.energy_pj, cma.stats.senses, cma.stats.writes
     );
 
-    // 4. Cross-check the full chip against the XLA-executed Pallas kernel.
-    let engine = Engine::load(&Engine::default_dir())?;
-    let rep = verify_ternary_gemm(&engine, 42, 0.6)?;
-    println!(
-        "PJRT cross-check ({} platform): {} elements, exact = {}",
-        engine.platform(),
-        rep.elements,
-        rep.exact
-    );
+    // 4. Cross-check the full chip against the XLA-executed Pallas kernel
+    //    (skipped gracefully when the PJRT backend / artifacts are absent).
+    let cross_check = Engine::load(&Engine::default_dir())
+        .and_then(|engine| verify_ternary_gemm(&engine, 42, 0.6).map(|rep| (engine, rep)));
+    match cross_check {
+        Ok((engine, rep)) => println!(
+            "PJRT cross-check ({} platform): {} elements, exact = {}",
+            engine.platform(),
+            rep.elements,
+            rep.exact
+        ),
+        Err(e) => println!("PJRT cross-check skipped: {e:#}"),
+    }
     println!("quickstart OK");
     Ok(())
 }

@@ -1,0 +1,63 @@
+//! Weight-stationary ResNet-18 session walkthrough: load the model onto
+//! the chip once (grid planned, SACU weight registers written), then
+//! stream a batch of requests against the resident state and watch the
+//! loading cost amortize.
+//!
+//!     cargo run --release --example resnet_session [requests]
+
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let n_req: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+        .max(1);
+
+    let spec = ModelSpec::synthetic_resnet18(1, 32, 8, 0.7, 0xE5E, 10);
+    println!(
+        "== ResNet-18 session: {} conv layers, {} ternary weights, sparsity {:.0}% ==",
+        spec.layers.len(),
+        spec.weight_count(),
+        spec.sparsity() * 100.0
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut session = ChipSession::new(ChipConfig::fat(), spec).expect("valid spec");
+    let loading = *session.loading();
+    println!(
+        "model loaded in {:.2} s host time: {} weight-register writes, {:.1} us simulated",
+        t0.elapsed().as_secs_f64(),
+        loading.weight_reg_writes,
+        loading.weight_load_ns / 1e3
+    );
+
+    let mut rng = Rng::new(0xE5F);
+    for i in 0..n_req {
+        let x = session.spec().random_input(&mut rng);
+        let out = session.infer(&x).expect("infer");
+        assert_eq!(out.metrics.weight_reg_writes, 0, "weights must stay resident");
+        let argmax = out.logits.as_ref().map(|l| {
+            l[0].iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap_or(0)
+        });
+        println!(
+            "  request {i}: {:.1} us compute ({:.1} us DPU), class {:?}, amortized load now {:.1} us/req",
+            out.metrics.latency_ns / 1e3,
+            out.metrics.dpu_ns / 1e3,
+            argmax,
+            session.amortized_loading_ns() / 1e3
+        );
+    }
+    println!(
+        "loading share fell from {:.1} us (request 1) to {:.1} us/request after {n_req} requests",
+        loading.weight_load_ns / 1e3,
+        session.amortized_loading_ns() / 1e3
+    );
+    println!("resnet_session OK");
+}

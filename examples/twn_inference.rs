@@ -13,7 +13,7 @@
 //!
 //!     make artifacts && cargo run --release --example twn_inference
 
-use anyhow::{bail, Result};
+use fat_imc::error::{bail, Result};
 
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
 use fat_imc::coordinator::dpu::Dpu;
@@ -169,36 +169,48 @@ fn main() -> Result<()> {
     // synthetic input batch in [0, 1], quantization-friendly (k/255)
     let geo = twn_cnn_layers(BATCH);
     let mut x = Tensor4::zeros(BATCH, geo[0].c, geo[0].h, geo[0].w);
-    for v in &mut x.data {
-        *v = rng.below(256) as f32 / 255.0;
-    }
+    x.fill_random_unit(&mut rng);
 
-    // --- path 1: XLA execution of the AOT-compiled L2 model -------------
-    let engine = Engine::load(&Engine::default_dir())?;
-    let mut inputs: Vec<Vec<f32>> = vec![x.data.clone()];
-    for (i, f) in p.convs.iter().enumerate() {
-        inputs.push(f.w.iter().map(|&w| w as f32).collect());
-        inputs.push(p.gammas[i].clone());
-        inputs.push(p.betas[i].clone());
-    }
-    inputs.push(p.wfc.iter().map(|&w| w as f32).collect());
-    inputs.push(p.bfc.clone());
-    let t0 = std::time::Instant::now();
-    let xla_logits = engine.run_f32("twn_cnn", &inputs)?;
-    println!("XLA path ({}) produced logits in {:.1} ms", engine.platform(), t0.elapsed().as_secs_f64() * 1e3);
-
-    // --- path 2: float reference (sanity for the XLA path) --------------
+    // --- path 1: rust float reference (always available) -----------------
     let ref_logits = reference_forward(&x, &p);
-    let mut max_err = 0.0f32;
-    for b in 0..BATCH {
-        for c in 0..CLASSES {
-            max_err = max_err.max((ref_logits[b][c] - xla_logits[b * CLASSES + c]).abs());
+    let ref_flat: Vec<f32> = ref_logits.iter().flatten().copied().collect();
+
+    // --- path 2: XLA execution of the AOT-compiled L2 model when a PJRT
+    //     backend + artifacts exist; otherwise the reference stands in as
+    //     the comparison target so the simulator paths still run.
+    let xla_result = Engine::load(&Engine::default_dir()).and_then(|engine| {
+        let mut inputs: Vec<Vec<f32>> = vec![x.data.clone()];
+        for (i, f) in p.convs.iter().enumerate() {
+            inputs.push(f.w.iter().map(|&w| w as f32).collect());
+            inputs.push(p.gammas[i].clone());
+            inputs.push(p.betas[i].clone());
         }
-    }
-    println!("rust float reference vs XLA: max |err| = {max_err:.2e}");
-    if max_err > 1e-3 {
-        bail!("XLA and the rust reference disagree: {max_err}");
-    }
+        inputs.push(p.wfc.iter().map(|&w| w as f32).collect());
+        inputs.push(p.bfc.clone());
+        let t0 = std::time::Instant::now();
+        let logits = engine.run_f32("twn_cnn", &inputs)?;
+        Ok((engine, logits, t0.elapsed().as_secs_f64() * 1e3))
+    });
+    let xla_logits: Vec<f32> = match xla_result {
+        Ok((engine, logits, ms)) => {
+            println!("XLA path ({}) produced logits in {ms:.1} ms", engine.platform());
+            let mut max_err = 0.0f32;
+            for b in 0..BATCH {
+                for c in 0..CLASSES {
+                    max_err = max_err.max((ref_logits[b][c] - logits[b * CLASSES + c]).abs());
+                }
+            }
+            println!("rust float reference vs XLA: max |err| = {max_err:.2e}");
+            if max_err > 1e-3 {
+                bail!("XLA and the rust reference disagree: {max_err}");
+            }
+            logits
+        }
+        Err(e) => {
+            println!("XLA path unavailable ({e:#}); comparing the chip against the rust float reference");
+            ref_flat
+        }
+    };
 
     // --- path 3: the bit-accurate FAT chip -------------------------------
     let t0 = std::time::Instant::now();

@@ -1,0 +1,112 @@
+//! Weight-stationary serving bench: demonstrates that the resident-model
+//! session amortizes SACU weight-register loading across a batch, vs the
+//! naive path that replans + rewrites the registers on every request.
+//!
+//! Acceptance gate (ISSUE 1): on an 8-request batch of the same model,
+//! the session's total simulated weight-register write time must be
+//! <= 1/8 of the naive per-request path — read off the split
+//! `weight_load_ns` / `weight_reg_writes` metrics.
+
+use fat_imc::bench_harness::{fmt_ns, BenchRun};
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::nn::resnet::resnet18_conv_layers_scaled;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::Table;
+use fat_imc::testutil::Rng;
+
+const REQUESTS: usize = 8;
+
+fn main() {
+    let mut run = BenchRun::new("weight_stationary");
+    let cfg = ChipConfig::fat();
+    let geo = resnet18_conv_layers_scaled(1, 16, 16);
+    let spec = ModelSpec::synthetic("resnet18-bench", &geo, true, 0.7, 0xBE7, Some(10));
+
+    let mut rng = Rng::new(0xBE8);
+    let xs: Vec<Tensor4> = (0..REQUESTS).map(|_| spec.random_input(&mut rng)).collect();
+
+    // ---- session path: load once, stream the batch ----------------------
+    let mut session = ChipSession::new(cfg, spec.clone()).expect("valid spec");
+    let loading = *session.loading();
+    let outs = session.run_batch(&xs).expect("batch");
+    let session_wreg_ns: f64 =
+        loading.weight_load_ns + outs.iter().map(|o| o.metrics.weight_load_ns).sum::<f64>();
+    let session_wreg_writes: u64 = loading.weight_reg_writes
+        + outs.iter().map(|o| o.metrics.weight_reg_writes).sum::<u64>();
+    let session_compute_ns: f64 = outs.iter().map(|o| o.metrics.latency_ns).sum();
+
+    // ---- naive path: run_conv_layer per layer per request ----------------
+    // (weight-register cost is activation-independent, so the inter-layer
+    // requantization here only needs to keep the chip's 8-bit contract)
+    let chip = FatChip::new(cfg);
+    let mut naive_wreg_ns = 0.0f64;
+    let mut naive_wreg_writes = 0u64;
+    let mut naive_total_ns = 0.0f64;
+    for x in &xs {
+        let q: Vec<f32> = x.data.iter().map(|&v| (v * 255.0).round()).collect();
+        let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q);
+        for (i, ls) in spec.layers.iter().enumerate() {
+            let layer_run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+            naive_wreg_ns += layer_run.metrics.weight_load_ns;
+            naive_wreg_writes += layer_run.metrics.weight_reg_writes;
+            naive_total_ns += layer_run.metrics.latency_ns;
+            let s = fat_imc::coordinator::dpu::Dpu::calibrate_scale(&layer_run.output.data);
+            let mut t = Tensor4::from_vec(
+                layer_run.output.n, layer_run.output.c,
+                layer_run.output.h, layer_run.output.w,
+                layer_run.output.data.iter().map(|&v| (v * s).round().clamp(0.0, 255.0)).collect(),
+            );
+            if i == 0 {
+                t = fat_imc::coordinator::dpu::Dpu.max_pool2(&t).0;
+            }
+            cur = t;
+        }
+    }
+
+    let mut table = Table::new(
+        &format!("weight loading, {REQUESTS}-request batch (simulated)"),
+        &["path", "wreg writes", "wreg time", "amortized/request"],
+    );
+    table.row(vec![
+        "naive (reload per request)".into(),
+        format!("{naive_wreg_writes}"),
+        fmt_ns(naive_wreg_ns),
+        fmt_ns(naive_wreg_ns / REQUESTS as f64),
+    ]);
+    table.row(vec![
+        "session (resident)".into(),
+        format!("{session_wreg_writes}"),
+        fmt_ns(session_wreg_ns),
+        fmt_ns(session_wreg_ns / REQUESTS as f64),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "  session compute total {} vs naive total {} (loading share removed per request)",
+        fmt_ns(session_compute_ns),
+        fmt_ns(naive_total_ns)
+    );
+
+    run.check(
+        "per-request metrics report zero weight-register writes",
+        outs.iter().all(|o| o.metrics.weight_reg_writes == 0),
+        format!("{:?}", outs.iter().map(|o| o.metrics.weight_reg_writes).collect::<Vec<_>>()),
+    );
+    run.check(
+        "one-time loading is visible in the split metrics",
+        loading.weight_reg_writes > 0 && loading.weight_load_ns > 0.0,
+        format!("{} writes / {} ns", loading.weight_reg_writes, loading.weight_load_ns),
+    );
+    let ratio = session_wreg_ns / naive_wreg_ns;
+    run.check(
+        "session weight-load time <= 1/8 of the naive path",
+        session_wreg_ns <= naive_wreg_ns / REQUESTS as f64 + 1e-9,
+        format!("ratio {ratio:.4} (want <= {:.4})", 1.0 / REQUESTS as f64),
+    );
+    run.check(
+        "session total simulated time beats naive",
+        session_compute_ns + session_wreg_ns < naive_total_ns,
+        format!("{} vs {}", session_compute_ns + session_wreg_ns, naive_total_ns),
+    );
+    run.finish();
+}

@@ -280,6 +280,17 @@ impl Cma {
     pub fn reset_stats(&mut self) {
         self.stats = CmaStats::default();
     }
+
+    /// Reset the array for reuse by the next tile: zero every cell and the
+    /// ledger **in place**, keeping the row storage, the transpose scratch
+    /// buffer, and any endurance map allocation.  The chip's tile loop
+    /// reuses one CMA per worker thread instead of reallocating per tile.
+    pub fn reset(&mut self) {
+        for row in &mut self.rows {
+            *row = [0; WORDS];
+        }
+        self.stats = CmaStats::default();
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +413,22 @@ mod tests {
         assert_eq!(e.total_writes(), 8);
         assert_eq!(e.count(0, 3), 1);
         assert_eq!(e.max_cell_writes(), 1);
+    }
+
+    #[test]
+    fn reset_clears_cells_and_ledger_in_place() {
+        let mut c = Cma::new();
+        c.store_vector(0, 8, &[0xAB; 16]);
+        c.sense_two_rows(0, 1);
+        assert!(c.stats.writes > 0 && c.stats.senses > 0);
+        c.reset();
+        assert_eq!(c.stats, CmaStats::default());
+        for row in 0..ROWS {
+            assert_eq!(c.row_words(row), &[0u64; WORDS], "row {row} not cleared");
+        }
+        // still usable after reset
+        c.store_vector(0, 8, &[7]);
+        assert_eq!(c.load_operand(0, 0, 8), 7);
     }
 
     #[test]

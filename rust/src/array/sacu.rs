@@ -368,7 +368,7 @@ impl Sacu {
             )
         } else {
             let mut pos: Vec<Term> = plan.pos.iter().map(|&j| Term::Slot(j)).collect();
-            pos.extend(std::iter::repeat_n(Term::Zero, plan.skipped));
+            pos.extend((0..plan.skipped).map(|_| Term::Zero));
             (pos, plan.neg.iter().map(|&j| Term::Slot(j)).collect(), 0)
         };
 

@@ -8,12 +8,13 @@
 //!   infer    --sparsity 0.8 --layer 10 [--baseline] [--config f]
 //!   map      --layer 10          Table VII/VIII mapping sweep for a layer
 //!   verify   [--artifacts dir]   simulator vs PJRT cross-check
+//!   resnet   --input 16 --scale 16 --requests 4
 //!   serve    --requests 16 --workers 4
 //! ```
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 
 /// Parsed command line: a command plus `--key value` flags.
 #[derive(Debug, Clone, Default)]
@@ -104,9 +105,21 @@ COMMANDS:
   verify                   cross-check simulator vs the PJRT artifacts
       --artifacts <dir>    artifact directory (default ./artifacts)
       --sparsity <0..1>    weight sparsity for the check (default 0.5)
-  serve                    threaded inference service demo
+  resnet                   end-to-end ResNet-18 on the weight-stationary
+                           session (weights loaded once, batches streamed)
+      --batch <n>          request batch size (default 1)
+      --input <px>         input height/width (default 16)
+      --scale <d>          channel divisor vs ImageNet ResNet-18 (default 16)
+      --sparsity <0..1>    weight sparsity (default 0.7)
+      --layers <1..17>     run only the first n conv layers (default 17)
+      --requests <n>       requests to serve (default 4)
+      --classes <n>        classifier classes (default 10)
+  serve                    threaded weight-stationary inference service:
+                           each worker holds the model resident on its
+                           CMA slice and serves model-level requests
       --requests <n>       requests to push (default 16)
       --workers <n>        worker threads (default 4)
+      --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   help                     this text
 ";
 

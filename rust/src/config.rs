@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, bail, Context, Result};
 
 use crate::array::sacu::DotLayout;
 use crate::circuit::sense_amp::SaKind;

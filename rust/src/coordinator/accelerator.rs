@@ -9,6 +9,13 @@
 //! mirroring the CMAs' physical parallelism; the latency model takes the
 //! max across a step's tiles and sums across steps.
 //!
+//! The weight path is factored so it can be *stationary*: tile weights are
+//! packed into [`TileWeights`] (the SACU register images) and
+//! [`FatChip::run_planned`] optionally charges their load time.  The naive
+//! `run_conv_layer` packs and charges on every call; the session layer
+//! ([`super::session`]) packs once per model and serves batches against
+//! the resident registers — the Combined-Stationary serving story.
+//!
 //! The same chip object, configured with `ChipConfig::parapim_baseline()`,
 //! models the dense BWN-style competitor (ParaPIM scheme, no zero
 //! skipping) used throughout the paper's comparisons.
@@ -26,7 +33,7 @@ use crate::nn::tensor::Tensor4;
 use super::metrics::ChipMetrics;
 
 /// SACU weight-register write time per 2-bit weight, ns.
-const T_WREG_NS: f64 = 0.17;
+pub const T_WREG_NS: f64 = 0.17;
 /// Reduction-unit add latency / energy (digital CMOS in the MC).
 const T_REDUCE_NS: f64 = 0.5;
 const E_REDUCE_PJ: f64 = 0.1;
@@ -68,6 +75,11 @@ impl ChipConfig {
             ..Self::fat()
         }
     }
+
+    /// The grid-planner view of this chip.
+    pub fn planner(&self) -> PlannerConfig {
+        PlannerConfig { mh: self.layout.max_slots(), mw: 256, cmas: self.cmas }
+    }
 }
 
 /// Result of running one layer.
@@ -75,6 +87,40 @@ impl ChipConfig {
 pub struct LayerRun {
     pub output: Tensor4,
     pub metrics: ChipMetrics,
+}
+
+/// The packed SACU weight-register images for one tile: one register per
+/// filter, each covering the tile's J-range.  Packing is a host-side
+/// transformation; *writing* the registers into the SACU SRAM is what
+/// costs `T_WREG_NS` per 2-bit weight, and only when a run is told to
+/// charge it (the weight-stationary session charges it once per model).
+#[derive(Debug, Clone)]
+pub struct TileWeights {
+    /// `regs[kn]` holds filter `kn`'s weights for rows `j0..j1`.
+    pub regs: Vec<WeightRegister>,
+    /// 2-bit register writes needed to (re)load these registers.
+    pub wreg_writes: u64,
+}
+
+impl TileWeights {
+    /// Pack one tile's registers from per-filter flattened weights
+    /// (J-ordered, as produced by `TernaryFilter::filter_flat`).
+    pub fn pack(flats: &[Vec<i8>], a: &Assignment) -> Self {
+        let mut regs = Vec::with_capacity(flats.len());
+        let mut wreg_writes = 0u64;
+        for flat in flats {
+            let chunk = &flat[a.j0..a.j1];
+            wreg_writes += chunk.len() as u64;
+            regs.push(WeightRegister::load(chunk));
+        }
+        Self { regs, wreg_writes }
+    }
+
+    /// Pack every tile of a plan for `filter`.
+    pub fn pack_plan(filter: &TernaryFilter, plan: &GridPlan) -> Vec<TileWeights> {
+        let flats: Vec<Vec<i8>> = (0..filter.kn).map(|kn| filter.filter_flat(kn)).collect();
+        plan.assignments.iter().map(|a| TileWeights::pack(&flats, a)).collect()
+    }
 }
 
 /// The simulated chip.
@@ -89,6 +135,8 @@ struct TileResult {
     partials: Vec<(usize, Vec<i32>)>,
     adds: u64,
     skipped: u64,
+    /// Weight-register load time charged on this tile, ns.
+    wreg_ns: f64,
 }
 
 impl FatChip {
@@ -96,18 +144,21 @@ impl FatChip {
         Self { cfg }
     }
 
-    /// Execute one tile: load its activation sub-array into a CMA, then
-    /// run every filter's weight chunk through the SACU.
+    /// Execute one tile: load its activation sub-array into the (reset)
+    /// CMA, then run every filter's packed weight register through the
+    /// SACU.  `charge_wreg` adds the register write time — skipped when
+    /// the registers are already resident (session path).
     fn run_tile(
         &self,
         ax: &Img2ColMatrix,
-        filter: &TernaryFilter,
+        weights: &TileWeights,
         a: Assignment,
         addition: &dyn AdditionScheme,
+        charge_wreg: bool,
+        cma: &mut Cma,
     ) -> TileResult {
-        let mut cma = Cma::new();
         let sacu = Sacu::new(self.cfg.layout, self.cfg.skip_zeros);
-        sacu.init_cma(&mut cma);
+        sacu.init_cma(cma);
         let n_cols = a.col1 - a.col0;
         // Load operand slots (activations quantized to u8 by the DPU).
         // One reused buffer: per-slot Vec allocation was hot (perf pass).
@@ -121,63 +172,84 @@ impl FatChip {
                 );
                 *v = x as u64;
             }
-            sacu.load_slot(&mut cma, slot, &vals);
+            sacu.load_slot(cma, slot, &vals);
         }
         // Run all filters' chunks sequentially on this tile.
-        let mut partials = Vec::with_capacity(filter.kn);
+        let mut partials = Vec::with_capacity(weights.regs.len());
         let mut adds = 0u64;
         let mut skipped = 0u64;
-        for kn in 0..filter.kn {
-            let flat = filter.filter_flat(kn);
-            let chunk = &flat[a.j0..a.j1];
-            let reg = WeightRegister::load(chunk);
-            // weight-register refill cost (2-bit writes into the SACU)
-            cma.stats.latency_ns += chunk.len() as f64 * T_WREG_NS;
-            let dot = sacu.sparse_dot(&mut cma, addition, &reg, n_cols);
+        let mut wreg_ns = 0.0;
+        for (kn, reg) in weights.regs.iter().enumerate() {
+            if charge_wreg {
+                // weight-register refill cost (2-bit writes into the SACU)
+                let t = reg.len() as f64 * T_WREG_NS;
+                cma.stats.latency_ns += t;
+                wreg_ns += t;
+            }
+            let dot = sacu.sparse_dot(cma, addition, reg, n_cols);
             adds += dot.adds as u64;
             skipped += dot.skipped as u64;
             partials.push((kn, dot.values));
         }
-        TileResult { assignment: a, stats: cma.stats, partials, adds, skipped }
+        TileResult { assignment: a, stats: cma.stats, partials, adds, skipped, wreg_ns }
     }
 
     /// Run a full convolution layer.  `x` must hold integer activations in
-    /// [0, 255] (the DPU requantizes between layers).
+    /// [0, 255] (the DPU requantizes between layers).  This is the naive
+    /// path: the grid is planned and every SACU weight register written on
+    /// every call.
     pub fn run_conv_layer(&self, x: &Tensor4, filter: &TernaryFilter, layer: &ConvLayer) -> LayerRun {
         assert_eq!(filter.kn, layer.kn);
         assert_eq!(filter.c, layer.c);
         let ax = img2col(x, layer);
-        let plan = GridPlan::plan(
-            layer,
-            PlannerConfig { mh: self.cfg.layout.max_slots(), mw: 256, cmas: self.cfg.cmas },
-        );
+        let plan = GridPlan::plan(layer, self.cfg.planner());
+        let weights = TileWeights::pack_plan(filter, &plan);
+        self.run_planned(&ax, layer, &plan, &weights, true)
+    }
 
+    /// Run a pre-planned layer against pre-packed tile weights.  The
+    /// weight-stationary session calls this with `charge_wreg = false`:
+    /// the registers are resident, only activations stream.
+    pub(crate) fn run_planned(
+        &self,
+        ax: &Img2ColMatrix,
+        layer: &ConvLayer,
+        plan: &GridPlan,
+        weights: &[TileWeights],
+        charge_wreg: bool,
+    ) -> LayerRun {
+        assert_eq!(weights.len(), plan.assignments.len(), "weights/plan mismatch");
         let total_cols = ax.cols;
         // acc[kn][col] accumulates partial sums across J-tiles.
         let mut acc = vec![vec![0i64; total_cols]; layer.kn];
         let mut metrics = ChipMetrics::default();
         let addition = scheme(self.cfg.sa_kind);
+        let addition: &dyn AdditionScheme = addition.as_ref();
 
         for step in 0..plan.steps {
-            let tiles: Vec<Assignment> = plan
+            let tiles: Vec<(Assignment, &TileWeights)> = plan
                 .assignments
                 .iter()
-                .copied()
-                .filter(|t| t.step == step)
+                .zip(weights)
+                .filter(|(t, _)| t.step == step)
+                .map(|(t, w)| (*t, w))
                 .collect();
             // Tiles of a step run on parallel CMAs; simulate with threads.
+            // Each worker thread reuses one CMA across its tiles (reset in
+            // place, no per-tile reallocation).
             let results: Vec<TileResult> = std::thread::scope(|s| {
                 let chunksz = tiles.len().div_ceil(self.cfg.threads).max(1);
                 let handles: Vec<_> = tiles
                     .chunks(chunksz)
                     .map(|chunk| {
-                        let ax = &ax;
-                        let addition = &*addition;
                         s.spawn(move || {
-                            chunk
-                                .iter()
-                                .map(|&a| self.run_tile(ax, filter, a, addition))
-                                .collect::<Vec<_>>()
+                            let mut cma = Cma::new();
+                            let mut out = Vec::with_capacity(chunk.len());
+                            for &(a, w) in chunk {
+                                cma.reset();
+                                out.push(self.run_tile(ax, w, a, addition, charge_wreg, &mut cma));
+                            }
+                            out
                         })
                     })
                     .collect();
@@ -186,6 +258,16 @@ impl FatChip {
 
             let ledgers: Vec<CmaStats> = results.iter().map(|r| r.stats).collect();
             metrics.absorb_parallel(&ledgers);
+            // Loading-vs-compute split: the step's register-load latency is
+            // bounded by its slowest tile (same parallel convention as the
+            // overall ledger); register writes sum across tiles.
+            let step_wreg_ns = results.iter().map(|r| r.wreg_ns).fold(0.0, f64::max);
+            metrics.weight_load_ns += step_wreg_ns;
+            if charge_wreg {
+                for (_, w) in &tiles {
+                    metrics.weight_reg_writes += w.wreg_writes;
+                }
+            }
             for r in &results {
                 metrics.adds += r.adds;
                 metrics.skipped += r.skipped;
@@ -306,5 +388,50 @@ mod tests {
         let run = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &l);
         let want = conv2d_ternary(&x, &f, l.stride, l.pad);
         assert_eq!(run.output.data, want.data);
+    }
+
+    #[test]
+    fn naive_path_reports_weight_load_split() {
+        // Every call reloads the registers: one 2-bit write per weight per
+        // column-tile, and a nonzero loading share of the latency.
+        let l = small_layer();
+        let mut rng = Rng::new(0xC45);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.5);
+        let chip = FatChip::new(ChipConfig::fat());
+        let run = chip.run_conv_layer(&x, &f, &l);
+        let plan = GridPlan::plan(&l, chip.cfg.planner());
+        let want_writes = (l.kn * l.j_dim() * plan.col_tiles) as u64;
+        assert_eq!(run.metrics.weight_reg_writes, want_writes);
+        assert!(run.metrics.weight_load_ns > 0.0);
+        assert!(run.metrics.weight_load_ns < run.metrics.latency_ns);
+        assert!(run.metrics.compute_ns() > 0.0);
+    }
+
+    #[test]
+    fn resident_weights_compute_identically_without_load_cost() {
+        // run_planned with charge_wreg = false (the session path) must be
+        // bit-identical and strictly faster in simulated time.
+        let l = small_layer();
+        let mut rng = Rng::new(0xC46);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.6);
+        let chip = FatChip::new(ChipConfig::fat());
+        let naive = chip.run_conv_layer(&x, &f, &l);
+
+        let ax = img2col(&x, &l);
+        let plan = GridPlan::plan(&l, chip.cfg.planner());
+        let weights = TileWeights::pack_plan(&f, &plan);
+        let resident = chip.run_planned(&ax, &l, &plan, &weights, false);
+
+        assert_eq!(resident.output.data, naive.output.data, "same math");
+        assert_eq!(resident.metrics.weight_reg_writes, 0);
+        assert_eq!(resident.metrics.weight_load_ns, 0.0);
+        assert!(
+            resident.metrics.latency_ns < naive.metrics.latency_ns,
+            "resident {} vs naive {}",
+            resident.metrics.latency_ns,
+            naive.metrics.latency_ns
+        );
     }
 }

@@ -1,7 +1,7 @@
 //! The CMOS Data Processing Unit — §III-A2.
 //!
-//! The DPU handles what the memory arrays cannot: batch normalization and
-//! the activation function (eqs. (5)-(6)).  Deliberately *no* hardware
+//! The DPU handles what the memory arrays cannot: batch normalization,
+//! the activation function (eqs. (5)-(6)), and the stem's max pooling.  Deliberately *no* hardware
 //! quantizer: TWN weights arrive pre-ternarized (the paper removes the
 //! quantizer of ParaPIM/MRIMA to save area, power and time).  Activations
 //! are requantized to the array's 8-bit unsigned format on the way back to
@@ -63,6 +63,37 @@ impl Dpu {
         }
     }
 
+    /// 2x2 / stride-2 max pooling (comparator lanes) — the ResNet stem's
+    /// pooling between conv1 and conv2_x.  Odd trailing rows/columns are
+    /// dropped (floor semantics).  Returns the pooled tensor plus the
+    /// DPU latency/energy of the comparisons.
+    pub fn max_pool2(&self, x: &crate::nn::tensor::Tensor4) -> (crate::nn::tensor::Tensor4, f64, f64) {
+        let (oh, ow) = ((x.h / 2).max(1), (x.w / 2).max(1));
+        let mut y = crate::nn::tensor::Tensor4::zeros(x.n, x.c, oh, ow);
+        for n in 0..x.n {
+            for c in 0..x.c {
+                for h in 0..oh {
+                    for w in 0..ow {
+                        let (h0, w0) = (h * 2, w * 2);
+                        let mut m = x.get(n, c, h0.min(x.h - 1), w0.min(x.w - 1));
+                        for (dh, dw) in [(0, 1), (1, 0), (1, 1)] {
+                            let (hh, ww) = (h0 + dh, w0 + dw);
+                            if hh < x.h && ww < x.w {
+                                m = m.max(x.get(n, c, hh, ww));
+                            }
+                        }
+                        y.set(n, c, h, w, m);
+                    }
+                }
+            }
+        }
+        // 3 comparisons per 2x2 window, LANES-wide
+        let ops = 3 * y.len();
+        let latency_ns = (ops as f64 / LANES as f64) * T_OP_NS;
+        let energy_pj = ops as f64 * E_OP_PJ;
+        (y, latency_ns, energy_pj)
+    }
+
     /// Choose a requantization scale so the max observed value maps near
     /// full range.
     pub fn calibrate_scale(values: &[f32]) -> f32 {
@@ -100,6 +131,35 @@ mod tests {
         let s = Dpu::calibrate_scale(&[0.0, 2.0, 4.0]);
         assert!((s - 63.75).abs() < 1e-5);
         assert_eq!(Dpu::calibrate_scale(&[-1.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn max_pool2_picks_window_maxima() {
+        use crate::nn::tensor::Tensor4;
+        let dpu = Dpu;
+        let x = Tensor4::from_vec(
+            1, 1, 4, 4,
+            vec![
+                1.0, 5.0, 2.0, 0.0,
+                3.0, 4.0, 1.0, 9.0,
+                0.0, 0.0, 7.0, 6.0,
+                2.0, 8.0, 5.0, 5.0,
+            ],
+        );
+        let (y, ns, pj) = dpu.max_pool2(&x);
+        assert_eq!(y.shape(), (1, 1, 2, 2));
+        assert_eq!(y.data, vec![5.0, 9.0, 8.0, 7.0]);
+        assert!(ns > 0.0 && pj > 0.0);
+    }
+
+    #[test]
+    fn max_pool2_floors_odd_extents() {
+        use crate::nn::tensor::Tensor4;
+        let dpu = Dpu;
+        let x = Tensor4::from_vec(1, 1, 3, 3, vec![1.0, 2.0, 9.0, 4.0, 3.0, 9.0, 9.0, 9.0, 9.0]);
+        let (y, _, _) = dpu.max_pool2(&x);
+        assert_eq!(y.shape(), (1, 1, 1, 1));
+        assert_eq!(y.data, vec![4.0]);
     }
 
     #[test]

@@ -23,6 +23,13 @@ pub struct ChipMetrics {
     pub reduce_ns: f64,
     /// DPU latency, ns, already folded into `latency_ns`.
     pub dpu_ns: f64,
+    /// SACU weight-register loading latency, ns, already folded into
+    /// `latency_ns`; kept for the loading-vs-compute breakdown.  Zero on
+    /// the weight-stationary session path, where registers are written
+    /// once per model (see `coordinator::session`).
+    pub weight_load_ns: f64,
+    /// 2-bit SACU weight-register writes performed.
+    pub weight_reg_writes: u64,
 }
 
 impl ChipMetrics {
@@ -55,6 +62,15 @@ impl ChipMetrics {
         self.skipped += other.skipped;
         self.reduce_ns += other.reduce_ns;
         self.dpu_ns += other.dpu_ns;
+        self.weight_load_ns += other.weight_load_ns;
+        self.weight_reg_writes += other.weight_reg_writes;
+    }
+
+    /// Latency attributable to compute (everything but weight-register
+    /// loading) — the quantity the weight-stationary session leaves per
+    /// request after the one-time load.
+    pub fn compute_ns(&self) -> f64 {
+        self.latency_ns - self.weight_load_ns
     }
 
     /// Energy-delay product, pJ*ns (Fig. 11's efficiency metric).
@@ -98,6 +114,26 @@ mod tests {
         assert_eq!(a.energy_pj, 7.0);
         assert_eq!(a.adds, 3);
         assert_eq!(a.skipped, 7);
+    }
+
+    #[test]
+    fn weight_load_split_sums_and_subtracts() {
+        let mut a = ChipMetrics {
+            latency_ns: 10.0,
+            weight_load_ns: 4.0,
+            weight_reg_writes: 100,
+            ..Default::default()
+        };
+        let b = ChipMetrics {
+            latency_ns: 6.0,
+            weight_load_ns: 1.0,
+            weight_reg_writes: 10,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.weight_load_ns, 5.0);
+        assert_eq!(a.weight_reg_writes, 110);
+        assert_eq!(a.compute_ns(), 11.0);
     }
 
     #[test]

@@ -3,16 +3,21 @@
 //! This is the L3 "leader" of the three-layer stack: it owns the layer
 //! decomposition (via [`crate::mapping`]), drives the CMAs' SACUs, applies
 //! the DPU (batch-norm + activation, §III-A2 — no quantizer), aggregates
-//! metrics, and exposes a thin threaded inference service.
+//! metrics, and exposes the serving stack: a weight-stationary
+//! [`session::ChipSession`] (model loaded once, batches streamed against
+//! the resident SACU registers) and a threaded [`server::InferenceServer`]
+//! where each worker holds a resident model over its slice of the CMAs.
 
 pub mod accelerator;
 pub mod dpu;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 
-pub use accelerator::{ChipConfig, FatChip, LayerRun};
+pub use accelerator::{ChipConfig, FatChip, LayerRun, TileWeights};
 pub use dpu::Dpu;
 pub use metrics::ChipMetrics;
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response};
+pub use session::{ChipSession, LoadedModel, ModelOutput, ModelSpec};

@@ -1,64 +1,106 @@
-//! A thin threaded inference service over the simulated chip.
+//! A threaded, model-level inference service over the simulated chip.
 //!
 //! The image has no tokio (offline vendor set), so the service is a
-//! std-thread worker pool over mpsc channels: requests carry an input
-//! tensor + ternary weights; responses carry the output feature map and
-//! the simulated + wall-clock latency.  This is the "request path" of the
-//! three-layer architecture — no python anywhere.
+//! std-thread worker pool over mpsc channels.  The server is
+//! *weight-stationary*: it is started with a [`ModelSpec`], every worker
+//! builds a resident [`ChipSession`] over its slice of the chip's CMAs
+//! (weights planned and written into the SACU registers **once**), and
+//! requests then carry only activations.  Responses report per-request
+//! compute metrics — always zero weight-register writes — while the
+//! one-time loading cost per worker is available from
+//! [`InferenceServer::loading_metrics`], so amortization is measurable.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::nn::layers::TernaryFilter;
-use crate::nn::resnet::ConvLayer;
+use crate::error::{ensure, Result};
 use crate::nn::tensor::Tensor4;
 
-use super::accelerator::{ChipConfig, FatChip};
+use super::accelerator::ChipConfig;
 use super::metrics::ChipMetrics;
+use super::session::{ChipSession, ModelSpec};
 
-/// One inference request: a conv workload for the chip.
+/// One inference request: activations for the resident model.
 pub struct Request {
     pub id: u64,
+    /// Float activations in [0, 1], shaped like the model input.
     pub x: Tensor4,
-    pub filter: TernaryFilter,
-    pub layer: ConvLayer,
 }
 
 /// The server's answer.
 pub struct Response {
     pub id: u64,
-    pub output: Tensor4,
+    /// Final backbone feature map (dequantized floats).
+    pub features: Tensor4,
+    /// Classifier logits when the model has a head.
+    pub logits: Option<Vec<Vec<f32>>>,
+    /// Per-request chip + DPU metrics (zero weight-register writes: the
+    /// weights were resident before the request arrived).
     pub metrics: ChipMetrics,
     /// Host wall-clock service time, microseconds.
     pub wall_us: f64,
 }
 
-/// Threaded inference server.
+/// Split `total` CMAs over `workers` chips: every worker gets the base
+/// share and the remainder is distributed one-per-worker from the front,
+/// so no CMA is dropped when `workers` does not divide `total`.  The
+/// shares always sum to exactly `total`; `workers` must not exceed it
+/// (a worker cannot simulate a fraction of a CMA).
+pub fn split_cmas(total: usize, workers: usize) -> Vec<usize> {
+    assert!(workers > 0 && workers <= total, "need 1..={total} workers, got {workers}");
+    let base = total / workers;
+    let rem = total % workers;
+    (0..workers).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Threaded weight-stationary inference server.
 pub struct InferenceServer {
     tx: Option<mpsc::Sender<Request>>,
     rx_out: mpsc::Receiver<Response>,
     workers: Vec<JoinHandle<()>>,
+    worker_cmas: Vec<usize>,
+    loading: Vec<ChipMetrics>,
+    /// Model input geometry, for request validation at submit time.
+    input_geometry: (usize, usize, usize, usize),
 }
 
 impl InferenceServer {
-    /// Spawn `workers` worker threads, each owning a chip instance.
-    pub fn start(cfg: ChipConfig, workers: usize) -> Self {
-        assert!(workers > 0);
+    /// Spawn `workers` worker threads.  Each owns a chip slice with the
+    /// model resident: the spec is validated once up front, then every
+    /// worker plans it onto its CMAs and writes the weight registers
+    /// before the first request is accepted.
+    pub fn start(cfg: ChipConfig, workers: usize, spec: ModelSpec) -> Result<Self> {
+        ensure!(
+            workers > 0 && workers <= cfg.cmas,
+            "need 1..={} workers (one CMA slice each), got {workers}",
+            cfg.cmas
+        );
+        spec.validate()?;
+        let input_geometry = spec.input_geometry();
+        let spec = Arc::new(spec);
         let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<Response>();
-        let handles = (0..workers)
-            .map(|_| {
+        let (tx_ready, rx_ready) = mpsc::channel::<ChipMetrics>();
+        let worker_cmas = split_cmas(cfg.cmas, workers);
+        let handles: Vec<JoinHandle<()>> = worker_cmas
+            .iter()
+            .map(|&cmas| {
                 let rx = Arc::clone(&rx);
                 let tx_out = tx_out.clone();
+                let tx_ready = tx_ready.clone();
+                let spec = Arc::clone(&spec);
                 let mut worker_cfg = cfg;
-                // each worker simulates a slice of the chip's CMAs
-                worker_cfg.cmas = (cfg.cmas / workers).max(1);
+                // each worker simulates its slice of the chip's CMAs
+                worker_cfg.cmas = cmas;
                 worker_cfg.threads = 1;
                 std::thread::spawn(move || {
-                    let chip = FatChip::new(worker_cfg);
+                    // one-time: plan + write the weight registers
+                    let mut session = ChipSession::new(worker_cfg, (*spec).clone())
+                        .expect("spec validated before spawn");
+                    let _ = tx_ready.send(*session.loading());
                     loop {
                         let req = {
                             let guard = rx.lock().unwrap();
@@ -66,24 +108,53 @@ impl InferenceServer {
                         };
                         let Ok(req) = req else { break };
                         let t0 = Instant::now();
-                        let run = chip.run_conv_layer(&req.x, &req.filter, &req.layer);
+                        // shape was validated at submit, so infer cannot
+                        // fail; a panic here is loud, a dropped response
+                        // would deadlock the caller's collect()
+                        let out = session.infer(&req.x).expect("request validated at submit");
                         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
                         let _ = tx_out.send(Response {
                             id: req.id,
-                            output: run.output,
-                            metrics: run.metrics,
+                            features: out.features,
+                            logits: out.logits,
+                            metrics: out.metrics,
                             wall_us,
                         });
                     }
                 })
             })
             .collect();
-        Self { tx: Some(tx), rx_out, workers: handles }
+        // wait until every worker's model is resident (collect the
+        // one-time loading metrics in the process)
+        let loading: Vec<ChipMetrics> = (0..workers)
+            .map(|_| rx_ready.recv().expect("worker died while loading"))
+            .collect();
+        Ok(Self { tx: Some(tx), rx_out, workers: handles, worker_cmas, loading, input_geometry })
     }
 
-    /// Enqueue a request.
-    pub fn submit(&self, req: Request) {
+    /// Per-worker CMA allotment (sums to the chip's CMA count).
+    pub fn worker_cmas(&self) -> &[usize] {
+        &self.worker_cmas
+    }
+
+    /// One-time model-loading metrics, one entry per worker.
+    pub fn loading_metrics(&self) -> &[ChipMetrics] {
+        &self.loading
+    }
+
+    /// Enqueue a request.  The tensor shape is validated here — a
+    /// mismatched request is rejected up front rather than silently
+    /// dropped by a worker (which would leave `collect` waiting forever).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        ensure!(
+            req.x.shape() == self.input_geometry,
+            "request {} shape {:?} does not match model input {:?}",
+            req.id,
+            req.x.shape(),
+            self.input_geometry
+        );
         self.tx.as_ref().expect("server closed").send(req).expect("workers gone");
+        Ok(())
     }
 
     /// Blockingly collect `n` responses (any order).
@@ -120,42 +191,97 @@ pub fn latency_percentiles(mut wall_us: Vec<f64>) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::resnet::ConvLayer;
     use crate::testutil::Rng;
 
-    fn request(id: u64, rng: &mut Rng) -> Request {
-        let layer = ConvLayer {
-            name: "srv", n: 1, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1,
-        };
-        let mut x = Tensor4::zeros(1, 3, 8, 8);
-        x.fill_random_ints(rng, 0, 256);
-        let filter =
-            TernaryFilter::new(4, 3, 3, 3, rng.ternary_vec(4 * 27, 0.5));
-        Request { id, x, filter, layer }
+    fn small_spec(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "s1", n: 1, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "s2", n: 1, c: 4, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ];
+        ModelSpec::synthetic("srv", &geo, false, 0.5, seed, Some(3))
+    }
+
+    fn request(id: u64, spec: &ModelSpec, rng: &mut Rng) -> Request {
+        Request { id, x: spec.random_input(rng) }
     }
 
     #[test]
-    fn serves_batch_and_preserves_request_mapping() {
-        let mut rng = Rng::new(0x5E21);
-        let server = InferenceServer::start(ChipConfig::fat(), 2);
+    fn serves_batch_against_resident_model() {
+        let spec = small_spec(0x5E21);
+        let mut rng = Rng::new(0x5E22);
+        let server = InferenceServer::start(ChipConfig::fat(), 2, spec.clone()).unwrap();
+        assert_eq!(server.loading_metrics().len(), 2);
+        for l in server.loading_metrics() {
+            assert!(l.weight_reg_writes > 0, "loading must write the registers");
+        }
+
+        // reference: a local session (same model, whole chip)
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+
         let mut wants = std::collections::HashMap::new();
         for id in 0..6u64 {
-            let req = request(id, &mut rng);
-            let want = crate::nn::layers::conv2d_ternary(
-                &req.x, &req.filter, req.layer.stride, req.layer.pad,
-            );
-            wants.insert(id, want);
-            server.submit(req);
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
         }
         let responses = server.collect(6);
         assert_eq!(responses.len(), 6);
         let mut seen = std::collections::HashSet::new();
         for r in &responses {
             assert!(seen.insert(r.id), "duplicate response {}", r.id);
-            assert_eq!(r.output.data, wants[&r.id].data, "request {} corrupted", r.id);
+            let want = &wants[&r.id];
+            assert_eq!(r.features.data, want.features.data, "request {} corrupted", r.id);
+            assert_eq!(r.logits, want.logits, "request {} logits corrupted", r.id);
+            assert_eq!(r.metrics.weight_reg_writes, 0, "requests must not rewrite weights");
             assert!(r.metrics.latency_ns > 0.0);
             assert!(r.wall_us > 0.0);
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn cma_split_distributes_remainder() {
+        // 10 CMAs over 4 workers: 3,3,2,2 — nothing dropped.
+        assert_eq!(split_cmas(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(split_cmas(12, 4), vec![3, 3, 3, 3]);
+        assert_eq!(split_cmas(3, 3), vec![1, 1, 1]);
+        let split = split_cmas(4097, 3);
+        assert_eq!(split.iter().sum::<usize>(), 4097);
+        assert!(split.iter().max().unwrap() - split.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "workers")]
+    fn cma_split_rejects_oversubscription() {
+        // 5 workers cannot each simulate a slice of a 3-CMA chip.
+        split_cmas(3, 5);
+    }
+
+    #[test]
+    fn mismatched_request_is_rejected_at_submit_not_dropped() {
+        let spec = small_spec(4);
+        let server = InferenceServer::start(ChipConfig::fat(), 1, spec).unwrap();
+        let bad = Request { id: 9, x: Tensor4::zeros(1, 3, 4, 4) }; // model wants 8x8
+        assert!(server.submit(bad).is_err(), "wrong shape must be rejected up front");
+        server.shutdown(); // and the queue is still clean: no deadlock
+    }
+
+    #[test]
+    fn server_exposes_worker_cma_shares() {
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 10;
+        let server = InferenceServer::start(cfg, 4, small_spec(1)).unwrap();
+        assert_eq!(server.worker_cmas(), &[3, 3, 2, 2]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_before_spawning() {
+        let mut bad = small_spec(2);
+        bad.layers[1].layer.c = 7;
+        assert!(InferenceServer::start(ChipConfig::fat(), 2, bad).is_err());
     }
 
     #[test]
@@ -167,9 +293,10 @@ mod tests {
 
     #[test]
     fn drop_shuts_down_cleanly() {
+        let spec = small_spec(3);
         let mut rng = Rng::new(1);
-        let server = InferenceServer::start(ChipConfig::fat(), 1);
-        server.submit(request(0, &mut rng));
+        let server = InferenceServer::start(ChipConfig::fat(), 1, spec.clone()).unwrap();
+        server.submit(request(0, &spec, &mut rng)).unwrap();
         let _ = server.collect(1);
         drop(server); // must not hang
     }

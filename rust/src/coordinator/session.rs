@@ -1,0 +1,553 @@
+//! The weight-stationary chip runtime: load a model once, serve batches.
+//!
+//! `FatChip::run_conv_layer` replans the grid and rewrites every SACU
+//! weight register on every call — fine for one-shot experiments, wrong
+//! for serving.  The paper's Combined-Stationary mapping (§III-D) exists
+//! precisely so weights stay resident while activations stream, and this
+//! module models that contract end to end:
+//!
+//! - [`ModelSpec`] describes a multi-layer ternary conv pipeline (filters
+//!   plus folded BN per layer, optional stem pooling and classifier head),
+//!   e.g. the ResNet-18 backbone from
+//!   [`crate::nn::resnet::resnet18_conv_layers_scaled`];
+//! - [`LoadedModel::load`] plans the grid and packs every tile's SACU
+//!   weight registers **once**, charging the `T_WREG_NS` register-write
+//!   time into a one-time `loading` metric (parallel across a step's
+//!   CMAs, sequential across steps — the same convention as the ledger);
+//! - [`ChipSession::infer`] streams a request's activations against the
+//!   resident registers: per-request metrics report **zero** weight
+//!   register writes, so the loading cost amortizes across a batch
+//!   exactly as it would on the physical chip.
+//!
+//! Between conv layers the DPU applies BN + ReLU, the stem's max pool,
+//! and 8-bit requantization; the optional head runs global average
+//! pooling plus a ternary FC on dequantized floats.
+
+use crate::coordinator::accelerator::{ChipConfig, FatChip, TileWeights, T_WREG_NS};
+use crate::coordinator::dpu::Dpu;
+use crate::coordinator::metrics::ChipMetrics;
+use crate::error::{bail, ensure, Result};
+use crate::mapping::img2col::img2col;
+use crate::mapping::planner::GridPlan;
+use crate::nn::layers::{self, TernaryFilter};
+use crate::nn::resnet::{resnet18_conv_layers_scaled, ConvLayer};
+use crate::nn::tensor::Tensor4;
+use crate::testutil::Rng;
+
+/// One conv stage of a model: geometry, resident ternary weights, folded
+/// BN parameters, and whether the DPU max-pools the output (ResNet stem).
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub layer: ConvLayer,
+    pub filter: TernaryFilter,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// Apply the DPU's 2x2/s2 max pool after BN + ReLU.
+    pub pool_after: bool,
+}
+
+/// Optional classifier head: global average pool + ternary FC.
+#[derive(Debug, Clone)]
+pub struct HeadSpec {
+    pub classes: usize,
+    /// (c_last, classes) row-major, input-major: `w[i * classes + o]`.
+    pub wfc: Vec<i8>,
+    pub bfc: Vec<f32>,
+}
+
+/// A complete model: what gets loaded onto the chip once and then served.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    pub head: Option<HeadSpec>,
+}
+
+impl ModelSpec {
+    /// The input tensor geometry a request must match: (n, c, h, w).
+    pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
+        let l = &self.layers[0].layer;
+        (l.n, l.c, l.h, l.w)
+    }
+
+    /// A random request tensor for this model: quantization-friendly
+    /// values in [0, 1] (`k / 255`), shaped like the model input.  The
+    /// single source of the request convention for CLI, server, examples
+    /// and benches.
+    pub fn random_input(&self, rng: &mut Rng) -> Tensor4 {
+        let (n, c, h, w) = self.input_geometry();
+        let mut x = Tensor4::zeros(n, c, h, w);
+        x.fill_random_unit(rng);
+        x
+    }
+
+    /// Total ternary weights resident on the chip.
+    pub fn weight_count(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.weights()).sum::<usize>()
+            + self.head.as_ref().map_or(0, |h| h.wfc.len())
+    }
+
+    /// Mean weight sparsity across the conv layers.
+    pub fn sparsity(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.filter.sparsity()).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// Check internal consistency: filter/BN dims per layer and exact
+    /// layer-to-layer chaining of channels, batch, and spatial extents
+    /// (through the stem pool when `pool_after` is set).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "model `{}` has no layers", self.name);
+        for (i, ls) in self.layers.iter().enumerate() {
+            let l = &ls.layer;
+            ensure!(
+                ls.filter.kn == l.kn && ls.filter.c == l.c
+                    && ls.filter.kh == l.kh && ls.filter.kw == l.kw,
+                "layer {i} ({}): filter dims do not match geometry", l.name
+            );
+            ensure!(
+                ls.gamma.len() == l.kn && ls.beta.len() == l.kn,
+                "layer {i} ({}): BN params must be per output channel", l.name
+            );
+        }
+        for i in 1..self.layers.len() {
+            let prev = &self.layers[i - 1];
+            let cur = &self.layers[i].layer;
+            let p = &prev.layer;
+            ensure!(cur.n == p.n, "layer {i}: batch changes mid-model");
+            ensure!(
+                cur.c == p.kn,
+                "layer {i} ({}): consumes {} channels but `{}` produces {}",
+                cur.name, cur.c, p.name, p.kn
+            );
+            let (mut eh, mut ew) = (p.oh(), p.ow());
+            if prev.pool_after {
+                eh = (eh / 2).max(1);
+                ew = (ew / 2).max(1);
+            }
+            ensure!(
+                cur.h == eh && cur.w == ew,
+                "layer {i} ({}): expects {}x{} input but `{}` produces {}x{}",
+                cur.name, cur.h, cur.w, p.name, eh, ew
+            );
+        }
+        if let Some(h) = &self.head {
+            let last = &self.layers[self.layers.len() - 1].layer;
+            ensure!(h.classes > 0, "head: zero classes");
+            ensure!(
+                h.wfc.len() == last.kn * h.classes,
+                "head: FC wants {} weights, got {}",
+                last.kn * h.classes,
+                h.wfc.len()
+            );
+            ensure!(h.bfc.len() == h.classes, "head: bias/classes mismatch");
+        }
+        Ok(())
+    }
+
+    /// Synthetic weights/BN for a conv-layer chain at a target sparsity —
+    /// the Fig. 14 workload generator lifted to whole models.
+    /// `pool_after_first` models the ResNet stem.
+    pub fn synthetic(
+        name: &str,
+        geo: &[ConvLayer],
+        pool_after_first: bool,
+        sparsity: f64,
+        seed: u64,
+        classes: Option<usize>,
+    ) -> Self {
+        assert!(!geo.is_empty(), "synthetic model needs at least one conv layer");
+        let mut rng = Rng::new(seed);
+        let layers: Vec<LayerSpec> = geo
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerSpec {
+                layer: *l,
+                filter: TernaryFilter::new(
+                    l.kn, l.c, l.kh, l.kw,
+                    rng.ternary_vec(l.kn * l.j_dim(), sparsity),
+                ),
+                // positive, smallish scales keep the float path stable
+                gamma: (0..l.kn).map(|_| rng.f32_range(0.02, 0.08)).collect(),
+                beta: (0..l.kn).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+                pool_after: pool_after_first && i == 0,
+            })
+            .collect();
+        let head = classes.map(|classes| {
+            let c_last = geo[geo.len() - 1].kn;
+            HeadSpec {
+                classes,
+                wfc: rng.ternary_vec(c_last * classes, sparsity),
+                bfc: (0..classes).map(|_| rng.f32_range(-0.2, 0.2)).collect(),
+            }
+        });
+        Self { name: name.to_string(), layers, head }
+    }
+
+    /// A scaled ResNet-18 with synthetic ternary weights — the end-to-end
+    /// serving workload.  See `resnet18_conv_layers_scaled` for geometry.
+    pub fn synthetic_resnet18(
+        batch: usize,
+        input_hw: usize,
+        ch_div: usize,
+        sparsity: f64,
+        seed: u64,
+        classes: usize,
+    ) -> Self {
+        let geo = resnet18_conv_layers_scaled(batch, input_hw, ch_div);
+        Self::synthetic("resnet18", &geo, true, sparsity, seed, Some(classes))
+    }
+}
+
+/// One layer planned onto the grid with its weight registers packed.
+#[derive(Debug, Clone)]
+pub struct PlannedLayer {
+    pub plan: GridPlan,
+    pub tiles: Vec<TileWeights>,
+}
+
+/// A model resident on the chip: grid planned and every SACU weight
+/// register packed **once**.  `loading` carries the one-time cost.
+pub struct LoadedModel {
+    pub cfg: ChipConfig,
+    pub spec: ModelSpec,
+    planned: Vec<PlannedLayer>,
+    /// One-time cost of writing the weight registers (and planning).
+    pub loading: ChipMetrics,
+}
+
+impl LoadedModel {
+    pub fn load(cfg: ChipConfig, spec: ModelSpec) -> Result<Self> {
+        spec.validate()?;
+        let planner = cfg.planner();
+        let mut loading = ChipMetrics::default();
+        let mut planned = Vec::with_capacity(spec.layers.len());
+        for ls in &spec.layers {
+            let plan = GridPlan::plan(&ls.layer, planner);
+            let tiles = TileWeights::pack_plan(&ls.filter, &plan);
+            // Register writes happen in parallel across a step's CMAs and
+            // sequentially across steps — the same folding convention the
+            // per-layer ledger uses, so naive-vs-resident is comparable.
+            for step in 0..plan.steps {
+                let mut step_writes = 0u64;
+                let mut step_max_ns = 0.0f64;
+                for (a, t) in plan.assignments.iter().zip(&tiles) {
+                    if a.step == step {
+                        step_writes += t.wreg_writes;
+                        step_max_ns = step_max_ns.max(t.wreg_writes as f64 * T_WREG_NS);
+                    }
+                }
+                loading.weight_reg_writes += step_writes;
+                loading.weight_load_ns += step_max_ns;
+                loading.latency_ns += step_max_ns;
+            }
+            planned.push(PlannedLayer { plan, tiles });
+        }
+        Ok(Self { cfg, spec, planned, loading })
+    }
+
+    pub fn planned_layers(&self) -> &[PlannedLayer] {
+        &self.planned
+    }
+}
+
+/// The result of serving one request through the resident model.
+#[derive(Debug, Clone)]
+pub struct ModelOutput {
+    /// Final backbone feature map, dequantized to floats.
+    pub features: Tensor4,
+    /// Classifier logits when the model has a head.
+    pub logits: Option<Vec<Vec<f32>>>,
+    /// Per-request chip + DPU metrics.  `weight_reg_writes` is zero: the
+    /// registers were written when the model was loaded, not per request.
+    pub metrics: ChipMetrics,
+}
+
+/// A persistent serving session: one chip, one resident model.
+pub struct ChipSession {
+    chip: FatChip,
+    model: LoadedModel,
+    dpu: Dpu,
+    served: u64,
+}
+
+impl ChipSession {
+    /// Plan the model and write its weight registers (the one-time cost).
+    pub fn new(cfg: ChipConfig, spec: ModelSpec) -> Result<Self> {
+        let model = LoadedModel::load(cfg, spec)?;
+        Ok(Self { chip: FatChip::new(cfg), model, dpu: Dpu, served: 0 })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.model.spec
+    }
+
+    /// The resident model (plans + packed registers).
+    pub fn model(&self) -> &LoadedModel {
+        &self.model
+    }
+
+    /// One-time loading metrics (weight-register writes + planning).
+    pub fn loading(&self) -> &ChipMetrics {
+        &self.model.loading
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Loading latency amortized over the requests served so far, ns.
+    pub fn amortized_loading_ns(&self) -> f64 {
+        self.model.loading.weight_load_ns / (self.served.max(1) as f64)
+    }
+
+    /// Serve one request: float activations in [0, 1], shaped like the
+    /// model input.  The DPU quantizes to the arrays' 8-bit format, every
+    /// conv runs against the resident weight registers, and BN + ReLU
+    /// (+ stem pool) + requantization run between layers.
+    pub fn infer(&mut self, x: &Tensor4) -> Result<ModelOutput> {
+        let want = self.model.spec.input_geometry();
+        if x.shape() != want {
+            bail!(
+                "request shape {:?} does not match model input {:?}",
+                x.shape(),
+                want
+            );
+        }
+        let mut metrics = ChipMetrics::default();
+        let dpu = self.dpu;
+
+        // entry quantization: [0,1] floats -> 8-bit ints, scale 255
+        let mut scale = 255.0f32;
+        let q0 = dpu.requantize(&x.data, scale);
+        metrics.dpu_ns += q0.latency_ns;
+        metrics.latency_ns += q0.latency_ns;
+        metrics.energy_pj += q0.energy_pj;
+        let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q0.values);
+
+        for (ls, pl) in self.model.spec.layers.iter().zip(&self.model.planned) {
+            // ternary conv against the *resident* registers: no wreg cost
+            let ax = img2col(&cur, &ls.layer);
+            let run = self.chip.run_planned(&ax, &ls.layer, &pl.plan, &pl.tiles, false);
+            metrics.add(&run.metrics);
+
+            // DPU: BN (dequant folded into gamma) + ReLU.  The NCHW buffer
+            // is (n * c) channel blocks of oh*ow values, so the per-channel
+            // params repeat per batch element.
+            let per_ch = run.output.h * run.output.w;
+            let mut gamma_rep = Vec::with_capacity(run.output.n * ls.gamma.len());
+            let mut beta_rep = Vec::with_capacity(run.output.n * ls.beta.len());
+            for _ in 0..run.output.n {
+                gamma_rep.extend(ls.gamma.iter().map(|g| g / scale));
+                beta_rep.extend_from_slice(&ls.beta);
+            }
+            let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
+            metrics.dpu_ns += pass.latency_ns;
+            metrics.latency_ns += pass.latency_ns;
+            metrics.energy_pj += pass.energy_pj;
+            let mut t = Tensor4::from_vec(
+                run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
+            );
+
+            if ls.pool_after {
+                let (pooled, ns, pj) = dpu.max_pool2(&t);
+                metrics.dpu_ns += ns;
+                metrics.latency_ns += ns;
+                metrics.energy_pj += pj;
+                t = pooled;
+            }
+
+            // requantize for the next layer's arrays
+            let next_scale = Dpu::calibrate_scale(&t.data);
+            let q = dpu.requantize(&t.data, next_scale);
+            metrics.dpu_ns += q.latency_ns;
+            metrics.latency_ns += q.latency_ns;
+            metrics.energy_pj += q.energy_pj;
+            cur = Tensor4::from_vec(t.n, t.c, t.h, t.w, q.values);
+            scale = next_scale;
+        }
+
+        // dequantize the backbone output
+        let features = Tensor4::from_vec(
+            cur.n, cur.c, cur.h, cur.w,
+            cur.data.iter().map(|&v| v / scale).collect(),
+        );
+        let logits = self.model.spec.head.as_ref().map(|h| {
+            let pooled = layers::global_avg_pool(&features);
+            layers::linear_ternary(&pooled, &h.wfc, features.c, h.classes, &h.bfc)
+        });
+        self.served += 1;
+        Ok(ModelOutput { features, logits, metrics })
+    }
+
+    /// Serve a batch of requests against the resident model.
+    pub fn run_batch(&mut self, xs: &[Tensor4]) -> Result<Vec<ModelOutput>> {
+        xs.iter().map(|x| self.infer(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accelerator::FatChip;
+
+    /// A tiny but multi-layer spec (with stem pool + head) that keeps the
+    /// bit-accurate tests fast.
+    fn tiny_spec(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "t1", n: 2, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+            // pool after t1: 8x8 -> 4x4
+            ConvLayer { name: "t2", n: 2, c: 4, h: 4, w: 4, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "t3", n: 2, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ];
+        ModelSpec::synthetic("tiny", &geo, true, 0.6, seed, Some(5))
+    }
+
+    fn random_input(spec: &ModelSpec, seed: u64) -> Tensor4 {
+        spec.random_input(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn spec_validates_and_rejects_broken_chains() {
+        let spec = tiny_spec(1);
+        assert!(spec.validate().is_ok());
+        assert!(spec.sparsity() > 0.3 && spec.sparsity() < 0.9);
+
+        let mut bad = tiny_spec(1);
+        bad.layers[1].layer.c = 5; // t1 produces 4 channels
+        assert!(bad.validate().is_err());
+
+        let mut bad_spatial = tiny_spec(1);
+        bad_spatial.layers[0].pool_after = false; // t2 expects the pooled 4x4
+        assert!(bad_spatial.validate().is_err());
+
+        let mut bad_head = tiny_spec(1);
+        bad_head.head.as_mut().unwrap().wfc.pop();
+        assert!(bad_head.validate().is_err());
+    }
+
+    #[test]
+    fn synthetic_resnet18_is_a_valid_17_layer_model() {
+        let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 42, 10);
+        assert!(spec.validate().is_ok());
+        assert_eq!(spec.layers.len(), 17);
+        assert!(spec.layers[0].pool_after);
+        assert!(spec.head.is_some());
+        assert!(spec.weight_count() > 0);
+        // session-loadable end to end
+        let session = ChipSession::new(ChipConfig::fat(), spec).unwrap();
+        assert!(session.loading().weight_reg_writes > 0);
+    }
+
+    #[test]
+    fn second_batch_is_bit_identical_with_zero_weight_writes() {
+        let mut session = ChipSession::new(ChipConfig::fat(), tiny_spec(7)).unwrap();
+        let xs: Vec<Tensor4> = (0..3).map(|i| random_input(session.spec(), 100 + i)).collect();
+
+        let first = session.run_batch(&xs).unwrap();
+        let second = session.run_batch(&xs).unwrap();
+        assert_eq!(session.served(), 6);
+
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.features.data, b.features.data, "resident weights must not drift");
+            assert_eq!(a.logits, b.logits);
+            // the resident path never rewrites weight registers
+            assert_eq!(a.metrics.weight_reg_writes, 0);
+            assert_eq!(b.metrics.weight_reg_writes, 0);
+            assert_eq!(a.metrics.weight_load_ns, 0.0);
+        }
+        // but the one-time load did happen, and is visible in the split
+        assert!(session.loading().weight_reg_writes > 0);
+        assert!(session.loading().weight_load_ns > 0.0);
+        assert!(session.amortized_loading_ns() < session.loading().weight_load_ns);
+    }
+
+    #[test]
+    fn session_matches_naive_per_layer_composition() {
+        // The resident pipeline must produce exactly what composing
+        // FatChip::run_conv_layer + the same DPU steps produces.
+        let cfg = ChipConfig::fat();
+        let spec = tiny_spec(9);
+        let mut session = ChipSession::new(cfg, spec.clone()).unwrap();
+        let x = random_input(&spec, 11);
+        let out = session.infer(&x).unwrap();
+
+        // naive composition
+        let chip = FatChip::new(cfg);
+        let dpu = Dpu;
+        let mut scale = 255.0f32;
+        let q0 = dpu.requantize(&x.data, scale);
+        let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q0.values);
+        for ls in &spec.layers {
+            let run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+            assert!(run.metrics.weight_reg_writes > 0, "naive path reloads registers");
+            let per_ch = run.output.h * run.output.w;
+            let mut gamma_rep = Vec::new();
+            let mut beta_rep = Vec::new();
+            for _ in 0..run.output.n {
+                gamma_rep.extend(ls.gamma.iter().map(|g| g / scale));
+                beta_rep.extend_from_slice(&ls.beta);
+            }
+            let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
+            let mut t = Tensor4::from_vec(
+                run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
+            );
+            if ls.pool_after {
+                t = dpu.max_pool2(&t).0;
+            }
+            let next_scale = Dpu::calibrate_scale(&t.data);
+            let q = dpu.requantize(&t.data, next_scale);
+            cur = Tensor4::from_vec(t.n, t.c, t.h, t.w, q.values);
+            scale = next_scale;
+        }
+        let want: Vec<f32> = cur.data.iter().map(|&v| v / scale).collect();
+        assert_eq!(out.features.data, want, "resident and naive paths must agree bit-for-bit");
+    }
+
+    #[test]
+    fn loading_amortizes_at_least_eight_fold_over_a_batch() {
+        // Acceptance criterion: on an 8-request batch, total simulated
+        // weight-register write time on the session path is <= 1/8 of the
+        // naive per-request path.
+        let cfg = ChipConfig::fat();
+        let spec = tiny_spec(13);
+        let mut session = ChipSession::new(cfg, spec.clone()).unwrap();
+        let xs: Vec<Tensor4> = (0..8).map(|i| random_input(&spec, 200 + i)).collect();
+        let outs = session.run_batch(&xs).unwrap();
+
+        // session: one-time loading only
+        let session_wreg_ns: f64 = session.loading().weight_load_ns
+            + outs.iter().map(|o| o.metrics.weight_load_ns).sum::<f64>();
+
+        // naive: every request re-runs run_conv_layer per layer
+        let chip = FatChip::new(cfg);
+        let mut naive_wreg_ns = 0.0;
+        for x in &xs {
+            let q: Vec<f32> = x.data.iter().map(|&v| (v * 255.0).round()).collect();
+            let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q);
+            for ls in &spec.layers {
+                let run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+                naive_wreg_ns += run.metrics.weight_load_ns;
+                // re-quantize roughly for the next layer (the weight-load
+                // cost is activation-independent, so exact values between
+                // layers do not matter here)
+                let s = Dpu::calibrate_scale(&run.output.data);
+                cur = Tensor4::from_vec(
+                    run.output.n, run.output.c, run.output.h, run.output.w,
+                    run.output.data.iter().map(|&v| (v * s).round().clamp(0.0, 255.0)).collect(),
+                );
+                if ls.pool_after {
+                    cur = Dpu.max_pool2(&cur).0;
+                }
+            }
+        }
+        assert!(naive_wreg_ns > 0.0);
+        assert!(
+            session_wreg_ns <= naive_wreg_ns / 8.0 + 1e-9,
+            "session {session_wreg_ns} ns vs naive {naive_wreg_ns} ns"
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal in-tree error type with an `anyhow`-compatible surface.
+//!
+//! The image is offline (no crates.io), so the crate carries its own
+//! error plumbing: a string-backed [`Error`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and a [`Context`] trait for chaining messages.
+//! Context chains are joined eagerly with `": "`, so both `{}` and `{:#}`
+//! render the full `outer: inner: root` chain the way callers expect.
+
+use std::fmt;
+
+/// A string-backed error with its context chain pre-joined.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or missing value) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (like `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] (like `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// Make the macros importable alongside the types: `use crate::error::{anyhow, bail}`.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        bail!("unconditional")
+    }
+
+    #[test]
+    fn macros_build_formatted_errors() {
+        let e = anyhow!("bad thing {} at {}", 7, "here");
+        assert_eq!(e.to_string(), "bad thing 7 at here");
+        let inline = 42;
+        assert_eq!(anyhow!("value {inline}").to_string(), "value 42");
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(fails(true).unwrap_err().to_string(), "unconditional");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let e2 = e.context("outermost");
+        assert!(format!("{e2:#}").starts_with("outermost: outer: "));
+        let missing: Option<u32> = None;
+        assert_eq!(missing.with_context(|| "absent").unwrap_err().to_string(), "absent");
+    }
+
+    #[test]
+    fn from_std_error_works_with_question_mark() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+}

@@ -21,9 +21,34 @@
 //!   (Direct-OS, Img2Col-OS/IS/WS/CS) with the CMA grid planner of Fig. 9.
 //! - [`coordinator`] — the 4096-CMA chip: scheduler, DPU (BN + ReLU),
 //!   metrics, and a thread-pool inference server.
-//! - [`runtime`] — PJRT bridge (xla crate): loads the AOT-compiled HLO text
-//!   artifacts produced by `python/compile/aot.py` and cross-validates the
-//!   simulator against XLA execution.  Python never runs on the request path.
+//! - [`runtime`] — PJRT bridge: loads the AOT-compiled HLO text artifacts
+//!   produced by `python/compile/aot.py` and cross-validates the simulator
+//!   against XLA execution.  The offline image has no `xla` crate, so the
+//!   engine is a graceful stub that reports PJRT as unavailable; the
+//!   manifest/signature plumbing is real and tested.
+//! - [`error`] — in-tree `anyhow`-style error type and macros (the image is
+//!   offline; the crate is dependency-free).
+//!
+//! ## The runtime / session layer
+//!
+//! The chip is *weight-stationary* (§III-D Combined-Stationary mapping):
+//! weights live in the SACU weight registers while activations stream.
+//! [`coordinator::session`] models exactly that for serving:
+//!
+//! - [`coordinator::session::ModelSpec`] — a multi-layer ternary conv
+//!   pipeline (filters + folded BN per layer), e.g. the ResNet-18 backbone
+//!   from [`nn::resnet`].
+//! - [`coordinator::session::LoadedModel`] — the spec planned onto the
+//!   grid with every SACU weight register packed **once**; the one-time
+//!   cost is captured in split `loading` metrics (`weight_load_ns`,
+//!   `weight_reg_writes`).
+//! - [`coordinator::session::ChipSession`] — serves batched activations
+//!   against the resident weights: per-request metrics report **zero**
+//!   weight-register writes, so loading amortizes across requests exactly
+//!   as on the physical chip.
+//! - [`coordinator::server::InferenceServer`] — a worker pool where each
+//!   worker holds a resident model (one session per CMA slice) and serves
+//!   model-level requests, not per-layer conv jobs.
 
 pub mod addition;
 pub mod array;
@@ -32,6 +57,7 @@ pub mod circuit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod mapping;
 pub mod nn;
 pub mod report;

@@ -1,12 +1,11 @@
 //! `fat` — leader entrypoint for the FAT accelerator reproduction.
 
-use anyhow::Result;
-
-use fat_imc::addition::scheme;
 use fat_imc::cli::{Args, HELP};
 use fat_imc::config::FatConfig;
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request};
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::error::Result;
 use fat_imc::mapping::schemes::{evaluate_all, HwParams};
 use fat_imc::nn::layers::TernaryFilter;
 use fat_imc::nn::resnet::{resnet18_conv_layers, ConvLayer};
@@ -15,6 +14,7 @@ use fat_imc::report::{ratio, Table};
 use fat_imc::runtime::engine::Engine;
 use fat_imc::runtime::verify::verify_ternary_gemm;
 use fat_imc::testutil::Rng;
+use fat_imc::addition::scheme;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +31,7 @@ fn main() {
 fn pick_layer(idx: usize) -> Result<ConvLayer> {
     let layers = resnet18_conv_layers();
     if idx == 0 || idx > layers.len() {
-        anyhow::bail!("--layer must be 1..={}", layers.len());
+        fat_imc::bail!("--layer must be 1..={}", layers.len());
     }
     Ok(layers[idx - 1])
 }
@@ -65,6 +65,7 @@ fn run(raw: &[String]) -> Result<()> {
         "map" => cmd_map(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "resnet" => cmd_resnet(&args),
         "sweep" => cmd_sweep(&args),
         other => {
             println!("unknown command `{other}`\n\n{HELP}");
@@ -188,7 +189,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let from = args.get_f64("from", 0.0)?;
     let to = args.get_f64("to", 0.9)?;
     let step = args.get_f64("step", 0.1)?;
-    anyhow::ensure!(step > 0.0 && from <= to, "need from <= to and step > 0");
+    fat_imc::ensure!(step > 0.0 && from <= to, "need from <= to and step > 0");
     let layers = resnet18_conv_layers();
     let mut fat_cfg = AnalyticConfig::fat();
     let mut para_cfg = AnalyticConfig::parapim_baseline();
@@ -223,22 +224,33 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.allow(&["requests", "workers"])?;
+    args.allow(&["requests", "workers", "batch", "input", "scale", "sparsity", "classes"])?;
     let n_req = args.get_usize("requests", 16)?;
     let workers = args.get_usize("workers", 4)?;
+    let batch = args.get_usize("batch", 1)?;
+    let input = args.get_usize("input", 16)?;
+    let scale = args.get_usize("scale", 16)?;
+    let sparsity = args.get_f64("sparsity", 0.7)?;
+    let classes = args.get_usize("classes", 10)?;
     let mut rng = Rng::new(7);
-    let layer = ConvLayer { name: "serve", n: 1, c: 8, h: 12, w: 12, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
 
-    println!("starting {workers} workers, pushing {n_req} requests...");
-    let server = InferenceServer::start(ChipConfig::fat(), workers);
+    let spec = ModelSpec::synthetic_resnet18(batch, input, scale, sparsity, 7, classes);
+    println!(
+        "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) on {workers} workers...",
+        spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
+    );
+    let server = InferenceServer::start(ChipConfig::fat(), workers, spec.clone())?;
+    let load_ns: f64 = server.loading_metrics().iter().map(|m| m.weight_load_ns).sum();
+    let load_writes: u64 = server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
+    println!(
+        "  model resident: {load_writes} weight-register writes, {:.1} us one-time load (all workers)",
+        load_ns / 1e3
+    );
+
+    println!("pushing {n_req} requests...");
     let t0 = std::time::Instant::now();
     for id in 0..n_req as u64 {
-        let mut x = Tensor4::zeros(layer.n, layer.c, layer.h, layer.w);
-        x.fill_random_ints(&mut rng, 0, 256);
-        let filter = TernaryFilter::new(
-            layer.kn, layer.c, 3, 3, rng.ternary_vec(layer.kn * layer.j_dim(), 0.7),
-        );
-        server.submit(Request { id, x, filter, layer });
+        server.submit(Request { id, x: spec.random_input(&mut rng) })?;
     }
     let responses = server.collect(n_req);
     let wall = t0.elapsed().as_secs_f64();
@@ -246,7 +258,102 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  served {n_req} requests in {wall:.3}s ({:.1} req/s)", n_req as f64 / wall);
     println!("  host service time p50/p99: {:.0}/{:.0} us", p50, p99);
     let sim_ns: f64 = responses.iter().map(|r| r.metrics.latency_ns).sum();
-    println!("  simulated chip time total: {:.1} us", sim_ns / 1e3);
+    let wreg: u64 = responses.iter().map(|r| r.metrics.weight_reg_writes).sum();
+    println!("  simulated compute time total: {:.1} us", sim_ns / 1e3);
+    println!(
+        "  per-request weight-register writes: {wreg} (weights are resident); \
+naive path would have paid the {:.1} us load {n_req} more times",
+        load_ns / 1e3
+    );
     server.shutdown();
+    Ok(())
+}
+
+/// End-to-end ResNet-18 on the weight-stationary session: the geometry
+/// table driven layer-by-layer through the chip with DPU BN + ReLU (and
+/// the stem max pool) between layers.
+fn cmd_resnet(args: &Args) -> Result<()> {
+    args.allow(&["batch", "input", "scale", "sparsity", "layers", "requests", "classes"])?;
+    let batch = args.get_usize("batch", 1)?;
+    let input = args.get_usize("input", 16)?;
+    let scale = args.get_usize("scale", 16)?;
+    let sparsity = args.get_f64("sparsity", 0.7)?;
+    let n_req = args.get_usize("requests", 4)?.max(1);
+    let classes = args.get_usize("classes", 10)?;
+    let geo = fat_imc::nn::resnet::resnet18_conv_layers_scaled(batch, input, scale);
+    let n_layers = args.get_usize("layers", geo.len())?;
+    if n_layers == 0 || n_layers > geo.len() {
+        fat_imc::bail!("--layers must be 1..={}", geo.len());
+    }
+    // the classifier head only makes sense on the full backbone
+    let head = if n_layers == geo.len() { Some(classes) } else { None };
+    let spec = ModelSpec::synthetic("resnet18", &geo[..n_layers], true, sparsity, 0xE2E, head);
+
+    println!(
+        "ResNet-18 (scaled: input {input}x{input}, channels/{scale}, batch {batch}), \
+{n_layers} conv layers, sparsity {:.0}%",
+        spec.sparsity() * 100.0
+    );
+    let mut session = ChipSession::new(ChipConfig::fat(), spec)?;
+
+    let mut t = Table::new(
+        "resident model (planned once, registers written once)",
+        &["layer", "C", "HxW", "KN", "s", "tiles", "steps", "wreg writes"],
+    );
+    for (ls, pl) in session.spec().layers.iter().zip(session.model().planned_layers()) {
+        let writes: u64 = pl.tiles.iter().map(|w| w.wreg_writes).sum();
+        t.row(vec![
+            ls.layer.name.into(),
+            format!("{}", ls.layer.c),
+            format!("{}x{}", ls.layer.h, ls.layer.w),
+            format!("{}", ls.layer.kn),
+            format!("{}", ls.layer.stride),
+            format!("{}", pl.plan.assignments.len()),
+            format!("{}", pl.plan.steps),
+            format!("{writes}"),
+        ]);
+    }
+    println!("{}", t.render());
+    let loading = *session.loading();
+    println!(
+        "one-time load: {} register writes, {:.1} us simulated",
+        loading.weight_reg_writes,
+        loading.weight_load_ns / 1e3
+    );
+
+    let mut rng = Rng::new(0xE2E);
+    let xs: Vec<Tensor4> = (0..n_req).map(|_| session.spec().random_input(&mut rng)).collect();
+    let t0 = std::time::Instant::now();
+    let outs = session.run_batch(&xs)?;
+    let host_s = t0.elapsed().as_secs_f64();
+
+    let mut total = loading;
+    for o in &outs {
+        total.add(&o.metrics);
+    }
+    let compute_ns: f64 = outs.iter().map(|o| o.metrics.latency_ns).sum();
+    let dpu_ns: f64 = outs.iter().map(|o| o.metrics.dpu_ns).sum();
+    println!("served {n_req} requests in {host_s:.2} s host time");
+    println!("  simulated compute : {:.1} us ({:.1} us DPU)", compute_ns / 1e3, dpu_ns / 1e3);
+    println!(
+        "  loading vs compute: {:.1} us once vs {:.1} us/request — naive reloading would add {:.1} us",
+        loading.weight_load_ns / 1e3,
+        compute_ns / 1e3 / n_req as f64,
+        loading.weight_load_ns * (n_req as f64 - 1.0) / 1e3
+    );
+    println!(
+        "  adds {} | skipped {} | senses {} | writes {}",
+        total.adds, total.skipped, total.senses, total.writes
+    );
+    if let Some(logits) = &outs[0].logits {
+        let row = &logits[0];
+        let top = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!("  request 0 logits[0]: argmax class {top} of {}", row.len());
+    }
     Ok(())
 }

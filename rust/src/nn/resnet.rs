@@ -87,6 +87,48 @@ pub fn resnet18_layer10() -> ConvLayer {
     resnet18_conv_layers()[9]
 }
 
+/// Chain-consistent scaled-down ResNet-18 backbone for *bit-accurate*
+/// end-to-end simulation: channel counts divided by `ch_div` (minimum 4,
+/// the 3-channel input stays 3), spatial sizes derived by propagating an
+/// `input_hw` x `input_hw` image through the stem (7x7/s2 conv, then the
+/// DPU's 2x2/s2 max pool) and the stride pattern.  Every layer's `kn`
+/// equals the next layer's `c` by construction, so the table can be driven
+/// layer-by-layer through the chip (see `coordinator::session`).
+///
+/// `ch_div = 1, input_hw = 224` reproduces the full ImageNet geometry of
+/// [`resnet18_conv_layers`] (modulo the batch).
+pub fn resnet18_conv_layers_scaled(batch: usize, input_hw: usize, ch_div: usize) -> Vec<ConvLayer> {
+    assert!(batch > 0 && input_hw > 0 && ch_div > 0);
+    let ch = |c: usize| (c / ch_div).max(4).min(c);
+    fn seg(name: &'static str, n: usize, c: usize, h: usize, kn: usize, stride: usize) -> ConvLayer {
+        ConvLayer { name, n, c, h, w: h, kn, kh: 3, kw: 3, stride, pad: 1 }
+    }
+    let mut layers = Vec::with_capacity(17);
+    let conv1 = ConvLayer {
+        name: "conv1", n: batch, c: 3, h: input_hw, w: input_hw,
+        kn: ch(64), kh: 7, kw: 7, stride: 2, pad: 3,
+    };
+    // the DPU's 2x2/s2 max pool follows conv1 (floor semantics, min 1)
+    let mut h = (conv1.oh() / 2).max(1);
+    layers.push(conv1);
+    let body: [(&'static str, usize, usize, usize); 16] = [
+        ("conv2_1a", 64, 64, 1), ("conv2_1b", 64, 64, 1),
+        ("conv2_2a", 64, 64, 1), ("conv2_2b", 64, 64, 1),
+        ("conv3_1a", 64, 128, 2), ("conv3_1b", 128, 128, 1),
+        ("conv3_2a", 128, 128, 1), ("conv3_2b", 128, 128, 1),
+        ("conv4_1a", 128, 256, 2), ("conv4_1b", 256, 256, 1),
+        ("conv4_2a", 256, 256, 1), ("conv4_2b", 256, 256, 1),
+        ("conv5_1a", 256, 512, 2), ("conv5_1b", 512, 512, 1),
+        ("conv5_2a", 512, 512, 1), ("conv5_2b", 512, 512, 1),
+    ];
+    for (name, c, kn, stride) in body {
+        let l = seg(name, batch, ch(c), h, ch(kn), stride);
+        h = l.oh();
+        layers.push(l);
+    }
+    layers
+}
+
 /// A small TWN CNN matching the AOT-exported L2 model (python/compile/
 /// model.py): used by the end-to-end example.
 pub fn twn_cnn_layers(batch: usize) -> Vec<ConvLayer> {
@@ -129,6 +171,35 @@ mod tests {
             (1.0e9..2.5e9).contains(&(total as f64)),
             "total MACs {total}"
         );
+    }
+
+    #[test]
+    fn scaled_table_chains_layer_to_layer() {
+        for (input, div) in [(32, 8), (16, 16), (64, 4)] {
+            let layers = resnet18_conv_layers_scaled(2, input, div);
+            assert_eq!(layers.len(), 17, "div {div}");
+            // conv1 feeds conv2 through the stem pool
+            assert_eq!(layers[0].kn, layers[1].c);
+            assert_eq!(layers[1].h, (layers[0].oh() / 2).max(1));
+            // every later layer consumes its predecessor exactly
+            for w in layers.windows(2).skip(1) {
+                assert_eq!(w[0].kn, w[1].c, "{} -> {}", w[0].name, w[1].name);
+                assert_eq!(w[0].oh(), w[1].h, "{} -> {}", w[0].name, w[1].name);
+                assert_eq!(w[0].ow(), w[1].w, "{} -> {}", w[0].name, w[1].name);
+            }
+            for l in &layers {
+                assert!(l.oh() >= 1 && l.ow() >= 1, "{} collapses", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_table_at_unit_scale_matches_imagenet_geometry() {
+        let full = resnet18_conv_layers();
+        let scaled = resnet18_conv_layers_scaled(5, 224, 1);
+        for (a, b) in full.iter().zip(&scaled) {
+            assert_eq!((a.c, a.h, a.w, a.kn, a.stride), (b.c, b.h, b.w, b.kn, b.stride), "{}", a.name);
+        }
     }
 
     #[test]

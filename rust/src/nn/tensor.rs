@@ -65,6 +65,15 @@ impl Tensor4 {
             *v = rng.irange(lo, hi) as f32;
         }
     }
+
+    /// Fill with quantization-friendly values in [0, 1] (`k / 255`) — the
+    /// request convention of the serving paths: the DPU's entry
+    /// requantization at scale 255 recovers the integers exactly.
+    pub fn fill_random_unit(&mut self, rng: &mut crate::testutil::Rng) {
+        for v in &mut self.data {
+            *v = rng.below(256) as f32 / 255.0;
+        }
+    }
 }
 
 #[cfg(test)]

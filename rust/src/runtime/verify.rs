@@ -5,7 +5,7 @@
 //! must agree **bit for bit** on the GEMM; the full CNN (float BN) is
 //! compared with a tolerance.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 use crate::coordinator::accelerator::{ChipConfig, FatChip};
 use crate::nn::layers::TernaryFilter;
@@ -32,7 +32,7 @@ pub struct VerifyReport {
 pub fn verify_ternary_gemm(engine: &Engine, seed: u64, sparsity: f64) -> Result<VerifyReport> {
     let info = engine
         .info("ternary_gemm")
-        .ok_or_else(|| anyhow::anyhow!("artifact `ternary_gemm` missing"))?;
+        .ok_or_else(|| crate::anyhow!("artifact `ternary_gemm` missing"))?;
     let (m, k) = (info.inputs[0].shape[0], info.inputs[0].shape[1]);
     let n = info.inputs[1].shape[1];
 

@@ -15,6 +15,10 @@ use fat_imc::runtime::verify::{compare, verify_ternary_gemm};
 use fat_imc::testutil::Rng;
 
 fn artifacts() -> Option<Engine> {
+    if !Engine::backend_available() {
+        eprintln!("SKIP (no PJRT backend in this build; execution tests need a vendored xla)");
+        return None;
+    }
     let dir = Engine::default_dir();
     match Engine::load(&dir) {
         Ok(e) => Some(e),
@@ -147,12 +151,48 @@ fn cli_binary_smoke() {
     let out = std::process::Command::new(exe).args(["help"]).output().unwrap();
     assert!(out.status.success());
 
+    // sweep: assert table *structure*, not a hardcoded speedup constant —
+    // every data row must carry a `N.NNx` speedup column that parses to a
+    // float > 1 (FAT must beat the baseline at every swept sparsity).
     let out = std::process::Command::new(exe)
         .args(["sweep", "--from", "0.4", "--to", "0.8", "--step", "0.2"])
         .output()
         .unwrap();
     assert!(out.status.success());
-    assert!(String::from_utf8_lossy(&out.stdout).contains("10.12x"));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let speedups: Vec<f64> = text
+        .lines()
+        .filter(|l| l.trim_start().ends_with('x') && l.contains('%'))
+        .map(|l| {
+            let cells: Vec<&str> = l.split_whitespace().collect();
+            assert_eq!(cells.len(), 5, "sweep row should have 5 columns: {l}");
+            cells[3]
+                .strip_suffix('x')
+                .unwrap_or_else(|| panic!("speedup cell `{}` not `N.NNx`", cells[3]))
+                .parse::<f64>()
+                .unwrap_or_else(|_| panic!("speedup cell `{}` not a number", cells[3]))
+        })
+        .collect();
+    assert_eq!(speedups.len(), 3, "expected one row per swept sparsity:\n{text}");
+    for s in &speedups {
+        assert!(*s > 1.0, "FAT must beat ParaPIM, got {s}x:\n{text}");
+    }
+    // higher sparsity -> more skipping -> larger speedup
+    assert!(speedups.windows(2).all(|w| w[0] < w[1]), "{speedups:?}");
+
+    // the weight-stationary end-to-end pipeline serves from the CLI
+    let out = std::process::Command::new(exe)
+        .args(["resnet", "--input", "16", "--scale", "16", "--requests", "2"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resnet failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("one-time load"), "{text}");
+    assert!(text.contains("loading vs compute"), "{text}");
 
     // unknown flags must be rejected
     let out = std::process::Command::new(exe).args(["infer", "--bogus", "1"]).output().unwrap();
