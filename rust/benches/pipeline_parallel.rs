@@ -1,0 +1,114 @@
+//! Pipeline-parallel serving bench: shard ResNet-18 across chips and
+//! show the issue-rate win over the single-chip session.
+//!
+//! A single chip serves a request every `serial` ns (the sum of all layer
+//! latencies).  A k-shard pipeline issues a request every `interval` ns —
+//! the slowest stage plus its incoming link leg — because shard k computes
+//! request i+1 while shard k+1 computes request i.  The bench reads both
+//! off the simulated metrics (deterministic), checks the pipelined outputs
+//! stay bit-identical to the single chip, and reports the host wall-clock
+//! of the threaded pipelined server for color.
+
+use fat_imc::bench_harness::{fmt_ns, BenchRun};
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::server::{InferenceServer, Request, ServingMode};
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::coordinator::sharding::PipelineSession;
+use fat_imc::mapping::schemes::HwParams;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::{ratio, Table};
+use fat_imc::testutil::Rng;
+
+const REQUESTS: usize = 6;
+
+fn main() {
+    let mut run = BenchRun::new("pipeline_parallel");
+    let cfg = ChipConfig::fat();
+    let hw = HwParams::default();
+    let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 0x9199, 10);
+    let mut rng = Rng::new(0x919A);
+    let xs: Vec<Tensor4> = (0..REQUESTS).map(|_| spec.random_input(&mut rng)).collect();
+
+    // ---- single chip: the serial baseline --------------------------------
+    let mut single = ChipSession::new(cfg, spec.clone()).expect("fits one chip");
+    let t0 = std::time::Instant::now();
+    let baseline = single.run_batch(&xs).expect("batch");
+    let single_wall = t0.elapsed().as_secs_f64();
+    let serial_ns = baseline.iter().map(|o| o.metrics.latency_ns).sum::<f64>()
+        / baseline.len() as f64;
+
+    let mut table = Table::new(
+        "issue rate: k-shard pipeline vs single chip (simulated)",
+        &["config", "per-request latency", "issue interval", "issue-rate speedup"],
+    );
+    table.row(vec![
+        "single chip".into(),
+        fmt_ns(serial_ns),
+        fmt_ns(serial_ns),
+        ratio(1.0),
+    ]);
+
+    for shards in [2usize, 4] {
+        let mut pipe =
+            PipelineSession::new(cfg, spec.clone(), shards, hw).expect("valid shard count");
+        let po = pipe.infer(&xs[0]).expect("pipelined inference");
+        run.check(
+            &format!("{shards}-shard pipeline output is bit-identical to the single chip"),
+            po.out.features.data == baseline[0].features.data
+                && po.out.logits == baseline[0].logits,
+            "outputs diverged".into(),
+        );
+        // steady state: the slowest stage (plus its incoming link leg)
+        // bounds how often a new request can be issued
+        let interval_ns = po.issue_interval_ns();
+        let latency_ns = po.out.metrics.latency_ns;
+        let speedup = serial_ns / interval_ns;
+        table.row(vec![
+            format!("{shards}-shard pipeline"),
+            fmt_ns(latency_ns),
+            fmt_ns(interval_ns),
+            ratio(speedup),
+        ]);
+        run.check(
+            &format!("{shards}-shard issue interval beats the serial latency"),
+            speedup > 1.1,
+            format!("interval {} vs serial {}", fmt_ns(interval_ns), fmt_ns(serial_ns)),
+        );
+        run.check(
+            &format!("{shards}-shard request pays the link at every boundary"),
+            po.xfer_legs_ns.len() == shards - 1 && po.xfer_legs_ns.iter().all(|&l| l > 0.0),
+            format!("{:?}", po.xfer_legs_ns),
+        );
+    }
+    println!("{}", table.render());
+
+    // ---- threaded pipelined server: stages overlap on real threads ------
+    let server = InferenceServer::start_with(
+        cfg,
+        ServingMode::Pipelined { shards: 4 },
+        spec.clone(),
+    )
+    .expect("pipelined server");
+    let t0 = std::time::Instant::now();
+    for (id, x) in xs.iter().enumerate() {
+        server.submit(Request { id: id as u64, x: x.clone() }).expect("valid request");
+    }
+    let responses = server
+        .collect_timeout(REQUESTS, std::time::Duration::from_secs(600))
+        .expect("all requests served");
+    let pipe_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  host wall-clock, {REQUESTS} requests: single session {single_wall:.3}s vs \
+4-stage pipelined server {pipe_wall:.3}s"
+    );
+    run.check(
+        "threaded pipelined server returns every request bit-identical",
+        responses.len() == REQUESTS
+            && responses
+                .iter()
+                .all(|r| r.features.data == baseline[r.id as usize].features.data),
+        "responses diverged from the single-chip baseline".into(),
+    );
+    server.shutdown();
+    run.finish();
+}

@@ -10,6 +10,7 @@
 use fat_imc::bench_harness::{fmt_ns, BenchRun};
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
 use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::mapping::img2col::{img2col, img2col_into, Img2ColMatrix};
 use fat_imc::nn::resnet::resnet18_conv_layers_scaled;
 use fat_imc::nn::tensor::Tensor4;
 use fat_imc::report::Table;
@@ -108,5 +109,31 @@ fn main() {
         session_compute_ns + session_wreg_ns < naive_total_ns,
         format!("{} vs {}", session_compute_ns + session_wreg_ns, naive_total_ns),
     );
+
+    // ---- hot path: Img2Col scratch reuse (host time) ---------------------
+    // The session reuses one scratch buffer per request per layer instead
+    // of allocating a fresh cols*j matrix every time.  Measure the
+    // transform on a bigger geometry where the allocation is visible.
+    let hot = resnet18_conv_layers_scaled(1, 64, 8)[1]; // 16x16 spatial, 8 ch
+    let mut hx = Tensor4::zeros(hot.n, hot.c, hot.h, hot.w);
+    hx.fill_random_ints(&mut rng, 0, 256);
+    let fresh = run.time("img2col, fresh allocation per call", || img2col(&hx, &hot));
+    let mut scratch = Img2ColMatrix::empty();
+    img2col_into(&hx, &hot, &mut scratch); // warm the buffer to full size
+    let reused =
+        run.time("img2col, reused scratch buffer", || img2col_into(&hx, &hot, &mut scratch));
+    run.check(
+        "scratch reuse is no slower than allocating (the session's hot path)",
+        reused.median_ns <= fresh.median_ns * 1.10,
+        format!("{} reused vs {} fresh", fmt_ns(reused.median_ns), fmt_ns(fresh.median_ns)),
+    );
+    {
+        let want = img2col(&hx, &hot);
+        run.check(
+            "scratch reuse is bit-identical to allocation",
+            scratch.data == want.data && scratch.cols == want.cols && scratch.j == want.j,
+            "transform results diverged".into(),
+        );
+    }
     run.finish();
 }

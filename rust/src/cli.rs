@@ -8,8 +8,8 @@
 //!   infer    --sparsity 0.8 --layer 10 [--baseline] [--config f]
 //!   map      --layer 10          Table VII/VIII mapping sweep for a layer
 //!   verify   [--artifacts dir]   simulator vs PJRT cross-check
-//!   resnet   --input 16 --scale 16 --requests 4
-//!   serve    --requests 16 --workers 4
+//!   resnet   --input 16 --scale 16 --requests 4 [--shards 2]
+//!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2]
 //! ```
 
 use std::collections::HashMap;
@@ -114,11 +114,20 @@ COMMANDS:
       --layers <1..17>     run only the first n conv layers (default 17)
       --requests <n>       requests to serve (default 4)
       --classes <n>        classifier classes (default 10)
+      --shards <n>         shard the model across n chips and serve it as
+                           a pipeline (default 1 = single chip); prints
+                           the shard plan, per-leg transfer costs, and a
+                           bit-exactness check against the single-chip
+                           oracle
   serve                    threaded weight-stationary inference service:
                            each worker holds the model resident on its
                            CMA slice and serves model-level requests
       --requests <n>       requests to push (default 16)
-      --workers <n>        worker threads (default 4)
+      --workers <n>        worker threads (default 4, replicated mode)
+      --mode <m>           replicated | pipelined (default replicated)
+      --shards <n>         pipeline stages in pipelined mode (default 2)
+      --max-batch <n>      micro-batch window per dequeue in replicated
+                           mode (default 1 = no fusion)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   help                     this text
 ";

@@ -10,6 +10,7 @@
 //! layout = interval   # interval (CS) | dense (IS)
 //! op_bits = 8
 //! threads = 8
+//! wreg_per_cma = 8192   # resident 2-bit weight-register entries per CMA
 //! ```
 
 use std::collections::HashMap;
@@ -30,6 +31,8 @@ pub struct FatConfig {
     pub interval_layout: bool,
     pub op_bits: u32,
     pub threads: usize,
+    /// Resident 2-bit weight-register entries per CMA SACU.
+    pub wreg_per_cma: usize,
 }
 
 impl Default for FatConfig {
@@ -41,6 +44,7 @@ impl Default for FatConfig {
             interval_layout: true,
             op_bits: 8,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            wreg_per_cma: 8192,
         }
     }
 }
@@ -66,6 +70,7 @@ impl FatConfig {
                 "cmas" => cfg.cmas = value.parse().context("cmas")?,
                 "op_bits" => cfg.op_bits = value.parse().context("op_bits")?,
                 "threads" => cfg.threads = value.parse().context("threads")?,
+                "wreg_per_cma" => cfg.wreg_per_cma = value.parse().context("wreg_per_cma")?,
                 "skip_zeros" => cfg.skip_zeros = parse_bool(value)?,
                 "sa" => {
                     cfg.sa = match value.to_ascii_lowercase().as_str() {
@@ -86,8 +91,8 @@ impl FatConfig {
                 other => bail!("line {}: unknown key `{other}`", lineno + 1),
             }
         }
-        if cfg.cmas == 0 || cfg.threads == 0 {
-            bail!("cmas and threads must be positive");
+        if cfg.cmas == 0 || cfg.threads == 0 || cfg.wreg_per_cma == 0 {
+            bail!("cmas, threads and wreg_per_cma must be positive");
         }
         Ok(cfg)
     }
@@ -110,6 +115,7 @@ impl FatConfig {
             },
             cmas: self.cmas,
             threads: self.threads,
+            wreg_entries_per_cma: self.wreg_per_cma,
         }
     }
 }
@@ -134,6 +140,15 @@ mod tests {
         assert!(c.skip_zeros);
         assert!(c.interval_layout);
         assert_eq!(c.op_bits, 8);
+        assert_eq!(c.wreg_per_cma, 8192);
+    }
+
+    #[test]
+    fn wreg_per_cma_parses_and_rejects_zero() {
+        let c = FatConfig::parse("wreg_per_cma = 1024").unwrap();
+        assert_eq!(c.wreg_per_cma, 1024);
+        assert_eq!(c.chip().wreg_capacity(), 4096 * 1024);
+        assert!(FatConfig::parse("wreg_per_cma = 0").is_err());
     }
 
     #[test]

@@ -50,6 +50,12 @@ pub struct ChipConfig {
     pub cmas: usize,
     /// Simulation threads (physical parallelism proxy).
     pub threads: usize,
+    /// 2-bit weight-register entries each CMA's SACU can hold resident
+    /// (a 2 KiB register file by default).  The weight-stationary session
+    /// refuses to load a model whose register footprint exceeds
+    /// `wreg_capacity`; larger models must be sharded across chips
+    /// (see `coordinator::sharding`).
+    pub wreg_entries_per_cma: usize,
 }
 
 impl ChipConfig {
@@ -62,6 +68,7 @@ impl ChipConfig {
             layout: DotLayout::interval(8),
             cmas: 4096,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            wreg_entries_per_cma: 8192,
         }
     }
 
@@ -79,6 +86,12 @@ impl ChipConfig {
     /// The grid-planner view of this chip.
     pub fn planner(&self) -> PlannerConfig {
         PlannerConfig { mh: self.layout.max_slots(), mw: 256, cmas: self.cmas }
+    }
+
+    /// Total 2-bit weight-register entries the chip can keep resident —
+    /// the budget a weight-stationary model's register footprint must fit.
+    pub fn wreg_capacity(&self) -> u64 {
+        (self.cmas as u64) * (self.wreg_entries_per_cma as u64)
     }
 }
 

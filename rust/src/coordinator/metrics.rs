@@ -30,6 +30,13 @@ pub struct ChipMetrics {
     pub weight_load_ns: f64,
     /// 2-bit SACU weight-register writes performed.
     pub weight_reg_writes: u64,
+    /// Bytes moved over the inter-chip link (quantized activations at
+    /// shard boundaries; see `coordinator::sharding`).  Zero on any
+    /// single-chip path.
+    pub xfer_bytes: u64,
+    /// Inter-chip transfer latency, ns, already folded into `latency_ns`;
+    /// kept for the per-leg breakdown of the pipeline cost model.
+    pub xfer_ns: f64,
 }
 
 impl ChipMetrics {
@@ -64,13 +71,16 @@ impl ChipMetrics {
         self.dpu_ns += other.dpu_ns;
         self.weight_load_ns += other.weight_load_ns;
         self.weight_reg_writes += other.weight_reg_writes;
+        self.xfer_bytes += other.xfer_bytes;
+        self.xfer_ns += other.xfer_ns;
     }
 
     /// Latency attributable to compute (everything but weight-register
-    /// loading) — the quantity the weight-stationary session leaves per
-    /// request after the one-time load.
+    /// loading and inter-chip transfer) — the quantity the
+    /// weight-stationary session leaves per request after the one-time
+    /// load, with the pipeline's link legs factored out.
     pub fn compute_ns(&self) -> f64 {
-        self.latency_ns - self.weight_load_ns
+        self.latency_ns - self.weight_load_ns - self.xfer_ns
     }
 
     /// Energy-delay product, pJ*ns (Fig. 11's efficiency metric).
@@ -134,6 +144,27 @@ mod tests {
         assert_eq!(a.weight_load_ns, 5.0);
         assert_eq!(a.weight_reg_writes, 110);
         assert_eq!(a.compute_ns(), 11.0);
+    }
+
+    #[test]
+    fn xfer_leg_sums_and_is_excluded_from_compute() {
+        let mut a = ChipMetrics {
+            latency_ns: 10.0,
+            xfer_ns: 3.0,
+            xfer_bytes: 300,
+            ..Default::default()
+        };
+        let b = ChipMetrics {
+            latency_ns: 5.0,
+            xfer_ns: 1.0,
+            xfer_bytes: 100,
+            weight_load_ns: 2.0,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.xfer_ns, 4.0);
+        assert_eq!(a.xfer_bytes, 400);
+        assert_eq!(a.compute_ns(), 15.0 - 4.0 - 2.0);
     }
 
     #[test]

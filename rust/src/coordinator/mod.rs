@@ -3,21 +3,35 @@
 //! This is the L3 "leader" of the three-layer stack: it owns the layer
 //! decomposition (via [`crate::mapping`]), drives the CMAs' SACUs, applies
 //! the DPU (batch-norm + activation, §III-A2 — no quantizer), aggregates
-//! metrics, and exposes the serving stack: a weight-stationary
-//! [`session::ChipSession`] (model loaded once, batches streamed against
-//! the resident SACU registers) and a threaded [`server::InferenceServer`]
-//! where each worker holds a resident model over its slice of the CMAs.
+//! metrics, and exposes the serving stack:
+//!
+//! - [`model`] — [`model::ModelSpec`]: the validated description of a
+//!   multi-layer ternary model (what gets loaded, on one chip or many);
+//! - [`session`] — the weight-stationary single-chip path:
+//!   [`session::ChipSession`] loads a model once and streams batches
+//!   against the resident SACU registers;
+//! - [`sharding`] — the multi-chip path: [`sharding::ShardPlan`] cuts a
+//!   model at layer boundaries into footprint-balanced shards and
+//!   [`sharding::PipelineSession`] chains one resident session per shard,
+//!   charging an inter-chip transfer leg at every boundary;
+//! - [`server`] — a threaded [`server::InferenceServer`] that runs either
+//!   `Replicated` (a resident replica per worker, with a micro-batcher)
+//!   or `Pipelined` (workers are shard *stages* connected by channels).
 
 pub mod accelerator;
 pub mod dpu;
 pub mod metrics;
+pub mod model;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod sharding;
 
 pub use accelerator::{ChipConfig, FatChip, LayerRun, TileWeights};
 pub use dpu::Dpu;
 pub use metrics::ChipMetrics;
+pub use model::{HeadSpec, LayerSpec, ModelSpec};
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
-pub use server::{InferenceServer, Request, Response};
-pub use session::{ChipSession, LoadedModel, ModelOutput, ModelSpec};
+pub use server::{InferenceServer, Request, Response, ServingMode};
+pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};
+pub use sharding::{PipelineSession, ShardPlan};

@@ -1,0 +1,224 @@
+//! Model descriptions for the serving stack: what a chip (or a pipeline
+//! of chips) is asked to keep resident.
+//!
+//! A [`ModelSpec`] is pure description — geometry, ternary weights, folded
+//! BN, optional stem pool and classifier head — with *validation* but no
+//! hardware state.  Loading it onto one chip is [`super::session`]'s job;
+//! cutting it across several chips is [`super::sharding`]'s.
+
+use crate::error::{ensure, Result};
+use crate::nn::layers::TernaryFilter;
+use crate::nn::resnet::{resnet18_conv_layers_scaled, ConvLayer};
+use crate::nn::tensor::Tensor4;
+use crate::testutil::Rng;
+
+/// One conv stage of a model: geometry, resident ternary weights, folded
+/// BN parameters, and whether the DPU max-pools the output (ResNet stem).
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub layer: ConvLayer,
+    pub filter: TernaryFilter,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// Apply the DPU's 2x2/s2 max pool after BN + ReLU.
+    pub pool_after: bool,
+}
+
+/// Optional classifier head: global average pool + ternary FC.
+#[derive(Debug, Clone)]
+pub struct HeadSpec {
+    pub classes: usize,
+    /// (c_last, classes) row-major, input-major: `w[i * classes + o]`.
+    pub wfc: Vec<i8>,
+    pub bfc: Vec<f32>,
+}
+
+/// A complete model: what gets loaded onto the chip once and then served.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    pub head: Option<HeadSpec>,
+}
+
+impl ModelSpec {
+    /// The input tensor geometry a request must match: (n, c, h, w).
+    pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
+        let l = &self.layers[0].layer;
+        (l.n, l.c, l.h, l.w)
+    }
+
+    /// A random request tensor for this model: quantization-friendly
+    /// values in [0, 1] (`k / 255`), shaped like the model input.  The
+    /// single source of the request convention for CLI, server, examples
+    /// and benches.
+    pub fn random_input(&self, rng: &mut Rng) -> Tensor4 {
+        let (n, c, h, w) = self.input_geometry();
+        let mut x = Tensor4::zeros(n, c, h, w);
+        x.fill_random_unit(rng);
+        x
+    }
+
+    /// Total ternary weights resident on the chip.
+    pub fn weight_count(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.weights()).sum::<usize>()
+            + self.head.as_ref().map_or(0, |h| h.wfc.len())
+    }
+
+    /// Mean weight sparsity across the conv layers.
+    pub fn sparsity(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.filter.sparsity()).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// Check internal consistency: filter/BN dims per layer and exact
+    /// layer-to-layer chaining of channels, batch, and spatial extents
+    /// (through the stem pool when `pool_after` is set).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "model `{}` has no layers", self.name);
+        for (i, ls) in self.layers.iter().enumerate() {
+            let l = &ls.layer;
+            ensure!(
+                ls.filter.kn == l.kn && ls.filter.c == l.c
+                    && ls.filter.kh == l.kh && ls.filter.kw == l.kw,
+                "layer {i} ({}): filter dims do not match geometry", l.name
+            );
+            ensure!(
+                ls.gamma.len() == l.kn && ls.beta.len() == l.kn,
+                "layer {i} ({}): BN params must be per output channel", l.name
+            );
+        }
+        for i in 1..self.layers.len() {
+            let prev = &self.layers[i - 1];
+            let cur = &self.layers[i].layer;
+            let p = &prev.layer;
+            ensure!(cur.n == p.n, "layer {i}: batch changes mid-model");
+            ensure!(
+                cur.c == p.kn,
+                "layer {i} ({}): consumes {} channels but `{}` produces {}",
+                cur.name, cur.c, p.name, p.kn
+            );
+            let (mut eh, mut ew) = (p.oh(), p.ow());
+            if prev.pool_after {
+                eh = (eh / 2).max(1);
+                ew = (ew / 2).max(1);
+            }
+            ensure!(
+                cur.h == eh && cur.w == ew,
+                "layer {i} ({}): expects {}x{} input but `{}` produces {}x{}",
+                cur.name, cur.h, cur.w, p.name, eh, ew
+            );
+        }
+        if let Some(h) = &self.head {
+            let last = &self.layers[self.layers.len() - 1].layer;
+            ensure!(h.classes > 0, "head: zero classes");
+            ensure!(
+                h.wfc.len() == last.kn * h.classes,
+                "head: FC wants {} weights, got {}",
+                last.kn * h.classes,
+                h.wfc.len()
+            );
+            ensure!(h.bfc.len() == h.classes, "head: bias/classes mismatch");
+        }
+        Ok(())
+    }
+
+    /// Synthetic weights/BN for a conv-layer chain at a target sparsity —
+    /// the Fig. 14 workload generator lifted to whole models.
+    /// `pool_after_first` models the ResNet stem.
+    pub fn synthetic(
+        name: &str,
+        geo: &[ConvLayer],
+        pool_after_first: bool,
+        sparsity: f64,
+        seed: u64,
+        classes: Option<usize>,
+    ) -> Self {
+        assert!(!geo.is_empty(), "synthetic model needs at least one conv layer");
+        let mut rng = Rng::new(seed);
+        let layers: Vec<LayerSpec> = geo
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerSpec {
+                layer: *l,
+                filter: TernaryFilter::new(
+                    l.kn, l.c, l.kh, l.kw,
+                    rng.ternary_vec(l.kn * l.j_dim(), sparsity),
+                ),
+                // positive, smallish scales keep the float path stable
+                gamma: (0..l.kn).map(|_| rng.f32_range(0.02, 0.08)).collect(),
+                beta: (0..l.kn).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+                pool_after: pool_after_first && i == 0,
+            })
+            .collect();
+        let head = classes.map(|classes| {
+            let c_last = geo[geo.len() - 1].kn;
+            HeadSpec {
+                classes,
+                wfc: rng.ternary_vec(c_last * classes, sparsity),
+                bfc: (0..classes).map(|_| rng.f32_range(-0.2, 0.2)).collect(),
+            }
+        });
+        Self { name: name.to_string(), layers, head }
+    }
+
+    /// A scaled ResNet-18 with synthetic ternary weights — the end-to-end
+    /// serving workload.  See `resnet18_conv_layers_scaled` for geometry.
+    pub fn synthetic_resnet18(
+        batch: usize,
+        input_hw: usize,
+        ch_div: usize,
+        sparsity: f64,
+        seed: u64,
+        classes: usize,
+    ) -> Self {
+        let geo = resnet18_conv_layers_scaled(batch, input_hw, ch_div);
+        Self::synthetic("resnet18", &geo, true, sparsity, seed, Some(classes))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A tiny but multi-layer spec (with stem pool + head) shared with the
+    /// session and sharding tests — kept here so the validation cases live
+    /// next to `validate`.
+    pub(crate) fn tiny_spec(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "t1", n: 2, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+            // pool after t1: 8x8 -> 4x4
+            ConvLayer { name: "t2", n: 2, c: 4, h: 4, w: 4, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "t3", n: 2, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ];
+        ModelSpec::synthetic("tiny", &geo, true, 0.6, seed, Some(5))
+    }
+
+    #[test]
+    fn spec_validates_and_rejects_broken_chains() {
+        let spec = tiny_spec(1);
+        assert!(spec.validate().is_ok());
+        assert!(spec.sparsity() > 0.3 && spec.sparsity() < 0.9);
+
+        let mut bad = tiny_spec(1);
+        bad.layers[1].layer.c = 5; // t1 produces 4 channels
+        assert!(bad.validate().is_err());
+
+        let mut bad_spatial = tiny_spec(1);
+        bad_spatial.layers[0].pool_after = false; // t2 expects the pooled 4x4
+        assert!(bad_spatial.validate().is_err());
+
+        let mut bad_head = tiny_spec(1);
+        bad_head.head.as_mut().unwrap().wfc.pop();
+        assert!(bad_head.validate().is_err());
+    }
+
+    #[test]
+    fn weight_count_includes_head() {
+        let spec = tiny_spec(3);
+        let conv: usize = spec.layers.iter().map(|l| l.layer.weights()).sum();
+        assert_eq!(spec.weight_count(), conv + 4 * 5);
+    }
+}

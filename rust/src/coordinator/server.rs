@@ -1,26 +1,45 @@
-//! A threaded, model-level inference service over the simulated chip.
+//! A threaded, model-level inference service over the simulated chips.
 //!
 //! The image has no tokio (offline vendor set), so the service is a
 //! std-thread worker pool over mpsc channels.  The server is
-//! *weight-stationary*: it is started with a [`ModelSpec`], every worker
-//! builds a resident [`ChipSession`] over its slice of the chip's CMAs
-//! (weights planned and written into the SACU registers **once**), and
-//! requests then carry only activations.  Responses report per-request
-//! compute metrics — always zero weight-register writes — while the
-//! one-time loading cost per worker is available from
-//! [`InferenceServer::loading_metrics`], so amortization is measurable.
+//! *weight-stationary* in both of its modes:
+//!
+//! - [`ServingMode::Replicated`] — every worker builds a resident
+//!   [`ChipSession`] over its slice of the chip's CMAs (weights planned
+//!   and written into the SACU registers **once**) and serves whole
+//!   requests.  A queue-depth-aware micro-batcher fuses up to `max_batch`
+//!   same-shape requests along N per dequeue ([`ChipSession::infer_many`]),
+//!   raising CMA column utilization while keeping responses bit-identical
+//!   to unbatched serving.
+//! - [`ServingMode::Pipelined`] — the model is cut by a
+//!   [`ShardPlan`] and each worker is a pipeline *stage* owning one
+//!   shard's resident session on its own chip.  Stages are connected by
+//!   channels, so shard k computes request i+1 while shard k+1 computes
+//!   request i; every boundary charges the inter-chip transfer leg
+//!   ([`super::sharding::xfer_cost_ns`]) into the request's metrics.
+//!
+//! Responses report per-request compute metrics — always zero
+//! weight-register writes — while the one-time loading cost per worker is
+//! available from [`InferenceServer::loading_metrics`], so amortization is
+//! measurable.  [`InferenceServer::collect_timeout`] bounds a collection
+//! that would otherwise wait forever on an undersubmitted queue.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::error::{ensure, Result};
+use crate::error::{bail, ensure, Result};
+use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
 
 use super::accelerator::ChipConfig;
 use super::metrics::ChipMetrics;
-use super::session::{ChipSession, ModelSpec};
+use super::session::{
+    batched_wreg_footprint, wreg_footprint, ChipSession, ModelSpec, QuantActivations,
+};
+use super::sharding::{xfer_cost_ns, ShardPlan};
 
 /// One inference request: activations for the resident model.
 pub struct Request {
@@ -37,10 +56,30 @@ pub struct Response {
     /// Classifier logits when the model has a head.
     pub logits: Option<Vec<Vec<f32>>>,
     /// Per-request chip + DPU metrics (zero weight-register writes: the
-    /// weights were resident before the request arrived).
+    /// weights were resident before the request arrived; nonzero
+    /// `xfer_ns` on every pipelined response with more than one shard).
+    /// When `batched > 1` these are the metrics of the whole fused run,
+    /// shared by all of its responses — divide by `batched` for a
+    /// per-request share before summing across responses.
     pub metrics: ChipMetrics,
+    /// Requests fused into the run that produced this response (1 = the
+    /// request ran alone).
+    pub batched: usize,
     /// Host wall-clock service time, microseconds.
     pub wall_us: f64,
+}
+
+/// How the worker pool maps onto chips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMode {
+    /// Today's mode: `workers` full-model replicas, one per CMA slice.
+    /// Each dequeue fuses up to `max_batch` queued requests into one
+    /// micro-batched run (1 = no fusion).
+    Replicated { workers: usize, max_batch: usize },
+    /// One model cut into `shards` stages, each on its own chip; stages
+    /// stream quantized activations to each other over the inter-chip
+    /// link.
+    Pipelined { shards: usize },
 }
 
 /// Split `total` CMAs over `workers` chips: every worker gets the base
@@ -55,39 +94,102 @@ pub fn split_cmas(total: usize, workers: usize) -> Vec<usize> {
     (0..workers).map(|i| base + usize::from(i < rem)).collect()
 }
 
+/// What flows between pipeline stages: a request mid-flight.
+struct StageMsg {
+    id: u64,
+    act: QuantActivations,
+    metrics: ChipMetrics,
+    t0: Instant,
+}
+
 /// Threaded weight-stationary inference server.
 pub struct InferenceServer {
     tx: Option<mpsc::Sender<Request>>,
     rx_out: mpsc::Receiver<Response>,
+    /// Responses pulled off `rx_out` by a `collect_timeout` that then hit
+    /// its deadline: they stay buffered here for the next collect call
+    /// instead of being lost.
+    collected: Mutex<VecDeque<Response>>,
     workers: Vec<JoinHandle<()>>,
     worker_cmas: Vec<usize>,
     loading: Vec<ChipMetrics>,
+    mode: ServingMode,
     /// Model input geometry, for request validation at submit time.
     input_geometry: (usize, usize, usize, usize),
 }
 
 impl InferenceServer {
-    /// Spawn `workers` worker threads.  Each owns a chip slice with the
-    /// model resident: the spec is validated once up front, then every
-    /// worker plans it onto its CMAs and writes the weight registers
-    /// before the first request is accepted.
+    /// Spawn a replicated pool of `workers` worker threads (no fusion) —
+    /// the pre-sharding API, kept as a shorthand for
+    /// `start_with(cfg, ServingMode::Replicated { workers, max_batch: 1 }, spec)`.
     pub fn start(cfg: ChipConfig, workers: usize, spec: ModelSpec) -> Result<Self> {
+        Self::start_with(cfg, ServingMode::Replicated { workers, max_batch: 1 }, spec)
+    }
+
+    /// Spawn the worker pool in the given mode.  The spec is validated
+    /// once up front, then every worker plans its share onto its chip and
+    /// writes the weight registers before the first request is accepted.
+    pub fn start_with(cfg: ChipConfig, mode: ServingMode, spec: ModelSpec) -> Result<Self> {
+        spec.validate()?;
+        match mode {
+            ServingMode::Replicated { workers, max_batch } => {
+                Self::start_replicated(cfg, workers, max_batch, spec)
+            }
+            ServingMode::Pipelined { shards } => Self::start_pipelined(cfg, shards, spec, mode),
+        }
+    }
+
+    fn start_replicated(
+        cfg: ChipConfig,
+        workers: usize,
+        max_batch: usize,
+        spec: ModelSpec,
+    ) -> Result<Self> {
         ensure!(
             workers > 0 && workers <= cfg.cmas,
             "need 1..={} workers (one CMA slice each), got {workers}",
             cfg.cmas
         );
-        spec.validate()?;
+        ensure!(max_batch >= 1, "max_batch must be at least 1");
+        let worker_cmas = split_cmas(cfg.cmas, workers);
+        // Capacity gate, *here* and not inside a worker thread: the model
+        // must fit the smallest worker slice's register files, otherwise
+        // start returns an Err pointing at Pipelined mode instead of a
+        // worker panic taking the process down.
+        let min_cmas = *worker_cmas.iter().min().expect("at least one worker");
+        let mut slice_cfg = cfg;
+        slice_cfg.cmas = min_cmas;
+        let planner = slice_cfg.planner();
+        let footprint: u64 =
+            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).sum();
+        ensure!(
+            footprint <= slice_cfg.wreg_capacity(),
+            "model `{}` needs {footprint} weight-register entries but a {min_cmas}-CMA \
+worker slice holds {}; use fewer workers or ServingMode::Pipelined",
+            spec.name,
+            slice_cfg.wreg_capacity()
+        );
+        // Clamp the fusion window to what the slice can keep resident:
+        // fused batches widen the column tiling and with it the register
+        // footprint, and must never trip the per-run capacity check.
+        let mut max_batch = max_batch;
+        while max_batch > 1
+            && batched_wreg_footprint(&spec, &planner, max_batch) > slice_cfg.wreg_capacity()
+        {
+            max_batch -= 1;
+        }
+        // report the *effective* window from mode(), not the requested one
+        let mode = ServingMode::Replicated { workers, max_batch };
         let input_geometry = spec.input_geometry();
         let spec = Arc::new(spec);
         let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<Response>();
-        let (tx_ready, rx_ready) = mpsc::channel::<ChipMetrics>();
-        let worker_cmas = split_cmas(cfg.cmas, workers);
+        let (tx_ready, rx_ready) = mpsc::channel::<(usize, ChipMetrics)>();
         let handles: Vec<JoinHandle<()>> = worker_cmas
             .iter()
-            .map(|&cmas| {
+            .enumerate()
+            .map(|(wi, &cmas)| {
                 let rx = Arc::clone(&rx);
                 let tx_out = tx_out.clone();
                 let tx_ready = tx_ready.clone();
@@ -100,44 +202,186 @@ impl InferenceServer {
                     // one-time: plan + write the weight registers
                     let mut session = ChipSession::new(worker_cfg, (*spec).clone())
                         .expect("spec validated before spawn");
-                    let _ = tx_ready.send(*session.loading());
+                    let _ = tx_ready.send((wi, *session.loading()));
                     loop {
-                        let req = {
+                        // Queue-depth-aware micro-batching: block for one
+                        // request, then drain whatever else is already
+                        // queued (up to max_batch) into the same fused run.
+                        let batch: Vec<Request> = {
                             let guard = rx.lock().unwrap();
-                            guard.recv()
+                            let Ok(first) = guard.recv() else { break };
+                            let mut batch = vec![first];
+                            while batch.len() < max_batch {
+                                match guard.try_recv() {
+                                    Ok(req) => batch.push(req),
+                                    Err(_) => break,
+                                }
+                            }
+                            batch
                         };
-                        let Ok(req) = req else { break };
                         let t0 = Instant::now();
-                        // shape was validated at submit, so infer cannot
+                        // shapes were validated at submit, so infer cannot
                         // fail; a panic here is loud, a dropped response
                         // would deadlock the caller's collect()
-                        let out = session.infer(&req.x).expect("request validated at submit");
+                        let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
+                        let outs =
+                            session.infer_many(&xs).expect("requests validated at submit");
                         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-                        let _ = tx_out.send(Response {
-                            id: req.id,
-                            features: out.features,
-                            logits: out.logits,
-                            metrics: out.metrics,
-                            wall_us,
-                        });
+                        let fused = batch.len();
+                        for (req, out) in batch.iter().zip(outs) {
+                            let _ = tx_out.send(Response {
+                                id: req.id,
+                                features: out.features,
+                                logits: out.logits,
+                                metrics: out.metrics,
+                                batched: fused,
+                                wall_us,
+                            });
+                        }
                     }
                 })
             })
             .collect();
-        // wait until every worker's model is resident (collect the
-        // one-time loading metrics in the process)
-        let loading: Vec<ChipMetrics> = (0..workers)
-            .map(|_| rx_ready.recv().expect("worker died while loading"))
-            .collect();
-        Ok(Self { tx: Some(tx), rx_out, workers: handles, worker_cmas, loading, input_geometry })
+        let loading = Self::collect_loading(&rx_ready, workers);
+        Ok(Self {
+            tx: Some(tx),
+            rx_out,
+            collected: Mutex::new(VecDeque::new()),
+            workers: handles,
+            worker_cmas,
+            loading,
+            mode,
+            input_geometry,
+        })
     }
 
-    /// Per-worker CMA allotment (sums to the chip's CMA count).
+    fn start_pipelined(
+        cfg: ChipConfig,
+        shards: usize,
+        spec: ModelSpec,
+        mode: ServingMode,
+    ) -> Result<Self> {
+        let hw = HwParams::default();
+        let plan = ShardPlan::partition(&spec, &cfg, shards)?;
+        let input_geometry = spec.input_geometry();
+        let (tx, rx_in) = mpsc::channel::<Request>();
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let (tx_ready, rx_ready) = mpsc::channel::<(usize, ChipMetrics)>();
+
+        let mut handles = Vec::with_capacity(shards);
+        let mut rx_in = Some(rx_in);
+        let mut rx_stage: Option<mpsc::Receiver<StageMsg>> = None;
+        for i in 0..shards {
+            let sub = plan.subspec(&spec, i);
+            let is_last = i + 1 == shards;
+            let tx_ready = tx_ready.clone();
+            // stage i's inputs: raw requests for the head stage, in-flight
+            // activations for the rest
+            let in_req = if i == 0 { rx_in.take() } else { None };
+            let in_msg = rx_stage.take();
+            // stage i's output: the next stage, or the response queue
+            let (out_msg, rx_next) = if is_last {
+                (None, None)
+            } else {
+                let (t, r) = mpsc::channel::<StageMsg>();
+                (Some(t), Some(r))
+            };
+            rx_stage = rx_next;
+            let out_resp = if is_last { Some(tx_out.clone()) } else { None };
+            handles.push(std::thread::spawn(move || {
+                // one-time: this shard's registers onto this stage's chip
+                let mut session =
+                    ChipSession::new(cfg, sub).expect("shard spec validated before spawn");
+                let _ = tx_ready.send((i, *session.loading()));
+                loop {
+                    let (id, act, metrics, t0) = if let Some(rx) = &in_req {
+                        let Ok(req) = rx.recv() else { break };
+                        let t0 = Instant::now();
+                        let (act, m) = session
+                            .quantize_entry(&[&req.x])
+                            .expect("request validated at submit");
+                        (req.id, act, m, t0)
+                    } else {
+                        let rx = in_msg.as_ref().expect("inner stage has a stage channel");
+                        let Ok(msg) = rx.recv() else { break };
+                        // the activations just crossed the inter-chip
+                        // link: charge the transfer leg
+                        let mut m = msg.metrics;
+                        let bytes = msg.act.wire_bytes();
+                        let leg = xfer_cost_ns(bytes, &hw);
+                        m.xfer_bytes += bytes;
+                        m.xfer_ns += leg;
+                        m.latency_ns += leg;
+                        (msg.id, msg.act, m, msg.t0)
+                    };
+                    let (act, m) = session
+                        .run_quantized(act)
+                        .expect("shard geometry chained by the plan");
+                    let mut metrics = metrics;
+                    metrics.add(&m);
+                    if let Some(tx) = &out_msg {
+                        if tx.send(StageMsg { id, act, metrics, t0 }).is_err() {
+                            break;
+                        }
+                    } else {
+                        let tx = out_resp.as_ref().expect("tail stage owns the response queue");
+                        let mut outs = session.finalize(act, metrics);
+                        let out = outs.pop().expect("one request in, one response out");
+                        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+                        let _ = tx.send(Response {
+                            id,
+                            features: out.features,
+                            logits: out.logits,
+                            metrics: out.metrics,
+                            batched: 1,
+                            wall_us,
+                        });
+                    }
+                }
+            }));
+        }
+        let loading = Self::collect_loading(&rx_ready, shards);
+        // every pipeline stage is a whole chip of its own
+        let worker_cmas = vec![cfg.cmas; shards];
+        Ok(Self {
+            tx: Some(tx),
+            rx_out,
+            collected: Mutex::new(VecDeque::new()),
+            workers: handles,
+            worker_cmas,
+            loading,
+            mode,
+            input_geometry,
+        })
+    }
+
+    /// Wait until every worker's model (or shard) is resident, collecting
+    /// the one-time loading metrics in worker order.
+    fn collect_loading(
+        rx_ready: &mpsc::Receiver<(usize, ChipMetrics)>,
+        n: usize,
+    ) -> Vec<ChipMetrics> {
+        let mut loading = vec![ChipMetrics::default(); n];
+        for _ in 0..n {
+            let (i, m) = rx_ready.recv().expect("worker died while loading");
+            loading[i] = m;
+        }
+        loading
+    }
+
+    /// The mode this pool is running in.
+    pub fn mode(&self) -> ServingMode {
+        self.mode
+    }
+
+    /// Per-worker CMA allotment.  Replicated: slices summing to the
+    /// chip's CMA count.  Pipelined: one whole chip per stage.
     pub fn worker_cmas(&self) -> &[usize] {
         &self.worker_cmas
     }
 
-    /// One-time model-loading metrics, one entry per worker.
+    /// One-time model-loading metrics, one entry per worker (replicated)
+    /// or per shard stage, in order (pipelined).
     pub fn loading_metrics(&self) -> &[ChipMetrics] {
         &self.loading
     }
@@ -157,9 +401,42 @@ impl InferenceServer {
         Ok(())
     }
 
-    /// Blockingly collect `n` responses (any order).
+    /// Blockingly collect `n` responses (any order).  Waits forever if
+    /// fewer than `n` requests were submitted — prefer
+    /// [`Self::collect_timeout`] when the submission count is not in the
+    /// caller's hands.
     pub fn collect(&self, n: usize) -> Vec<Response> {
-        (0..n).map(|_| self.rx_out.recv().expect("workers gone")).collect()
+        let mut buffered = self.collected.lock().unwrap();
+        let mut out: Vec<Response> = Vec::with_capacity(n);
+        while out.len() < n {
+            match buffered.pop_front() {
+                Some(r) => out.push(r),
+                None => out.push(self.rx_out.recv().expect("workers gone")),
+            }
+        }
+        out
+    }
+
+    /// Collect `n` responses or fail after `timeout` (total, across all
+    /// `n`).  This is the safe form of [`Self::collect`]: undersubmission
+    /// yields an error, not a deadlocked caller.  Responses that did
+    /// arrive before the deadline are **not lost** — they stay buffered
+    /// and are returned by the next `collect`/`collect_timeout` call.
+    pub fn collect_timeout(&self, n: usize, timeout: Duration) -> Result<Vec<Response>> {
+        let deadline = Instant::now() + timeout;
+        let mut buffered = self.collected.lock().unwrap();
+        while buffered.len() < n {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx_out.recv_timeout(left) {
+                Ok(r) => buffered.push_back(r),
+                Err(_) => bail!(
+                    "collected {} of {n} responses before the {timeout:?} deadline \
+(undersubmitted queue or dead workers?); completed responses stay buffered",
+                    buffered.len()
+                ),
+            }
+        }
+        Ok(buffered.drain(..n).collect())
     }
 
     /// Shut down: close the queue and join the workers.
@@ -242,6 +519,174 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_mode_matches_oracle_and_charges_the_link() {
+        let spec = small_spec(0x71FE);
+        let mut rng = Rng::new(0x71FF);
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let server = InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 2 },
+            spec.clone(),
+        )
+        .unwrap();
+        assert_eq!(server.mode(), ServingMode::Pipelined { shards: 2 });
+        assert_eq!(server.loading_metrics().len(), 2);
+        // register-write conservation across the stages
+        let sharded: u64 =
+            server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
+        assert_eq!(sharded, oracle.loading().weight_reg_writes);
+
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..5u64 {
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
+        }
+        let responses = server.collect_timeout(5, Duration::from_secs(60)).unwrap();
+        for r in &responses {
+            let want = &wants[&r.id];
+            assert_eq!(
+                r.features.data, want.features.data,
+                "pipelined request {} must match the single-chip oracle",
+                r.id
+            );
+            assert_eq!(r.logits, want.logits);
+            assert_eq!(r.metrics.weight_reg_writes, 0);
+            assert!(r.metrics.xfer_ns > 0.0, "the shard boundary must charge the link");
+            assert!(r.metrics.xfer_bytes > 0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn micro_batched_responses_are_bit_identical_and_resplit() {
+        let spec = small_spec(0xBA7C);
+        let mut rng = Rng::new(0xBA7D);
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        // one worker + a batch window: all four requests are queued before
+        // the worker wakes, so at least some fuse into one run
+        let server = InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Replicated { workers: 1, max_batch: 4 },
+            spec.clone(),
+        )
+        .unwrap();
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..4u64 {
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
+        }
+        let responses = server.collect_timeout(4, Duration::from_secs(60)).unwrap();
+        assert_eq!(responses.len(), 4);
+        let mut seen = std::collections::HashSet::new();
+        for r in &responses {
+            assert!(seen.insert(r.id), "batcher must re-split responses per request id");
+            let want = &wants[&r.id];
+            assert_eq!(
+                r.features.data, want.features.data,
+                "batched request {} must be bit-identical to unbatched",
+                r.id
+            );
+            assert_eq!(r.logits, want.logits);
+            assert_eq!(r.metrics.weight_reg_writes, 0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn collect_timeout_reports_undersubmission_instead_of_deadlocking() {
+        let spec = small_spec(0x7140);
+        let mut rng = Rng::new(0x7141);
+        let server = InferenceServer::start(ChipConfig::fat(), 1, spec.clone()).unwrap();
+        server.submit(request(0, &spec, &mut rng)).unwrap();
+        // asked for two, only one submitted: error, not a hang
+        let err = server.collect_timeout(2, Duration::from_millis(300)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 of 2"), "error should say how far it got: {msg}");
+        // the completed response was NOT lost to the failed collect: it
+        // stays buffered and the next collect returns it
+        let recovered = server.collect_timeout(1, Duration::from_secs(30)).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].id, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn replicated_start_rejects_model_too_big_for_a_worker_slice() {
+        // small_spec needs 252 register entries; a 1-CMA slice of this
+        // chip holds 200.  start() must return Err (pointing at Pipelined
+        // mode), not panic a worker thread.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 200;
+        let spec = small_spec(0x7144);
+        let err = InferenceServer::start(cfg, 3, spec.clone()).unwrap_err();
+        assert!(format!("{err:#}").contains("Pipelined"), "{err:#}");
+        // one worker gets all 3 CMAs (600 entries): fine
+        let server = InferenceServer::start(cfg, 1, spec).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_batch_window_is_clamped_not_fatal() {
+        // small_spec fits a 600-entry chip fused up to k=16; ask for a
+        // 64-wide window and the server must clamp instead of letting a
+        // fused run trip the capacity check mid-flight.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 200;
+        let spec = small_spec(0x7145);
+        let mut rng = Rng::new(0x7146);
+        let mut oracle = crate::coordinator::session::ChipSession::new(cfg, spec.clone()).unwrap();
+        let server = InferenceServer::start_with(
+            cfg,
+            ServingMode::Replicated { workers: 1, max_batch: 64 },
+            spec.clone(),
+        )
+        .unwrap();
+        // the clamp is visible in mode(): 16 is the widest fused geometry
+        // that still fits the 600-entry slice
+        assert_eq!(server.mode(), ServingMode::Replicated { workers: 1, max_batch: 16 });
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..6u64 {
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
+        }
+        let responses = server.collect_timeout(6, Duration::from_secs(60)).unwrap();
+        for r in &responses {
+            assert!(r.batched >= 1 && r.batched <= 16, "window must be clamped to capacity");
+            assert_eq!(r.features.data, wants[&r.id].features.data, "request {}", r.id);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_rejects_more_shards_than_layers() {
+        let spec = small_spec(0x7142); // 2 conv layers
+        assert!(InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 3 },
+            spec,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn replicated_rejects_zero_batch_window() {
+        let spec = small_spec(0x7143);
+        assert!(InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Replicated { workers: 1, max_batch: 0 },
+            spec,
+        )
+        .is_err());
+    }
+
+    #[test]
     fn cma_split_distributes_remainder() {
         // 10 CMAs over 4 workers: 3,3,2,2 — nothing dropped.
         assert_eq!(split_cmas(10, 4), vec![3, 3, 2, 2]);
@@ -275,6 +720,13 @@ mod tests {
         let server = InferenceServer::start(cfg, 4, small_spec(1)).unwrap();
         assert_eq!(server.worker_cmas(), &[3, 3, 2, 2]);
         server.shutdown();
+
+        // pipelined stages each get a whole chip
+        let server =
+            InferenceServer::start_with(cfg, ServingMode::Pipelined { shards: 2 }, small_spec(1))
+                .unwrap();
+        assert_eq!(server.worker_cmas(), &[10, 10]);
+        server.shutdown();
     }
 
     #[test]
@@ -299,5 +751,16 @@ mod tests {
         server.submit(request(0, &spec, &mut rng)).unwrap();
         let _ = server.collect(1);
         drop(server); // must not hang
+
+        let spec2 = small_spec(5);
+        let server = InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 2 },
+            spec2.clone(),
+        )
+        .unwrap();
+        server.submit(Request { id: 0, x: spec2.random_input(&mut rng) }).unwrap();
+        let _ = server.collect(1);
+        drop(server); // pipelined teardown must cascade, not hang
     }
 }

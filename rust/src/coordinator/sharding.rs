@@ -1,0 +1,484 @@
+//! Multi-chip model sharding: pipeline parallelism with an inter-chip
+//! transfer cost model.
+//!
+//! One chip's SACU register files bound how much model can stay resident
+//! ([`ChipConfig::wreg_capacity`]).  A [`ShardPlan`] cuts a validated
+//! [`ModelSpec`] at layer boundaries into contiguous shards balanced by
+//! weight-register footprint; a [`PipelineSession`] then owns one resident
+//! [`ChipSession`] per shard and chains them: quantized activations leave
+//! chip `k` and enter chip `k+1` over an inter-chip link whose cost —
+//! [`xfer_cost_ns`], from [`HwParams::link_bytes_per_ns`] /
+//! [`HwParams::link_latency_ns`] — is charged on every boundary into the
+//! request's [`ChipMetrics`] (`xfer_bytes`, `xfer_ns`).
+//!
+//! Bit-exactness is the contract: each stage runs the *same*
+//! [`ChipSession::run_quantized`] code path the single-chip session uses,
+//! and the transferred tensor is exactly the quantized inter-layer
+//! activation the single chip would have kept in its DPU buffers, so an
+//! N-shard run produces byte-identical features and logits to the
+//! single-chip oracle.  Register-write conservation falls out the same
+//! way: every layer is loaded exactly once, on exactly one chip, so
+//! per-shard loading metrics sum to the unsharded total.
+//!
+//! The partition minimizes the maximum shard footprint over all
+//! contiguous cuts (binary search + greedy), which guarantees
+//! `max_shard <= ceil(total / shards) + max_layer` — balanced to within
+//! one layer's footprint, the best a layer-granular cut can promise.
+
+use crate::coordinator::accelerator::ChipConfig;
+use crate::coordinator::metrics::ChipMetrics;
+use crate::coordinator::model::ModelSpec;
+use crate::coordinator::session::{wreg_footprint, ChipSession, ModelOutput};
+use crate::error::{ensure, Result};
+use crate::mapping::schemes::HwParams;
+use crate::nn::tensor::Tensor4;
+
+/// Latency of moving `bytes` over the inter-chip link: one hop latency
+/// plus the serialization time at the link bandwidth.
+pub fn xfer_cost_ns(bytes: u64, hw: &HwParams) -> f64 {
+    hw.link_latency_ns + bytes as f64 / hw.link_bytes_per_ns
+}
+
+/// A contiguous cut of a model's layers across N chips.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Per-shard `[start, end)` layer ranges; contiguous, covering every
+    /// layer in order.
+    pub ranges: Vec<(usize, usize)>,
+    /// Resident 2-bit weight-register entries per shard.
+    pub footprints: Vec<u64>,
+    /// Per-chip register capacity the plan was cut against.
+    pub capacity: u64,
+}
+
+/// Shards a threshold-greedy cut needs when no shard may exceed `bound`.
+/// `bound` must be at least the largest single footprint.
+fn shards_needed(footprints: &[u64], bound: u64) -> usize {
+    let mut count = 1usize;
+    let mut sum = 0u64;
+    for &f in footprints {
+        if sum + f > bound {
+            count += 1;
+            sum = 0;
+        }
+        sum += f;
+    }
+    count
+}
+
+impl ShardPlan {
+    /// Cut `spec` into exactly `shards` contiguous shards, minimizing the
+    /// maximum per-shard register footprint, and check every shard fits
+    /// one chip's [`ChipConfig::wreg_capacity`].
+    pub fn partition(spec: &ModelSpec, cfg: &ChipConfig, shards: usize) -> Result<Self> {
+        spec.validate()?;
+        ensure!(shards >= 1, "need at least one shard");
+        ensure!(
+            shards <= spec.layers.len(),
+            "cannot cut {} layers into {shards} shards (layer boundaries only)",
+            spec.layers.len()
+        );
+        let planner = cfg.planner();
+        let f: Vec<u64> =
+            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+        let capacity = cfg.wreg_capacity();
+        let max_layer = *f.iter().max().expect("validated: at least one layer");
+        let total: u64 = f.iter().sum();
+        ensure!(
+            max_layer <= capacity,
+            "model `{}`: one layer alone needs {max_layer} weight-register entries but a \
+chip holds {capacity}; layer-boundary sharding cannot help — shrink the layer or the batch",
+            spec.name
+        );
+
+        // Binary search the minimal feasible max-shard footprint, then cut
+        // greedily against it (forcing late cuts so the count is exact).
+        let (mut lo, mut hi) = (max_layer, total);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if shards_needed(&f, mid) <= shards {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let bound = lo;
+        ensure!(
+            bound <= capacity,
+            "model `{}` needs {bound} weight-register entries on its fullest chip even at \
+the best {shards}-way cut, but a chip holds {capacity}; use at least {} shards",
+            spec.name,
+            shards_needed(&f, capacity)
+        );
+
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        let mut sum = 0u64;
+        for i in 0..f.len() {
+            // layers left (including i) may not undershoot shards left
+            let must_cut = f.len() - i < shards - ranges.len();
+            if i > start && (sum + f[i] > bound || must_cut) {
+                ranges.push((start, i));
+                start = i;
+                sum = 0;
+            }
+            sum += f[i];
+        }
+        ranges.push((start, f.len()));
+        ensure!(
+            ranges.len() == shards,
+            "internal: cut produced {} shards, wanted {shards}",
+            ranges.len()
+        );
+        let footprints: Vec<u64> =
+            ranges.iter().map(|&(a, b)| f[a..b].iter().sum()).collect();
+        debug_assert!(footprints.iter().all(|&s| s <= bound));
+        Ok(Self { ranges, footprints, capacity })
+    }
+
+    /// The fewest chips this model serves on, given one chip's register
+    /// capacity.
+    pub fn min_shards(spec: &ModelSpec, cfg: &ChipConfig) -> Result<usize> {
+        spec.validate()?;
+        let planner = cfg.planner();
+        let f: Vec<u64> =
+            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+        let capacity = cfg.wreg_capacity();
+        let max_layer = *f.iter().max().expect("validated: at least one layer");
+        ensure!(
+            max_layer <= capacity,
+            "model `{}`: one layer alone needs {max_layer} weight-register entries but a \
+chip holds {capacity}",
+            spec.name
+        );
+        Ok(shards_needed(&f, capacity))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The sub-model shard `i` keeps resident: its contiguous layer slice,
+    /// with the classifier head riding on the final shard only.
+    pub fn subspec(&self, spec: &ModelSpec, i: usize) -> ModelSpec {
+        let (a, b) = self.ranges[i];
+        ModelSpec {
+            name: format!("{}:shard{}/{}", spec.name, i + 1, self.ranges.len()),
+            layers: spec.layers[a..b].to_vec(),
+            head: if i + 1 == self.ranges.len() { spec.head.clone() } else { None },
+        }
+    }
+}
+
+/// One request's way through the pipeline, with the per-stage breakdown.
+#[derive(Debug, Clone)]
+pub struct PipelineOutput {
+    /// The final output; its metrics aggregate every stage **plus** the
+    /// inter-chip transfer legs.
+    pub out: ModelOutput,
+    /// Per-shard compute metrics (no transfer legs).
+    pub stage_metrics: Vec<ChipMetrics>,
+    /// Transfer latency per shard boundary, ns (`shards - 1` legs, each
+    /// nonzero: the link pays its hop latency even on an empty tensor).
+    pub xfer_legs_ns: Vec<f64>,
+}
+
+impl PipelineOutput {
+    /// Steady-state issue interval of the pipeline for requests like this
+    /// one: the slowest stage plus its incoming link leg bounds how often
+    /// a new request can enter, because shard k computes request i+1
+    /// while shard k+1 computes request i.  A single chip instead pays
+    /// [`Self::serial_ns`] per request.
+    pub fn issue_interval_ns(&self) -> f64 {
+        self.stage_metrics
+            .iter()
+            .enumerate()
+            .map(|(s, m)| {
+                m.latency_ns + if s > 0 { self.xfer_legs_ns[s - 1] } else { 0.0 }
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// What a single chip would pay per request: the stages' latencies
+    /// run back to back (no transfer legs).
+    pub fn serial_ns(&self) -> f64 {
+        self.stage_metrics.iter().map(|m| m.latency_ns).sum()
+    }
+}
+
+/// A model resident across N chips, served as a chain of weight-stationary
+/// sessions.  Inference walks the shards in order; a threaded serving
+/// front-end that overlaps stages lives in
+/// [`super::server::InferenceServer`] (`Pipelined` mode).
+pub struct PipelineSession {
+    plan: ShardPlan,
+    stages: Vec<ChipSession>,
+    hw: HwParams,
+}
+
+impl PipelineSession {
+    /// Partition `spec` over `shards` chips of configuration `cfg` and
+    /// load every shard (each chip pays its own one-time register load).
+    pub fn new(cfg: ChipConfig, spec: ModelSpec, shards: usize, hw: HwParams) -> Result<Self> {
+        ensure!(
+            hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
+            "inter-chip link needs positive bandwidth and non-negative latency"
+        );
+        let plan = ShardPlan::partition(&spec, &cfg, shards)?;
+        let mut stages = Vec::with_capacity(shards);
+        for i in 0..plan.shards() {
+            stages.push(ChipSession::new(cfg, plan.subspec(&spec, i))?);
+        }
+        Ok(Self { plan, stages, hw })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn stages(&self) -> &[ChipSession] {
+        &self.stages
+    }
+
+    /// The link parameters transfers are charged against.
+    pub fn hw(&self) -> &HwParams {
+        &self.hw
+    }
+
+    /// Per-shard one-time loading metrics, in shard order.
+    pub fn shard_loadings(&self) -> Vec<ChipMetrics> {
+        self.stages.iter().map(|s| *s.loading()).collect()
+    }
+
+    /// Loading totals across all shards.  `weight_reg_writes` here equals
+    /// the unsharded model's — every layer loads exactly once, somewhere.
+    pub fn loading_total(&self) -> ChipMetrics {
+        let mut total = ChipMetrics::default();
+        for s in &self.stages {
+            total.add(s.loading());
+        }
+        total
+    }
+
+    /// The input geometry requests must match (the first shard's).
+    pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
+        self.stages[0].spec().input_geometry()
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.stages[0].served()
+    }
+
+    /// Serve one request through every shard in order, charging the link
+    /// at each boundary.  Byte-identical to the single-chip session.
+    pub fn infer(&mut self, x: &Tensor4) -> Result<PipelineOutput> {
+        let (mut act, mut metrics) = self.stages[0].quantize_entry(&[x])?;
+        let mut stage_metrics = Vec::with_capacity(self.stages.len());
+        let mut xfer_legs_ns = Vec::with_capacity(self.stages.len().saturating_sub(1));
+        for (i, stage) in self.stages.iter_mut().enumerate() {
+            if i > 0 {
+                let bytes = act.wire_bytes();
+                let leg = xfer_cost_ns(bytes, &self.hw);
+                metrics.xfer_bytes += bytes;
+                metrics.xfer_ns += leg;
+                metrics.latency_ns += leg;
+                xfer_legs_ns.push(leg);
+            }
+            let (next, m) = stage.run_quantized(act)?;
+            act = next;
+            metrics.add(&m);
+            stage_metrics.push(m);
+        }
+        let last = self.stages.last().expect("at least one shard");
+        let mut outs = last.finalize(act, metrics);
+        let out = outs.pop().expect("one request in, one output out");
+        Ok(PipelineOutput { out, stage_metrics, xfer_legs_ns })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model::tests::tiny_spec;
+    use crate::nn::resnet::ConvLayer;
+    use crate::testutil::{prop_check, Rng};
+
+    /// Five chained layers (one stride-2) with a head: enough boundaries
+    /// for 2-, 3- and 4-way cuts.
+    fn chain5(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "c1", n: 1, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "c2", n: 1, c: 4, h: 8, w: 8, kn: 5, kh: 3, kw: 3, stride: 2, pad: 1 },
+            ConvLayer { name: "c3", n: 1, c: 5, h: 4, w: 4, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "c4", n: 1, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "c5", n: 1, c: 4, h: 4, w: 4, kn: 3, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ];
+        ModelSpec::synthetic("chain5", &geo, false, 0.5, seed, Some(4))
+    }
+
+    #[test]
+    fn partition_properties_hold_for_random_chains() {
+        prop_check(
+            "shard plans are contiguous, covering, and balanced",
+            12,
+            0x5A4D,
+            |rng| {
+                // a random valid chain: channels chain, spatial stays
+                let len = rng.range(2, 7);
+                let h = rng.range(4, 9);
+                let mut c = rng.range(1, 4);
+                let mut geo = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let kn = rng.range(1, 8);
+                    geo.push(ConvLayer {
+                        name: "p", n: 1, c, h, w: h, kn, kh: 3, kw: 3, stride: 1, pad: 1,
+                    });
+                    c = kn;
+                }
+                ModelSpec::synthetic("prop", &geo, false, 0.5, rng.next_u64(), None)
+            },
+            |spec| {
+                let cfg = ChipConfig::fat(); // capacity far above any tiny chain
+                let planner = cfg.planner();
+                let f: Vec<u64> = spec
+                    .layers
+                    .iter()
+                    .map(|ls| wreg_footprint(&ls.layer, &planner))
+                    .collect();
+                let total: u64 = f.iter().sum();
+                let max_layer = *f.iter().max().unwrap();
+                for shards in 1..=spec.layers.len() {
+                    let plan = ShardPlan::partition(spec, &cfg, shards)
+                        .map_err(|e| format!("{shards} shards: {e:#}"))?;
+                    if plan.ranges.len() != shards {
+                        return Err(format!("wanted {shards} shards, got {:?}", plan.ranges));
+                    }
+                    // contiguous cover of all layers, in order
+                    if plan.ranges[0].0 != 0
+                        || plan.ranges[plan.ranges.len() - 1].1 != spec.layers.len()
+                    {
+                        return Err(format!("ranges do not span the model: {:?}", plan.ranges));
+                    }
+                    for w in plan.ranges.windows(2) {
+                        if w[0].1 != w[1].0 {
+                            return Err(format!("gap/overlap between {:?} and {:?}", w[0], w[1]));
+                        }
+                    }
+                    for (&(a, b), &fp) in plan.ranges.iter().zip(&plan.footprints) {
+                        if a >= b {
+                            return Err(format!("empty shard [{a}, {b})"));
+                        }
+                        let want: u64 = f[a..b].iter().sum();
+                        if fp != want {
+                            return Err(format!("footprint {fp} != {want} for [{a}, {b})"));
+                        }
+                    }
+                    // balanced to within one layer's footprint
+                    let bound = total.div_ceil(shards as u64) + max_layer;
+                    let worst = *plan.footprints.iter().max().unwrap();
+                    if worst > bound {
+                        return Err(format!(
+                            "max shard {worst} exceeds ceil(total/n) + max_layer = {bound}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn capacity_gates_single_chip_and_shard_counts() {
+        // tiny_spec footprints: [108, 216, 216] entries.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 2;
+        cfg.wreg_entries_per_cma = 175; // 350-entry chips
+        let spec = tiny_spec(0xCAFE);
+
+        // one chip cannot hold the model...
+        assert!(ChipSession::new(cfg, spec.clone()).is_err());
+        assert!(ShardPlan::partition(&spec, &cfg, 1).is_err());
+        // ...two can, balanced within one layer
+        let plan = ShardPlan::partition(&spec, &cfg, 2).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 2), (2, 3)]);
+        assert_eq!(plan.footprints, vec![324, 216]);
+        assert!(plan.footprints.iter().all(|&f| f <= 350));
+        assert_eq!(ShardPlan::min_shards(&spec, &cfg).unwrap(), 2);
+
+        // a chip too small for the biggest single layer is hopeless
+        cfg.wreg_entries_per_cma = 100; // 200 < 216
+        assert!(ShardPlan::partition(&spec, &cfg, 3).is_err());
+        assert!(ShardPlan::min_shards(&spec, &cfg).is_err());
+    }
+
+    #[test]
+    fn head_rides_on_the_last_shard_only() {
+        let spec = chain5(3);
+        let plan = ShardPlan::partition(&spec, &ChipConfig::fat(), 3).unwrap();
+        for i in 0..2 {
+            assert!(plan.subspec(&spec, i).head.is_none(), "shard {i} must not carry the head");
+            assert!(plan.subspec(&spec, i).validate().is_ok());
+        }
+        let last = plan.subspec(&spec, 2);
+        assert!(last.head.is_some());
+        assert!(last.validate().is_ok());
+    }
+
+    #[test]
+    fn pipeline_is_bit_identical_to_the_single_chip_oracle() {
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = chain5(11);
+        let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+        let mut rng = Rng::new(0xBEEF);
+        let xs: Vec<Tensor4> = (0..2).map(|_| spec.random_input(&mut rng)).collect();
+        let wants: Vec<ModelOutput> = xs.iter().map(|x| oracle.infer(x).unwrap()).collect();
+
+        for shards in [2usize, 3, 4] {
+            let mut pipe = PipelineSession::new(cfg, spec.clone(), shards, hw).unwrap();
+
+            // register-write conservation: each layer loads exactly once
+            assert_eq!(
+                pipe.loading_total().weight_reg_writes,
+                oracle.loading().weight_reg_writes,
+                "{shards} shards must conserve total register writes"
+            );
+            let per_shard = pipe.shard_loadings();
+            assert_eq!(per_shard.len(), shards);
+            assert!(per_shard.iter().all(|m| m.weight_reg_writes > 0));
+
+            for (x, want) in xs.iter().zip(&wants) {
+                let po = pipe.infer(x).unwrap();
+                assert_eq!(
+                    po.out.features.data, want.features.data,
+                    "{shards}-shard features must match the oracle byte for byte"
+                );
+                assert_eq!(po.out.logits, want.logits, "{shards}-shard logits must match");
+                // every boundary charges a nonzero transfer leg
+                assert_eq!(po.xfer_legs_ns.len(), shards - 1);
+                assert!(po.xfer_legs_ns.iter().all(|&leg| leg > 0.0));
+                let legs: f64 = po.xfer_legs_ns.iter().sum();
+                assert!((po.out.metrics.xfer_ns - legs).abs() < 1e-9);
+                assert!(po.out.metrics.xfer_bytes > 0);
+                // weights stayed resident on every chip
+                assert_eq!(po.out.metrics.weight_reg_writes, 0);
+                // the oracle pays no transfer
+                assert_eq!(want.metrics.xfer_ns, 0.0);
+                assert!(po.out.metrics.latency_ns > want.metrics.latency_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_cost_scales_with_bytes_and_pays_the_hop() {
+        let hw = HwParams::default();
+        let empty = xfer_cost_ns(0, &hw);
+        assert_eq!(empty, hw.link_latency_ns, "hop latency is paid even for zero bytes");
+        let small = xfer_cost_ns(1024, &hw);
+        let big = xfer_cost_ns(4096, &hw);
+        assert!(small < big);
+        let ratio = (big - hw.link_latency_ns) / (small - hw.link_latency_ns);
+        assert!((ratio - 4.0).abs() < 1e-9);
+    }
+}

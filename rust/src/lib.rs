@@ -35,20 +35,41 @@
 //! weights live in the SACU weight registers while activations stream.
 //! [`coordinator::session`] models exactly that for serving:
 //!
-//! - [`coordinator::session::ModelSpec`] — a multi-layer ternary conv
+//! - [`coordinator::model::ModelSpec`] — a multi-layer ternary conv
 //!   pipeline (filters + folded BN per layer), e.g. the ResNet-18 backbone
 //!   from [`nn::resnet`].
 //! - [`coordinator::session::LoadedModel`] — the spec planned onto the
 //!   grid with every SACU weight register packed **once**; the one-time
 //!   cost is captured in split `loading` metrics (`weight_load_ns`,
-//!   `weight_reg_writes`).
+//!   `weight_reg_writes`).  A model whose register footprint exceeds
+//!   [`coordinator::accelerator::ChipConfig::wreg_capacity`] is rejected —
+//!   one chip cannot keep it stationary.
 //! - [`coordinator::session::ChipSession`] — serves batched activations
 //!   against the resident weights: per-request metrics report **zero**
 //!   weight-register writes, so loading amortizes across requests exactly
-//!   as on the physical chip.
-//! - [`coordinator::server::InferenceServer`] — a worker pool where each
-//!   worker holds a resident model (one session per CMA slice) and serves
-//!   model-level requests, not per-layer conv jobs.
+//!   as on the physical chip.  Its `infer_many` fuses same-shape requests
+//!   along N (micro-batching) with bit-identical re-split.
+//!
+//! ## Sharding: models bigger than one chip
+//!
+//! [`coordinator::sharding`] lifts serving to N chips:
+//!
+//! - [`coordinator::sharding::ShardPlan`] — cuts a validated model at
+//!   layer boundaries into contiguous shards balanced by weight-register
+//!   footprint (max shard ≤ ceil(total/N) + one layer).
+//! - [`coordinator::sharding::PipelineSession`] — one resident session
+//!   per shard, chained; every boundary charges an inter-chip transfer on
+//!   the quantized activations (`xfer_bytes` / `xfer_ns` in
+//!   [`coordinator::metrics::ChipMetrics`], costed from
+//!   [`mapping::schemes::HwParams`] link bandwidth + latency).  The
+//!   pipeline is byte-identical to the single-chip session — both run the
+//!   same `run_quantized` stage code — and per-shard loading sums to the
+//!   unsharded register-write total.
+//! - [`coordinator::server::InferenceServer`] — the threaded front-end,
+//!   in either mode: `Replicated` (a resident replica per worker over a
+//!   CMA slice, with a queue-depth-aware micro-batcher) or `Pipelined`
+//!   (workers are shard *stages* connected by channels, so shard k
+//!   computes request i+1 while shard k+1 computes request i).
 
 pub mod addition;
 pub mod array;

@@ -3,8 +3,10 @@
 use fat_imc::cli::{Args, HELP};
 use fat_imc::config::FatConfig;
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
-use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request};
-use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::coordinator::model::ModelSpec;
+use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
+use fat_imc::coordinator::session::ChipSession;
+use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
 use fat_imc::error::Result;
 use fat_imc::mapping::schemes::{evaluate_all, HwParams};
 use fat_imc::nn::layers::TernaryFilter;
@@ -224,22 +226,55 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.allow(&["requests", "workers", "batch", "input", "scale", "sparsity", "classes"])?;
-    let n_req = args.get_usize("requests", 16)?;
+    args.allow(&[
+        "requests", "workers", "batch", "input", "scale", "sparsity", "classes", "mode",
+        "shards", "max-batch",
+    ])?;
+    let n_req = args.get_usize("requests", 16)?.max(1);
     let workers = args.get_usize("workers", 4)?;
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
     let scale = args.get_usize("scale", 16)?;
     let sparsity = args.get_f64("sparsity", 0.7)?;
     let classes = args.get_usize("classes", 10)?;
+    let shards = args.get_usize("shards", 2)?;
+    let max_batch = args.get_usize("max-batch", 1)?;
+    // mode-mismatched flags are an error, not silently dropped: a user who
+    // asks for --shards must not end up benchmarking an unsharded pool
+    let mode = match args.get_or("mode", "replicated") {
+        "replicated" => {
+            if args.get("shards").is_some() {
+                fat_imc::bail!("--shards needs --mode pipelined");
+            }
+            ServingMode::Replicated { workers, max_batch }
+        }
+        "pipelined" => {
+            if args.get("workers").is_some() {
+                fat_imc::bail!("--workers applies to replicated mode; pipelined stages come from --shards");
+            }
+            if args.get("max-batch").is_some() {
+                fat_imc::bail!("--max-batch applies to replicated mode");
+            }
+            ServingMode::Pipelined { shards }
+        }
+        other => fat_imc::bail!("--mode must be replicated or pipelined, got `{other}`"),
+    };
     let mut rng = Rng::new(7);
 
     let spec = ModelSpec::synthetic_resnet18(batch, input, scale, sparsity, 7, classes);
-    println!(
-        "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) on {workers} workers...",
-        spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
-    );
-    let server = InferenceServer::start(ChipConfig::fat(), workers, spec.clone())?;
+    match mode {
+        ServingMode::Replicated { workers, max_batch } => println!(
+            "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) on {workers} \
+workers (micro-batch window {max_batch})...",
+            spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
+        ),
+        ServingMode::Pipelined { shards } => println!(
+            "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) as a \
+{shards}-stage pipeline...",
+            spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
+        ),
+    }
+    let server = InferenceServer::start_with(ChipConfig::fat(), mode, spec.clone())?;
     let load_ns: f64 = server.loading_metrics().iter().map(|m| m.weight_load_ns).sum();
     let load_writes: u64 = server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
     println!(
@@ -252,14 +287,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for id in 0..n_req as u64 {
         server.submit(Request { id, x: spec.random_input(&mut rng) })?;
     }
-    let responses = server.collect(n_req);
+    // bounded collect: a bug can fail the run, but never hang it
+    let responses = server.collect_timeout(n_req, std::time::Duration::from_secs(600))?;
     let wall = t0.elapsed().as_secs_f64();
     let (p50, p99) = latency_percentiles(responses.iter().map(|r| r.wall_us).collect());
     println!("  served {n_req} requests in {wall:.3}s ({:.1} req/s)", n_req as f64 / wall);
     println!("  host service time p50/p99: {:.0}/{:.0} us", p50, p99);
-    let sim_ns: f64 = responses.iter().map(|r| r.metrics.latency_ns).sum();
+    // a fused micro-batch shares one run's metrics across its responses:
+    // divide by `batched` so the totals count each run once
+    let sim_ns: f64 =
+        responses.iter().map(|r| r.metrics.latency_ns / r.batched as f64).sum();
     let wreg: u64 = responses.iter().map(|r| r.metrics.weight_reg_writes).sum();
     println!("  simulated compute time total: {:.1} us", sim_ns / 1e3);
+    if let ServingMode::Pipelined { .. } = mode {
+        let xfer_ns: f64 =
+            responses.iter().map(|r| r.metrics.xfer_ns / r.batched as f64).sum();
+        let xfer_bytes: u64 = responses.iter().map(|r| r.metrics.xfer_bytes).sum();
+        println!(
+            "  inter-chip transfer total: {xfer_bytes} bytes, {:.1} us over the link",
+            xfer_ns / 1e3
+        );
+    }
     println!(
         "  per-request weight-register writes: {wreg} (weights are resident); \
 naive path would have paid the {:.1} us load {n_req} more times",
@@ -273,7 +321,8 @@ naive path would have paid the {:.1} us load {n_req} more times",
 /// table driven layer-by-layer through the chip with DPU BN + ReLU (and
 /// the stem max pool) between layers.
 fn cmd_resnet(args: &Args) -> Result<()> {
-    args.allow(&["batch", "input", "scale", "sparsity", "layers", "requests", "classes"])?;
+    args.allow(&["batch", "input", "scale", "sparsity", "layers", "requests", "classes", "shards"])?;
+    let shards = args.get_usize("shards", 1)?;
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
     let scale = args.get_usize("scale", 16)?;
@@ -294,6 +343,9 @@ fn cmd_resnet(args: &Args) -> Result<()> {
 {n_layers} conv layers, sparsity {:.0}%",
         spec.sparsity() * 100.0
     );
+    if shards > 1 {
+        return run_resnet_sharded(spec, shards, n_req);
+    }
     let mut session = ChipSession::new(ChipConfig::fat(), spec)?;
 
     let mut t = Table::new(
@@ -354,6 +406,113 @@ fn cmd_resnet(args: &Args) -> Result<()> {
             .map(|(i, _)| i)
             .unwrap_or(0);
         println!("  request 0 logits[0]: argmax class {top} of {}", row.len());
+    }
+    Ok(())
+}
+
+/// `fat resnet --shards N`: cut the model at layer boundaries into N
+/// footprint-balanced shards, serve it as a chip pipeline, charge the
+/// inter-chip link at every boundary, and prove bit-exactness against the
+/// single-chip session (when one chip can hold the whole model).
+fn run_resnet_sharded(spec: ModelSpec, shards: usize, n_req: usize) -> Result<()> {
+    let cfg = ChipConfig::fat();
+    let hw = HwParams::default();
+    let plan = ShardPlan::partition(&spec, &cfg, shards)?;
+
+    let mut t = Table::new(
+        &format!(
+            "shard plan over {shards} chips ({} register entries per chip)",
+            plan.capacity
+        ),
+        &["shard", "layers", "count", "wreg footprint"],
+    );
+    for (i, (&(a, b), &fp)) in plan.ranges.iter().zip(&plan.footprints).enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            format!("{}..{}", spec.layers[a].layer.name, spec.layers[b - 1].layer.name),
+            format!("{}", b - a),
+            format!("{fp}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut pipe = PipelineSession::new(cfg, spec.clone(), shards, hw)?;
+    let loadings = pipe.shard_loadings();
+    let shard_writes: u64 = loadings.iter().map(|m| m.weight_reg_writes).sum();
+    println!(
+        "per-shard one-time loads: {} register writes total across {shards} chips",
+        shard_writes
+    );
+
+    // the single-chip oracle, when the whole model fits one chip
+    let mut oracle = match ChipSession::new(cfg, spec.clone()) {
+        Ok(s) => Some(s),
+        Err(_) => {
+            println!("(model exceeds one chip's register capacity; single-chip oracle skipped)");
+            None
+        }
+    };
+    if let Some(o) = &oracle {
+        fat_imc::ensure!(
+            shard_writes == o.loading().weight_reg_writes,
+            "register-write conservation broken: shards {} vs single chip {}",
+            shard_writes,
+            o.loading().weight_reg_writes
+        );
+        println!(
+            "register-write conservation: {} writes sharded == {} unsharded",
+            shard_writes,
+            o.loading().weight_reg_writes
+        );
+    }
+
+    let mut rng = Rng::new(0xE2E);
+    let mut xfer_ns_total = 0.0f64;
+    let mut xfer_bytes_total = 0u64;
+    // steady-state cost model, averaged over all requests (per-request
+    // latencies vary with activation sparsity)
+    let mut serial_sum_ns = 0.0f64;
+    let mut interval_sum_ns = 0.0f64;
+    for i in 0..n_req {
+        let x = spec.random_input(&mut rng);
+        let po = pipe.infer(&x)?;
+        if let Some(o) = oracle.as_mut() {
+            let want = o.infer(&x)?;
+            fat_imc::ensure!(
+                po.out.features.data == want.features.data && po.out.logits == want.logits,
+                "request {i}: pipelined output diverged from the single-chip oracle"
+            );
+        }
+        xfer_ns_total += po.out.metrics.xfer_ns;
+        xfer_bytes_total += po.out.metrics.xfer_bytes;
+        serial_sum_ns += po.serial_ns();
+        interval_sum_ns += po.issue_interval_ns();
+        println!(
+            "  request {i}: {:.1} us compute across {shards} chips, {:.2} us on the link \
+({} bytes over {} legs)",
+            po.out.metrics.compute_ns() / 1e3,
+            po.out.metrics.xfer_ns / 1e3,
+            po.out.metrics.xfer_bytes,
+            po.xfer_legs_ns.len()
+        );
+    }
+    if oracle.is_some() {
+        println!("pipeline outputs bit-identical to the single-chip oracle across {n_req} requests");
+    }
+    println!(
+        "inter-chip transfer total: {xfer_bytes_total} bytes, {:.2} us",
+        xfer_ns_total / 1e3
+    );
+    let serial_ns = serial_sum_ns / n_req as f64;
+    let interval_ns = interval_sum_ns / n_req as f64;
+    if interval_ns > 0.0 {
+        println!(
+            "steady-state pipeline interval {:.1} us vs serial latency {:.1} us -> {} \
+issue-rate speedup (mean of {n_req} requests)",
+            interval_ns / 1e3,
+            serial_ns / 1e3,
+            ratio(serial_ns / interval_ns)
+        );
     }
     Ok(())
 }

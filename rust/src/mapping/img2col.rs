@@ -22,6 +22,12 @@ pub struct Img2ColMatrix {
 }
 
 impl Img2ColMatrix {
+    /// An empty matrix whose buffer can be (re)filled by [`img2col_into`]
+    /// — the session's per-request scratch, allocated once.
+    pub fn empty() -> Self {
+        Self { cols: 0, j: 0, data: Vec::new() }
+    }
+
     #[inline]
     pub fn get(&self, col: usize, jj: usize) -> f32 {
         self.data[col * self.j + jj]
@@ -35,6 +41,17 @@ impl Img2ColMatrix {
 
 /// Perform the Img2Col transform for a conv layer geometry.
 pub fn img2col(x: &Tensor4, layer: &ConvLayer) -> Img2ColMatrix {
+    let mut out = Img2ColMatrix::empty();
+    img2col_into(x, layer, &mut out);
+    out
+}
+
+/// Img2Col into a reusable scratch matrix: the buffer is resized (keeping
+/// its capacity) instead of reallocated, so a serving loop that calls this
+/// per request per layer allocates only on the first, largest layer.
+/// Every cell of the `cols x j` extent is overwritten, so stale contents
+/// of a recycled buffer never leak into the result.
+pub fn img2col_into(x: &Tensor4, layer: &ConvLayer, out: &mut Img2ColMatrix) {
     assert_eq!(x.n, layer.n);
     assert_eq!(x.c, layer.c);
     assert_eq!(x.h, layer.h);
@@ -42,7 +59,11 @@ pub fn img2col(x: &Tensor4, layer: &ConvLayer) -> Img2ColMatrix {
     let (oh, ow) = (layer.oh(), layer.ow());
     let j = layer.j_dim();
     let cols = layer.n * oh * ow;
-    let mut data = vec![0.0f32; cols * j];
+    out.cols = cols;
+    out.j = j;
+    // no clear(): resize only touches the delta, the fill below covers all
+    out.data.resize(cols * j, 0.0);
+    let data = &mut out.data;
     let (s, p) = (layer.stride as isize, layer.pad as isize);
     for n in 0..layer.n {
         for out_h in 0..oh {
@@ -66,7 +87,6 @@ pub fn img2col(x: &Tensor4, layer: &ConvLayer) -> Img2ColMatrix {
             }
         }
     }
-    Img2ColMatrix { cols, j, data }
 }
 
 /// GEMM between the Img2Col matrix and one unrolled ternary filter —
@@ -171,6 +191,28 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation_across_layer_sizes() {
+        // big -> small -> big through ONE scratch buffer must equal the
+        // allocating path bit for bit (stale tail contents must not leak).
+        let layers = [
+            small_layer(3, 8, 3, 1, 1, 2),
+            small_layer(1, 4, 3, 1, 0, 2),
+            small_layer(2, 6, 3, 2, 1, 2),
+        ];
+        let mut rng = Rng::new(0x5C4);
+        let mut scratch = Img2ColMatrix::empty();
+        for l in &layers {
+            let mut x = Tensor4::zeros(l.n, l.c, l.h, l.w);
+            x.fill_random_ints(&mut rng, 0, 9);
+            let fresh = img2col(&x, l);
+            img2col_into(&x, l, &mut scratch);
+            assert_eq!(scratch.cols, fresh.cols);
+            assert_eq!(scratch.j, fresh.j);
+            assert_eq!(scratch.data, fresh.data, "layer {}", l.name);
+        }
     }
 
     #[test]

@@ -63,11 +63,26 @@ pub struct HwParams {
     pub op_bits: u32,
     /// SACU weight-register write time per filter-row load, ns.
     pub t_reg_ns: f64,
+    /// Inter-chip link bandwidth, bytes per ns (1 byte/ns = 1 GB/s).
+    /// Charged on the quantized activation tensor at every shard boundary
+    /// of a pipelined model (see `coordinator::sharding`).
+    pub link_bytes_per_ns: f64,
+    /// Inter-chip link hop latency, ns, paid once per transfer leg.
+    pub link_latency_ns: f64,
 }
 
 impl Default for HwParams {
     fn default() -> Self {
-        Self { mh: 64, mw: 256, cmas: 4096, op_bits: 8, t_reg_ns: 0.17 }
+        Self {
+            mh: 64,
+            mw: 256,
+            cmas: 4096,
+            op_bits: 8,
+            t_reg_ns: 0.17,
+            // a 128 Gb/s SerDes-class chip-to-chip link with a short hop
+            link_bytes_per_ns: 16.0,
+            link_latency_ns: 20.0,
+        }
     }
 }
 

@@ -200,6 +200,37 @@ fn cli_binary_smoke() {
 }
 
 #[test]
+fn cli_sharded_resnet_smoke() {
+    // `fat resnet --shards N` serves the model as a chip pipeline, prints
+    // the shard plan + transfer legs, and self-checks bit-exactness
+    // against the single-chip oracle (a mismatch exits non-zero).
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args(["resnet", "--input", "16", "--scale", "16", "--requests", "2", "--shards", "2"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "sharded resnet failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("shard plan over 2 chips"), "{text}");
+    assert!(text.contains("register-write conservation"), "{text}");
+    assert!(text.contains("bit-identical to the single-chip oracle"), "{text}");
+    assert!(text.contains("on the link"), "{text}");
+
+    // more shards than layers is a clean error, not a crash
+    let out = std::process::Command::new(exe)
+        .args(["resnet", "--layers", "2", "--shards", "5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("shards"), "{err}");
+}
+
+#[test]
 fn bwn_mode_runs_binary_weights() {
     // §III-B1: FAT works as a BWN accelerator by extending 1-bit weights
     // to the 2-bit encoding — correct results, but nothing to skip.
