@@ -1,0 +1,121 @@
+//! Model-scale reliability walkthrough (§IV-A3, end to end): sweep a
+//! resident ResNet-18 through the serving stack at swept sense bit-error
+//! rates — every worker/stage CMA corrupts its comparator outputs at the
+//! injected rate — and watch top-1 accuracy collapse as the BER crosses
+//! from FAT's two-operand sense margin (~5e-8 flips per sense) to the
+//! three-operand ParaPIM/GraphS margin (~2.6e-2).  The sharded pipeline
+//! re-runs the sweep with an additional lossy inter-chip link, the error
+//! source a single chip never sees.
+//!
+//! Self-checking: the zero-BER point must be byte-identical to the
+//! fault-free oracle in both topologies (exits non-zero otherwise).
+//!
+//!     cargo run --release --example reliability [requests]
+
+use fat_imc::circuit::reliability::sa_sense_bers;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::model::ModelSpec;
+use fat_imc::coordinator::reliability::{ber_str, sweep_model, SweepConfig};
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .max(1);
+
+    let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 0xBE12, 10);
+    let anchors = sa_sense_bers();
+    let fat_ber = anchors.last().expect("four designs").1;
+    let three_op_ber = anchors[0].1;
+    println!(
+        "== {}: {} conv layers; physical sense BERs: FAT {} vs three-operand {} ==",
+        spec.name,
+        spec.layers.len(),
+        ber_str(fat_ber),
+        ber_str(three_op_ber)
+    );
+
+    // ---- single chip: sense faults only ---------------------------------
+    let sc = SweepConfig {
+        bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
+        link_bers: Vec::new(),
+        shards: 1,
+        workers: 1,
+        requests,
+        seed: 0xBE13,
+    };
+    let rep = sweep_model(ChipConfig::fat(), &spec, &sc).expect("single-chip sweep");
+    println!("{}", rep.table().render());
+    println!("{}", rep.anchor_table().render());
+
+    let p0 = &rep.points[0];
+    assert!(
+        p0.bit_identical && p0.top1_agreement == 1.0 && p0.logit_mse == 0.0,
+        "zero-BER point must be byte-identical to the fault-free oracle"
+    );
+    let fat = rep.anchor_point(SaKind::Fat).expect("anchored");
+    let para = rep.anchor_point(SaKind::ParaPim).expect("anchored");
+    assert!(
+        fat.feature_mse <= para.feature_mse,
+        "FAT's margin must corrupt no more than ParaPIM's: {} vs {}",
+        fat.feature_mse,
+        para.feature_mse
+    );
+    assert!(
+        !para.bit_identical,
+        "a three-operand sense margin must visibly corrupt the model"
+    );
+
+    // ---- 2-replica pool: decorrelated per-replica sense faults ----------
+    let sc = SweepConfig {
+        bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
+        link_bers: Vec::new(),
+        shards: 1,
+        workers: 2,
+        requests,
+        seed: 0xBE15,
+    };
+    let repr = sweep_model(ChipConfig::fat(), &spec, &sc).expect("replicated sweep");
+    println!("{}", repr.table().render());
+    let r0 = &repr.points[0];
+    assert!(
+        r0.bit_identical && r0.top1_agreement == 1.0,
+        "zero-BER replica pool must be byte-identical to the fault-free oracle"
+    );
+    assert!(
+        repr.points.last().expect("four points").feature_mse > 0.0,
+        "a three-operand sense margin must corrupt the replica pool"
+    );
+
+    // ---- 2-shard pipeline: sense faults + a lossy inter-chip link -------
+    let sc = SweepConfig {
+        bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
+        link_bers: vec![0.0, 1e-6, 1e-4, 1e-3],
+        shards: 2,
+        workers: 1,
+        requests,
+        seed: 0xBE14,
+    };
+    let rep2 = sweep_model(ChipConfig::fat(), &spec, &sc).expect("pipelined sweep");
+    println!("{}", rep2.table().render());
+    let q0 = &rep2.points[0];
+    assert!(
+        q0.bit_identical && q0.top1_agreement == 1.0,
+        "zero sense + zero link BER must leave the 2-shard pipeline byte-identical"
+    );
+    let qlast = rep2.points.last().expect("four points");
+    assert!(
+        qlast.feature_mse > 0.0,
+        "sense + link errors at the three-operand margin must corrupt the pipeline"
+    );
+    println!(
+        "pipeline at link BER {}: {:.1}% top-1 agreement ({} of {} requests corrupted)",
+        ber_str(qlast.link_ber),
+        qlast.top1_agreement * 100.0,
+        qlast.corrupted_requests,
+        requests
+    );
+    println!("reliability OK");
+}

@@ -1,0 +1,145 @@
+//! Reliability-sweep bench: the paper's §IV-A3 sense-margin claim scored
+//! at model scale (the ROADMAP's "Reliability sweep at the network level"
+//! item).  A resident model is driven through the serving stack at the
+//! physical per-sense BERs of the four SA designs plus intermediate
+//! decades; the checks pin the shape of the accuracy-vs-BER curve:
+//! bit-exact at zero, no worse at FAT's two-operand margin than at the
+//! three-operand ParaPIM/GraphS margin, and visibly corrupted at the
+//! latter — in both the single-chip and the sharded (lossy-link)
+//! topologies.
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::circuit::reliability::sa_sense_bers;
+use fat_imc::circuit::sense_amp::SaKind;
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::model::ModelSpec;
+use fat_imc::coordinator::reliability::{ber_str, sweep_model, SweepConfig};
+use fat_imc::nn::resnet::ConvLayer;
+
+const REQUESTS: usize = 5;
+
+/// A small but multi-stage model (stride-2 mid-chain + head): big enough
+/// that a three-operand sense margin visibly corrupts it, small enough
+/// that a 2 x 4-point sweep stays a bench, not a soak test.
+fn bench_spec() -> ModelSpec {
+    let geo = vec![
+        ConvLayer { name: "r1", n: 1, c: 3, h: 10, w: 10, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "r2", n: 1, c: 6, h: 10, w: 10, kn: 8, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ConvLayer { name: "r3", n: 1, c: 8, h: 5, w: 5, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "r4", n: 1, c: 8, h: 5, w: 5, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1 },
+    ];
+    ModelSpec::synthetic("reliability-bench", &geo, false, 0.6, 0x9E11, Some(10))
+}
+
+fn main() {
+    let mut run = BenchRun::new("reliability_sweep");
+    let spec = bench_spec();
+    let anchors = sa_sense_bers();
+    let fat_ber = anchors.last().expect("four designs").1;
+    let three_op_ber = anchors[0].1;
+    println!(
+        "  physical anchors: FAT/STT-CiM sense BER {} vs GraphS/ParaPIM {}",
+        ber_str(fat_ber),
+        ber_str(three_op_ber)
+    );
+    let grid = vec![0.0, fat_ber, 1e-3, three_op_ber];
+
+    // ---- single chip ----------------------------------------------------
+    let sc = SweepConfig {
+        bers: grid.clone(),
+        link_bers: Vec::new(),
+        shards: 1,
+        workers: 1,
+        requests: REQUESTS,
+        seed: 0x9E12,
+    };
+    let t0 = std::time::Instant::now();
+    let rep = sweep_model(ChipConfig::fat(), &spec, &sc).expect("single-chip sweep");
+    println!("  single-chip sweep: {:.2} s host time", t0.elapsed().as_secs_f64());
+    println!("{}", rep.table().render());
+    println!("{}", rep.anchor_table().render());
+
+    run.check(
+        "zero-BER point is bit-identical to the fault-free oracle",
+        rep.points[0].bit_identical && rep.points[0].logit_mse == 0.0,
+        format!("{:?}", rep.points[0]),
+    );
+    let fat = rep.anchor_point(SaKind::Fat).expect("anchored").clone();
+    let para = rep.anchor_point(SaKind::ParaPim).expect("anchored").clone();
+    run.check(
+        "FAT's margin corrupts no more than the three-operand margin",
+        fat.feature_mse <= para.feature_mse && fat.logit_mse <= para.logit_mse,
+        format!("fat mse {} vs para mse {}", fat.feature_mse, para.feature_mse),
+    );
+    run.check(
+        "the three-operand sense BER visibly corrupts the model",
+        !para.bit_identical && para.feature_mse > 0.0,
+        format!("{para:?}"),
+    );
+    run.check(
+        "top-1 agreement does not improve as the BER grows (within noise)",
+        rep.agreement_monotonic_within(2.0 / REQUESTS as f64 + 1e-9),
+        format!(
+            "{:?}",
+            rep.points.iter().map(|p| p.top1_agreement).collect::<Vec<_>>()
+        ),
+    );
+
+    // ---- 2-replica pool (Replicated mode) --------------------------------
+    let sc = SweepConfig {
+        bers: grid.clone(),
+        link_bers: Vec::new(),
+        shards: 1,
+        workers: 2,
+        requests: REQUESTS,
+        seed: 0x9E14,
+    };
+    let t0 = std::time::Instant::now();
+    let repr = sweep_model(ChipConfig::fat(), &spec, &sc).expect("replicated sweep");
+    println!("  2-replica pool sweep: {:.2} s host time", t0.elapsed().as_secs_f64());
+    println!("{}", repr.table().render());
+    run.check(
+        "replicated zero-BER point is bit-identical",
+        repr.points[0].bit_identical,
+        format!("{:?}", repr.points[0]),
+    );
+    run.check(
+        "replicated pool collapses at the three-operand margin too",
+        {
+            let worst = repr.points.last().expect("four points");
+            !worst.bit_identical && worst.feature_mse > 0.0
+        },
+        format!("{:?}", repr.points.last()),
+    );
+
+    // ---- 2-shard pipeline with a lossy link ------------------------------
+    let sc = SweepConfig {
+        bers: grid,
+        link_bers: vec![0.0, 1e-6, 1e-4, 1e-3],
+        shards: 2,
+        workers: 1,
+        requests: REQUESTS,
+        seed: 0x9E13,
+    };
+    let t0 = std::time::Instant::now();
+    let rep2 = sweep_model(ChipConfig::fat(), &spec, &sc).expect("pipelined sweep");
+    println!("  2-shard pipelined sweep: {:.2} s host time", t0.elapsed().as_secs_f64());
+    println!("{}", rep2.table().render());
+    run.check(
+        "pipelined zero-BER point (sense + link) is bit-identical",
+        rep2.points[0].bit_identical,
+        format!("{:?}", rep2.points[0]),
+    );
+    let last = rep2.points.last().expect("four points");
+    run.check(
+        "sense + link errors at the three-operand margin corrupt the pipeline",
+        !last.bit_identical && last.feature_mse > 0.0,
+        format!("{last:?}"),
+    );
+    run.check(
+        "the sharded stack is no cleaner than the single chip at the worst point",
+        last.feature_mse >= para.feature_mse * 0.01,
+        format!("pipeline mse {} vs single-chip mse {}", last.feature_mse, para.feature_mse),
+    );
+    run.finish();
+}

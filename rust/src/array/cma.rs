@@ -79,27 +79,54 @@ impl Cma {
 
     /// Enable sensing-fault injection at `ber` flips per column per sense.
     pub fn with_fault_injection(mut self, ber: f64, seed: u64) -> Self {
-        self.fault = Some((ber, crate::testutil::Rng::new(seed)));
+        self.set_fault(ber, seed);
         self
     }
 
-    /// Corrupt the comparator outputs per the injected bit-error rate:
-    /// a sensing fault flips what the SA ladder resolves for a column.
+    /// (Re)arm sensing-fault injection in place — the chip's tile loop
+    /// reseeds its reused per-thread CMA once per tile so corruption
+    /// patterns are deterministic per (model seed, request, layer, tile)
+    /// regardless of how tiles land on OS threads.
+    pub fn set_fault(&mut self, ber: f64, seed: u64) {
+        self.fault = Some((ber, crate::testutil::Rng::new(seed)));
+    }
+
+    /// Disarm fault injection (the CMA senses cleanly again).
+    pub fn clear_fault(&mut self) {
+        self.fault = None;
+    }
+
+    /// Corrupt the comparator outputs per the injected bit-error rate: a
+    /// sensing fault flips what the SA ladder resolves for a column, i.e.
+    /// every comparator word of that sense at that column.  Columns are
+    /// visited by geometric inter-arrival sampling, so a sweep at FAT's
+    /// ~5e-8 sense BER costs one RNG draw per sense instead of 256.
     #[inline]
     fn inject_faults(&mut self, words: &mut [RowWords]) {
         let Some((ber, rng)) = &mut self.fault else { return };
-        if *ber <= 0.0 {
+        let ber = *ber;
+        if ber <= 0.0 {
             return;
         }
-        for w in 0..WORDS {
-            for b in 0..64 {
-                if rng.chance(*ber) {
-                    let col_mask = 1u64 << b;
-                    for word in words.iter_mut() {
-                        word[w] ^= col_mask;
-                    }
+        if ber >= 1.0 {
+            for word in words.iter_mut() {
+                for w in word.iter_mut() {
+                    *w = !*w;
                 }
             }
+            return;
+        }
+        // geometric skip: number of clean columns before the next flip is
+        // Geom(ber); per-column flip probability stays exactly `ber`
+        let ln_keep = (1.0 - ber).ln();
+        let mut col = rng.geometric_skip(ln_keep);
+        while col < COLS {
+            let (w, b) = (col / 64, col % 64);
+            let col_mask = 1u64 << b;
+            for word in words.iter_mut() {
+                word[w] ^= col_mask;
+            }
+            col += 1 + rng.geometric_skip(ln_keep);
         }
     }
 
@@ -208,6 +235,11 @@ impl Cma {
         // energy rises with the extra activated row.
         self.stats.latency_ns += self.timing.t_sense_ns;
         self.stats.energy_pj += self.energy.e_sense_row_pj * 1.5;
+        if self.fault.is_some() {
+            let mut words = [maj, xor3, or3];
+            self.inject_faults(&mut words);
+            return (words[0], words[1], words[2]);
+        }
         (maj, xor3, or3)
     }
 
@@ -476,6 +508,64 @@ mod fault_tests {
         a.store_vector(0, 8, &[1, 2, 3]);
         b.store_vector(0, 8, &[1, 2, 3]);
         assert_eq!(a.sense_two_rows(0, 1), b.sense_two_rows(0, 1));
+        assert_eq!(a.sense_three_rows(0, 1, 2), b.sense_three_rows(0, 1, 2));
+        // and the ledger stays identical: injection never costs time
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn set_fault_rearms_in_place_and_clear_disarms() {
+        let mut c = Cma::new();
+        c.store_vector(0, 8, &[0xFF; 64]);
+        let clean = c.sense_two_rows(0, 1);
+        c.set_fault(1.0, 7); // degenerate: every column flips
+        let (and, or) = c.sense_two_rows(0, 1);
+        assert_ne!((and, or), clean, "BER 1.0 must corrupt every sense");
+        assert_eq!(and[0], !clean.0[0]);
+        c.clear_fault();
+        assert_eq!(c.sense_two_rows(0, 1), clean, "disarmed CMA senses cleanly");
+        // reseeding restarts the stream deterministically
+        let mut d1 = Cma::new().with_fault_injection(0.3, 99);
+        let mut d2 = Cma::new();
+        d2.set_fault(0.3, 99);
+        d1.store_vector(0, 8, &[0xAB; 64]);
+        d2.store_vector(0, 8, &[0xAB; 64]);
+        for _ in 0..16 {
+            assert_eq!(d1.sense_two_rows(0, 1), d2.sense_two_rows(0, 1));
+        }
+    }
+
+    #[test]
+    fn geometric_sampler_hits_the_target_flip_rate() {
+        // per-column flip probability must be `ber` despite the skipping
+        let ber = 0.05;
+        let mut c = Cma::new().with_fault_injection(ber, 0xF11);
+        let mut flips = 0u64;
+        let senses = 2000u64;
+        for _ in 0..senses {
+            let (and, _) = c.sense_two_rows(0, 1); // all-zero rows: AND = flips
+            flips += and.iter().map(|w| w.count_ones() as u64).sum::<u64>();
+        }
+        let rate = flips as f64 / (senses * COLS as u64) as f64;
+        assert!(
+            (rate - ber).abs() < 0.005,
+            "observed flip rate {rate} vs injected {ber}"
+        );
+    }
+
+    #[test]
+    fn three_row_senses_are_also_fault_prone() {
+        // three-operand designs must see corruption too (§IV-A3 is about
+        // *their* margin); all-zero rows make any set bit an injected flip
+        let mut c = Cma::new().with_fault_injection(0.2, 3);
+        let mut flipped = 0;
+        for _ in 0..50 {
+            let (maj, xor3, or3) = c.sense_three_rows(0, 1, 2);
+            for w in 0..WORDS {
+                flipped += maj[w].count_ones() + xor3[w].count_ones() + or3[w].count_ones();
+            }
+        }
+        assert!(flipped > 0, "20% BER over 50 senses must flip something");
     }
 
     #[test]

@@ -52,6 +52,22 @@ pub fn sense_bit_error_rate(kind: SaKind, p: &MtjParams) -> f64 {
     flip_probability(sense_margin(p, rows), V_NOISE_SIGMA)
 }
 
+/// Per-sense bit-error rates of every SA design under the default MTJ
+/// parameters, worst first — the physical anchor points the model-level
+/// reliability sweep (`coordinator::reliability`) maps onto its
+/// accuracy-vs-BER curve.
+pub fn sa_sense_bers() -> Vec<(SaKind, f64)> {
+    let p = MtjParams::default();
+    // FAT last: it ties with STT-CiM (both 2-operand) and the stable sort
+    // must leave the design the paper champions at the reliable end.
+    let mut v: Vec<(SaKind, f64)> = [SaKind::ParaPim, SaKind::GraphS, SaKind::SttCim, SaKind::Fat]
+        .into_iter()
+        .map(|k| (k, sense_bit_error_rate(k, &p)))
+        .collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).expect("BERs are finite"));
+    v
+}
+
 /// Error rate of one N-bit vector-addition *bit slice* (per column):
 /// every sense the scheme performs is an opportunity to flip.
 pub fn addition_error_rate(kind: SaKind, bits: u32, p: &MtjParams) -> f64 {
@@ -108,6 +124,17 @@ mod tests {
         // ParaPIM senses twice per bit -> worse than GraphS at equal margin
         let g8 = addition_error_rate(SaKind::GraphS, 8, &p);
         assert!(e8 > g8);
+    }
+
+    #[test]
+    fn sa_sense_bers_cover_every_design_worst_first() {
+        let v = sa_sense_bers();
+        assert_eq!(v.len(), 4);
+        for w in v.windows(2) {
+            assert!(w[0].1 >= w[1].1, "{:?} before {:?}", w[0], w[1]);
+        }
+        assert_eq!(v.last().unwrap().0, SaKind::Fat, "FAT has the widest margin");
+        assert!(v.iter().all(|&(_, b)| (0.0..1.0).contains(&b)));
     }
 
     #[test]

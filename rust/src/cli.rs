@@ -77,6 +77,23 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Comma-separated float list (`--bers 1e-8,1e-6,1e-3`); `None` when
+    /// the flag is absent, so the caller can supply a derived default.
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: not a number: `{s}` in `{v}`"))
+                })
+                .collect::<Result<Vec<f64>>>()
+                .map(Some),
+        }
+    }
+
     /// Reject flags outside the allowed set (typo protection).
     pub fn allow(&self, allowed: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
@@ -129,6 +146,30 @@ COMMANDS:
       --max-batch <n>      micro-batch window per dequeue in replicated
                            mode (default 1 = no fusion)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
+  reliability              accuracy-vs-BER sweep (paper §IV-A3 at model
+                           scale): load the model once (weights stay
+                           resident for the whole sweep), re-arm sensing
+                           faults on every CMA per BER point, serve a
+                           fixed input set end to end, and score top-1
+                           agreement + logit MSE against the fault-free
+                           oracle; maps each SA design's physical sense
+                           BER onto the curve
+      --bers <list>        comma-separated sense BERs (default: a grid
+                           bracketing the four SA designs' physical
+                           per-sense error rates, e.g. 0,...,2.6e-2)
+      --link-bers <list>   inter-chip link BERs, one per point or one
+                           broadcast value (needs --shards > 1; the
+                           sharded stack's extra error source)
+      --shards <n>         sweep the n-chip pipeline instead of the
+                           single chip (default 1)
+      --workers <n>        sweep a pool of n full-model replicas instead
+                           (requests round-robined, per-replica
+                           decorrelated fault seeds; default 1;
+                           mutually exclusive with --shards > 1)
+      --requests <n>       labelled inputs served per point (default 4)
+      --seed <n>           corruption/input seed (default 0x5EED);
+                           sweeps are deterministic per seed
+      --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   help                     this text
 ";
 
@@ -169,5 +210,17 @@ mod tests {
     fn bad_number_is_an_error() {
         let a = Args::parse(&v(&["infer", "--sparsity", "much"])).unwrap();
         assert!(a.get_f64("sparsity", 0.5).is_err());
+    }
+
+    #[test]
+    fn float_lists_parse_with_scientific_notation() {
+        let a = Args::parse(&v(&["reliability", "--bers", "0,5.3e-8, 1e-3 ,0.026"])).unwrap();
+        assert_eq!(
+            a.get_f64_list("bers").unwrap(),
+            Some(vec![0.0, 5.3e-8, 1e-3, 0.026])
+        );
+        assert_eq!(a.get_f64_list("link-bers").unwrap(), None, "absent flag is None");
+        let bad = Args::parse(&v(&["reliability", "--bers", "0,oops"])).unwrap();
+        assert!(bad.get_f64_list("bers").is_err());
     }
 }

@@ -116,6 +116,7 @@ impl FatConfig {
             cmas: self.cmas,
             threads: self.threads,
             wreg_entries_per_cma: self.wreg_per_cma,
+            fault: None,
         }
     }
 }

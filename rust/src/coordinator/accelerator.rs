@@ -29,6 +29,7 @@ use crate::mapping::planner::{Assignment, GridPlan, PlannerConfig};
 use crate::nn::layers::TernaryFilter;
 use crate::nn::resnet::ConvLayer;
 use crate::nn::tensor::Tensor4;
+use crate::testutil::seed_mix;
 
 use super::metrics::ChipMetrics;
 
@@ -37,6 +38,21 @@ pub const T_WREG_NS: f64 = 0.17;
 /// Reduction-unit add latency / energy (digital CMOS in the MC).
 const T_REDUCE_NS: f64 = 0.5;
 const E_REDUCE_PJ: f64 = 0.1;
+
+/// Sensing-fault injection parameters for every CMA on a chip — the
+/// §IV-A3 reliability analysis lifted to chip scale.  `ber` is the
+/// per-column flip probability per sense (see
+/// `circuit::reliability::sense_bit_error_rate` for where physical values
+/// come from); `seed` roots the deterministic corruption streams.  Each
+/// tile execution derives its own stream from (seed, request, layer,
+/// tile), so results are reproducible regardless of thread scheduling,
+/// and the serving layers re-seed per worker/stage so replicas
+/// decorrelate (see `coordinator::server` / `coordinator::reliability`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SenseFault {
+    pub ber: f64,
+    pub seed: u64,
+}
 
 /// Chip configuration.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +72,12 @@ pub struct ChipConfig {
     /// `wreg_capacity`; larger models must be sharded across chips
     /// (see `coordinator::sharding`).
     pub wreg_entries_per_cma: usize,
+    /// Optional sensing-fault injection on every CMA of this chip.
+    /// `None` (the default everywhere) leaves the arrays ideal; at
+    /// `Some` with `ber = 0.0` the chip is bit-identical to the ideal
+    /// chip by construction — the injection hook never perturbs values
+    /// or timing unless a flip actually fires.
+    pub fault: Option<SenseFault>,
 }
 
 impl ChipConfig {
@@ -69,7 +91,15 @@ impl ChipConfig {
             cmas: 4096,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             wreg_entries_per_cma: 8192,
+            fault: None,
         }
+    }
+
+    /// This chip with sensing-fault injection armed at `ber` flips per
+    /// column per sense, rooted at `seed`.
+    pub fn with_fault_injection(mut self, ber: f64, seed: u64) -> Self {
+        self.fault = Some(SenseFault { ber, seed });
+        self
     }
 
     /// The ParaPIM baseline: carry write-back addition, no sparsity
@@ -217,12 +247,19 @@ impl FatChip {
         let ax = img2col(x, layer);
         let plan = GridPlan::plan(layer, self.cfg.planner());
         let weights = TileWeights::pack_plan(filter, &plan);
-        self.run_planned(&ax, layer, &plan, &weights, true)
+        self.run_planned(&ax, layer, &plan, &weights, true, 0)
     }
 
     /// Run a pre-planned layer against pre-packed tile weights.  The
     /// weight-stationary session calls this with `charge_wreg = false`:
     /// the registers are resident, only activations stream.
+    ///
+    /// `fault_salt` decorrelates fault-injection streams across calls
+    /// (the session salts with its request counter and layer index); it
+    /// is ignored when `cfg.fault` is `None`.  Each tile re-seeds the
+    /// worker thread's CMA from (fault seed, salt, tile id), so injected
+    /// corruption is deterministic for a given configuration regardless
+    /// of how tiles are chunked onto OS threads.
     pub(crate) fn run_planned(
         &self,
         ax: &Img2ColMatrix,
@@ -230,6 +267,7 @@ impl FatChip {
         plan: &GridPlan,
         weights: &[TileWeights],
         charge_wreg: bool,
+        fault_salt: u64,
     ) -> LayerRun {
         assert_eq!(weights.len(), plan.assignments.len(), "weights/plan mismatch");
         let total_cols = ax.cols;
@@ -260,6 +298,15 @@ impl FatChip {
                             let mut out = Vec::with_capacity(chunk.len());
                             for &(a, w) in chunk {
                                 cma.reset();
+                                if let Some(f) = self.cfg.fault {
+                                    // per-tile stream: deterministic no
+                                    // matter which thread runs the tile
+                                    let tile = ((a.step as u64) << 32) ^ a.cma as u64;
+                                    cma.set_fault(
+                                        f.ber,
+                                        seed_mix(seed_mix(f.seed, fault_salt), tile),
+                                    );
+                                }
                                 out.push(self.run_tile(ax, w, a, addition, charge_wreg, &mut cma));
                             }
                             out
@@ -435,7 +482,7 @@ mod tests {
         let ax = img2col(&x, &l);
         let plan = GridPlan::plan(&l, chip.cfg.planner());
         let weights = TileWeights::pack_plan(&f, &plan);
-        let resident = chip.run_planned(&ax, &l, &plan, &weights, false);
+        let resident = chip.run_planned(&ax, &l, &plan, &weights, false, 0);
 
         assert_eq!(resident.output.data, naive.output.data, "same math");
         assert_eq!(resident.metrics.weight_reg_writes, 0);
@@ -446,5 +493,51 @@ mod tests {
             resident.metrics.latency_ns,
             naive.metrics.latency_ns
         );
+    }
+
+    #[test]
+    fn zero_ber_fault_injection_is_bit_identical_at_chip_level() {
+        // Arming the hook at ber = 0.0 must not perturb the hot path: the
+        // run is byte-identical to the injection-disabled chip, metrics
+        // included.
+        let l = small_layer();
+        let mut rng = Rng::new(0xC47);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.6);
+        let clean = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &l);
+        let armed = FatChip::new(ChipConfig::fat().with_fault_injection(0.0, 99))
+            .run_conv_layer(&x, &f, &l);
+        assert_eq!(armed.output.data, clean.output.data, "ber 0.0 must be transparent");
+        assert_eq!(armed.metrics, clean.metrics, "injection must not cost time");
+    }
+
+    #[test]
+    fn chip_level_fault_injection_corrupts_deterministically() {
+        // High BER corrupts the layer; the corruption is a pure function
+        // of (seed, salt, tile), so reruns and different thread counts
+        // reproduce it exactly, and a different seed decorrelates it.
+        let l = small_layer();
+        let mut rng = Rng::new(0xC48);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.6);
+        let clean = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &l);
+
+        let cfg = ChipConfig::fat().with_fault_injection(0.05, 7);
+        let a = FatChip::new(cfg).run_conv_layer(&x, &f, &l);
+        assert_ne!(a.output.data, clean.output.data, "5% sense BER must corrupt");
+        let b = FatChip::new(cfg).run_conv_layer(&x, &f, &l);
+        assert_eq!(a.output.data, b.output.data, "same seed, same corruption");
+
+        let mut one_thread = cfg;
+        one_thread.threads = 1;
+        let c = FatChip::new(one_thread).run_conv_layer(&x, &f, &l);
+        assert_eq!(
+            a.output.data, c.output.data,
+            "corruption must not depend on thread chunking"
+        );
+
+        let other = FatChip::new(ChipConfig::fat().with_fault_injection(0.05, 8))
+            .run_conv_layer(&x, &f, &l);
+        assert_ne!(a.output.data, other.output.data, "different seed, different flips");
     }
 }

@@ -16,21 +16,27 @@
 //!   charging an inter-chip transfer leg at every boundary;
 //! - [`server`] — a threaded [`server::InferenceServer`] that runs either
 //!   `Replicated` (a resident replica per worker, with a micro-batcher)
-//!   or `Pipelined` (workers are shard *stages* connected by channels).
+//!   or `Pipelined` (workers are shard *stages* connected by channels);
+//! - [`reliability`] — the §IV-A3 sensing-reliability analysis at model
+//!   scale: [`reliability::sweep_model`] drives a resident model through
+//!   either serving topology at swept sense/link bit-error rates and
+//!   reports accuracy vs the fault-free oracle.
 
 pub mod accelerator;
 pub mod dpu;
 pub mod metrics;
 pub mod model;
+pub mod reliability;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod sharding;
 
-pub use accelerator::{ChipConfig, FatChip, LayerRun, TileWeights};
+pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
 pub use dpu::Dpu;
 pub use metrics::ChipMetrics;
 pub use model::{HeadSpec, LayerSpec, ModelSpec};
+pub use reliability::{default_ber_grid, sweep_model, SweepConfig, SweepReport};
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response, ServingMode};
 pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};

@@ -1,0 +1,630 @@
+//! Model-level reliability sweep — the paper's §IV-A3 sensing-reliability
+//! analysis lifted from per-sense flip rates to end-to-end model accuracy.
+//!
+//! `circuit::reliability` quantifies *why* FAT's two-operand sensing is
+//! more reliable (a 2.4x sense margin over the three-operand
+//! ParaPIM/GraphS designs, hence orders of magnitude lower per-sense
+//! bit-error rate).  This module answers the question that makes the
+//! margin story mean anything: **how many nines of model accuracy does
+//! the margin buy?**  It drives a whole resident model through the
+//! serving stack at a swept sense BER — every worker/stage CMA corrupted
+//! via [`ChipConfig::fault`] with decorrelated per-stage seeds — and
+//! reports top-1 agreement against the fault-free oracle plus logit /
+//! feature MSE per BER point.  In pipelined mode ([`SweepConfig::shards`]
+//! > 1) it additionally injects link-boundary bit flips on the
+//! transferred [`QuantActivations`](super::session::QuantActivations) at
+//! a swept link BER — the error model a single chip never sees.
+//!
+//! The default grid ([`default_ber_grid`]) brackets the physical anchor
+//! points from [`sa_sense_bers`], so the sweep directly reproduces the
+//! paper's comparison: FAT's ~5e-8 sense BER lands on the flat
+//! (bit-identical) end of the curve, the three-operand designs' ~2.6e-2
+//! on the collapsed end.
+//!
+//! Everything is deterministic: the same [`SweepConfig::seed`] replays
+//! the same corruption streams regardless of thread scheduling, and the
+//! `sense_ber = 0` point is byte-identical to the oracle by construction
+//! (the injection hook never perturbs values or timing unless a flip
+//! actually fires).
+
+use crate::circuit::reliability::sa_sense_bers;
+use crate::circuit::sense_amp::SaKind;
+use crate::coordinator::accelerator::{ChipConfig, SenseFault};
+use crate::coordinator::model::ModelSpec;
+use crate::coordinator::session::{ChipSession, ModelOutput};
+use crate::coordinator::sharding::PipelineSession;
+use crate::error::{ensure, Result};
+use crate::mapping::schemes::HwParams;
+use crate::nn::tensor::Tensor4;
+use crate::report::Table;
+use crate::testutil::{seed_mix, Rng};
+
+/// What to sweep and how to drive it.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Sense bit-error rates to sweep (per column per sense, as injected
+    /// by the CMAs).  Sorted ascending is conventional but not required.
+    pub bers: Vec<f64>,
+    /// Link bit-error rate per point: empty = ideal link everywhere, one
+    /// entry = broadcast to every point, otherwise one per `bers` entry.
+    /// Only meaningful with `shards > 1` (a single chip has no link).
+    pub link_bers: Vec<f64>,
+    /// 1 = single resident chip; > 1 = layer-sharded chip pipeline.
+    /// Mutually exclusive with `workers > 1`.
+    pub shards: usize,
+    /// Replicated mode: > 1 sweeps a pool of full-model replicas with
+    /// requests round-robined across them, each replica's faults armed
+    /// with its own decorrelated seed — exactly the seed derivation the
+    /// replicated `InferenceServer` applies per worker, but with a
+    /// deterministic request-to-replica assignment so sweeps replay.
+    pub workers: usize,
+    /// Fixed labelled input set size, served end-to-end at every point.
+    pub requests: usize,
+    /// Root seed for the input set and every corruption stream.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            bers: default_ber_grid(),
+            link_bers: Vec::new(),
+            shards: 1,
+            workers: 1,
+            requests: 8,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One swept (sense BER, link BER) point scored against the oracle.
+#[derive(Debug, Clone)]
+pub struct BerPoint {
+    pub sense_ber: f64,
+    pub link_ber: f64,
+    /// Fraction of classified rows whose top-1 class agrees with the
+    /// fault-free oracle's — model accuracy with the oracle as labels.
+    pub top1_agreement: f64,
+    /// Mean squared error over all logit entries vs the oracle.
+    pub logit_mse: f64,
+    /// Mean squared error over all backbone feature entries.
+    pub feature_mse: f64,
+    /// Every output byte-identical to the oracle (the `ber = 0` gate).
+    pub bit_identical: bool,
+    /// Requests whose features diverged from the oracle at all.
+    pub corrupted_requests: usize,
+}
+
+/// A physical SA design mapped onto the swept curve.
+#[derive(Debug, Clone)]
+pub struct SaAnchor {
+    pub kind: SaKind,
+    /// The design's modeled per-sense BER (`sense_bit_error_rate`).
+    pub sense_ber: f64,
+    /// Index of the swept point closest in log-BER space.
+    pub nearest_point: usize,
+}
+
+/// The full accuracy-vs-BER report.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub model: String,
+    pub shards: usize,
+    pub workers: usize,
+    pub requests: usize,
+    pub points: Vec<BerPoint>,
+    /// Every SA design's sense BER mapped to its nearest swept point —
+    /// the "FAT's margin buys K nines of accuracy" table.
+    pub anchors: Vec<SaAnchor>,
+}
+
+/// The default sweep grid: zero, the physical per-sense BERs of all four
+/// SA designs (two-operand FAT/STT-CiM ~5e-8, three-operand
+/// GraphS/ParaPIM ~2.6e-2, merged where they tie), and intermediate
+/// decades so the collapse of accuracy between the anchors is visible.
+pub fn default_ber_grid() -> Vec<f64> {
+    let mut g = vec![0.0, 1e-6, 1e-4, 1e-3];
+    for (_, b) in sa_sense_bers() {
+        g.push(b);
+    }
+    g.sort_by(|a, b| a.partial_cmp(b).expect("BERs are finite"));
+    g.dedup_by(|a, b| (*a - *b).abs() <= 1e-6 * a.abs().max(b.abs()));
+    g
+}
+
+/// Format a BER for a table cell.
+pub fn ber_str(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else {
+        format!("{v:.1e}")
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Either serving topology behind one `infer` call.  Built **once** per
+/// sweep: weights are planned and loaded into the SACU registers a single
+/// time, then every BER point just re-arms the injection hooks on the
+/// resident state — the weight-stationary contract applied to the sweep
+/// itself.
+enum Stack {
+    Single(Box<ChipSession>),
+    /// Full-model replicas with deterministic round-robin dispatch.
+    /// Each replica holds the whole model (reliability cares about
+    /// values, which are CMA-slice-independent); `arm` gives replica
+    /// `wi` the seed `seed_mix(base, wi)` — the replicated server's
+    /// per-worker derivation.
+    Replicated { replicas: Vec<ChipSession>, next: usize },
+    Pipeline(Box<PipelineSession>),
+}
+
+impl Stack {
+    fn build(
+        cfg: ChipConfig,
+        spec: &ModelSpec,
+        shards: usize,
+        workers: usize,
+        hw: HwParams,
+    ) -> Result<Self> {
+        Ok(if shards > 1 {
+            Stack::Pipeline(Box::new(PipelineSession::new(cfg, spec.clone(), shards, hw)?))
+        } else if workers > 1 {
+            let replicas = (0..workers)
+                .map(|_| ChipSession::new(cfg, spec.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            Stack::Replicated { replicas, next: 0 }
+        } else {
+            Stack::Single(Box::new(ChipSession::new(cfg, spec.clone())?))
+        })
+    }
+
+    /// Re-arm the fault hooks on the resident model (no reload): sense
+    /// faults on every chip — per-replica/stage decorrelated — and, for
+    /// a pipeline, the link's error model.
+    fn arm(&mut self, fault: Option<SenseFault>, link_ber: f64, link_seed: u64) -> Result<()> {
+        match self {
+            Stack::Single(s) => {
+                debug_assert!(link_ber == 0.0, "validated: no link on one chip");
+                s.set_fault(fault);
+                Ok(())
+            }
+            Stack::Replicated { replicas, .. } => {
+                debug_assert!(link_ber == 0.0, "validated: no link between replicas");
+                for (wi, s) in replicas.iter_mut().enumerate() {
+                    s.set_fault(fault.map(|f| SenseFault {
+                        ber: f.ber,
+                        seed: seed_mix(f.seed, wi as u64),
+                    }));
+                }
+                Ok(())
+            }
+            Stack::Pipeline(p) => {
+                p.set_fault(fault);
+                p.set_link_fault(link_ber, link_seed)
+            }
+        }
+    }
+
+    fn infer(&mut self, x: &Tensor4) -> Result<ModelOutput> {
+        match self {
+            Stack::Single(s) => s.infer(x),
+            Stack::Replicated { replicas, next } => {
+                let wi = *next % replicas.len();
+                *next = next.wrapping_add(1);
+                replicas[wi].infer(x)
+            }
+            Stack::Pipeline(p) => Ok(p.infer(x)?.out),
+        }
+    }
+}
+
+/// Sweep `spec` end-to-end through the serving stack over
+/// `sc.bers` x `sc.link_bers`: the model is loaded **once** (weights stay
+/// resident for the whole sweep), each point re-arms the injection hooks
+/// with per-point and per-stage decorrelated fault seeds, the same fixed
+/// input set is served at every point, and each point is scored against
+/// the fault-free oracle of the same topology (the disarmed stack).
+pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Result<SweepReport> {
+    spec.validate()?;
+    ensure!(sc.requests >= 1, "sweep needs at least one request");
+    ensure!(!sc.bers.is_empty(), "sweep needs at least one BER point");
+    ensure!(sc.shards >= 1, "sweep needs at least one chip");
+    ensure!(sc.workers >= 1, "sweep needs at least one replica");
+    ensure!(
+        sc.shards == 1 || sc.workers == 1,
+        "replicas of a pipeline are not modeled; sweep with workers > 1 OR shards > 1"
+    );
+    ensure!(
+        spec.head.is_some(),
+        "model `{}` has no classifier head; top-1 agreement needs logits",
+        spec.name
+    );
+    for &b in &sc.bers {
+        ensure!((0.0..=1.0).contains(&b), "sense BER {b} is not a probability");
+    }
+    let link_bers: Vec<f64> = match sc.link_bers.len() {
+        0 => vec![0.0; sc.bers.len()],
+        1 => vec![sc.link_bers[0]; sc.bers.len()],
+        n if n == sc.bers.len() => sc.link_bers.clone(),
+        n => crate::bail!("{n} link BERs for {} sense BERs (need 0, 1, or equal)", sc.bers.len()),
+    };
+    for &b in &link_bers {
+        ensure!((0.0..=1.0).contains(&b), "link BER {b} is not a probability");
+        ensure!(
+            b == 0.0 || sc.shards > 1,
+            "a positive link BER needs a pipeline (--shards > 1): one chip has no link"
+        );
+    }
+
+    // the fixed labelled input set, shared by the oracle and every point
+    let mut in_rng = Rng::new(seed_mix(sc.seed, 0xD47A));
+    let inputs: Vec<Tensor4> = (0..sc.requests).map(|_| spec.random_input(&mut in_rng)).collect();
+
+    // ONE resident stack for the whole sweep: the model is planned and
+    // its registers written once; the fault-free oracle labels come from
+    // the disarmed stack, then every BER point just re-arms the injection
+    // hooks on the same resident state (same topology, airtight
+    // comparison, no reload).
+    let mut clean_cfg = cfg;
+    clean_cfg.fault = None;
+    let mut stack = Stack::build(clean_cfg, spec, sc.shards, sc.workers, HwParams::default())?;
+    let labels: Vec<ModelOutput> =
+        inputs.iter().map(|x| stack.infer(x)).collect::<Result<_>>()?;
+
+    let mut points = Vec::with_capacity(sc.bers.len());
+    for (idx, (&sense_ber, &link_ber)) in sc.bers.iter().zip(&link_bers).enumerate() {
+        stack.arm(
+            Some(SenseFault {
+                ber: sense_ber,
+                seed: seed_mix(sc.seed, 0xBE0 + idx as u64),
+            }),
+            link_ber,
+            seed_mix(sc.seed, 0x117 + idx as u64),
+        )?;
+
+        let mut agree = 0usize;
+        let mut rows = 0usize;
+        let mut logit_se = 0.0f64;
+        let mut logit_n = 0usize;
+        let mut feat_se = 0.0f64;
+        let mut feat_n = 0usize;
+        let mut bit_identical = true;
+        let mut corrupted_requests = 0usize;
+        for (x, want) in inputs.iter().zip(&labels) {
+            let got = stack.infer(x)?;
+            if got.features.data != want.features.data || got.logits != want.logits {
+                bit_identical = false;
+            }
+            if got.features.data != want.features.data {
+                corrupted_requests += 1;
+            }
+            for (g, w) in got.features.data.iter().zip(&want.features.data) {
+                feat_se += (*g as f64 - *w as f64).powi(2);
+                feat_n += 1;
+            }
+            let (gl, wl) = (
+                got.logits.as_ref().expect("head ensured above"),
+                want.logits.as_ref().expect("head ensured above"),
+            );
+            for (grow, wrow) in gl.iter().zip(wl) {
+                rows += 1;
+                if argmax(grow) == argmax(wrow) {
+                    agree += 1;
+                }
+                for (g, w) in grow.iter().zip(wrow) {
+                    logit_se += (*g as f64 - *w as f64).powi(2);
+                    logit_n += 1;
+                }
+            }
+        }
+        points.push(BerPoint {
+            sense_ber,
+            link_ber,
+            top1_agreement: agree as f64 / rows.max(1) as f64,
+            logit_mse: logit_se / logit_n.max(1) as f64,
+            feature_mse: feat_se / feat_n.max(1) as f64,
+            bit_identical,
+            corrupted_requests,
+        });
+    }
+
+    // map every SA design's physical sense BER onto the swept curve
+    let log_dist = |a: f64, b: f64| {
+        let eps = 1e-30;
+        ((a + eps).ln() - (b + eps).ln()).abs()
+    };
+    let anchors = sa_sense_bers()
+        .into_iter()
+        .map(|(kind, ber)| {
+            let nearest_point = points
+                .iter()
+                .enumerate()
+                .min_by(|(_, p), (_, q)| {
+                    log_dist(ber, p.sense_ber)
+                        .partial_cmp(&log_dist(ber, q.sense_ber))
+                        .expect("distances are finite")
+                })
+                .map(|(i, _)| i)
+                .expect("at least one point");
+            SaAnchor { kind, sense_ber: ber, nearest_point }
+        })
+        .collect();
+
+    Ok(SweepReport {
+        model: spec.name.clone(),
+        shards: sc.shards,
+        workers: sc.workers,
+        requests: sc.requests,
+        points,
+        anchors,
+    })
+}
+
+impl SweepReport {
+    /// The accuracy-vs-BER curve as a printable table.
+    pub fn table(&self) -> Table {
+        let mode = if self.shards > 1 {
+            format!("{}-shard pipeline", self.shards)
+        } else if self.workers > 1 {
+            format!("{}-replica pool", self.workers)
+        } else {
+            "single chip".to_string()
+        };
+        let mut t = Table::new(
+            &format!(
+                "accuracy vs BER: {} on the {mode} ({} requests vs the fault-free oracle)",
+                self.model, self.requests
+            ),
+            &["sense BER", "link BER", "top-1 agree", "logit MSE", "feature MSE", "bit-identical"],
+        );
+        for p in &self.points {
+            let ident = if p.bit_identical {
+                "yes".to_string()
+            } else {
+                format!("no ({})", p.corrupted_requests)
+            };
+            t.row(vec![
+                ber_str(p.sense_ber),
+                ber_str(p.link_ber),
+                format!("{:.1}%", p.top1_agreement * 100.0),
+                format!("{:.3e}", p.logit_mse),
+                format!("{:.3e}", p.feature_mse),
+                ident,
+            ]);
+        }
+        t
+    }
+
+    /// The sense-margin map: each SA design's physical per-sense BER and
+    /// the model accuracy at the nearest swept point — the §IV-A3 margin
+    /// claim expressed in nines of accuracy.  The scored point's link BER
+    /// is part of the row: in a pipelined sweep with co-swept link errors
+    /// the accuracy at that point combines sense *and* link corruption,
+    /// and attributing the combination to the sense margin alone would
+    /// overstate the design's cost.
+    pub fn anchor_table(&self) -> Table {
+        let mut t = Table::new(
+            "sense-margin map: SA designs on the accuracy curve (§IV-A3 at model scale)",
+            &[
+                "SA design", "sense BER", "scored at sense", "scored at link",
+                "top-1 agree", "bit-identical",
+            ],
+        );
+        for a in &self.anchors {
+            let p = &self.points[a.nearest_point];
+            t.row(vec![
+                format!("{:?}", a.kind),
+                ber_str(a.sense_ber),
+                ber_str(p.sense_ber),
+                ber_str(p.link_ber),
+                format!("{:.1}%", p.top1_agreement * 100.0),
+                if p.bit_identical { "yes".into() } else { "no".into() },
+            ]);
+        }
+        t
+    }
+
+    /// Agreement is non-increasing along the point order within `tol`
+    /// (the sweep is stochastic: one request of noise is expected).
+    /// Meaningful when `bers` was sorted ascending with equal link BERs.
+    pub fn agreement_monotonic_within(&self, tol: f64) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[1].top1_agreement <= w[0].top1_agreement + tol)
+    }
+
+    /// The point an anchor landed on.
+    pub fn anchor_point(&self, kind: SaKind) -> Option<&BerPoint> {
+        self.anchors
+            .iter()
+            .find(|a| a.kind == kind)
+            .map(|a| &self.points[a.nearest_point])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model::tests::tiny_spec;
+
+    fn quick_cfg() -> SweepConfig {
+        SweepConfig {
+            bers: vec![0.0, 1e-3, 0.05],
+            link_bers: Vec::new(),
+            shards: 1,
+            workers: 1,
+            requests: 3,
+            seed: 0xAB5,
+        }
+    }
+
+    #[test]
+    fn zero_ber_point_is_bit_identical_and_high_ber_corrupts() {
+        let spec = tiny_spec(51);
+        let rep = sweep_model(ChipConfig::fat(), &spec, &quick_cfg()).unwrap();
+        assert_eq!(rep.points.len(), 3);
+
+        let p0 = &rep.points[0];
+        assert!(p0.bit_identical, "ber 0 must be byte-identical to the oracle");
+        assert_eq!(p0.top1_agreement, 1.0);
+        assert_eq!(p0.logit_mse, 0.0);
+        assert_eq!(p0.feature_mse, 0.0);
+        assert_eq!(p0.corrupted_requests, 0);
+
+        let p2 = &rep.points[2];
+        assert!(!p2.bit_identical, "5% sense BER must corrupt");
+        assert!(p2.feature_mse > 0.0);
+        assert!(p2.logit_mse > 0.0);
+        assert!(p2.corrupted_requests > 0);
+
+        // corruption grows with BER by orders of magnitude on this grid
+        let p1 = &rep.points[1];
+        assert!(
+            p1.feature_mse <= p2.feature_mse,
+            "feature MSE must not shrink as BER grows: {} vs {}",
+            p1.feature_mse,
+            p2.feature_mse
+        );
+    }
+
+    #[test]
+    fn pipelined_sweep_matches_contract_at_zero_and_sees_link_errors() {
+        let spec = tiny_spec(53);
+        let sc = SweepConfig {
+            bers: vec![0.0, 0.0, 0.05],
+            link_bers: vec![0.0, 0.05, 0.05],
+            shards: 2,
+            requests: 2,
+            seed: 0xAB6,
+            ..quick_cfg()
+        };
+        let rep = sweep_model(ChipConfig::fat(), &spec, &sc).unwrap();
+        assert!(rep.points[0].bit_identical, "clean pipeline == oracle");
+        // link errors alone (sense BER 0) must corrupt the sharded stack
+        assert!(!rep.points[1].bit_identical, "5% link BER must corrupt");
+        assert!(rep.points[1].feature_mse > 0.0);
+        // both error sources together are no cleaner than the link alone
+        assert!(rep.points[2].feature_mse > 0.0);
+    }
+
+    #[test]
+    fn three_shard_zero_ber_point_is_bit_identical() {
+        let spec = tiny_spec(57);
+        let sc = SweepConfig {
+            bers: vec![0.0],
+            link_bers: vec![0.0],
+            shards: 3,
+            requests: 2,
+            seed: 0xAB8,
+            ..quick_cfg()
+        };
+        let rep = sweep_model(ChipConfig::fat(), &spec, &sc).unwrap();
+        assert!(rep.points[0].bit_identical);
+        assert_eq!(rep.points[0].top1_agreement, 1.0);
+    }
+
+    #[test]
+    fn replicated_sweep_is_clean_at_zero_and_corrupts_at_high_ber() {
+        // ISSUE 3 acceptance: the sweep must run in Replicated mode too —
+        // a pool of full-model replicas, requests round-robined, each
+        // replica's faults armed with its own decorrelated seed.
+        let spec = tiny_spec(65);
+        let sc = SweepConfig { workers: 2, requests: 4, ..quick_cfg() };
+        let rep = sweep_model(ChipConfig::fat(), &spec, &sc).unwrap();
+        assert!(rep.points[0].bit_identical, "2-replica pool at ber 0 == oracle");
+        assert_eq!(rep.points[0].top1_agreement, 1.0);
+        let worst = rep.points.last().unwrap();
+        assert!(!worst.bit_identical && worst.feature_mse > 0.0);
+        assert!(rep.table().render().contains("2-replica pool"));
+        // replicas of a pipeline are rejected, as is a zero-size pool
+        let sc = SweepConfig { workers: 2, shards: 2, ..quick_cfg() };
+        assert!(sweep_model(ChipConfig::fat(), &spec, &sc).is_err());
+        let sc = SweepConfig { workers: 0, ..quick_cfg() };
+        assert!(sweep_model(ChipConfig::fat(), &spec, &sc).is_err());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_for_a_fixed_seed() {
+        let spec = tiny_spec(55);
+        let a = sweep_model(ChipConfig::fat(), &spec, &quick_cfg()).unwrap();
+        let b = sweep_model(ChipConfig::fat(), &spec, &quick_cfg()).unwrap();
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p.top1_agreement, q.top1_agreement);
+            assert_eq!(p.logit_mse, q.logit_mse);
+            assert_eq!(p.feature_mse, q.feature_mse);
+        }
+    }
+
+    #[test]
+    fn anchors_map_every_sa_design_with_fat_on_the_reliable_end() {
+        let spec = tiny_spec(59);
+        // grid containing the physical anchors themselves, so FAT maps to
+        // its own ~5e-8 point and the three-operand designs to ~2.6e-2
+        let anchors = sa_sense_bers();
+        let fat_ber = anchors.last().unwrap().1;
+        let para_ber = anchors[0].1;
+        let sc = SweepConfig {
+            bers: vec![0.0, fat_ber, 1e-3, para_ber],
+            ..quick_cfg()
+        };
+        let rep = sweep_model(ChipConfig::fat(), &spec, &sc).unwrap();
+        assert_eq!(rep.anchors.len(), 4);
+        let fat = rep.anchor_point(SaKind::Fat).unwrap();
+        let para = rep.anchor_point(SaKind::ParaPim).unwrap();
+        assert_eq!(fat.sense_ber, fat_ber, "FAT maps to its own grid point");
+        assert_eq!(para.sense_ber, para_ber);
+        // the margin story at model scale: corruption at FAT's physical
+        // BER is orders of magnitude below the three-operand designs'
+        assert!(fat.sense_ber < para.sense_ber);
+        assert!(
+            fat.feature_mse <= para.feature_mse,
+            "FAT's margin must not corrupt more: {} vs {}",
+            fat.feature_mse,
+            para.feature_mse
+        );
+        assert!(!para.bit_identical, "~2.6e-2 per-sense BER must corrupt the model");
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let spec = tiny_spec(61);
+        let cfg = ChipConfig::fat();
+        // no BER points
+        let sc = SweepConfig { bers: vec![], ..quick_cfg() };
+        assert!(sweep_model(cfg, &spec, &sc).is_err());
+        // link BER without a pipeline
+        let sc = SweepConfig { link_bers: vec![0.1], ..quick_cfg() };
+        assert!(sweep_model(cfg, &spec, &sc).is_err());
+        // mismatched link grid
+        let sc = SweepConfig { link_bers: vec![0.0, 0.0], shards: 2, ..quick_cfg() };
+        assert!(sweep_model(cfg, &spec, &sc).is_err());
+        // not a probability
+        let sc = SweepConfig { bers: vec![1.5], ..quick_cfg() };
+        assert!(sweep_model(cfg, &spec, &sc).is_err());
+        // headless model
+        let mut headless = tiny_spec(63);
+        headless.head = None;
+        assert!(sweep_model(cfg, &headless, &quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn default_grid_brackets_the_physical_anchors() {
+        let g = default_ber_grid();
+        assert!(g.len() >= 4, "{g:?}");
+        assert_eq!(g[0], 0.0);
+        assert!(g.windows(2).all(|w| w[0] < w[1]), "sorted, deduped: {g:?}");
+        let anchors = sa_sense_bers();
+        let lo = anchors.last().unwrap().1; // FAT
+        let hi = anchors[0].1; // three-operand designs
+        assert!(g.contains(&lo) && g.contains(&hi), "{g:?} must contain {lo} and {hi}");
+    }
+}

@@ -33,8 +33,9 @@ use std::time::{Duration, Instant};
 use crate::error::{bail, ensure, Result};
 use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
+use crate::testutil::{seed_mix, Rng};
 
-use super::accelerator::ChipConfig;
+use super::accelerator::{ChipConfig, SenseFault};
 use super::metrics::ChipMetrics;
 use super::session::{
     batched_wreg_footprint, wreg_footprint, ChipSession, ModelSpec, QuantActivations,
@@ -129,13 +130,34 @@ impl InferenceServer {
     /// Spawn the worker pool in the given mode.  The spec is validated
     /// once up front, then every worker plans its share onto its chip and
     /// writes the weight registers before the first request is accepted.
+    ///
+    /// Uses the default [`HwParams`] (ideal inter-chip link); the
+    /// reliability sweep passes its own via [`Self::start_with_hw`].
     pub fn start_with(cfg: ChipConfig, mode: ServingMode, spec: ModelSpec) -> Result<Self> {
+        Self::start_with_hw(cfg, mode, spec, HwParams::default())
+    }
+
+    /// [`Self::start_with`] with explicit link parameters.  In `Pipelined`
+    /// mode the stages charge `hw`'s link cost at every boundary and, when
+    /// `hw.link_ber > 0`, corrupt the transported activations at that
+    /// bit-error rate (each stage owns a decorrelated deterministic
+    /// stream); `Replicated` mode has no inter-chip link, so `hw` is
+    /// unused there.  When `cfg.fault` is armed, every worker (or stage)
+    /// re-seeds it with its own index so replicas decorrelate.
+    pub fn start_with_hw(
+        cfg: ChipConfig,
+        mode: ServingMode,
+        spec: ModelSpec,
+        hw: HwParams,
+    ) -> Result<Self> {
         spec.validate()?;
         match mode {
             ServingMode::Replicated { workers, max_batch } => {
                 Self::start_replicated(cfg, workers, max_batch, spec)
             }
-            ServingMode::Pipelined { shards } => Self::start_pipelined(cfg, shards, spec, mode),
+            ServingMode::Pipelined { shards } => {
+                Self::start_pipelined(cfg, shards, spec, mode, hw)
+            }
         }
     }
 
@@ -198,6 +220,13 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                 // each worker simulates its slice of the chip's CMAs
                 worker_cfg.cmas = cmas;
                 worker_cfg.threads = 1;
+                // per-worker fault seed: replicas must decorrelate, or a
+                // reliability sweep would see identical corruption on
+                // every replica of the same request stream
+                worker_cfg.fault = cfg.fault.map(|f| SenseFault {
+                    ber: f.ber,
+                    seed: seed_mix(f.seed, wi as u64),
+                });
                 std::thread::spawn(move || {
                     // one-time: plan + write the weight registers
                     let mut session = ChipSession::new(worker_cfg, (*spec).clone())
@@ -260,8 +289,13 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         shards: usize,
         spec: ModelSpec,
         mode: ServingMode,
+        hw: HwParams,
     ) -> Result<Self> {
-        let hw = HwParams::default();
+        ensure!(
+            (0.0..=1.0).contains(&hw.link_ber),
+            "link bit-error rate must be a probability, got {}",
+            hw.link_ber
+        );
         let plan = ShardPlan::partition(&spec, &cfg, shards)?;
         let input_geometry = spec.input_geometry();
         let (tx, rx_in) = mpsc::channel::<Request>();
@@ -275,6 +309,13 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
             let sub = plan.subspec(&spec, i);
             let is_last = i + 1 == shards;
             let tx_ready = tx_ready.clone();
+            // per-stage fault seed, mirroring PipelineSession: stages are
+            // distinct chips and must corrupt independently
+            let mut stage_cfg = cfg;
+            stage_cfg.fault = cfg.fault.map(|f| SenseFault {
+                ber: f.ber,
+                seed: seed_mix(f.seed, i as u64),
+            });
             // stage i's inputs: raw requests for the head stage, in-flight
             // activations for the rest
             let in_req = if i == 0 { rx_in.take() } else { None };
@@ -291,8 +332,12 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
             handles.push(std::thread::spawn(move || {
                 // one-time: this shard's registers onto this stage's chip
                 let mut session =
-                    ChipSession::new(cfg, sub).expect("shard spec validated before spawn");
+                    ChipSession::new(stage_cfg, sub).expect("shard spec validated before spawn");
                 let _ = tx_ready.send((i, *session.loading()));
+                // deterministic link-corruption stream for this stage's
+                // incoming leg (armed only at a positive link BER)
+                let mut link_rng = (i > 0 && hw.link_ber > 0.0)
+                    .then(|| Rng::new(seed_mix(hw.link_fault_seed, i as u64)));
                 loop {
                     let (id, act, metrics, t0) = if let Some(rx) = &in_req {
                         let Ok(req) = rx.recv() else { break };
@@ -303,15 +348,19 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                         (req.id, act, m, t0)
                     } else {
                         let rx = in_msg.as_ref().expect("inner stage has a stage channel");
-                        let Ok(msg) = rx.recv() else { break };
+                        let Ok(mut msg) = rx.recv() else { break };
                         // the activations just crossed the inter-chip
-                        // link: charge the transfer leg
+                        // link: charge the transfer leg, then apply the
+                        // link's error model to the payload
                         let mut m = msg.metrics;
                         let bytes = msg.act.wire_bytes();
                         let leg = xfer_cost_ns(bytes, &hw);
                         m.xfer_bytes += bytes;
                         m.xfer_ns += leg;
                         m.latency_ns += leg;
+                        if let Some(rng) = &mut link_rng {
+                            msg.act.inject_link_faults(hw.link_ber, rng);
+                        }
                         (msg.id, msg.act, m, msg.t0)
                     };
                     let (act, m) = session
@@ -611,6 +660,162 @@ mod tests {
         let recovered = server.collect_timeout(1, Duration::from_secs(30)).unwrap();
         assert_eq!(recovered.len(), 1);
         assert_eq!(recovered[0].id, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn buffered_responses_survive_a_missed_deadline_exactly_once_in_order() {
+        // ISSUE 3 satellite: responses pulled off the queue by a
+        // collect_timeout that then misses its deadline must come back
+        // from the next collect exactly once, in submission-tag order
+        // (one worker serves the queue in order), and must not be
+        // double-counted in aggregate metrics when some of them were
+        // served by one fused micro-batched run.
+        let spec = small_spec(0x7150);
+        let mut rng = Rng::new(0x7151);
+        let server = InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Replicated { workers: 1, max_batch: 4 },
+            spec.clone(),
+        )
+        .unwrap();
+        for id in 0..4u64 {
+            server.submit(request(id, &spec, &mut rng)).unwrap();
+        }
+        // ask for more than was submitted: the deadline fires, but the 4
+        // completed responses stay buffered
+        let err = server.collect_timeout(6, Duration::from_millis(1500)).unwrap_err();
+        assert!(format!("{err:#}").contains("of 6"), "{err:#}");
+
+        // a second undersized ask drains part of the buffer...
+        let first = server.collect_timeout(3, Duration::from_secs(60)).unwrap();
+        // ...and the rest arrives on the next call, with nothing lost
+        let rest = server.collect_timeout(1, Duration::from_secs(60)).unwrap();
+        let all: Vec<&Response> = first.iter().chain(&rest).collect();
+        assert_eq!(
+            all.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "buffered responses must come back exactly once, in submission order"
+        );
+
+        // aggregate metrics: summing latency / batched over responses must
+        // count each fused run exactly once.  Responses of one fused run
+        // share identical metrics, so group them and compare.
+        let total: f64 = all.iter().map(|r| r.metrics.latency_ns / r.batched as f64).sum();
+        let mut run_total = 0.0f64;
+        let mut counted = 0usize;
+        while counted < all.len() {
+            let r = all[counted];
+            // every response of this run reports the same fused width
+            for other in &all[counted..counted + r.batched] {
+                assert_eq!(other.batched, r.batched, "fused group must agree on its width");
+                assert_eq!(other.metrics, r.metrics, "fused group shares one run's metrics");
+            }
+            run_total += r.metrics.latency_ns;
+            counted += r.batched;
+        }
+        assert_eq!(counted, all.len(), "fused groups must tile the response list");
+        assert!(
+            (total - run_total).abs() < 1e-6 * run_total.max(1.0),
+            "per-request shares {total} must sum to the distinct-run total {run_total}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_link_faults_corrupt_responses_but_zero_ber_is_identical() {
+        let spec = small_spec(0x7160);
+        let mut rng = Rng::new(0x7161);
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+        let wants: Vec<_> = xs.iter().map(|x| oracle.infer(x).unwrap()).collect();
+
+        // zero link BER (armed explicitly): byte-identical serving
+        let hw0 = HwParams { link_ber: 0.0, link_fault_seed: 3, ..HwParams::default() };
+        let server = InferenceServer::start_with_hw(
+            ChipConfig::fat().with_fault_injection(0.0, 0xAB),
+            ServingMode::Pipelined { shards: 2 },
+            spec.clone(),
+            hw0,
+        )
+        .unwrap();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+        }
+        let responses = server.collect_timeout(3, Duration::from_secs(60)).unwrap();
+        for r in &responses {
+            assert_eq!(
+                r.features.data, wants[r.id as usize].features.data,
+                "zero-BER pipelined serving must stay byte-identical"
+            );
+        }
+        server.shutdown();
+
+        // lossy link: responses must diverge from the oracle
+        let hw = HwParams { link_ber: 0.05, link_fault_seed: 3, ..HwParams::default() };
+        let server = InferenceServer::start_with_hw(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 2 },
+            spec.clone(),
+            hw,
+        )
+        .unwrap();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+        }
+        let responses = server.collect_timeout(3, Duration::from_secs(60)).unwrap();
+        let corrupted = responses
+            .iter()
+            .filter(|r| r.features.data != wants[r.id as usize].features.data)
+            .count();
+        assert!(corrupted > 0, "a 5% link BER must corrupt at least one of 3 responses");
+        for r in &responses {
+            assert!(r.metrics.xfer_ns > 0.0, "the link is still charged");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_server_link_corruption_replays_on_pipeline_session() {
+        // Both pipelined paths derive the per-stage link streams the same
+        // way (seed_mix(link_fault_seed, stage)), so the same seed and
+        // request order corrupt identically whether requests go through
+        // the threaded server or the in-process PipelineSession.
+        let spec = small_spec(0x7170);
+        let mut rng = Rng::new(0x7171);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+        let hw = HwParams { link_ber: 0.02, link_fault_seed: 0xC0DE, ..HwParams::default() };
+
+        let mut pipe = crate::coordinator::sharding::PipelineSession::new(
+            ChipConfig::fat(),
+            spec.clone(),
+            2,
+            hw,
+        )
+        .unwrap();
+        let wants: Vec<_> = xs.iter().map(|x| pipe.infer(x).unwrap().out).collect();
+
+        let server = InferenceServer::start_with_hw(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 2 },
+            spec.clone(),
+            hw,
+        )
+        .unwrap();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+        }
+        let mut responses = server.collect_timeout(3, Duration::from_secs(60)).unwrap();
+        responses.sort_by_key(|r| r.id);
+        for (r, want) in responses.iter().zip(&wants) {
+            assert_eq!(
+                r.features.data, want.features.data,
+                "request {}: server and session must corrupt identically",
+                r.id
+            );
+            assert_eq!(r.logits, want.logits);
+        }
         server.shutdown();
     }
 

@@ -169,6 +169,44 @@ impl QuantActivations {
     pub fn wire_bytes(&self) -> u64 {
         self.q.data.len() as u64 + 4 * self.scales.len() as u64
     }
+
+    /// Corrupt the activation payload as an unreliable inter-chip link
+    /// would: every bit of every transported 8-bit activation flips
+    /// independently with probability `ber`.  The per-request scale words
+    /// are assumed protected (a 4-byte header is cheap to CRC; the bulk
+    /// payload is not), so only `q` is perturbed — and a corrupted value
+    /// stays a valid 8-bit activation, which is what the next chip's
+    /// arrays require.  No-op at `ber <= 0.0`.
+    ///
+    /// Flipped bit positions are found by geometric inter-arrival
+    /// sampling over the flattened bit stream (the same trick as
+    /// `Cma::inject_faults`): per-bit flip probability stays exactly
+    /// `ber`, but a low-BER link costs O(flips) RNG draws, not O(bits).
+    pub fn inject_link_faults(&mut self, ber: f64, rng: &mut crate::testutil::Rng) {
+        if ber <= 0.0 {
+            return;
+        }
+        let data = &mut self.q.data;
+        if ber >= 1.0 {
+            for v in data.iter_mut() {
+                *v = (*v as u8 ^ 0xFF) as f32;
+            }
+            return;
+        }
+        let total_bits = data.len() * 8;
+        let ln_keep = (1.0 - ber).ln();
+        let mut bit = rng.geometric_skip(ln_keep);
+        while bit < total_bits {
+            let (i, b) = (bit / 8, bit % 8);
+            debug_assert!(
+                (0.0..=255.0).contains(&data[i]) && data[i].fract() == 0.0,
+                "link payload {} not an 8-bit activation",
+                data[i]
+            );
+            data[i] = (data[i] as u8 ^ (1 << b)) as f32;
+            bit += 1 + rng.geometric_skip(ln_keep);
+        }
+    }
 }
 
 /// The result of serving one request through the resident model.
@@ -232,6 +270,17 @@ impl ChipSession {
     /// One-time loading metrics (weight-register writes + planning).
     pub fn loading(&self) -> &ChipMetrics {
         &self.model.loading
+    }
+
+    /// (Re)arm or disarm sensing-fault injection on the resident chip
+    /// without touching the loaded model: the registers stay resident, so
+    /// a reliability sweep re-arms one session per BER point instead of
+    /// replanning and reloading the weights it already holds.
+    pub fn set_fault(&mut self, fault: Option<crate::coordinator::accelerator::SenseFault>) {
+        // chip.cfg is the authoritative copy: run_planned reads the fault
+        // hook from there.  model.cfg is only consulted for planner
+        // geometry / register capacity, which injection never touches.
+        self.chip.cfg.fault = fault;
     }
 
     /// Requests served so far.
@@ -329,12 +378,16 @@ the chip holds {capacity}; lower the batch window",
         } else {
             &self.batch_plans[&k]
         };
-        for (ls, pl) in self.model.spec.layers.iter().zip(planned) {
+        for (li, (ls, pl)) in self.model.spec.layers.iter().zip(planned).enumerate() {
             // ternary conv against the *resident* registers: no wreg cost
             let mut eff = ls.layer;
             eff.n = k * ls.layer.n;
             img2col_into(&cur, &eff, &mut self.scratch);
-            let run = self.chip.run_planned(&self.scratch, &eff, &pl.plan, &pl.tiles, false);
+            // fault-injection salt: decorrelate corruption across requests
+            // (served counter) and layers; ignored on ideal chips
+            let salt = crate::testutil::seed_mix(self.served, li as u64);
+            let run =
+                self.chip.run_planned(&self.scratch, &eff, &pl.plan, &pl.tiles, false, salt);
             metrics.add(&run.metrics);
 
             // DPU: BN (dequant folded into gamma) + ReLU.  The NCHW buffer
@@ -655,6 +708,95 @@ mod tests {
         let err = ChipSession::new(cfg, spec).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("shard"), "error should point at sharding: {msg}");
+    }
+
+    #[test]
+    fn zero_ber_session_is_byte_identical_to_ideal_session() {
+        // The fault-injection plumbing must not perturb the hot path:
+        // with injection armed at ber = 0.0 every output (and the metrics)
+        // is byte-identical to the injection-disabled oracle.
+        let spec = tiny_spec(41);
+        let mut ideal = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let armed =
+            ChipSession::new(ChipConfig::fat().with_fault_injection(0.0, 0xDEAD), spec.clone());
+        let mut armed = armed.unwrap();
+        let xs: Vec<Tensor4> = (0..3).map(|i| random_input(&spec, 500 + i)).collect();
+        for x in &xs {
+            let want = ideal.infer(x).unwrap();
+            let got = armed.infer(x).unwrap();
+            assert_eq!(got.features.data, want.features.data, "ber 0.0 must be transparent");
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.metrics, want.metrics, "injection must not change the ledger");
+        }
+    }
+
+    #[test]
+    fn faulty_session_decorrelates_across_requests_and_replicas() {
+        // The same input served twice on a faulty chip must corrupt
+        // differently (the salt includes the served counter), and two
+        // sessions with different fault seeds must corrupt differently
+        // (per-replica decorrelation).
+        let spec = tiny_spec(43);
+        let cfg = ChipConfig::fat().with_fault_injection(0.02, 0x5EED1);
+        let mut a = ChipSession::new(cfg, spec.clone()).unwrap();
+        let mut b =
+            ChipSession::new(ChipConfig::fat().with_fault_injection(0.02, 0x5EED2), spec.clone())
+                .unwrap();
+        let x = random_input(&spec, 77);
+        let first = a.infer(&x).unwrap();
+        let second = a.infer(&x).unwrap();
+        assert_ne!(
+            first.features.data, second.features.data,
+            "request counter must decorrelate repeated requests"
+        );
+        let other = b.infer(&x).unwrap();
+        assert_ne!(
+            first.features.data, other.features.data,
+            "different fault seeds must decorrelate replicas"
+        );
+        // and determinism: a fresh session with the same seed replays it
+        let mut a2 = ChipSession::new(cfg, spec).unwrap();
+        let replay = a2.infer(&x).unwrap();
+        assert_eq!(first.features.data, replay.features.data, "same seed, same corruption");
+    }
+
+    #[test]
+    fn set_fault_rearms_the_resident_session_without_reloading() {
+        // the sweep's contract: arm/disarm on resident state, no reload
+        let spec = tiny_spec(45);
+        let mut session = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let loading = *session.loading();
+        let x = random_input(&spec, 90);
+        let clean = session.infer(&x).unwrap();
+
+        session.set_fault(Some(crate::coordinator::accelerator::SenseFault {
+            ber: 0.05,
+            seed: 0xA12,
+        }));
+        let corrupted = session.infer(&x).unwrap();
+        assert_ne!(corrupted.features.data, clean.features.data, "armed session must corrupt");
+        assert_eq!(corrupted.metrics.weight_reg_writes, 0, "re-arming must not reload");
+        assert_eq!(*session.loading(), loading, "loading metrics untouched by re-arming");
+
+        session.set_fault(None);
+        let restored = session.infer(&x).unwrap();
+        assert_eq!(restored.features.data, clean.features.data, "disarmed session is clean");
+    }
+
+    #[test]
+    fn link_fault_injection_flips_payload_bits_only() {
+        let mut rng = Rng::new(9);
+        let q = Tensor4::from_vec(1, 1, 2, 2, vec![0.0, 255.0, 17.0, 200.0]);
+        let mut act = QuantActivations { q, scales: vec![255.0] };
+        let clean = act.clone();
+        act.inject_link_faults(0.0, &mut rng);
+        assert_eq!(act.q.data, clean.q.data, "ber 0.0 is a no-op");
+        act.inject_link_faults(0.5, &mut rng);
+        assert_ne!(act.q.data, clean.q.data, "ber 0.5 must corrupt 4 bytes");
+        assert_eq!(act.scales, clean.scales, "scale words are protected");
+        for v in &act.q.data {
+            assert!((0.0..=255.0).contains(v) && v.fract() == 0.0, "still 8-bit: {v}");
+        }
     }
 
     #[test]

@@ -70,6 +70,37 @@
 //!   CMA slice, with a queue-depth-aware micro-batcher) or `Pipelined`
 //!   (workers are shard *stages* connected by channels, so shard k
 //!   computes request i+1 while shard k+1 computes request i).
+//!
+//! ## Fault injection and the model-scale reliability sweep
+//!
+//! The paper's §IV-A3 argues FAT's two-operand sensing has a 2.4x larger
+//! sense margin than three-operand designs (ParaPIM/GraphS), hence
+//! orders of magnitude fewer sensing flips.  The stack models that end
+//! to end:
+//!
+//! - [`circuit::reliability`] — the physical layer: per-sense bit-error
+//!   rates from the MTJ sense margins under Gaussian noise
+//!   (`sense_bit_error_rate`, ~5e-8 for FAT vs ~2.6e-2 for the
+//!   three-operand designs; `sa_sense_bers` lists all four).
+//! - [`coordinator::accelerator::ChipConfig::fault`] — arms sensing-fault
+//!   injection on every CMA of a chip ([`coordinator::accelerator::SenseFault`]).
+//!   Corruption streams are deterministic per (seed, request, layer,
+//!   tile) regardless of thread scheduling; the serving layers re-seed
+//!   per worker/pipeline stage so replicas decorrelate.  At `ber = 0.0`
+//!   the armed chip is byte-identical to the ideal chip — the hook never
+//!   perturbs values or timing unless a flip fires.
+//! - [`mapping::schemes::HwParams::link_ber`] — the sharded stack's extra
+//!   error source: every pipeline boundary flips bits of the transported
+//!   quantized activations at the link's bit-error rate.
+//! - [`coordinator::reliability::sweep_model`] — the model-scale sweep:
+//!   one resident model (single chip, N-replica pool, or N-shard
+//!   pipeline), loaded once and re-armed per BER point, a fixed input
+//!   set served end to end, and top-1 agreement / logit MSE scored
+//!   against the fault-free oracle, with each SA design's physical
+//!   sense BER mapped onto the resulting curve.  CLI: `fat reliability
+//!   --bers 0,1e-6,1e-3,2.6e-2 [--workers 2 | --shards 2
+//!   --link-bers 0,1e-6,1e-4,1e-3]`; see `examples/reliability.rs` and
+//!   `benches/reliability_sweep.rs`.
 
 pub mod addition;
 pub mod array;

@@ -69,6 +69,15 @@ pub struct HwParams {
     pub link_bytes_per_ns: f64,
     /// Inter-chip link hop latency, ns, paid once per transfer leg.
     pub link_latency_ns: f64,
+    /// Inter-chip link bit-error rate: each bit of the transported 8-bit
+    /// activation payload flips independently with this probability at
+    /// every shard boundary (the error model a single chip never sees —
+    /// see `coordinator::reliability`).  0.0 (the default) is an ideal
+    /// link, and leaves every transfer byte-identical.
+    pub link_ber: f64,
+    /// Root seed of the deterministic link-corruption streams; each
+    /// pipeline stage derives its own stream from (seed, stage index).
+    pub link_fault_seed: u64,
 }
 
 impl Default for HwParams {
@@ -82,6 +91,8 @@ impl Default for HwParams {
             // a 128 Gb/s SerDes-class chip-to-chip link with a short hop
             link_bytes_per_ns: 16.0,
             link_latency_ns: 20.0,
+            link_ber: 0.0,
+            link_fault_seed: 0,
         }
     }
 }

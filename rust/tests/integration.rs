@@ -231,6 +231,77 @@ fn cli_sharded_resnet_smoke() {
 }
 
 #[test]
+fn cli_reliability_smoke() {
+    // `fat reliability` sweeps accuracy-vs-BER through the serving stack
+    // and self-checks that the zero-BER point is bit-identical to the
+    // fault-free oracle (exits non-zero otherwise).  Tiny geometry: the
+    // debug binary serves (points + 1) x requests inferences.
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args([
+            "reliability", "--input", "8", "--scale", "64", "--requests", "2",
+            "--classes", "5", "--bers", "0,0.02",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "reliability failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy vs BER"), "{text}");
+    assert!(text.contains("sense-margin map"), "{text}");
+    assert!(
+        text.contains("zero-BER self-check: bit-identical"),
+        "the sweep must prove the injection plumbing is transparent at ber 0:\n{text}"
+    );
+
+    // replicated mode: a pool of decorrelated full-model replicas
+    let out = std::process::Command::new(exe)
+        .args([
+            "reliability", "--input", "8", "--scale", "64", "--requests", "2",
+            "--classes", "5", "--bers", "0,0.02", "--workers", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "replicated reliability failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2-replica pool"), "{text}");
+    assert!(text.contains("zero-BER self-check: bit-identical"), "{text}");
+
+    // the pipelined sweep accepts link BERs; a link BER without shards is
+    // a clean error, not a crash
+    let out = std::process::Command::new(exe)
+        .args([
+            "reliability", "--input", "8", "--scale", "64", "--requests", "1",
+            "--classes", "5", "--bers", "0,0.02", "--link-bers", "0,0.05",
+            "--shards", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "pipelined reliability failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2-shard pipeline"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args(["reliability", "--bers", "0", "--link-bers", "0.1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "link BER without a pipeline must be rejected");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("link"), "{err}");
+}
+
+#[test]
 fn bwn_mode_runs_binary_weights() {
     // §III-B1: FAT works as a BWN accelerator by extending 1-bit weights
     // to the 2-bit encoding — correct results, but nothing to skip.
