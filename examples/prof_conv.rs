@@ -1,7 +1,7 @@
 //! Profiling workload for the §Perf pass: 100 conv layers on the chip.
 //! Used with `perf record -g ./target/release/examples/prof_conv`.
 
-use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip, Fidelity};
 use fat_imc::nn::layers::TernaryFilter;
 use fat_imc::nn::resnet::ConvLayer;
 use fat_imc::nn::tensor::Tensor4;
@@ -13,7 +13,12 @@ fn main() {
     let mut x = Tensor4::zeros(2, 16, 16, 16);
     x.fill_random_ints(&mut rng, 0, 256);
     let f = TernaryFilter::new(16, 16, 3, 3, rng.ternary_vec(16 * 144, 0.6));
-    let chip = FatChip::new(ChipConfig::fat());
+    // profile the cycle-accurate storage path explicitly: the serving
+    // default is Fidelity::Ledger, which would hide the bit-serial inner
+    // loops this harness exists to expose
+    let mut cfg = ChipConfig::fat();
+    cfg.fidelity = Fidelity::BitSerial;
+    let chip = FatChip::new(cfg);
     for _ in 0..100 {
         std::hint::black_box(chip.run_conv_layer(&x, &f, &layer));
     }

@@ -8,7 +8,7 @@
 //! `weight_load_ns` / `weight_reg_writes` metrics.
 
 use fat_imc::bench_harness::{fmt_ns, BenchRun};
-use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::accelerator::{ChipConfig, FatChip, Fidelity};
 use fat_imc::coordinator::session::{ChipSession, ModelSpec};
 use fat_imc::mapping::img2col::{img2col, img2col_into, Img2ColMatrix};
 use fat_imc::nn::resnet::resnet18_conv_layers_scaled;
@@ -135,5 +135,38 @@ fn main() {
             "transform results diverged".into(),
         );
     }
+
+    // ---- fidelity: exact ledger replay vs bit-serial on the serving
+    // hot path (host time; the simulated metrics are byte-identical) ----
+    let mut bs_cfg = cfg;
+    bs_cfg.fidelity = Fidelity::BitSerial;
+    let mut bs_sess = ChipSession::new(bs_cfg, spec.clone()).expect("valid spec");
+    let mut lg_sess = ChipSession::new(cfg, spec.clone()).expect("valid spec");
+    let probe = &xs[0];
+    {
+        let want = bs_sess.infer(probe).expect("bit-serial infer");
+        let got = lg_sess.infer(probe).expect("ledger infer");
+        run.check(
+            "ledger session output bit-identical to bit-serial",
+            got.features.data == want.features.data && got.logits == want.logits,
+            "outputs diverged".into(),
+        );
+        run.check(
+            "ledger session ChipMetrics byte-identical to bit-serial",
+            got.metrics == want.metrics,
+            format!("{:?} vs {:?}", got.metrics, want.metrics),
+        );
+    }
+    let m_bs = run.time("session infer, bit-serial fidelity", || bs_sess.infer(probe));
+    let m_lg = run.time("session infer, ledger fidelity", || lg_sess.infer(probe));
+    println!(
+        "  serving host speedup, ledger vs bit-serial: {:.1}x",
+        m_bs.median_ns / m_lg.median_ns
+    );
+    run.check(
+        "ledger serving is no slower than bit-serial",
+        m_lg.median_ns <= m_bs.median_ns,
+        format!("{} ledger vs {} bit-serial", fmt_ns(m_lg.median_ns), fmt_ns(m_bs.median_ns)),
+    );
     run.finish();
 }

@@ -63,6 +63,36 @@ impl AdditionScheme for FatAddition {
         }
     }
 
+    fn replay_add_costs(&self, cma: &mut Cma, bits: u32, mask: &RowWords, carry_in: bool) {
+        // Carry-in only changes how the D-latches are initialized (a
+        // control signal, not an array op), so the cost is identical.
+        // Per-field accumulation order mirrors the functional path — the
+        // fields are hoisted into locals, which performs the identical
+        // `+=` sequence per accumulator, so the f64 results are bitwise
+        // equal (the equivalence property tests gate this).
+        let _ = carry_in;
+        let write_pj = cma.masked_write_pj(mask);
+        let (t_sense, t_write) = (cma.timing.t_sense_ns, cma.timing.t_write_ns);
+        let e_sense = cma.energy.e_sense_row_pj;
+        let mut lat = cma.stats.latency_ns;
+        let mut energy = cma.stats.energy_pj;
+        for _ in 0..bits {
+            // sense_two_rows, SA combining stage, write_row_masked(sum)
+            lat += t_sense;
+            energy += e_sense;
+            lat += CP_NS;
+            lat += t_write;
+            energy += write_pj;
+        }
+        // final carry drain into the extra result row
+        lat += t_write;
+        energy += write_pj;
+        cma.stats.latency_ns = lat;
+        cma.stats.energy_pj = energy;
+        cma.stats.senses += bits as u64;
+        cma.stats.writes += bits as u64 + 1;
+    }
+
     fn vector_add_latency_ns(&self, bits: u32, _elems: u32) -> f64 {
         let t = timing();
         (t.t_sense_ns + CP_NS + t.t_write_ns) * bits as f64

@@ -90,6 +90,19 @@ pub trait AdditionScheme: Send + Sync {
         self.vector_add_rows(cma, &a, &b, &d, mask, carry_in);
     }
 
+    /// Ledger replay companion of [`Self::vector_add_rows`]: charge `cma`'s
+    /// stats with **exactly** the senses / writes / latency / energy one
+    /// functional call over `bits`-bit operands with a carry-out row
+    /// (`dest_rows.len() == bits + 1`, the shape every [`crate::array::sacu`]
+    /// accumulation uses) would record — without executing any storage
+    /// operation.  The `+=` sequence mirrors the functional path op for op,
+    /// so the accumulated floating-point ledger is *byte-identical*, not
+    /// merely close (gated by `replay_matches_functional_ledger_exactly`).
+    /// Every scheme's addition cost is value-independent — senses, writes
+    /// and SA cycles depend only on the width and the driven-column mask —
+    /// which is what makes an exact replay possible at all.
+    fn replay_add_costs(&self, cma: &mut Cma, bits: u32, mask: &RowWords, carry_in: bool);
+
     /// Analytic latency of an N-bit vector addition (any vector length up
     /// to the column count — bit-serial schemes pay per *bit*, STT-CiM pays
     /// per *element*), ns.  `elems` only matters for STT-CiM.
@@ -292,6 +305,47 @@ mod tests {
                 SaKind::ParaPim | SaKind::GraphS => assert_eq!(writes, 16, "{kind:?}"),
                 // 3 elements of 8 bits fit one row pass
                 SaKind::SttCim => assert_eq!(writes, 1, "{kind:?}"),
+            }
+        }
+    }
+
+    /// The ledger replay must charge byte-for-byte what the functional
+    /// path charges — counters AND floating-point latency/energy, for
+    /// every scheme, width, mask size, and carry-in.  This is the
+    /// foundation `Fidelity::Ledger` rests on.
+    #[test]
+    fn replay_matches_functional_ledger_exactly() {
+        let mut rng = Rng::new(0x4EA1);
+        for s in all_schemes() {
+            for &bits in &[1u32, 3, 8, 16] {
+                for &n in &[1usize, 37, 64, 200, COLS] {
+                    for carry_in in [false, true] {
+                        let mask = first_cols_mask(n);
+                        let b = bits as usize;
+                        // functional run over real storage (random operands:
+                        // addition cost is value-independent by design)
+                        let mut functional = Cma::new();
+                        let vals: Vec<u64> =
+                            (0..n).map(|_| rng.below(1u64 << bits)).collect();
+                        functional.store_vector(0, bits, &vals);
+                        functional.store_vector(b, bits, &vals);
+                        functional.reset_stats();
+                        let a_rows: Vec<usize> = (0..b).collect();
+                        let b_rows: Vec<usize> = (b..2 * b).collect();
+                        let d_rows: Vec<usize> = (2 * b..3 * b + 1).collect();
+                        s.vector_add_rows(
+                            &mut functional, &a_rows, &b_rows, &d_rows, &mask, carry_in,
+                        );
+                        // replay on a fresh CMA: no storage, same ledger
+                        let mut replay = Cma::new();
+                        s.replay_add_costs(&mut replay, bits, &mask, carry_in);
+                        assert_eq!(
+                            functional.stats, replay.stats,
+                            "{:?} bits={bits} n={n} carry_in={carry_in}",
+                            s.kind()
+                        );
+                    }
+                }
             }
         }
     }

@@ -88,6 +88,40 @@ impl AdditionScheme for ParaPimAddition {
         }
     }
 
+    fn replay_add_costs(&self, cma: &mut Cma, bits: u32, mask: &RowWords, carry_in: bool) {
+        // Mirrors the functional path's per-field `+=` sequence exactly
+        // (fields hoisted into locals: same adds, same order, bitwise-
+        // identical f64 results — gated by the equivalence tests).
+        let write_pj = cma.masked_write_pj(mask);
+        let (t_sense, t_write) = (cma.timing.t_sense_ns, cma.timing.t_write_ns);
+        let e_sense = cma.energy.e_sense_row_pj;
+        let mut lat = cma.stats.latency_ns;
+        let mut energy = cma.stats.energy_pj;
+        if carry_in {
+            // SUB path: the MC pre-writes 1s into the carry row
+            cma.stats.writes += 1;
+            lat += t_write;
+            energy += write_pj;
+        }
+        for k in 0..bits {
+            // the first bit of an ADD senses only two rows (the carry row
+            // is not yet initialized); every other step is a three-row
+            // activation at the tighter margin's 1.5x energy
+            let sense_pj = if k == 0 && !carry_in { e_sense } else { e_sense * 1.5 };
+            for _phase in 0..2 {
+                lat += t_sense;
+                energy += sense_pj;
+                lat += CP_NS / 2.0;
+                lat += t_write;
+                energy += write_pj;
+            }
+        }
+        cma.stats.latency_ns = lat;
+        cma.stats.energy_pj = energy;
+        cma.stats.senses += 2 * bits as u64;
+        cma.stats.writes += 2 * bits as u64;
+    }
+
     fn vector_add_latency_ns(&self, bits: u32, _elems: u32) -> f64 {
         let t = timing();
         // per bit: two senses + two-phase SA CP + two writes

@@ -94,6 +94,19 @@ impl AdditionScheme for SttCimAddition {
         cma.stats.energy_pj += (e.e_sense_row_pj + e.e_write_row_pj) * passes as f64;
     }
 
+    fn replay_add_costs(&self, cma: &mut Cma, bits: u32, mask: &RowWords, carry_in: bool) {
+        // carry-in folds into the per-element scalar sum; no extra op
+        let _ = carry_in;
+        let driven: u32 = mask.iter().map(|w| w.count_ones()).sum();
+        let per_pass = Self::elems_per_pass(bits);
+        let passes = driven.div_ceil(per_pass) as u64;
+        cma.stats.senses += passes;
+        cma.stats.writes += passes;
+        cma.stats.latency_ns += self.scalar_add_latency_ns(bits) * passes as f64;
+        cma.stats.energy_pj +=
+            (cma.energy.e_sense_row_pj + cma.energy.e_write_row_pj) * passes as f64;
+    }
+
     fn vector_add_latency_ns(&self, bits: u32, elems: u32) -> f64 {
         // eq. (2): tv = ts x N row passes (N-bit vector spans N rows when
         // the vector fills the array width; shorter vectors pay per pass).

@@ -165,6 +165,24 @@ impl Cma {
         &self.rows[row]
     }
 
+    /// Energy of one masked row write, pJ: scales with the driven-column
+    /// count.  **Single owner of the write-energy formula** — the
+    /// functional path ([`Self::write_row_masked`]) and every ledger
+    /// replay ([`Self::replay_store_vector`], the schemes'
+    /// `replay_add_costs`, the SACU's NOT replay) share it, so the
+    /// byte-identity contract cannot drift if the model changes.
+    #[inline]
+    pub fn masked_write_pj(&self, mask: &RowWords) -> f64 {
+        let driven: u32 = mask.iter().map(|w| w.count_ones()).sum();
+        self.driven_write_pj(driven)
+    }
+
+    /// [`Self::masked_write_pj`] when the driven count is already known.
+    #[inline]
+    pub fn driven_write_pj(&self, driven: u32) -> f64 {
+        self.energy.e_write_row_pj * driven as f64 / COLS as f64
+    }
+
     /// Overwrite a whole row of words, recording one row-write in the
     /// ledger.  `mask` selects which columns are actually driven (the MCAD
     /// enables only those bit-lines).
@@ -175,8 +193,7 @@ impl Cma {
         self.stats.writes += 1;
         self.stats.latency_ns += self.timing.t_write_ns;
         // write energy scales with the number of driven columns
-        let driven: u32 = mask.iter().map(|w| w.count_ones()).sum();
-        self.stats.energy_pj += self.energy.e_write_row_pj * driven as f64 / COLS as f64;
+        self.stats.energy_pj += self.masked_write_pj(mask);
         if let Some(e) = &mut self.endurance {
             e.record_row(row, mask);
         }
@@ -244,6 +261,15 @@ impl Cma {
     }
 
     /// Single-row read (standard memory mode), as words.
+    ///
+    /// Deliberately **exempt from fault injection**: `fault` models the
+    /// §IV-A3 *computation-sensing* error — distinguishing the combined
+    /// source-line level of two (or three) simultaneously activated cells,
+    /// where the reference ladder's margins shrink with every extra
+    /// operand.  A single-row standard-memory read compares one cell
+    /// against the mid-point reference with the full margin, so its error
+    /// rate is negligible next to even FAT's ~5e-8 two-operand BER and is
+    /// modeled as zero (pinned by `sense_one_row_is_exempt_from_faults`).
     pub fn sense_one_row(&mut self, row: usize) -> RowWords {
         self.stats.senses += 1;
         self.stats.latency_ns += self.timing.t_sense_ns;
@@ -264,12 +290,15 @@ impl Cma {
     }
 
     /// Read back an unsigned operand stored at (`col`, `base..base+bits`).
+    /// Word-parallel form of the gather: the column's word index and bit
+    /// shift are hoisted out of the bit loop instead of being re-derived
+    /// per `read_bit` call.
     pub fn load_operand(&self, col: usize, base: usize, bits: u32) -> u64 {
+        debug_assert!(col < COLS && base + bits as usize <= ROWS);
+        let (w, b) = (col / 64, col % 64);
         let mut v = 0u64;
-        for k in 0..bits {
-            if self.read_bit(base + k as usize, col) {
-                v |= 1 << k;
-            }
+        for k in 0..bits as usize {
+            v |= ((self.rows[base + k][w] >> b) & 1) << k;
         }
         v
     }
@@ -304,9 +333,59 @@ impl Cma {
         self.scratch_planes = planes;
     }
 
-    /// Load back `n` per-column values.
+    /// Ledger replay of [`Self::store_vector`]: charge exactly the row
+    /// writes storing `n_values` operands of `bits` bits would record
+    /// (one masked write per bit row, `n_values` driven columns), without
+    /// touching storage.  Loading cost is value-independent — the chip's
+    /// `Fidelity::Ledger` tile loop keeps the activation values host-side
+    /// and replays the store instead of executing it.
+    pub fn replay_store_vector(&mut self, bits: u32, n_values: usize) {
+        assert!(n_values <= COLS);
+        let write_pj = self.driven_write_pj(n_values as u32);
+        let t_write = self.timing.t_write_ns;
+        let mut lat = self.stats.latency_ns;
+        let mut energy = self.stats.energy_pj;
+        for _ in 0..bits {
+            lat += t_write;
+            energy += write_pj;
+        }
+        self.stats.latency_ns = lat;
+        self.stats.energy_pj = energy;
+        self.stats.writes += bits as u64;
+    }
+
+    /// Load back `n` per-column values.  Word-parallel: walks each bit
+    /// row's bit-plane words and scatters the set bits — the same
+    /// transpose the sparse-dot readout uses — instead of the naive
+    /// per-(col, bit) `read_bit` gather (which was the last naive
+    /// transpose left on a warm path).
     pub fn load_vector(&self, base: usize, bits: u32, n: usize) -> Vec<u64> {
-        (0..n).map(|c| self.load_operand(c, base, bits)).collect()
+        let mut out = vec![0u64; n];
+        self.load_vector_into(base, bits, &mut out);
+        out
+    }
+
+    /// [`Self::load_vector`] into a caller-owned buffer (`out.len()`
+    /// values) — the hot-path form; the `Fidelity::Ledger` compute path
+    /// reuses one buffer across operand slots.
+    pub fn load_vector_into(&self, base: usize, bits: u32, out: &mut [u64]) {
+        assert!(base + bits as usize <= ROWS && out.len() <= COLS);
+        out.fill(0);
+        let n = out.len();
+        let n_words = n.div_ceil(64).min(WORDS);
+        for k in 0..bits as usize {
+            let words = &self.rows[base + k];
+            for (w, &word) in words.iter().enumerate().take(n_words) {
+                let mut rest = word;
+                while rest != 0 {
+                    let col = w * 64 + rest.trailing_zeros() as usize;
+                    rest &= rest - 1;
+                    if col < n {
+                        out[col] |= 1 << k;
+                    }
+                }
+            }
+        }
     }
 
     pub fn reset_stats(&mut self) {
@@ -373,6 +452,26 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn load_vector_into_matches_per_operand_gather() {
+        // the word-parallel scatter must agree with the scalar gather for
+        // every column, including partial final words and bit 63 columns
+        let mut rng = Rng::new(0x10AD);
+        let mut c = Cma::new();
+        for &n in &[1usize, 63, 64, 65, 130, COLS] {
+            let bits = rng.range(1, 17) as u32;
+            let vals: Vec<u64> = (0..n).map(|_| rng.below(1u64 << bits)).collect();
+            c.reset();
+            c.store_vector(3, bits, &vals);
+            let mut out = vec![u64::MAX; n]; // poisoned: fill(0) must clear
+            c.load_vector_into(3, bits, &mut out);
+            for (col, &want) in vals.iter().enumerate() {
+                assert_eq!(out[col], want, "n={n} col={col}");
+                assert_eq!(c.load_operand(col, 3, bits), want, "scalar gather n={n} col={col}");
+            }
+        }
     }
 
     #[test]
@@ -471,6 +570,21 @@ mod tests {
     }
 
     #[test]
+    fn replay_store_vector_charges_exactly_like_the_real_store() {
+        // loading cost is value-independent: the replay must charge the
+        // byte-identical ledger (f64 latency/energy included)
+        let mut rng = Rng::new(0x57);
+        for &(bits, n) in &[(8u32, 3usize), (16, 256), (5, 64), (1, 1)] {
+            let vals: Vec<u64> = (0..n).map(|_| rng.below(1u64 << bits)).collect();
+            let mut real = Cma::new();
+            real.store_vector(0, bits, &vals);
+            let mut replay = Cma::new();
+            replay.replay_store_vector(bits, n);
+            assert_eq!(real.stats, replay.stats, "bits={bits} n={n}");
+        }
+    }
+
+    #[test]
     fn word_fastpath_matches_sa_truth_tables() {
         // The (and, or) words must agree with the per-column SA levels.
         use crate::circuit::sense_amp::{design, level_of, BitOp, SaKind};
@@ -551,6 +665,22 @@ mod fault_tests {
             (rate - ber).abs() < 0.005,
             "observed flip rate {rate} vs injected {ber}"
         );
+    }
+
+    #[test]
+    fn sense_one_row_is_exempt_from_faults() {
+        // single-row standard-memory reads keep the full sense margin
+        // (§IV-A3 is about multi-operand computation sensing), so even a
+        // degenerate BER must not corrupt them — this pins the modeling
+        // decision documented on `sense_one_row`.
+        let mut c = Cma::new().with_fault_injection(1.0, 42);
+        c.store_vector(0, 8, &[0xA5; 64]);
+        let words = c.sense_one_row(0);
+        assert_eq!(words, *c.row_words(0), "standard-memory read must be clean");
+        // while a two-row sense at the same BER corrupts every column:
+        // row 8 is all zeros, so a clean AND would be all zeros
+        let (and, _) = c.sense_two_rows(0, 8);
+        assert_eq!(and, [u64::MAX; WORDS], "computation sensing flips at BER 1.0");
     }
 
     #[test]

@@ -29,6 +29,38 @@ use crate::addition::AdditionScheme;
 use crate::array::cma::{Cma, RowWords, COLS, WORDS};
 use crate::circuit::sense_amp::BitOp;
 
+/// How the simulator computes a sparse dot product — *what* the chip
+/// computes is identical either way; only the host-side mechanics differ.
+///
+/// - [`Fidelity::BitSerial`] walks real CMA rows through
+///   `sense_two_rows` / `write_row_masked` per bit per addition: storage
+///   state, endurance, and injected sensing faults are all physical.
+/// - [`Fidelity::Ledger`] computes the dot product with host integer
+///   arithmetic over the operand slots and *replays* the exact ledger the
+///   bit-serial path would have recorded (see
+///   [`AdditionScheme::replay_add_costs`]): `DotResult` **and** `CmaStats`
+///   are byte-identical by construction — the bit-serial result is exact
+///   two's-complement arithmetic when no fault fires
+///   (`all_schemes_add_exactly`, `sparse_dot_matches_plain_dot_product`),
+///   and every scheme's cost is value-independent.  The paper's own
+///   headline numbers are ledger quantities (op counts x calibrated
+///   per-op costs, eqs. 1–3), so nothing the reproduction reports is lost.
+///
+/// What `Ledger` deliberately does **not** model: partial-sum storage
+/// state (nothing reads it back), per-cell endurance of accumulation
+/// writes, and fired sensing faults — which is why
+/// [`crate::coordinator::accelerator::ChipConfig::effective_fidelity`]
+/// demotes to `BitSerial` whenever fault injection is armed at a
+/// positive BER.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    /// Cycle-accurate bit-serial execution over real CMA storage.
+    #[default]
+    BitSerial,
+    /// Host integer arithmetic + exact ledger replay (fault-free only).
+    Ledger,
+}
+
 /// First reserved row: operand slots live below this.
 pub const DATA_TOP: usize = 400;
 /// Fixed 17-row accumulator regions used by the dense layout.
@@ -206,13 +238,21 @@ pub struct Sacu {
     /// Skip null operations (the FAT SACU).  `false` models a dense
     /// BWN-style accelerator (ParaPIM) that performs every operation.
     pub skip_zeros: bool,
+    /// How [`Self::sparse_dot`] executes (identical results either way).
+    pub fidelity: Fidelity,
     /// Rotating interval-row allocator cursor (CS layout).
     next_chunk: std::cell::Cell<usize>,
 }
 
 impl Sacu {
+    /// Bit-serial SACU (the default fidelity).
     pub fn new(layout: DotLayout, skip_zeros: bool) -> Self {
-        Self { layout, skip_zeros, next_chunk: std::cell::Cell::new(0) }
+        Self::with_fidelity(layout, skip_zeros, Fidelity::BitSerial)
+    }
+
+    /// SACU with an explicit compute fidelity.
+    pub fn with_fidelity(layout: DotLayout, skip_zeros: bool, fidelity: Fidelity) -> Self {
+        Self { layout, skip_zeros, fidelity, next_chunk: std::cell::Cell::new(0) }
     }
 
     /// One-time CMA preparation: the all-ones row for NOT (eq. 14).
@@ -344,7 +384,48 @@ impl Sacu {
 
     /// The addition-based sparse dot product (Fig. 5 (d)) over the first
     /// `n_cols` columns.  `weights[j]` applies to operand slot `j`.
+    ///
+    /// Dispatches on [`Self::fidelity`]; both paths return the same
+    /// `DotResult` and charge the same `CmaStats`, byte for byte (gated by
+    /// `ledger_fidelity_matches_bit_serial_exactly`).
     pub fn sparse_dot(
+        &self,
+        cma: &mut Cma,
+        scheme: &dyn AdditionScheme,
+        weights: &WeightRegister,
+        n_cols: usize,
+    ) -> DotResult {
+        match self.fidelity {
+            Fidelity::BitSerial => self.sparse_dot_bit_serial(cma, scheme, weights, n_cols),
+            Fidelity::Ledger => self.sparse_dot_ledger(cma, scheme, weights, n_cols, None),
+        }
+    }
+
+    /// `Fidelity::Ledger` fast entry with **host-resident operands**:
+    /// `operands` holds slot-major values, `n_cols` per slot for
+    /// `weights.len()` slots.  The chip's tile loop keeps the activation
+    /// values it would have stored (replaying the store cost via
+    /// [`Cma::replay_store_vector`]) and hands them here, skipping both
+    /// the CMA store and the read-back — the whole storage dance.
+    pub fn sparse_dot_hosted(
+        &self,
+        cma: &mut Cma,
+        scheme: &dyn AdditionScheme,
+        weights: &WeightRegister,
+        n_cols: usize,
+        operands: &[u64],
+    ) -> DotResult {
+        assert_eq!(
+            self.fidelity,
+            Fidelity::Ledger,
+            "hosted operands are a Ledger-fidelity fast path"
+        );
+        assert_eq!(operands.len(), weights.len() * n_cols, "slot-major operand shape");
+        self.sparse_dot_ledger(cma, scheme, weights, n_cols, Some(operands))
+    }
+
+    /// Bit-serial execution: every addition walks real CMA rows.
+    fn sparse_dot_bit_serial(
         &self,
         cma: &mut Cma,
         scheme: &dyn AdditionScheme,
@@ -432,6 +513,127 @@ impl Sacu {
         };
 
         DotResult { values, adds, skipped }
+    }
+
+    /// Ledger execution: the dot product is computed with host integer
+    /// arithmetic over the operand slots (no row storage, senses, or
+    /// write-backs executed), while an exact replay — derived from the
+    /// same [`SparseDotPlan`] — charges `cma.stats` with precisely the
+    /// ops the bit-serial path would have recorded.
+    ///
+    /// Faithfulness argument, piece by piece:
+    /// - **values**: the bit-serial pipeline accumulates width-bit
+    ///   partials with carries beyond `acc_bits` dropped and resolves the
+    ///   SUB as `pos + NOT(neg) + 1` (eq. 16), so the readout is exactly
+    ///   `(pos_sum - neg_sum) mod 2^acc_bits`, sign-extended — which is
+    ///   what the host computes below;
+    /// - **adds / skipped**: both come from the plan alone;
+    /// - **stats**: every scheme's addition cost is value-independent, so
+    ///   [`AdditionScheme::replay_add_costs`] + [`Self::replay_not_costs`]
+    ///   re-issue the identical `+=` sequence (same ops, same order, same
+    ///   floating-point results).
+    fn sparse_dot_ledger(
+        &self,
+        cma: &mut Cma,
+        scheme: &dyn AdditionScheme,
+        weights: &WeightRegister,
+        n_cols: usize,
+        operands: Option<&[u64]>,
+    ) -> DotResult {
+        assert!(weights.len() <= self.layout.max_slots());
+        assert!(n_cols <= COLS);
+        let plan = SparseDotPlan::from_weights(weights);
+        let mask = crate::addition::first_cols_mask(n_cols);
+        let width = self.layout.acc_bits as usize;
+
+        // What the chip computes: exact signed arithmetic over the slots —
+        // host-resident operands when the caller kept them, otherwise a
+        // word-parallel gather of the slots stored in the CMA.
+        let mut acc = vec![0i64; n_cols];
+        // reused gather buffer; untouched (empty) on the hosted path
+        let mut slot: Vec<u64> = Vec::new();
+        let mut side = |plan_side: &[usize], sign: i64, acc: &mut [i64]| match operands {
+            Some(flat) => {
+                for &j in plan_side {
+                    let vals = &flat[j * n_cols..(j + 1) * n_cols];
+                    for (a, &v) in acc.iter_mut().zip(vals) {
+                        *a += sign * v as i64;
+                    }
+                }
+            }
+            None => {
+                slot.resize(n_cols, 0);
+                for &j in plan_side {
+                    cma.load_vector_into(
+                        j * self.layout.stride,
+                        self.layout.op_bits,
+                        &mut slot,
+                    );
+                    for (a, &v) in acc.iter_mut().zip(&slot) {
+                        *a += sign * v as i64;
+                    }
+                }
+            }
+        };
+        side(&plan.pos, 1, &mut acc);
+        side(&plan.neg, -1, &mut acc);
+        // The bit-serial readout: keep the low `width` bits, sign-extend.
+        let shift = 32 - width;
+        let values: Vec<i32> =
+            acc.iter().map(|&v| (((v as u32) << shift) as i32) >> shift).collect();
+
+        // What the simulator charges: the bit-serial three-stage pipeline,
+        // op for op.  Dense baselines process null weights as zero-adds on
+        // the +1 side, exactly like the functional path.
+        let (n_pos, n_neg, skipped) = if self.skip_zeros {
+            (plan.pos.len(), plan.neg.len(), plan.skipped)
+        } else {
+            (plan.pos.len() + plan.skipped, plan.neg.len(), 0)
+        };
+        let acc_bits = self.layout.acc_bits;
+        let mut adds = 0usize;
+        // stage 1 (+1 partial) and stage 2 (-1 partial) accumulation chains
+        for _ in 1..n_pos.max(1) {
+            scheme.replay_add_costs(cma, acc_bits, &mask, false);
+            adds += 1;
+        }
+        for _ in 1..n_neg.max(1) {
+            scheme.replay_add_costs(cma, acc_bits, &mask, false);
+            adds += 1;
+        }
+        // stage 3: whenever a -1 partial exists, NOT it and add with
+        // carry-in 1 (`0 - neg` uses the same NOT + ADD shape)
+        if n_neg > 0 {
+            self.replay_not_costs(cma, acc_bits, &mask);
+            scheme.replay_add_costs(cma, acc_bits, &mask, true);
+            adds += 1;
+        }
+
+        DotResult { values, adds, skipped }
+    }
+
+    /// Ledger replay of [`Self::vector_not_rows`] over `bits` rows:
+    /// identical `+=` sequence, no storage.
+    fn replay_not_costs(&self, cma: &mut Cma, bits: u32, mask: &RowWords) {
+        let sa = crate::circuit::sense_amp::design(crate::circuit::sense_amp::SaKind::Fat);
+        let not_ns = sa.op_latency_ns(BitOp::Not);
+        let write_pj = cma.masked_write_pj(mask);
+        let (t_sense, t_write) = (cma.timing.t_sense_ns, cma.timing.t_write_ns);
+        let e_sense = cma.energy.e_sense_row_pj;
+        let mut lat = cma.stats.latency_ns;
+        let mut energy = cma.stats.energy_pj;
+        for _ in 0..bits {
+            // sense_two_rows(src, ONES); XOR stage; write-back
+            lat += t_sense;
+            energy += e_sense;
+            lat += not_ns;
+            lat += t_write;
+            energy += write_pj;
+        }
+        cma.stats.latency_ns = lat;
+        cma.stats.energy_pj = energy;
+        cma.stats.senses += bits as u64;
+        cma.stats.writes += bits as u64;
     }
 
     /// The SACU's digital reduction unit: accumulates per-column partial
@@ -681,6 +883,125 @@ mod tests {
             dense >= 3 * interval,
             "dense hotspot {dense} should dwarf interval {interval}"
         );
+    }
+
+    /// The tentpole gate: for every scheme x layout x width x sparsity x
+    /// mask x values, `Fidelity::Ledger` must agree with
+    /// `Fidelity::BitSerial` on the `DotResult` **and** on `CmaStats`,
+    /// byte for byte (f64 latency/energy included).
+    #[test]
+    fn ledger_fidelity_matches_bit_serial_exactly() {
+        for kind in SaKind::ALL {
+            for make_layout in [DotLayout::dense as fn(u32) -> DotLayout, DotLayout::interval] {
+                prop_check(
+                    &format!("{kind:?} ledger == bit-serial"),
+                    10,
+                    0x1ED6E4 + kind as u64,
+                    |rng: &mut Rng| {
+                        // 4 <= op_bits <= 8: acc_bits + 1 <= 17 (fits a
+                        // region) and the CS chunk count stays <= 64
+                        let op_bits = rng.range(4, 9) as u32;
+                        let layout = make_layout(op_bits);
+                        let n_ops = rng.range(1, layout.max_slots().min(20) + 1);
+                        let n_cols = rng.range(1, COLS + 1);
+                        let sparsity = [0.0, 0.3, 0.6, 0.9][rng.range(0, 4)];
+                        let weights = rng.ternary_vec(n_ops, sparsity);
+                        let cols: Vec<Vec<u64>> = (0..n_ops)
+                            .map(|_| {
+                                (0..n_cols).map(|_| rng.below(1u64 << op_bits)).collect()
+                            })
+                            .collect();
+                        (op_bits, weights, cols)
+                    },
+                    |(op_bits, weights, cols)| {
+                        let layout = make_layout(*op_bits);
+                        let run = |fidelity: Fidelity| {
+                            let sacu = Sacu::with_fidelity(layout, true, fidelity);
+                            let mut cma = Cma::new();
+                            sacu.init_cma(&mut cma);
+                            for (j, vals) in cols.iter().enumerate() {
+                                sacu.load_slot(&mut cma, j, vals);
+                            }
+                            let reg = WeightRegister::load(weights);
+                            let s = scheme(kind);
+                            let r = sacu.sparse_dot(&mut cma, s.as_ref(), &reg, cols[0].len());
+                            (r, cma.stats)
+                        };
+                        let (bs, bs_stats) = run(Fidelity::BitSerial);
+                        let (lg, lg_stats) = run(Fidelity::Ledger);
+                        if lg.values != bs.values {
+                            return Err(format!(
+                                "values diverged: ledger {:?} vs bit-serial {:?}",
+                                lg.values, bs.values
+                            ));
+                        }
+                        if lg.adds != bs.adds || lg.skipped != bs.skipped {
+                            return Err(format!(
+                                "op counts diverged: ledger ({}, {}) vs bit-serial ({}, {})",
+                                lg.adds, lg.skipped, bs.adds, bs.skipped
+                            ));
+                        }
+                        if lg_stats != bs_stats {
+                            return Err(format!(
+                                "CmaStats diverged: ledger {lg_stats:?} vs bit-serial {bs_stats:?}"
+                            ));
+                        }
+                        Ok(())
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_fidelity_matches_dense_baseline_too() {
+        // skip_zeros = false (the ParaPIM-style dense baseline) processes
+        // null weights as zero-adds; the replay must count them the same.
+        let weights = [1i8, 0, -1, 0, 0, 1, 0, 0];
+        let cols: Vec<Vec<u64>> =
+            (0..8).map(|j| vec![(j * 7 + 3) as u64, (j * 13 + 1) as u64]).collect();
+        for kind in SaKind::ALL {
+            let run = |fidelity: Fidelity| {
+                let sacu = Sacu::with_fidelity(DotLayout::interval(8), false, fidelity);
+                let mut cma = Cma::new();
+                sacu.init_cma(&mut cma);
+                for (j, vals) in cols.iter().enumerate() {
+                    sacu.load_slot(&mut cma, j, vals);
+                }
+                let reg = WeightRegister::load(&weights);
+                let r = sacu.sparse_dot(&mut cma, scheme(kind).as_ref(), &reg, 2);
+                (r, cma.stats)
+            };
+            let (bs, bs_stats) = run(Fidelity::BitSerial);
+            let (lg, lg_stats) = run(Fidelity::Ledger);
+            assert_eq!(lg.values, bs.values, "{kind:?}");
+            assert_eq!(lg.adds, bs.adds, "{kind:?}");
+            assert_eq!((lg.skipped, bs.skipped), (0, 0), "{kind:?}: dense skips nothing");
+            assert_eq!(lg_stats, bs_stats, "{kind:?} stats");
+        }
+    }
+
+    #[test]
+    fn ledger_fidelity_leaves_storage_untouched() {
+        // the ledger path must not write partials or results into the
+        // array: operand slots (and everything else) stay as loaded
+        let weights = [1i8, -1, 1];
+        let cols = vec![vec![200u64, 3], vec![100, 250], vec![9, 1]];
+        let sacu = Sacu::with_fidelity(DotLayout::interval(8), true, Fidelity::Ledger);
+        let mut cma = Cma::new();
+        sacu.init_cma(&mut cma);
+        for (j, vals) in cols.iter().enumerate() {
+            sacu.load_slot(&mut cma, j, vals);
+        }
+        let before: Vec<_> = (0..crate::array::cma::ROWS).map(|r| *cma.row_words(r)).collect();
+        let reg = WeightRegister::load(&weights);
+        let r = sacu.sparse_dot(&mut cma, fat().as_ref(), &reg, 2);
+        assert_eq!(r.values, vec![109, -246]);
+        for (row, want) in before.iter().enumerate() {
+            assert_eq!(cma.row_words(row), want, "row {row} mutated by the ledger path");
+        }
+        // ...while the stats still say what the chip would have done
+        assert!(cma.stats.senses > 0 && cma.stats.writes > 0);
     }
 
     #[test]

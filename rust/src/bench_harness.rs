@@ -56,23 +56,36 @@ pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Me
 }
 
 /// Bench-run context: named sections + pass/fail assertions that do not
-/// abort the remaining sections.
+/// abort the remaining sections.  [`BenchRun::finish`] additionally writes
+/// a machine-readable `BENCH_<name>.json` next to the repo root so the
+/// perf trajectory is tracked across PRs, not just eyeballed in CI logs.
 pub struct BenchRun {
     name: String,
     failures: Vec<String>,
     t0: Instant,
+    /// (label, measurement) in recording order — serialized to JSON.
+    measurements: Vec<(String, Measurement)>,
+    /// (label, ok, detail) in recording order — serialized to JSON.
+    checks: Vec<(String, bool, String)>,
 }
 
 impl BenchRun {
     pub fn new(name: &str) -> Self {
         println!("\n#### bench: {name} ####");
-        Self { name: name.to_string(), failures: Vec::new(), t0: Instant::now() }
+        Self {
+            name: name.to_string(),
+            failures: Vec::new(),
+            t0: Instant::now(),
+            measurements: Vec::new(),
+            checks: Vec::new(),
+        }
     }
 
     /// Record and print a host-time measurement.
     pub fn time<T>(&mut self, label: &str, f: impl FnMut() -> T) -> Measurement {
         let m = measure(2, 7, f);
         println!("  {label:<44} {:>12}  (±{})", m.human(), fmt_ns(m.mad_ns));
+        self.measurements.push((label.to_string(), m));
         m
     }
 
@@ -84,6 +97,53 @@ impl BenchRun {
             println!("  [FAIL] {label}: {detail}");
             self.failures.push(format!("{label}: {detail}"));
         }
+        self.checks.push((label.to_string(), ok, detail));
+    }
+
+    /// The machine-readable run record: name, host wall time, every timed
+    /// measurement (median ns + MAD + sample count), every check.
+    /// Hand-rolled JSON — the crate is deliberately dependency-free.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        s.push_str(&format!(
+            "  \"host_elapsed_s\": {:.3},\n",
+            self.t0.elapsed().as_secs_f64()
+        ));
+        s.push_str("  \"measurements\": [\n");
+        for (i, (label, m)) in self.measurements.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": {}, \"median_ns\": {}, \"mad_ns\": {}, \"samples\": {}}}{}\n",
+                json_str(label),
+                json_f64(m.median_ns),
+                json_f64(m.mad_ns),
+                m.samples,
+                if i + 1 < self.measurements.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"checks\": [\n");
+        for (i, (label, ok, detail)) in self.checks.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": {}, \"ok\": {}, \"detail\": {}}}{}\n",
+                json_str(label),
+                ok,
+                json_str(detail),
+                if i + 1 < self.checks.len() { "," } else { "" }
+            ));
+        }
+        s.push_str(&format!("  ],\n  \"failed_checks\": {}\n}}\n", self.failures.len()));
+        s
+    }
+
+    /// `BENCH_<name>.json` with the name sanitized to a filename.
+    pub fn json_path(&self) -> String {
+        let safe: String = self
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        format!("BENCH_{safe}.json")
     }
 
     /// Check a value lies within `tol` (relative) of the paper's value.
@@ -96,8 +156,15 @@ impl BenchRun {
         );
     }
 
-    /// Finish: print a summary and exit non-zero on failures.
+    /// Finish: write `BENCH_<name>.json`, print a summary, and exit
+    /// non-zero on failures (the JSON is written either way, so a failed
+    /// gate still leaves a record of what it measured).
     pub fn finish(self) {
+        let path = self.json_path();
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("  wrote {path}"),
+            Err(e) => eprintln!("  warning: could not write {path}: {e}"),
+        }
         let dt = self.t0.elapsed().as_secs_f64();
         if self.failures.is_empty() {
             println!("#### {}: all checks passed ({dt:.1}s) ####", self.name);
@@ -112,6 +179,35 @@ impl BenchRun {
             }
             std::process::exit(1);
         }
+    }
+}
+
+/// JSON string literal (quotes, backslashes, and control chars escaped).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A JSON number: finite floats as-is, non-finite as null (JSON has no
+/// NaN/inf literals).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -141,5 +237,33 @@ mod tests {
         assert!(run.failures.is_empty());
         run.check_close("y", 1.5, 1.0, 0.10);
         assert_eq!(run.failures.len(), 1);
+    }
+
+    #[test]
+    fn json_record_contains_measurements_and_checks() {
+        let mut run = BenchRun::new("json demo");
+        run.time("tiny \"loop\"", || (0..100).sum::<u64>());
+        run.check("always ok", true, String::new());
+        run.check("always bad", false, "line1\nline2".into());
+        let json = run.to_json();
+        assert!(json.contains("\"name\": \"json demo\""));
+        assert!(json.contains("\"label\": \"tiny \\\"loop\\\"\""), "{json}");
+        assert!(json.contains("\"median_ns\": "));
+        assert!(json.contains("\"mad_ns\": "));
+        assert!(json.contains("\"samples\": 7"));
+        assert!(json.contains("\"ok\": true"));
+        assert!(json.contains("\"ok\": false"));
+        assert!(json.contains("\\nline2"), "control chars must be escaped: {json}");
+        assert!(json.contains("\"failed_checks\": 1"));
+        // filename is sanitized, never contains spaces
+        assert_eq!(run.json_path(), "BENCH_json_demo.json");
+    }
+
+    #[test]
+    fn json_escapes_are_valid() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\u{1}y"), "\"x\\u0001y\"");
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
     }
 }

@@ -117,6 +117,10 @@ COMMANDS:
       --layer <1..17>      ResNet-18 conv layer index (default 10)
       --baseline           use the dense ParaPIM baseline configuration
       --config <file>      key=value chip config
+      --fidelity <f>       ledger (exact fast path, default) | bit-serial
+                           (cycle-accurate storage emulation); results and
+                           metrics are byte-identical either way — armed
+                           fault injection always forces bit-serial
   map                      mapping sweep (Tables VII/VIII) for a layer
       --layer <1..17>      ResNet-18 conv layer index (default 10)
   verify                   cross-check simulator vs the PJRT artifacts
@@ -136,6 +140,7 @@ COMMANDS:
                            the shard plan, per-leg transfer costs, and a
                            bit-exactness check against the single-chip
                            oracle
+      --fidelity <f>       ledger (default) | bit-serial (as in infer)
   serve                    threaded weight-stationary inference service:
                            each worker holds the model resident on its
                            CMA slice and serves model-level requests
@@ -145,6 +150,7 @@ COMMANDS:
       --shards <n>         pipeline stages in pipelined mode (default 2)
       --max-batch <n>      micro-batch window per dequeue in replicated
                            mode (default 1 = no fusion)
+      --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model
                            scale): load the model once (weights stay
@@ -169,6 +175,8 @@ COMMANDS:
       --requests <n>       labelled inputs served per point (default 4)
       --seed <n>           corruption/input seed (default 0x5EED);
                            sweeps are deterministic per seed
+                           (the oracle and zero-BER points run at ledger
+                           fidelity; armed points demote to bit-serial)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   help                     this text
 ";

@@ -11,6 +11,7 @@
 //! op_bits = 8
 //! threads = 8
 //! wreg_per_cma = 8192   # resident 2-bit weight-register entries per CMA
+//! fidelity = ledger     # ledger (exact fast path) | bit-serial
 //! ```
 
 use std::collections::HashMap;
@@ -18,7 +19,7 @@ use std::path::Path;
 
 use crate::error::{anyhow, bail, Context, Result};
 
-use crate::array::sacu::DotLayout;
+use crate::array::sacu::{DotLayout, Fidelity};
 use crate::circuit::sense_amp::SaKind;
 use crate::coordinator::accelerator::ChipConfig;
 
@@ -33,6 +34,8 @@ pub struct FatConfig {
     pub threads: usize,
     /// Resident 2-bit weight-register entries per CMA SACU.
     pub wreg_per_cma: usize,
+    /// Host compute fidelity: exact ledger replay or bit-serial storage.
+    pub fidelity: Fidelity,
 }
 
 impl Default for FatConfig {
@@ -45,6 +48,7 @@ impl Default for FatConfig {
             op_bits: 8,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             wreg_per_cma: 8192,
+            fidelity: Fidelity::Ledger,
         }
     }
 }
@@ -88,6 +92,7 @@ impl FatConfig {
                         other => bail!("unknown layout `{other}`"),
                     }
                 }
+                "fidelity" => cfg.fidelity = parse_fidelity(value)?,
                 other => bail!("line {}: unknown key `{other}`", lineno + 1),
             }
         }
@@ -117,7 +122,17 @@ impl FatConfig {
             threads: self.threads,
             wreg_entries_per_cma: self.wreg_per_cma,
             fault: None,
+            fidelity: self.fidelity,
         }
+    }
+}
+
+/// Parse a fidelity name (shared by the config file and `--fidelity`).
+pub fn parse_fidelity(v: &str) -> Result<Fidelity> {
+    match v.to_ascii_lowercase().as_str() {
+        "ledger" => Ok(Fidelity::Ledger),
+        "bit-serial" | "bitserial" | "bit_serial" => Ok(Fidelity::BitSerial),
+        other => bail!("unknown fidelity `{other}` (ledger | bit-serial)"),
     }
 }
 
@@ -142,6 +157,18 @@ mod tests {
         assert!(c.interval_layout);
         assert_eq!(c.op_bits, 8);
         assert_eq!(c.wreg_per_cma, 8192);
+    }
+
+    #[test]
+    fn fidelity_parses_and_defaults_to_ledger() {
+        assert_eq!(FatConfig::default().fidelity, Fidelity::Ledger);
+        assert_eq!(FatConfig::default().chip().fidelity, Fidelity::Ledger);
+        let c = FatConfig::parse("fidelity = bit-serial").unwrap();
+        assert_eq!(c.fidelity, Fidelity::BitSerial);
+        assert_eq!(c.chip().fidelity, Fidelity::BitSerial);
+        let c = FatConfig::parse("fidelity = LEDGER").unwrap();
+        assert_eq!(c.fidelity, Fidelity::Ledger);
+        assert!(FatConfig::parse("fidelity = cycle-exact").is_err());
     }
 
     #[test]

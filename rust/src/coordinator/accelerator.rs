@@ -19,10 +19,20 @@
 //! The same chip object, configured with `ChipConfig::parapim_baseline()`,
 //! models the dense BWN-style competitor (ParaPIM scheme, no zero
 //! skipping) used throughout the paper's comparisons.
+//!
+//! Host-side compute fidelity is a [`ChipConfig::fidelity`] knob: the
+//! default [`Fidelity::Ledger`] computes every sparse dot with host
+//! integer arithmetic and replays the exact bit-serial op ledger
+//! (byte-identical outputs and metrics, an order of magnitude less host
+//! time); [`ChipConfig::effective_fidelity`] demotes to
+//! [`Fidelity::BitSerial`] whenever fault injection is armed at a
+//! positive BER, because flips act on the real comparator words.
 
 use crate::addition::{scheme, AdditionScheme};
 use crate::array::cma::{Cma, CmaStats};
 use crate::array::sacu::{DotLayout, Sacu, WeightRegister};
+
+pub use crate::array::sacu::Fidelity;
 use crate::circuit::sense_amp::SaKind;
 use crate::mapping::img2col::{img2col, Img2ColMatrix};
 use crate::mapping::planner::{Assignment, GridPlan, PlannerConfig};
@@ -78,6 +88,15 @@ pub struct ChipConfig {
     /// chip by construction — the injection hook never perturbs values
     /// or timing unless a flip actually fires.
     pub fault: Option<SenseFault>,
+    /// How the SACUs execute the sparse dot product: `BitSerial` walks
+    /// real CMA rows per bit per addition; `Ledger` computes with host
+    /// integer arithmetic and replays the identical op ledger
+    /// (byte-identical `DotResult` **and** `CmaStats`; see
+    /// [`Fidelity`]).  [`Self::effective_fidelity`] is what
+    /// `run_planned` consults — it demotes to `BitSerial` whenever fault
+    /// injection is armed at a positive BER, because corrupting a sense
+    /// needs the real comparator words.
+    pub fidelity: Fidelity,
 }
 
 impl ChipConfig {
@@ -92,6 +111,22 @@ impl ChipConfig {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             wreg_entries_per_cma: 8192,
             fault: None,
+            // serving default: the exact fast path — demoted back to
+            // BitSerial automatically whenever faults are armed
+            fidelity: Fidelity::Ledger,
+        }
+    }
+
+    /// The fidelity `run_planned` actually executes at: armed fault
+    /// injection with `ber > 0.0` forces [`Fidelity::BitSerial`] (flips
+    /// perturb the comparator words the ledger path never materializes),
+    /// while a hook armed at `ber = 0.0` never fires, so the exact ledger
+    /// replay remains valid — which is how a reliability sweep's zero-BER
+    /// oracle points stay on the fast path.
+    pub fn effective_fidelity(&self) -> Fidelity {
+        match self.fault {
+            Some(f) if f.ber > 0.0 => Fidelity::BitSerial,
+            _ => self.fidelity,
         }
     }
 
@@ -200,12 +235,26 @@ impl FatChip {
         charge_wreg: bool,
         cma: &mut Cma,
     ) -> TileResult {
-        let sacu = Sacu::new(self.cfg.layout, self.cfg.skip_zeros);
+        let fidelity = self.cfg.effective_fidelity();
+        let sacu = Sacu::with_fidelity(self.cfg.layout, self.cfg.skip_zeros, fidelity);
         sacu.init_cma(cma);
         let n_cols = a.col1 - a.col0;
         // Load operand slots (activations quantized to u8 by the DPU).
+        // BitSerial stores them into the CMA rows; Ledger keeps them
+        // host-side (slot-major in `hosted`) and replays the identical
+        // store cost — once no fault can land on the rows, the storage
+        // dance is pure host overhead on the serving hot path.
         // One reused buffer: per-slot Vec allocation was hot (perf pass).
         let mut vals = vec![0u64; n_cols];
+        let mut hosted: Vec<u64> = match fidelity {
+            Fidelity::BitSerial => Vec::new(),
+            Fidelity::Ledger => Vec::with_capacity((a.j1 - a.j0) * n_cols),
+        };
+        // An operand slot physically holds op_bits bits: store_vector
+        // truncates on store, so the host-side copy must truncate the
+        // same way or a narrow-op_bits config would diverge.
+        let op_bits = self.cfg.layout.op_bits;
+        let op_mask = ((1u128 << op_bits) - 1) as u64;
         for (slot, jj) in (a.j0..a.j1).enumerate() {
             for (v, c) in vals.iter_mut().zip(a.col0..a.col1) {
                 let x = ax.get(c, jj);
@@ -215,7 +264,13 @@ impl FatChip {
                 );
                 *v = x as u64;
             }
-            sacu.load_slot(cma, slot, &vals);
+            match fidelity {
+                Fidelity::BitSerial => sacu.load_slot(cma, slot, &vals),
+                Fidelity::Ledger => {
+                    cma.replay_store_vector(op_bits, n_cols);
+                    hosted.extend(vals.iter().map(|&v| v & op_mask));
+                }
+            }
         }
         // Run all filters' chunks sequentially on this tile.
         let mut partials = Vec::with_capacity(weights.regs.len());
@@ -229,7 +284,12 @@ impl FatChip {
                 cma.stats.latency_ns += t;
                 wreg_ns += t;
             }
-            let dot = sacu.sparse_dot(cma, addition, reg, n_cols);
+            let dot = match fidelity {
+                Fidelity::BitSerial => sacu.sparse_dot(cma, addition, reg, n_cols),
+                Fidelity::Ledger => {
+                    sacu.sparse_dot_hosted(cma, addition, reg, n_cols, &hosted)
+                }
+            };
             adds += dot.adds as u64;
             skipped += dot.skipped as u64;
             partials.push((kn, dot.values));
@@ -496,17 +556,94 @@ mod tests {
     }
 
     #[test]
+    fn ledger_fidelity_is_byte_identical_to_bit_serial_at_chip_level() {
+        // The tentpole acceptance at chip scale: Ledger fidelity must
+        // reproduce the bit-serial run byte for byte — output tensor AND
+        // the full ChipMetrics (senses, writes, f64 latency/energy, adds,
+        // skipped) — including on a multi-step plan.
+        let l = small_layer();
+        let mut rng = Rng::new(0xC49);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.6);
+        for cmas in [ChipConfig::fat().cmas, 3] {
+            let mut bs_cfg = ChipConfig::fat();
+            bs_cfg.cmas = cmas;
+            bs_cfg.fidelity = Fidelity::BitSerial;
+            let mut lg_cfg = bs_cfg;
+            lg_cfg.fidelity = Fidelity::Ledger;
+            let bs = FatChip::new(bs_cfg).run_conv_layer(&x, &f, &l);
+            let lg = FatChip::new(lg_cfg).run_conv_layer(&x, &f, &l);
+            assert_eq!(lg.output.data, bs.output.data, "values ({cmas} CMAs)");
+            assert_eq!(lg.metrics, bs.metrics, "metrics ({cmas} CMAs)");
+        }
+        // and the dense baseline takes the same fast path
+        let mut bs_cfg = ChipConfig::parapim_baseline();
+        bs_cfg.fidelity = Fidelity::BitSerial;
+        let bs = FatChip::new(bs_cfg).run_conv_layer(&x, &f, &l);
+        let lg = FatChip::new(ChipConfig::parapim_baseline()).run_conv_layer(&x, &f, &l);
+        assert_eq!(lg.output.data, bs.output.data, "baseline values");
+        assert_eq!(lg.metrics, bs.metrics, "baseline metrics");
+
+        // narrow-op_bits config: store_vector truncates operands to
+        // op_bits on store, and the hosted ledger copy must truncate the
+        // same way (0..255 activations, 4-bit slots)
+        let mut narrow_bs = ChipConfig::fat();
+        narrow_bs.layout = crate::array::sacu::DotLayout::interval(4);
+        narrow_bs.fidelity = Fidelity::BitSerial;
+        let mut narrow_lg = narrow_bs;
+        narrow_lg.fidelity = Fidelity::Ledger;
+        let bs = FatChip::new(narrow_bs).run_conv_layer(&x, &f, &l);
+        let lg = FatChip::new(narrow_lg).run_conv_layer(&x, &f, &l);
+        assert_eq!(lg.output.data, bs.output.data, "4-bit slots must truncate identically");
+        assert_eq!(lg.metrics, bs.metrics, "4-bit metrics");
+    }
+
+    #[test]
+    fn armed_fault_demotes_ledger_to_bit_serial() {
+        // fault injection needs real comparator words: a Ledger chip with
+        // an armed positive-BER hook must execute (and corrupt) exactly
+        // like the BitSerial chip with the same fault stream
+        let l = small_layer();
+        let mut rng = Rng::new(0xC4A);
+        let x = random_input(&mut rng, &l);
+        let f = random_filter(&mut rng, &l, 0.6);
+
+        let armed = ChipConfig::fat().with_fault_injection(0.05, 7);
+        assert_eq!(armed.fidelity, Fidelity::Ledger, "requested fidelity is kept");
+        assert_eq!(armed.effective_fidelity(), Fidelity::BitSerial, "but demoted when armed");
+        // armed at 0.0 the hook never fires: the fast path stays valid
+        let armed0 = ChipConfig::fat().with_fault_injection(0.0, 7);
+        assert_eq!(armed0.effective_fidelity(), Fidelity::Ledger);
+        assert_eq!(ChipConfig::fat().effective_fidelity(), Fidelity::Ledger);
+
+        let mut bs = armed;
+        bs.fidelity = Fidelity::BitSerial;
+        let a = FatChip::new(armed).run_conv_layer(&x, &f, &l);
+        let b = FatChip::new(bs).run_conv_layer(&x, &f, &l);
+        assert_eq!(a.output.data, b.output.data, "demotion must reproduce the corruption");
+        assert_eq!(a.metrics, b.metrics);
+        // and the corruption is real (not the clean ledger value)
+        let clean = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &l);
+        assert_ne!(a.output.data, clean.output.data, "5% sense BER must corrupt");
+    }
+
+    #[test]
     fn zero_ber_fault_injection_is_bit_identical_at_chip_level() {
         // Arming the hook at ber = 0.0 must not perturb the hot path: the
         // run is byte-identical to the injection-disabled chip, metrics
-        // included.
+        // included.  Forced to BitSerial on BOTH sides — the serving
+        // default (Ledger) never executes the injection hook, and this
+        // test exists precisely to guard the armed bit-serial sense path.
         let l = small_layer();
         let mut rng = Rng::new(0xC47);
         let x = random_input(&mut rng, &l);
         let f = random_filter(&mut rng, &l, 0.6);
-        let clean = FatChip::new(ChipConfig::fat()).run_conv_layer(&x, &f, &l);
-        let armed = FatChip::new(ChipConfig::fat().with_fault_injection(0.0, 99))
-            .run_conv_layer(&x, &f, &l);
+        let mut clean_cfg = ChipConfig::fat();
+        clean_cfg.fidelity = Fidelity::BitSerial;
+        let armed_cfg = clean_cfg.with_fault_injection(0.0, 99);
+        assert_eq!(armed_cfg.effective_fidelity(), Fidelity::BitSerial);
+        let clean = FatChip::new(clean_cfg).run_conv_layer(&x, &f, &l);
+        let armed = FatChip::new(armed_cfg).run_conv_layer(&x, &f, &l);
         assert_eq!(armed.output.data, clean.output.data, "ber 0.0 must be transparent");
         assert_eq!(armed.metrics, clean.metrics, "injection must not cost time");
     }

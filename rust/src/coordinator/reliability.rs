@@ -26,6 +26,12 @@
 //! `sense_ber = 0` point is byte-identical to the oracle by construction
 //! (the injection hook never perturbs values or timing unless a flip
 //! actually fires).
+//!
+//! Host cost: the oracle and every zero-BER point run at
+//! [`Fidelity::Ledger`](crate::coordinator::accelerator::Fidelity) — the
+//! exact ledger-replay fast path — while armed points auto-demote to
+//! bit-serial execution, so a sweep only pays for cycle-accurate
+//! emulation where flips can actually land.
 
 use crate::circuit::reliability::sa_sense_bers;
 use crate::circuit::sense_amp::SaKind;
@@ -274,8 +280,15 @@ pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Resul
     // the disarmed stack, then every BER point just re-arms the injection
     // hooks on the same resident state (same topology, airtight
     // comparison, no reload).
+    //
+    // Fidelity: the oracle and every zero-BER point take the exact
+    // Ledger fast path (byte-identical to bit-serial by construction,
+    // an order of magnitude less host time per point), while armed
+    // points at a positive sense BER auto-demote to BitSerial inside
+    // `run_planned` — fault injection needs real comparator words.
     let mut clean_cfg = cfg;
     clean_cfg.fault = None;
+    clean_cfg.fidelity = crate::coordinator::accelerator::Fidelity::Ledger;
     let mut stack = Stack::build(clean_cfg, spec, sc.shards, sc.workers, HwParams::default())?;
     let labels: Vec<ModelOutput> =
         inputs.iter().map(|x| stack.infer(x)).collect::<Result<_>>()?;

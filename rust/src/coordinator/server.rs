@@ -23,6 +23,12 @@
 //! available from [`InferenceServer::loading_metrics`], so amortization is
 //! measurable.  [`InferenceServer::collect_timeout`] bounds a collection
 //! that would otherwise wait forever on an undersubmitted queue.
+//!
+//! Every worker inherits [`ChipConfig::fidelity`]: fault-free serving runs
+//! the exact ledger-replay fast path by default (byte-identical responses
+//! and metrics, an order of magnitude less host time per request), and
+//! armed fault injection auto-demotes the affected chips to bit-serial
+//! execution.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;

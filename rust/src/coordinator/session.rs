@@ -35,6 +35,14 @@
 //! Between conv layers the DPU applies BN + ReLU, the stem's max pool,
 //! and 8-bit requantization; the optional head runs global average
 //! pooling plus a ternary FC on dequantized floats.
+//!
+//! The session inherits [`ChipConfig::fidelity`]: by default fault-free
+//! serving computes every sparse dot at
+//! [`Fidelity::Ledger`](crate::coordinator::accelerator::Fidelity) — host
+//! integer arithmetic plus an exact ledger replay, byte-identical in
+//! outputs and `ChipMetrics` to bit-serial execution and an order of
+//! magnitude faster in host time; arming fault injection at a positive
+//! BER auto-demotes the chip to bit-serial.
 
 use std::collections::HashMap;
 
@@ -711,14 +719,54 @@ mod tests {
     }
 
     #[test]
+    fn ledger_fidelity_session_is_byte_identical_including_metrics() {
+        // end-to-end tentpole gate: a resident session in Ledger fidelity
+        // must serve byte-identical features, logits, AND the full
+        // ChipMetrics (f64 latency/energy included) of the bit-serial
+        // session — solo requests and fused micro-batches alike.
+        use crate::coordinator::accelerator::Fidelity;
+        let spec = tiny_spec(47);
+        let mut bs_cfg = ChipConfig::fat();
+        bs_cfg.fidelity = Fidelity::BitSerial;
+        let lg_cfg = ChipConfig::fat();
+        assert_eq!(lg_cfg.fidelity, Fidelity::Ledger, "serving default is the fast path");
+        let mut bs = ChipSession::new(bs_cfg, spec.clone()).unwrap();
+        let mut lg = ChipSession::new(lg_cfg, spec.clone()).unwrap();
+        assert_eq!(*lg.loading(), *bs.loading(), "loading is fidelity-independent");
+
+        let xs: Vec<Tensor4> = (0..3).map(|i| random_input(&spec, 600 + i)).collect();
+        for x in &xs {
+            let want = bs.infer(x).unwrap();
+            let got = lg.infer(x).unwrap();
+            assert_eq!(got.features.data, want.features.data);
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.metrics, want.metrics, "full ChipMetrics must match byte for byte");
+        }
+        // fused micro-batch path (wider plans, same registers)
+        let refs: Vec<&Tensor4> = xs.iter().collect();
+        let want = bs.infer_many(&refs).unwrap();
+        let got = lg.infer_many(&refs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.features.data, w.features.data);
+            assert_eq!(g.logits, w.logits);
+            assert_eq!(g.metrics, w.metrics);
+        }
+    }
+
+    #[test]
     fn zero_ber_session_is_byte_identical_to_ideal_session() {
         // The fault-injection plumbing must not perturb the hot path:
         // with injection armed at ber = 0.0 every output (and the metrics)
-        // is byte-identical to the injection-disabled oracle.
+        // is byte-identical to the injection-disabled oracle.  Pinned to
+        // BitSerial on both sides: the serving default (Ledger) never
+        // executes the injection hook this test exists to guard.
+        use crate::coordinator::accelerator::Fidelity;
         let spec = tiny_spec(41);
-        let mut ideal = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let mut cfg = ChipConfig::fat();
+        cfg.fidelity = Fidelity::BitSerial;
+        let mut ideal = ChipSession::new(cfg, spec.clone()).unwrap();
         let armed =
-            ChipSession::new(ChipConfig::fat().with_fault_injection(0.0, 0xDEAD), spec.clone());
+            ChipSession::new(cfg.with_fault_injection(0.0, 0xDEAD), spec.clone());
         let mut armed = armed.unwrap();
         let xs: Vec<Tensor4> = (0..3).map(|i| random_input(&spec, 500 + i)).collect();
         for x in &xs {

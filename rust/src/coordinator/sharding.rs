@@ -601,18 +601,51 @@ mod tests {
     }
 
     #[test]
+    fn ledger_fidelity_pipeline_is_byte_identical_including_metrics() {
+        // tentpole gate across chips: a 2-shard pipeline in Ledger
+        // fidelity must match the bit-serial pipeline byte for byte —
+        // outputs, per-stage ChipMetrics, transfer legs, and the
+        // aggregated request metrics.
+        use crate::coordinator::accelerator::Fidelity;
+        let spec = chain5(23);
+        let mut bs_cfg = ChipConfig::fat();
+        bs_cfg.fidelity = Fidelity::BitSerial;
+        let hw = HwParams::default();
+        let mut bs = PipelineSession::new(bs_cfg, spec.clone(), 2, hw).unwrap();
+        let mut lg = PipelineSession::new(ChipConfig::fat(), spec.clone(), 2, hw).unwrap();
+        assert_eq!(lg.loading_total(), bs.loading_total());
+
+        let mut rng = Rng::new(0x1ED9);
+        for _ in 0..2 {
+            let x = spec.random_input(&mut rng);
+            let want = bs.infer(&x).unwrap();
+            let got = lg.infer(&x).unwrap();
+            assert_eq!(got.out.features.data, want.out.features.data);
+            assert_eq!(got.out.logits, want.out.logits);
+            assert_eq!(got.out.metrics, want.out.metrics, "aggregate metrics");
+            assert_eq!(got.stage_metrics, want.stage_metrics, "per-stage metrics");
+            assert_eq!(got.xfer_legs_ns, want.xfer_legs_ns, "link legs");
+        }
+    }
+
+    #[test]
     fn zero_ber_pipeline_is_byte_identical_to_the_ideal_oracle() {
         // ISSUE 3 satellite: fault injection armed at sense BER 0.0 AND
         // link BER 0.0 must leave a 2- and 3-shard pipeline byte-identical
         // to the injection-disabled single-chip oracle — the plumbing must
-        // not perturb the hot path.
+        // not perturb the hot path.  Pinned to BitSerial on both sides:
+        // the serving default (Ledger) never executes the injection hook
+        // this test exists to guard.
+        use crate::coordinator::accelerator::Fidelity;
         let spec = chain5(17);
-        let mut oracle = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let mut bs_cfg = ChipConfig::fat();
+        bs_cfg.fidelity = Fidelity::BitSerial;
+        let mut oracle = ChipSession::new(bs_cfg, spec.clone()).unwrap();
         let mut rng = Rng::new(0x0BE0);
         let xs: Vec<Tensor4> = (0..2).map(|_| spec.random_input(&mut rng)).collect();
         let wants: Vec<ModelOutput> = xs.iter().map(|x| oracle.infer(x).unwrap()).collect();
 
-        let armed_cfg = ChipConfig::fat().with_fault_injection(0.0, 0xFA01);
+        let armed_cfg = bs_cfg.with_fault_injection(0.0, 0xFA01);
         let hw = HwParams { link_ber: 0.0, link_fault_seed: 0xFA02, ..HwParams::default() };
         for shards in [2usize, 3] {
             let mut pipe = PipelineSession::new(armed_cfg, spec.clone(), shards, hw).unwrap();

@@ -71,6 +71,47 @@
 //!   (workers are shard *stages* connected by channels, so shard k
 //!   computes request i+1 while shard k+1 computes request i).
 //!
+//! ## Compute fidelity: bit-serial execution vs exact ledger replay
+//!
+//! Every compute path is governed by
+//! [`coordinator::accelerator::ChipConfig::fidelity`]
+//! ([`array::sacu::Fidelity`]):
+//!
+//! - **`BitSerial`** — cycle-accurate emulation: each SACU sparse dot
+//!   walks real CMA rows through `sense_two_rows` / `write_row_masked`
+//!   per bit per addition.  Storage state, endurance, and injected
+//!   sensing faults are physical.
+//! - **`Ledger`** (the serving default) — the dot product is computed
+//!   with host integer arithmetic over the operand slots, and an **exact
+//!   ledger replay** charges `CmaStats` with precisely the senses /
+//!   writes / latency / energy the bit-serial path would have recorded,
+//!   derived per addition scheme from the same `SparseDotPlan`
+//!   ([`addition::AdditionScheme::replay_add_costs`],
+//!   [`array::cma::Cma::replay_store_vector`]).
+//!
+//! The faithfulness argument: when no fault fires, the bit-serial result
+//! is exact two's-complement arithmetic *by construction* (pinned by
+//! `all_schemes_add_exactly` and `sparse_dot_matches_plain_dot_product`),
+//! and every scheme's cost is value-independent — so `DotResult` **and**
+//! `CmaStats`/`ChipMetrics` are byte-identical between the two modes.
+//! This is not assumed but gated: property suites compare the fidelities
+//! across all four schemes x layouts x widths x sparsities x masks
+//! (`ledger_fidelity_matches_bit_serial_exactly`), at chip level, and end
+//! to end through `ChipSession` / `PipelineSession` — and the FAT paper's
+//! own headline numbers are themselves ledger quantities (operation
+//! counts x calibrated per-op costs, eqs. 1–3), so nothing the
+//! reproduction reports depends on per-bit storage state.  The win is an
+//! order of magnitude of host time on fault-free serving
+//! (`benches/hotpath.rs`, CI-gated).
+//!
+//! Demotion: [`coordinator::accelerator::ChipConfig::effective_fidelity`]
+//! falls back to `BitSerial` whenever fault injection is armed at a
+//! positive BER — flips corrupt the real comparator words the ledger
+//! path never materializes.  A reliability sweep therefore computes its
+//! oracle and zero-BER points on the fast path and pays for
+//! cycle-accurate emulation only where flips can land.  CLI:
+//! `--fidelity ledger|bit-serial` on `infer` / `resnet` / `serve`.
+//!
 //! ## Fault injection and the model-scale reliability sweep
 //!
 //! The paper's §IV-A3 argues FAT's two-operand sensing has a 2.4x larger

@@ -30,6 +30,11 @@ fn main() {
     std::process::exit(code);
 }
 
+/// `--fidelity ledger|bit-serial`; `None` keeps the config's default.
+fn fidelity_flag(args: &Args) -> Result<Option<fat_imc::coordinator::accelerator::Fidelity>> {
+    args.get("fidelity").map(fat_imc::config::parse_fidelity).transpose()
+}
+
 fn pick_layer(idx: usize) -> Result<ConvLayer> {
     let layers = resnet18_conv_layers();
     if idx == 0 || idx > layers.len() {
@@ -104,10 +109,10 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
-    args.allow(&["sparsity", "layer", "baseline", "config"])?;
+    args.allow(&["sparsity", "layer", "baseline", "config", "fidelity"])?;
     let sparsity = args.get_f64("sparsity", 0.8)?;
     let layer = shrink(pick_layer(args.get_usize("layer", 10)?)?);
-    let chip_cfg = if args.get_bool("baseline") {
+    let mut chip_cfg = if args.get_bool("baseline") {
         ChipConfig::parapim_baseline()
     } else {
         match args.get("config") {
@@ -115,6 +120,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
             None => ChipConfig::fat(),
         }
     };
+    if let Some(f) = fidelity_flag(args)? {
+        chip_cfg.fidelity = f;
+    }
 
     let mut rng = Rng::new(42);
     let mut x = Tensor4::zeros(layer.n, layer.c, layer.h, layer.w);
@@ -125,8 +133,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
     );
 
     println!(
-        "running {} (shrunk to N={} C={} {}x{} KN={}) at sparsity {:.0}% on {:?}...",
-        layer.name, layer.n, layer.c, layer.h, layer.w, layer.kn, sparsity * 100.0, chip_cfg.sa_kind
+        "running {} (shrunk to N={} C={} {}x{} KN={}) at sparsity {:.0}% on {:?} \
+({:?} fidelity)...",
+        layer.name, layer.n, layer.c, layer.h, layer.w, layer.kn, sparsity * 100.0,
+        chip_cfg.sa_kind, chip_cfg.effective_fidelity()
     );
     let chip = FatChip::new(chip_cfg);
     let run = chip.run_conv_layer(&x, &filter, &layer);
@@ -326,7 +336,7 @@ perturbing the hot path"
 fn cmd_serve(args: &Args) -> Result<()> {
     args.allow(&[
         "requests", "workers", "batch", "input", "scale", "sparsity", "classes", "mode",
-        "shards", "max-batch",
+        "shards", "max-batch", "fidelity",
     ])?;
     let n_req = args.get_usize("requests", 16)?.max(1);
     let workers = args.get_usize("workers", 4)?;
@@ -372,7 +382,12 @@ workers (micro-batch window {max_batch})...",
             spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
         ),
     }
-    let server = InferenceServer::start_with(ChipConfig::fat(), mode, spec.clone())?;
+    let mut chip_cfg = ChipConfig::fat();
+    if let Some(f) = fidelity_flag(args)? {
+        chip_cfg.fidelity = f;
+    }
+    println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
+    let server = InferenceServer::start_with(chip_cfg, mode, spec.clone())?;
     let load_ns: f64 = server.loading_metrics().iter().map(|m| m.weight_load_ns).sum();
     let load_writes: u64 = server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
     println!(
@@ -419,7 +434,10 @@ naive path would have paid the {:.1} us load {n_req} more times",
 /// table driven layer-by-layer through the chip with DPU BN + ReLU (and
 /// the stem max pool) between layers.
 fn cmd_resnet(args: &Args) -> Result<()> {
-    args.allow(&["batch", "input", "scale", "sparsity", "layers", "requests", "classes", "shards"])?;
+    args.allow(&[
+        "batch", "input", "scale", "sparsity", "layers", "requests", "classes", "shards",
+        "fidelity",
+    ])?;
     let shards = args.get_usize("shards", 1)?;
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
@@ -441,10 +459,15 @@ fn cmd_resnet(args: &Args) -> Result<()> {
 {n_layers} conv layers, sparsity {:.0}%",
         spec.sparsity() * 100.0
     );
-    if shards > 1 {
-        return run_resnet_sharded(spec, shards, n_req);
+    let mut chip_cfg = ChipConfig::fat();
+    if let Some(f) = fidelity_flag(args)? {
+        chip_cfg.fidelity = f;
     }
-    let mut session = ChipSession::new(ChipConfig::fat(), spec)?;
+    println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
+    if shards > 1 {
+        return run_resnet_sharded(chip_cfg, spec, shards, n_req);
+    }
+    let mut session = ChipSession::new(chip_cfg, spec)?;
 
     let mut t = Table::new(
         "resident model (planned once, registers written once)",
@@ -512,8 +535,7 @@ fn cmd_resnet(args: &Args) -> Result<()> {
 /// footprint-balanced shards, serve it as a chip pipeline, charge the
 /// inter-chip link at every boundary, and prove bit-exactness against the
 /// single-chip session (when one chip can hold the whole model).
-fn run_resnet_sharded(spec: ModelSpec, shards: usize, n_req: usize) -> Result<()> {
-    let cfg = ChipConfig::fat();
+fn run_resnet_sharded(cfg: ChipConfig, spec: ModelSpec, shards: usize, n_req: usize) -> Result<()> {
     let hw = HwParams::default();
     let plan = ShardPlan::partition(&spec, &cfg, shards)?;
 

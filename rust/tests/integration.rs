@@ -194,6 +194,21 @@ fn cli_binary_smoke() {
     assert!(text.contains("one-time load"), "{text}");
     assert!(text.contains("loading vs compute"), "{text}");
 
+    // fidelity flag: explicit bit-serial is accepted and reported; a
+    // bogus value is a clean error
+    let out = std::process::Command::new(exe)
+        .args(["infer", "--sparsity", "0.8", "--layer", "2", "--fidelity", "bit-serial"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("BitSerial"));
+    let out = std::process::Command::new(exe)
+        .args(["infer", "--fidelity", "cycle-exactish"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fidelity"));
+
     // unknown flags must be rejected
     let out = std::process::Command::new(exe).args(["infer", "--bogus", "1"]).output().unwrap();
     assert!(!out.status.success());
