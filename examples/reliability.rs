@@ -41,6 +41,7 @@ fn main() {
     let sc = SweepConfig {
         bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
         link_bers: Vec::new(),
+        link_ecc: false,
         shards: 1,
         workers: 1,
         requests,
@@ -72,6 +73,7 @@ fn main() {
     let sc = SweepConfig {
         bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
         link_bers: Vec::new(),
+        link_ecc: false,
         shards: 1,
         workers: 2,
         requests,
@@ -93,6 +95,7 @@ fn main() {
     let sc = SweepConfig {
         bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
         link_bers: vec![0.0, 1e-6, 1e-4, 1e-3],
+        link_ecc: false,
         shards: 2,
         workers: 1,
         requests,
@@ -116,6 +119,38 @@ fn main() {
         qlast.top1_agreement * 100.0,
         qlast.corrupted_requests,
         requests
+    );
+
+    // ---- same lossy link, SECDED ECC armed: the trade-off ----------------
+    let sc = SweepConfig {
+        bers: vec![0.0, fat_ber, 1e-3, three_op_ber],
+        link_bers: vec![0.0, 1e-6, 1e-4, 1e-3],
+        link_ecc: true,
+        shards: 2,
+        workers: 1,
+        requests,
+        seed: 0xBE14,
+    };
+    let rep3 = sweep_model(ChipConfig::fat(), &spec, &sc).expect("ECC sweep");
+    println!("{}", rep3.table().render());
+    let e0 = &rep3.points[0];
+    assert!(
+        e0.bit_identical,
+        "SECDED on a clean link must stay byte-identical (pure wire overhead)"
+    );
+    let elast = rep3.points.last().expect("four points");
+    assert!(
+        elast.corrupted_requests <= qlast.corrupted_requests,
+        "ECC must not corrupt more requests than the raw link: {} vs {}",
+        elast.corrupted_requests,
+        qlast.corrupted_requests
+    );
+    println!(
+        "SECDED at link BER {}: {} of {requests} requests corrupted (raw link: {}) for \
++12.5% wire per leg",
+        ber_str(elast.link_ber),
+        elast.corrupted_requests,
+        qlast.corrupted_requests
     );
     println!("reliability OK");
 }

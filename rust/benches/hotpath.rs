@@ -146,16 +146,14 @@ fn main() {
     xi.fill_random_ints(&mut rng, 0, 256);
     let m4 = run.time("img2col 2x64x28x28 k3 s2", || img2col(&xi, &l10ish));
 
-    // regression guards (generous: CI machines vary)
-    run.check("vector_add under 100us", m1.median_ns < 100_000.0, format!("{}", m1.median_ns));
-    run.check("sparse_dot under 3ms", m2.median_ns < 3_000_000.0, format!("{}", m2.median_ns));
-    // absolute bounds are gross-regression guards only (deliberately
-    // loose: CI machines vary and this case is single-threaded at 32
-    // filters — calibrate from BENCH_hotpath.json once CI has history);
-    // the fidelity *ratio* checks below are the real gate
-    run.check("bit-serial conv layer under 20s", m3.median_ns < 2e10, format!("{}", m3.median_ns));
-    run.check("ledger conv layer under 4s", m3l.median_ns < 4e9, format!("{}", m3l.median_ns));
-    run.check("img2col under 100ms", m4.median_ns < 1e8, format!("{}", m4.median_ns));
+    // Regression guards: every measurement within 5x of the committed
+    // baseline (`BENCH_hotpath.baseline.json`, seeded from the previous
+    // hand-tuned bounds at bound/5 so the effective gates are unchanged).
+    // Regenerate by copying a representative CI `BENCH_hotpath.json` over
+    // the baseline file.  5x absorbs CI-machine variance; the fidelity
+    // *ratio* checks below are the real gate.
+    run.check_against_baseline("BENCH_hotpath.baseline.json", 5.0);
+    let _ = m4; // its median lives in the JSON record and the baseline gate
 
     // the fidelity perf gates (CI fails if the fast path stops being fast)
     run.check(

@@ -85,7 +85,7 @@ fn main() {
     // ---- threaded pipelined server: stages overlap on real threads ------
     let server = InferenceServer::start_with(
         cfg,
-        ServingMode::Pipelined { shards: 4 },
+        ServingMode::Pipelined { shards: 4, max_batch: 1 },
         spec.clone(),
     )
     .expect("pipelined server");

@@ -48,6 +48,7 @@ fn main() {
     let sc = SweepConfig {
         bers: grid.clone(),
         link_bers: Vec::new(),
+        link_ecc: false,
         shards: 1,
         workers: 1,
         requests: REQUESTS,
@@ -89,6 +90,7 @@ fn main() {
     let sc = SweepConfig {
         bers: grid.clone(),
         link_bers: Vec::new(),
+        link_ecc: false,
         shards: 1,
         workers: 2,
         requests: REQUESTS,
@@ -116,6 +118,7 @@ fn main() {
     let sc = SweepConfig {
         bers: grid,
         link_bers: vec![0.0, 1e-6, 1e-4, 1e-3],
+        link_ecc: false,
         shards: 2,
         workers: 1,
         requests: REQUESTS,

@@ -1,0 +1,154 @@
+//! Tensor-parallel serving bench: KN-split hybrid plans vs the plain
+//! layer pipeline vs a single chip, on the simulated cost model.
+//!
+//! Three claims are gated: (1) hybrid serving is byte-identical to the
+//! single chip whatever the plan shape; (2) the auto-planner's chosen
+//! plan never has a worse issue interval than serial single-chip
+//! serving; (3) fusing requests through a sharded pipeline amortizes the
+//! per-leg hop latency (the sharded-batching item).  `finish()` writes
+//! `BENCH_tensor_parallel.json`.
+
+use fat_imc::bench_harness::{fmt_ns, BenchRun};
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::coordinator::sharding::PipelineSession;
+use fat_imc::coordinator::tensor_parallel::{
+    plan_auto, HybridPlan, TensorParallelSession,
+};
+use fat_imc::mapping::schemes::HwParams;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::{ratio, Table};
+use fat_imc::testutil::Rng;
+
+const REQUESTS: usize = 3;
+
+fn main() {
+    let mut run = BenchRun::new("tensor_parallel");
+    let cfg = ChipConfig::fat();
+    let hw = HwParams::default();
+    let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 0x7B01, 10);
+    let mut rng = Rng::new(0x7B02);
+    let xs: Vec<Tensor4> = (0..REQUESTS).map(|_| spec.random_input(&mut rng)).collect();
+
+    // ---- single chip: the serial baseline --------------------------------
+    let mut single = ChipSession::new(cfg, spec.clone()).expect("fits one chip");
+    let baseline = single.run_batch(&xs).expect("batch");
+    let serial_ns = baseline.iter().map(|o| o.metrics.latency_ns).sum::<f64>()
+        / baseline.len() as f64;
+
+    let mut table = Table::new(
+        "issue rate: hybrid (shards x kn-splits) vs single chip (simulated)",
+        &["config", "chips", "per-request latency", "issue interval", "speedup"],
+    );
+    table.row(vec![
+        "single chip".into(),
+        "1".into(),
+        fmt_ns(serial_ns),
+        fmt_ns(serial_ns),
+        ratio(1.0),
+    ]);
+
+    // ---- auto-planned hybrid at a 4-chip budget --------------------------
+    let t0 = std::time::Instant::now();
+    let plan = plan_auto(&cfg, &spec, 4, &hw).expect("auto plan");
+    let plan_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  auto-planner: {} stage(s) over {} chip(s) in {plan_s:.2} s host time",
+        plan.stages.len(),
+        plan.chips()
+    );
+    let mut auto_sess =
+        TensorParallelSession::new(cfg, spec.clone(), plan, hw).expect("auto session");
+    let ho = auto_sess.infer(&xs[0]).expect("hybrid inference");
+    run.check(
+        "auto hybrid output is bit-identical to the single chip",
+        ho.outs[0].features.data == baseline[0].features.data
+            && ho.outs[0].logits == baseline[0].logits,
+        "outputs diverged".into(),
+    );
+    let auto_interval = ho.issue_interval_ns();
+    run.check(
+        "auto plan's issue interval is never worse than serial serving",
+        auto_interval <= serial_ns * 1.001,
+        format!("interval {} vs serial {}", fmt_ns(auto_interval), fmt_ns(serial_ns)),
+    );
+    table.row(vec![
+        "auto hybrid (budget 4)".into(),
+        format!("{}", auto_sess.plan().chips()),
+        fmt_ns(ho.outs[0].metrics.latency_ns),
+        fmt_ns(auto_interval),
+        ratio(serial_ns / auto_interval),
+    ]);
+
+    // ---- forced whole-model 2-way KN split -------------------------------
+    let layers = spec.layers.len();
+    let tp_plan =
+        HybridPlan::manual(&spec, &cfg, &[(0, layers, 2)]).expect("2-way split plan");
+    let mut tp_sess =
+        TensorParallelSession::new(cfg, spec.clone(), tp_plan, hw).expect("TP session");
+    let tho = tp_sess.infer(&xs[0]).expect("TP inference");
+    run.check(
+        "whole-model 2-way KN split is bit-identical to the single chip",
+        tho.outs[0].features.data == baseline[0].features.data
+            && tho.outs[0].logits == baseline[0].logits,
+        "outputs diverged".into(),
+    );
+    run.check(
+        "every split layer charges its all-gathers",
+        tho.outs[0].metrics.xfer_legs == 2 * layers as u64
+            && tho.outs[0].metrics.xfer_ns > 0.0,
+        format!("{} legs", tho.outs[0].metrics.xfer_legs),
+    );
+    table.row(vec![
+        "whole-model 2-way KN split".into(),
+        "2".into(),
+        fmt_ns(tho.outs[0].metrics.latency_ns),
+        fmt_ns(tho.issue_interval_ns()),
+        ratio(serial_ns / tho.issue_interval_ns()),
+    ]);
+    println!("{}", table.render());
+
+    // ---- sharded batching: fused pipeline legs amortize ------------------
+    let mut solo_pipe =
+        PipelineSession::new(cfg, spec.clone(), 2, hw).expect("2-shard pipeline");
+    let solo_xfer: f64 = xs
+        .iter()
+        .map(|x| solo_pipe.infer(x).expect("solo").out.metrics.xfer_ns)
+        .sum();
+    let mut fused_pipe =
+        PipelineSession::new(cfg, spec.clone(), 2, hw).expect("2-shard pipeline");
+    let refs: Vec<&Tensor4> = xs.iter().collect();
+    let fused = fused_pipe.infer_many(&refs).expect("fused run");
+    run.check(
+        "fused pipelined responses re-split bit-identically",
+        fused
+            .iter()
+            .zip(&baseline)
+            .all(|(f, b)| f.features.data == b.features.data && f.logits == b.logits),
+        "fused outputs diverged".into(),
+    );
+    let fused_xfer = fused[0].metrics.xfer_ns;
+    run.check(
+        "fusing requests amortizes the per-leg hop latency",
+        fused_xfer < solo_xfer,
+        format!(
+            "fused {} vs {} across {REQUESTS} solo legs",
+            fmt_ns(fused_xfer),
+            fmt_ns(solo_xfer)
+        ),
+    );
+    println!(
+        "  link time for {REQUESTS} requests over 1 boundary: {} fused vs {} solo \
+({:.2}x)",
+        fmt_ns(fused_xfer),
+        fmt_ns(solo_xfer),
+        solo_xfer / fused_xfer
+    );
+
+    // ---- host-time color: one hybrid request ------------------------------
+    let m = run.time("hybrid infer (auto plan), host time", || {
+        auto_sess.infer(&xs[0]).expect("hybrid inference")
+    });
+    println!("  hybrid request host time: {}", m.human());
+    run.finish();
+}

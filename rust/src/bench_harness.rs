@@ -146,6 +146,32 @@ impl BenchRun {
         format!("BENCH_{safe}.json")
     }
 
+    /// Gate every recorded measurement against a committed baseline
+    /// record: `median <= tol x baseline_median` for each label present
+    /// in both.  This replaces hand-tuned absolute time bounds — the
+    /// baseline is data, regenerated by copying a representative
+    /// `BENCH_<name>.json` over the committed file.  A missing or
+    /// unreadable baseline is a loud note, not a failure (bare local
+    /// checkouts still pass); labels on only one side are ignored, so
+    /// adding a measurement does not require touching the baseline.
+    pub fn check_against_baseline(&mut self, path: &str, tol: f64) {
+        let Some(base) = load_baseline(path) else {
+            println!("  [note] no readable baseline at {path}; skipping regression tolerances");
+            return;
+        };
+        let snapshot: Vec<(String, f64)> =
+            self.measurements.iter().map(|(l, m)| (l.clone(), m.median_ns)).collect();
+        for (label, got) in snapshot {
+            if let Some((_, want)) = base.iter().find(|(l, _)| *l == label) {
+                self.check(
+                    &format!("within {tol:.0}x of baseline: {label}"),
+                    got <= want * tol,
+                    format!("{} vs baseline {}", fmt_ns(got), fmt_ns(*want)),
+                );
+            }
+        }
+    }
+
     /// Check a value lies within `tol` (relative) of the paper's value.
     pub fn check_close(&mut self, label: &str, got: f64, paper: f64, tol: f64) {
         let err = (got - paper).abs() / paper.abs().max(1e-12);
@@ -180,6 +206,32 @@ impl BenchRun {
             std::process::exit(1);
         }
     }
+}
+
+/// Read the `measurements` of a committed `BENCH_*.json` record back as
+/// `(label, median_ns)` pairs.  A minimal line-oriented reader for the
+/// exact shape [`BenchRun::to_json`] emits (one measurement object per
+/// line, labels free of escapes) — enough to regression-check against a
+/// checked-in baseline without a JSON dependency.  `None` when the file
+/// is missing or holds no measurements.
+pub fn load_baseline(path: &str) -> Option<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(i) = line.find("\"label\": \"") else { continue };
+        let rest = &line[i + 10..];
+        // check entries also carry labels but no median — skipped here
+        let Some(j) = rest.find("\", \"median_ns\": ") else { continue };
+        let label = rest[..j].to_string();
+        let num: String = rest[j + 16..]
+            .chars()
+            .take_while(|c| !matches!(c, ',' | '}'))
+            .collect();
+        if let Ok(v) = num.trim().parse::<f64>() {
+            out.push((label, v));
+        }
+    }
+    (!out.is_empty()).then_some(out)
 }
 
 /// JSON string literal (quotes, backslashes, and control chars escaped).
@@ -257,6 +309,51 @@ mod tests {
         assert!(json.contains("\"failed_checks\": 1"));
         // filename is sanitized, never contains spaces
         assert_eq!(run.json_path(), "BENCH_json_demo.json");
+    }
+
+    #[test]
+    fn baseline_loader_round_trips_the_emitted_record() {
+        let mut run = BenchRun::new("baseline demo");
+        run.time("alpha case", || (0..10).sum::<u64>());
+        run.time("beta case", || (0..10).sum::<u64>());
+        run.check("a check with a label", true, String::new());
+        let json = run.to_json();
+        let dir = std::env::temp_dir().join(format!("fat_baseline_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_demo.json");
+        std::fs::write(&path, &json).unwrap();
+        let base = load_baseline(path.to_str().unwrap()).expect("readable baseline");
+        assert_eq!(base.len(), 2, "checks must not parse as measurements: {base:?}");
+        assert_eq!(base[0].0, "alpha case");
+        assert_eq!(base[1].0, "beta case");
+        assert!(base.iter().all(|&(_, m)| m > 0.0));
+        // tolerance gating: a generous baseline passes, an absurdly tight
+        // one fails, unmatched labels and a missing file are ignored
+        let generous = dir.join("BENCH_generous.json");
+        std::fs::write(
+            &generous,
+            "{\n  \"measurements\": [\n    {\"label\": \"alpha case\", \"median_ns\": 1e12, \
+\"mad_ns\": 0, \"samples\": 1},\n    {\"label\": \"only in baseline\", \"median_ns\": 1, \
+\"mad_ns\": 0, \"samples\": 1}\n  ]\n}\n",
+        )
+        .unwrap();
+        let mut gated = BenchRun::new("baseline gate");
+        gated.time("alpha case", || (0..10).sum::<u64>());
+        gated.check_against_baseline(generous.to_str().unwrap(), 5.0);
+        // a missing file is a note, never a failure
+        gated.check_against_baseline("/nonexistent/BENCH_x.json", 5.0);
+        assert!(gated.failures.is_empty(), "{:?}", gated.failures);
+
+        let tight = dir.join("BENCH_tight.json");
+        std::fs::write(
+            &tight,
+            "{\n  \"measurements\": [\n    {\"label\": \"alpha case\", \
+\"median_ns\": 0.0001, \"mad_ns\": 0, \"samples\": 1}\n  ]\n}\n",
+        )
+        .unwrap();
+        gated.check_against_baseline(tight.to_str().unwrap(), 5.0);
+        assert_eq!(gated.failures.len(), 1, "a blown tolerance must be recorded");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

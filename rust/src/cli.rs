@@ -8,8 +8,9 @@
 //!   infer    --sparsity 0.8 --layer 10 [--baseline] [--config f]
 //!   map      --layer 10          Table VII/VIII mapping sweep for a layer
 //!   verify   [--artifacts dir]   simulator vs PJRT cross-check
-//!   resnet   --input 16 --scale 16 --requests 4 [--shards 2]
-//!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2]
+//!   resnet   --input 16 --scale 16 --requests 4 [--shards 2 | --auto --chips 4]
+//!   plan     --chips 4 [--wreg 256]  latency-balanced hybrid auto-plan
+//!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2 --max-batch 4]
 //! ```
 
 use std::collections::HashMap;
@@ -140,7 +141,24 @@ COMMANDS:
                            the shard plan, per-leg transfer costs, and a
                            bit-exactness check against the single-chip
                            oracle
+      --auto               let the latency-balanced auto-planner pick the
+                           (shards x kn-splits) hybrid for --chips chips:
+                           oversized layers are KN-split across chips and
+                           their partial feature maps all-gathered over
+                           the link; self-checks bit-exactness and
+                           register-write conservation vs the oracle
+      --chips <n>          chip budget for --auto (default 2)
+      --wreg <n>           override register entries per CMA (shrink to
+                           force sharding/splitting demos)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
+  plan                     profile per-layer latency on the simulator and
+                           print the latency-balanced hybrid plan
+                           (pipeline stages x per-layer KN splits) for a
+                           target chip count, next to the footprint- and
+                           latency-balanced pure-pipeline cuts
+      --chips <n>          target chip count (default 2)
+      --wreg <n>           override register entries per CMA
+      --batch/--input/--scale/--sparsity/--layers/--classes   model knobs
   serve                    threaded weight-stationary inference service:
                            each worker holds the model resident on its
                            CMA slice and serves model-level requests
@@ -148,8 +166,11 @@ COMMANDS:
       --workers <n>        worker threads (default 4, replicated mode)
       --mode <m>           replicated | pipelined (default replicated)
       --shards <n>         pipeline stages in pipelined mode (default 2)
-      --max-batch <n>      micro-batch window per dequeue in replicated
-                           mode (default 1 = no fusion)
+      --max-batch <n>      micro-batch window per dequeue (default 1 = no
+                           fusion); in pipelined mode the head stage
+                           fuses, the fused tensor crosses each boundary
+                           as one transfer, and the per-leg hop latency
+                           amortizes over the batch
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model
@@ -166,6 +187,12 @@ COMMANDS:
       --link-bers <list>   inter-chip link BERs, one per point or one
                            broadcast value (needs --shards > 1; the
                            sharded stack's extra error source)
+      --link-ecc           protect the link with SECDED(72,64): single-bit
+                           flips per 64-bit flit corrected at each stage
+                           for +12.5% wire bytes per leg (needs
+                           --shards > 1); compare against a run without
+                           the flag for the accuracy-vs-overhead
+                           trade-off
       --shards <n>         sweep the n-chip pipeline instead of the
                            single chip (default 1)
       --workers <n>        sweep a pool of n full-model replicas instead

@@ -37,6 +37,12 @@ pub struct ChipMetrics {
     /// Inter-chip transfer latency, ns, already folded into `latency_ns`;
     /// kept for the per-leg breakdown of the pipeline cost model.
     pub xfer_ns: f64,
+    /// Link hop-latency charges paid (`HwParams::link_latency_ns` each):
+    /// one per pipeline boundary leg, one per broadcast into a
+    /// tensor-parallel group, and one per synchronized step of a ring
+    /// all-gather.  A fused micro-batch pays its legs **once** per run,
+    /// which is how batching amortizes hop latency over requests.
+    pub xfer_legs: u64,
 }
 
 impl ChipMetrics {
@@ -73,6 +79,32 @@ impl ChipMetrics {
         self.weight_reg_writes += other.weight_reg_writes;
         self.xfer_bytes += other.xfer_bytes;
         self.xfer_ns += other.xfer_ns;
+        self.xfer_legs += other.xfer_legs;
+    }
+
+    /// Fold per-chip metrics of chips working in **parallel** on one layer
+    /// — the KN-sliced tensor-parallel group: latency advances by the
+    /// slowest chip (the latency-breakdown fields follow the same
+    /// critical-path convention), while energy and event counters sum
+    /// across chips, exactly as [`Self::absorb_parallel`] does for a
+    /// step's CMA ledgers one level down.
+    pub fn absorb_parallel_chips(&mut self, chips: &[ChipMetrics]) {
+        let max = |f: fn(&ChipMetrics) -> f64| chips.iter().map(f).fold(0.0, f64::max);
+        self.latency_ns += max(|m| m.latency_ns);
+        self.reduce_ns += max(|m| m.reduce_ns);
+        self.dpu_ns += max(|m| m.dpu_ns);
+        self.weight_load_ns += max(|m| m.weight_load_ns);
+        self.xfer_ns += max(|m| m.xfer_ns);
+        for m in chips {
+            self.energy_pj += m.energy_pj;
+            self.senses += m.senses;
+            self.writes += m.writes;
+            self.adds += m.adds;
+            self.skipped += m.skipped;
+            self.weight_reg_writes += m.weight_reg_writes;
+            self.xfer_bytes += m.xfer_bytes;
+            self.xfer_legs += m.xfer_legs;
+        }
     }
 
     /// Latency attributable to compute (everything but weight-register
@@ -165,6 +197,32 @@ mod tests {
         assert_eq!(a.xfer_ns, 4.0);
         assert_eq!(a.xfer_bytes, 400);
         assert_eq!(a.compute_ns(), 15.0 - 4.0 - 2.0);
+    }
+
+    #[test]
+    fn parallel_chips_take_max_latency_and_sum_counters() {
+        let mut m = ChipMetrics::default();
+        let a = ChipMetrics {
+            latency_ns: 10.0, energy_pj: 1.0, adds: 3, dpu_ns: 2.0, senses: 5,
+            ..Default::default()
+        };
+        let b = ChipMetrics {
+            latency_ns: 30.0, energy_pj: 2.0, adds: 4, dpu_ns: 1.0, senses: 7,
+            ..Default::default()
+        };
+        m.absorb_parallel_chips(&[a, b]);
+        assert_eq!(m.latency_ns, 30.0, "slowest chip bounds the group");
+        assert_eq!(m.dpu_ns, 2.0, "breakdown follows the critical path");
+        assert_eq!(m.energy_pj, 3.0);
+        assert_eq!(m.adds, 7);
+        assert_eq!(m.senses, 12);
+    }
+
+    #[test]
+    fn xfer_legs_sum_in_add() {
+        let mut a = ChipMetrics { xfer_legs: 2, ..Default::default() };
+        a.add(&ChipMetrics { xfer_legs: 3, ..Default::default() });
+        assert_eq!(a.xfer_legs, 5);
     }
 
     #[test]

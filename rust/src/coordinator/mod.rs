@@ -14,6 +14,13 @@
 //!   model at layer boundaries into footprint-balanced shards and
 //!   [`sharding::PipelineSession`] chains one resident session per shard,
 //!   charging an inter-chip transfer leg at every boundary;
+//! - [`tensor_parallel`] — the *intra*-layer multi-chip path:
+//!   [`tensor_parallel::TensorPlan`] splits one layer's KN filters into
+//!   contiguous per-chip slices, [`tensor_parallel::TensorParallelSession`]
+//!   serves a hybrid plan (pipeline of tensor-parallel groups) with an
+//!   all-gather of the partial feature maps after every split layer, and
+//!   [`tensor_parallel::plan_auto`] is the latency-balanced auto-planner
+//!   over (shards x kn-splits) for a target chip count;
 //! - [`server`] — a threaded [`server::InferenceServer`] that runs either
 //!   `Replicated` (a resident replica per worker, with a micro-batcher)
 //!   or `Pipelined` (workers are shard *stages* connected by channels);
@@ -31,6 +38,7 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod sharding;
+pub mod tensor_parallel;
 
 pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
 pub use dpu::Dpu;
@@ -41,3 +49,4 @@ pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response, ServingMode};
 pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};
 pub use sharding::{PipelineSession, ShardPlan};
+pub use tensor_parallel::{plan_auto, HybridPlan, TensorParallelSession, TensorPlan};

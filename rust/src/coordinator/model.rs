@@ -24,6 +24,34 @@ pub struct LayerSpec {
     pub pool_after: bool,
 }
 
+impl LayerSpec {
+    /// The contiguous KN slice `[k0, k1)` of this layer: the same
+    /// geometry with only filters `k0..k1` (and their BN parameters)
+    /// resident — the per-chip unit of filter-dimension tensor
+    /// parallelism (see `coordinator::tensor_parallel`).  The slice's
+    /// conv output is exactly channels `k0..k1` of the full layer's,
+    /// because per-filter dot products are independent.
+    pub fn slice_kn(&self, k0: usize, k1: usize) -> LayerSpec {
+        assert!(k0 < k1 && k1 <= self.layer.kn, "bad KN slice [{k0}, {k1})");
+        let mut layer = self.layer;
+        layer.kn = k1 - k0;
+        let flat = self.layer.j_dim();
+        LayerSpec {
+            layer,
+            filter: TernaryFilter::new(
+                k1 - k0,
+                self.layer.c,
+                self.layer.kh,
+                self.layer.kw,
+                self.filter.w[k0 * flat..k1 * flat].to_vec(),
+            ),
+            gamma: self.gamma[k0..k1].to_vec(),
+            beta: self.beta[k0..k1].to_vec(),
+            pool_after: self.pool_after,
+        }
+    }
+}
+
 /// Optional classifier head: global average pool + ternary FC.
 #[derive(Debug, Clone)]
 pub struct HeadSpec {
@@ -213,6 +241,23 @@ pub(crate) mod tests {
         let mut bad_head = tiny_spec(1);
         bad_head.head.as_mut().unwrap().wfc.pop();
         assert!(bad_head.validate().is_err());
+    }
+
+    #[test]
+    fn kn_slice_takes_matching_filter_and_bn_rows() {
+        let spec = tiny_spec(9);
+        let ls = &spec.layers[1]; // t2: kn = 6
+        let s = ls.slice_kn(2, 5);
+        assert_eq!(s.layer.kn, 3);
+        assert_eq!((s.layer.c, s.layer.h, s.layer.stride), (ls.layer.c, ls.layer.h, ls.layer.stride));
+        assert_eq!(s.gamma, ls.gamma[2..5].to_vec());
+        assert_eq!(s.beta, ls.beta[2..5].to_vec());
+        for k in 0..3 {
+            assert_eq!(s.filter.filter_flat(k), ls.filter.filter_flat(2 + k), "filter {k}");
+        }
+        // a single sliced layer is a valid standalone model
+        let solo = ModelSpec { name: "slice".into(), layers: vec![s], head: None };
+        assert!(solo.validate().is_ok());
     }
 
     #[test]

@@ -55,6 +55,12 @@ pub struct SweepConfig {
     /// entry = broadcast to every point, otherwise one per `bers` entry.
     /// Only meaningful with `shards > 1` (a single chip has no link).
     pub link_bers: Vec<f64>,
+    /// Protect the pipeline's link with SECDED(72,64) ECC: single-bit
+    /// flips per 64-bit flit are corrected at each receiving stage, at a
+    /// 12.5% wire overhead per leg (`HwParams::link_ecc`).  Sweeping the
+    /// same link BERs with and without this flag is the
+    /// accuracy-vs-overhead trade-off of the ROADMAP's ECC item.
+    pub link_ecc: bool,
     /// 1 = single resident chip; > 1 = layer-sharded chip pipeline.
     /// Mutually exclusive with `workers > 1`.
     pub shards: usize,
@@ -75,6 +81,7 @@ impl Default for SweepConfig {
         Self {
             bers: default_ber_grid(),
             link_bers: Vec::new(),
+            link_ecc: false,
             shards: 1,
             workers: 1,
             requests: 8,
@@ -117,6 +124,8 @@ pub struct SweepReport {
     pub model: String,
     pub shards: usize,
     pub workers: usize,
+    /// SECDED link ECC was armed on every pipeline leg.
+    pub link_ecc: bool,
     pub requests: usize,
     pub points: Vec<BerPoint>,
     /// Every SA design's sense BER mapped to its nearest swept point —
@@ -270,6 +279,10 @@ pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Resul
             "a positive link BER needs a pipeline (--shards > 1): one chip has no link"
         );
     }
+    ensure!(
+        !sc.link_ecc || sc.shards > 1,
+        "link ECC needs a pipeline (--shards > 1): one chip has no link to protect"
+    );
 
     // the fixed labelled input set, shared by the oracle and every point
     let mut in_rng = Rng::new(seed_mix(sc.seed, 0xD47A));
@@ -289,7 +302,8 @@ pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Resul
     let mut clean_cfg = cfg;
     clean_cfg.fault = None;
     clean_cfg.fidelity = crate::coordinator::accelerator::Fidelity::Ledger;
-    let mut stack = Stack::build(clean_cfg, spec, sc.shards, sc.workers, HwParams::default())?;
+    let hw = HwParams { link_ecc: sc.link_ecc, ..HwParams::default() };
+    let mut stack = Stack::build(clean_cfg, spec, sc.shards, sc.workers, hw)?;
     let labels: Vec<ModelOutput> =
         inputs.iter().map(|x| stack.infer(x)).collect::<Result<_>>()?;
 
@@ -376,6 +390,7 @@ pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Resul
         model: spec.name.clone(),
         shards: sc.shards,
         workers: sc.workers,
+        link_ecc: sc.link_ecc,
         requests: sc.requests,
         points,
         anchors,
@@ -385,7 +400,9 @@ pub fn sweep_model(cfg: ChipConfig, spec: &ModelSpec, sc: &SweepConfig) -> Resul
 impl SweepReport {
     /// The accuracy-vs-BER curve as a printable table.
     pub fn table(&self) -> Table {
-        let mode = if self.shards > 1 {
+        let mode = if self.shards > 1 && self.link_ecc {
+            format!("{}-shard pipeline, SECDED link ECC (+12.5% wire)", self.shards)
+        } else if self.shards > 1 {
             format!("{}-shard pipeline", self.shards)
         } else if self.workers > 1 {
             format!("{}-replica pool", self.workers)
@@ -473,6 +490,7 @@ mod tests {
         SweepConfig {
             bers: vec![0.0, 1e-3, 0.05],
             link_bers: Vec::new(),
+            link_ecc: false,
             shards: 1,
             workers: 1,
             requests: 3,
@@ -527,6 +545,67 @@ mod tests {
         assert!(rep.points[1].feature_mse > 0.0);
         // both error sources together are no cleaner than the link alone
         assert!(rep.points[2].feature_mse > 0.0);
+    }
+
+    /// Two layers with a FAT shard boundary (2048 transported bytes):
+    /// big enough that a 1e-3 link BER all but surely hits every raw
+    /// request (~16 expected flips each) while SECDED leaks well under
+    /// one multi-flip flit per request.
+    fn wide_spec(seed: u64) -> ModelSpec {
+        use crate::nn::resnet::ConvLayer;
+        let geo = vec![
+            ConvLayer { name: "w1", n: 1, c: 3, h: 16, w: 16, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "w2", n: 1, c: 8, h: 16, w: 16, kn: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ];
+        ModelSpec::synthetic("wide", &geo, false, 0.5, seed, Some(4))
+    }
+
+    #[test]
+    fn link_ecc_buys_accuracy_back_from_a_lossy_link() {
+        // ISSUE 5 satellite: SECDED on the link.  At a sparse link BER
+        // almost every hit flit takes a single flip, so the protected
+        // sweep corrupts no more than the raw one — the accuracy side of
+        // the accuracy-vs-overhead trade-off `fat reliability --link-ecc`
+        // surfaces.  Same seed on both sides: deterministic.
+        let spec = wide_spec(67);
+        let base = SweepConfig {
+            bers: vec![0.0],
+            link_bers: vec![1e-3],
+            shards: 2,
+            requests: 4,
+            seed: 0xECC5,
+            ..quick_cfg()
+        };
+        let raw = sweep_model(ChipConfig::fat(), &spec, &base).unwrap();
+        let ecc_cfg = SweepConfig { link_ecc: true, ..base.clone() };
+        let ecc = sweep_model(ChipConfig::fat(), &spec, &ecc_cfg).unwrap();
+        let (p_raw, p_ecc) = (&raw.points[0], &ecc.points[0]);
+        assert!(!p_raw.bit_identical, "a 1e-3 link BER must corrupt the raw link");
+        assert!(p_raw.corrupted_requests >= 3, "~16 flips/request: raw serving is riddled");
+        assert!(
+            p_ecc.corrupted_requests <= p_raw.corrupted_requests,
+            "ECC must not corrupt more requests: {} vs {}",
+            p_ecc.corrupted_requests,
+            p_raw.corrupted_requests
+        );
+        assert!(ecc.table().render().contains("SECDED"), "report must surface the ECC mode");
+
+        // deterministic half of the contract: ECC on an error-free link is
+        // pure wire overhead — byte-identical serving
+        let clean = SweepConfig {
+            bers: vec![0.0],
+            link_bers: vec![0.0],
+            link_ecc: true,
+            shards: 2,
+            requests: 2,
+            ..quick_cfg()
+        };
+        let rep = sweep_model(ChipConfig::fat(), &spec, &clean).unwrap();
+        assert!(rep.points[0].bit_identical, "ECC must never change clean payloads");
+
+        // ECC without a link is rejected
+        let bad = SweepConfig { link_ecc: true, ..quick_cfg() };
+        assert!(sweep_model(ChipConfig::fat(), &spec, &bad).is_err());
     }
 
     #[test]

@@ -17,6 +17,11 @@
 //!   channels, so shard k computes request i+1 while shard k+1 computes
 //!   request i; every boundary charges the inter-chip transfer leg
 //!   ([`super::sharding::xfer_cost_ns`]) into the request's metrics.
+//!   The head stage runs the same queue-depth-aware micro-batcher as the
+//!   replicated pool: up to `max_batch` queued requests fuse into one run
+//!   whose tensor crosses each boundary as a single transfer — the
+//!   per-leg hop latency amortizes over the fused batch (the ROADMAP's
+//!   "sharded batching" item).
 //!
 //! Responses report per-request compute metrics — always zero
 //! weight-register writes — while the one-time loading cost per worker is
@@ -85,8 +90,11 @@ pub enum ServingMode {
     Replicated { workers: usize, max_batch: usize },
     /// One model cut into `shards` stages, each on its own chip; stages
     /// stream quantized activations to each other over the inter-chip
-    /// link.
-    Pipelined { shards: usize },
+    /// link.  The head stage fuses up to `max_batch` queued requests into
+    /// one run per dequeue (1 = no fusion); a fused tensor crosses each
+    /// boundary as ONE transfer, so the per-leg hop latency amortizes
+    /// over the batch.
+    Pipelined { shards: usize, max_batch: usize },
 }
 
 /// Split `total` CMAs over `workers` chips: every worker gets the base
@@ -101,9 +109,10 @@ pub fn split_cmas(total: usize, workers: usize) -> Vec<usize> {
     (0..workers).map(|i| base + usize::from(i < rem)).collect()
 }
 
-/// What flows between pipeline stages: a request mid-flight.
+/// What flows between pipeline stages: a (possibly fused) run mid-flight.
 struct StageMsg {
-    id: u64,
+    /// Requests fused into this run, in submission order.
+    ids: Vec<u64>,
     act: QuantActivations,
     metrics: ChipMetrics,
     t0: Instant,
@@ -161,8 +170,8 @@ impl InferenceServer {
             ServingMode::Replicated { workers, max_batch } => {
                 Self::start_replicated(cfg, workers, max_batch, spec)
             }
-            ServingMode::Pipelined { shards } => {
-                Self::start_pipelined(cfg, shards, spec, mode, hw)
+            ServingMode::Pipelined { shards, max_batch } => {
+                Self::start_pipelined(cfg, shards, max_batch, spec, hw)
             }
         }
     }
@@ -293,8 +302,8 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
     fn start_pipelined(
         cfg: ChipConfig,
         shards: usize,
+        max_batch: usize,
         spec: ModelSpec,
-        mode: ServingMode,
         hw: HwParams,
     ) -> Result<Self> {
         ensure!(
@@ -302,7 +311,25 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
             "link bit-error rate must be a probability, got {}",
             hw.link_ber
         );
+        ensure!(max_batch >= 1, "max_batch must be at least 1");
         let plan = ShardPlan::partition(&spec, &cfg, shards)?;
+        // Clamp the fusion window to what EVERY stage can keep resident:
+        // a fused tensor widens the column tiling (and with it the
+        // register footprint) on each shard it passes through, and must
+        // never trip a mid-pipeline capacity check.
+        let planner = cfg.planner();
+        let capacity = cfg.wreg_capacity();
+        let mut max_batch = max_batch;
+        for i in 0..shards {
+            let sub = plan.subspec(&spec, i);
+            while max_batch > 1
+                && batched_wreg_footprint(&sub, &planner, max_batch) > capacity
+            {
+                max_batch -= 1;
+            }
+        }
+        // report the *effective* window from mode(), not the requested one
+        let mode = ServingMode::Pipelined { shards, max_batch };
         let input_geometry = spec.input_geometry();
         let (tx, rx_in) = mpsc::channel::<Request>();
         let (tx_out, rx_out) = mpsc::channel::<Response>();
@@ -345,13 +372,27 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                 let mut link_rng = (i > 0 && hw.link_ber > 0.0)
                     .then(|| Rng::new(seed_mix(hw.link_fault_seed, i as u64)));
                 loop {
-                    let (id, act, metrics, t0) = if let Some(rx) = &in_req {
-                        let Ok(req) = rx.recv() else { break };
+                    let (ids, act, metrics, t0) = if let Some(rx) = &in_req {
+                        // Queue-depth-aware micro-batching at the head
+                        // stage: block for one request, then drain what is
+                        // already queued (up to the clamped window) into
+                        // one fused run.  The fused tensor crosses every
+                        // boundary as a single transfer, so each leg's hop
+                        // latency is paid once per batch.
+                        let Ok(first) = rx.recv() else { break };
+                        let mut batch = vec![first];
+                        while batch.len() < max_batch {
+                            match rx.try_recv() {
+                                Ok(req) => batch.push(req),
+                                Err(_) => break,
+                            }
+                        }
                         let t0 = Instant::now();
+                        let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
                         let (act, m) = session
-                            .quantize_entry(&[&req.x])
-                            .expect("request validated at submit");
-                        (req.id, act, m, t0)
+                            .quantize_entry(&xs)
+                            .expect("requests validated at submit");
+                        (batch.iter().map(|r| r.id).collect::<Vec<u64>>(), act, m, t0)
                     } else {
                         let rx = in_msg.as_ref().expect("inner stage has a stage channel");
                         let Ok(mut msg) = rx.recv() else { break };
@@ -359,15 +400,16 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                         // link: charge the transfer leg, then apply the
                         // link's error model to the payload
                         let mut m = msg.metrics;
-                        let bytes = msg.act.wire_bytes();
+                        let bytes = hw.wire_bytes(msg.act.wire_bytes());
                         let leg = xfer_cost_ns(bytes, &hw);
                         m.xfer_bytes += bytes;
                         m.xfer_ns += leg;
                         m.latency_ns += leg;
+                        m.xfer_legs += 1;
                         if let Some(rng) = &mut link_rng {
-                            msg.act.inject_link_faults(hw.link_ber, rng);
+                            msg.act.inject_link_faults(hw.link_ber, hw.link_ecc, rng);
                         }
-                        (msg.id, msg.act, m, msg.t0)
+                        (msg.ids, msg.act, m, msg.t0)
                     };
                     let (act, m) = session
                         .run_quantized(act)
@@ -375,22 +417,25 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                     let mut metrics = metrics;
                     metrics.add(&m);
                     if let Some(tx) = &out_msg {
-                        if tx.send(StageMsg { id, act, metrics, t0 }).is_err() {
+                        if tx.send(StageMsg { ids, act, metrics, t0 }).is_err() {
                             break;
                         }
                     } else {
                         let tx = out_resp.as_ref().expect("tail stage owns the response queue");
-                        let mut outs = session.finalize(act, metrics);
-                        let out = outs.pop().expect("one request in, one response out");
+                        let outs = session.finalize(act, metrics);
                         let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-                        let _ = tx.send(Response {
-                            id,
-                            features: out.features,
-                            logits: out.logits,
-                            metrics: out.metrics,
-                            batched: 1,
-                            wall_us,
-                        });
+                        let fused = ids.len();
+                        debug_assert_eq!(outs.len(), fused, "one response per fused request");
+                        for (id, out) in ids.into_iter().zip(outs) {
+                            let _ = tx.send(Response {
+                                id,
+                                features: out.features,
+                                logits: out.logits,
+                                metrics: out.metrics,
+                                batched: fused,
+                                wall_us,
+                            });
+                        }
                     }
                 }
             }));
@@ -581,11 +626,11 @@ mod tests {
             crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
         let server = InferenceServer::start_with(
             ChipConfig::fat(),
-            ServingMode::Pipelined { shards: 2 },
+            ServingMode::Pipelined { shards: 2, max_batch: 1 },
             spec.clone(),
         )
         .unwrap();
-        assert_eq!(server.mode(), ServingMode::Pipelined { shards: 2 });
+        assert_eq!(server.mode(), ServingMode::Pipelined { shards: 2, max_batch: 1 });
         assert_eq!(server.loading_metrics().len(), 2);
         // register-write conservation across the stages
         let sharded: u64 =
@@ -647,6 +692,86 @@ mod tests {
             );
             assert_eq!(r.logits, want.logits);
             assert_eq!(r.metrics.weight_reg_writes, 0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_micro_batching_is_bit_identical_and_amortizes_the_link() {
+        // ISSUE 5 satellite (sharded batching), server level: the head
+        // stage fuses queued requests, responses re-split bit-identically,
+        // and a fused run's metrics show ONE transfer leg per boundary —
+        // shared by the batch — instead of one per request.
+        let spec = small_spec(0xBA80);
+        let mut rng = Rng::new(0xBA81);
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let server = InferenceServer::start_with(
+            ChipConfig::fat(),
+            ServingMode::Pipelined { shards: 2, max_batch: 4 },
+            spec.clone(),
+        )
+        .unwrap();
+        assert_eq!(server.mode(), ServingMode::Pipelined { shards: 2, max_batch: 4 });
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..4u64 {
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
+        }
+        let responses = server.collect_timeout(4, Duration::from_secs(60)).unwrap();
+        assert_eq!(responses.len(), 4);
+        let mut seen = std::collections::HashSet::new();
+        for r in &responses {
+            assert!(seen.insert(r.id), "batcher must re-split responses per request id");
+            let want = &wants[&r.id];
+            assert_eq!(
+                r.features.data, want.features.data,
+                "pipelined batched request {} must be bit-identical to the solo oracle",
+                r.id
+            );
+            assert_eq!(r.logits, want.logits);
+            assert_eq!(r.metrics.weight_reg_writes, 0);
+            assert!(r.batched >= 1 && r.batched <= 4);
+            // one boundary in a 2-shard pipeline: the fused run paid the
+            // hop latency exactly once, whatever its width
+            assert_eq!(r.metrics.xfer_legs, 1, "request {}", r.id);
+            assert!(r.metrics.xfer_ns > 0.0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_batch_window_is_clamped_to_stage_capacity() {
+        // small_spec on a 600-entry chip: shards of one layer each fuse
+        // up to k where the widest stage still fits its registers.  A
+        // 64-wide ask must clamp, not trip a mid-pipeline capacity check.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 200;
+        let spec = small_spec(0xBA90);
+        let mut rng = Rng::new(0xBA91);
+        let mut oracle = crate::coordinator::session::ChipSession::new(cfg, spec.clone()).unwrap();
+        let server = InferenceServer::start_with(
+            cfg,
+            ServingMode::Pipelined { shards: 2, max_batch: 64 },
+            spec.clone(),
+        )
+        .unwrap();
+        let ServingMode::Pipelined { max_batch: eff, .. } = server.mode() else {
+            panic!("mode must stay pipelined");
+        };
+        assert!((1..64).contains(&eff), "window must clamp below 64, got {eff}");
+        let mut wants = std::collections::HashMap::new();
+        for id in 0..5u64 {
+            let req = request(id, &spec, &mut rng);
+            wants.insert(id, oracle.infer(&req.x).unwrap());
+            server.submit(req).unwrap();
+        }
+        let responses = server.collect_timeout(5, Duration::from_secs(60)).unwrap();
+        for r in &responses {
+            assert!(r.batched <= eff, "no fused run may exceed the clamped window");
+            assert_eq!(r.features.data, wants[&r.id].features.data, "request {}", r.id);
         }
         server.shutdown();
     }
@@ -741,7 +866,7 @@ mod tests {
         let hw0 = HwParams { link_ber: 0.0, link_fault_seed: 3, ..HwParams::default() };
         let server = InferenceServer::start_with_hw(
             ChipConfig::fat().with_fault_injection(0.0, 0xAB),
-            ServingMode::Pipelined { shards: 2 },
+            ServingMode::Pipelined { shards: 2, max_batch: 1 },
             spec.clone(),
             hw0,
         )
@@ -762,7 +887,7 @@ mod tests {
         let hw = HwParams { link_ber: 0.05, link_fault_seed: 3, ..HwParams::default() };
         let server = InferenceServer::start_with_hw(
             ChipConfig::fat(),
-            ServingMode::Pipelined { shards: 2 },
+            ServingMode::Pipelined { shards: 2, max_batch: 1 },
             spec.clone(),
             hw,
         )
@@ -804,7 +929,7 @@ mod tests {
 
         let server = InferenceServer::start_with_hw(
             ChipConfig::fat(),
-            ServingMode::Pipelined { shards: 2 },
+            ServingMode::Pipelined { shards: 2, max_batch: 1 },
             spec.clone(),
             hw,
         )
@@ -880,7 +1005,7 @@ mod tests {
         let spec = small_spec(0x7142); // 2 conv layers
         assert!(InferenceServer::start_with(
             ChipConfig::fat(),
-            ServingMode::Pipelined { shards: 3 },
+            ServingMode::Pipelined { shards: 3, max_batch: 1 },
             spec,
         )
         .is_err());
@@ -934,7 +1059,7 @@ mod tests {
 
         // pipelined stages each get a whole chip
         let server =
-            InferenceServer::start_with(cfg, ServingMode::Pipelined { shards: 2 }, small_spec(1))
+            InferenceServer::start_with(cfg, ServingMode::Pipelined { shards: 2, max_batch: 1 }, small_spec(1))
                 .unwrap();
         assert_eq!(server.worker_cmas(), &[10, 10]);
         server.shutdown();
@@ -966,7 +1091,7 @@ mod tests {
         let spec2 = small_spec(5);
         let server = InferenceServer::start_with(
             ChipConfig::fat(),
-            ServingMode::Pipelined { shards: 2 },
+            ServingMode::Pipelined { shards: 2, max_batch: 1 },
             spec2.clone(),
         )
         .unwrap();

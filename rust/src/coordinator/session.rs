@@ -65,8 +65,7 @@ pub use super::model::{HeadSpec, LayerSpec, ModelSpec};
 /// the sharding conservation invariant (writes sum across shards to the
 /// unsharded total) falls out for free.
 pub fn wreg_footprint(layer: &ConvLayer, planner: &PlannerConfig) -> u64 {
-    let col_tiles = (layer.n * layer.i_dim()).div_ceil(planner.mw) as u64;
-    (layer.kn * layer.j_dim()) as u64 * col_tiles
+    (layer.kn * layer.j_dim()) as u64 * planner.col_tiles(layer) as u64
 }
 
 /// Register footprint of a whole spec fused `k`-wide along N: micro-
@@ -186,34 +185,87 @@ impl QuantActivations {
     /// stays a valid 8-bit activation, which is what the next chip's
     /// arrays require.  No-op at `ber <= 0.0`.
     ///
+    /// With `ecc` armed ([`HwParams::link_ecc`](crate::mapping::schemes::HwParams)),
+    /// the payload travels in SECDED(72,64) flits — 8 payload bytes plus
+    /// one check byte — and the receiver corrects any flit with exactly
+    /// one flipped bit; only flits hit two or more times corrupt the
+    /// payload (check-bit flips count toward the flit's total but never
+    /// land on payload).  The wire overhead of the check bytes is charged
+    /// separately through `HwParams::wire_bytes`.
+    ///
     /// Flipped bit positions are found by geometric inter-arrival
     /// sampling over the flattened bit stream (the same trick as
     /// `Cma::inject_faults`): per-bit flip probability stays exactly
     /// `ber`, but a low-BER link costs O(flips) RNG draws, not O(bits).
-    pub fn inject_link_faults(&mut self, ber: f64, rng: &mut crate::testutil::Rng) {
+    pub fn inject_link_faults(&mut self, ber: f64, ecc: bool, rng: &mut crate::testutil::Rng) {
         if ber <= 0.0 {
             return;
         }
         let data = &mut self.q.data;
         if ber >= 1.0 {
+            // every bit flips: every flit is hit far beyond SECDED's
+            // single-error budget, so ECC corrects nothing
             for v in data.iter_mut() {
                 *v = (*v as u8 ^ 0xFF) as f32;
             }
             return;
         }
-        let total_bits = data.len() * 8;
-        let ln_keep = (1.0 - ber).ln();
-        let mut bit = rng.geometric_skip(ln_keep);
-        while bit < total_bits {
-            let (i, b) = (bit / 8, bit % 8);
+        let flip_payload_bit = |data: &mut Vec<f32>, i: usize, b: usize| {
             debug_assert!(
                 (0.0..=255.0).contains(&data[i]) && data[i].fract() == 0.0,
                 "link payload {} not an 8-bit activation",
                 data[i]
             );
             data[i] = (data[i] as u8 ^ (1 << b)) as f32;
+        };
+        let ln_keep = (1.0 - ber).ln();
+        if !ecc {
+            let total_bits = data.len() * 8;
+            let mut bit = rng.geometric_skip(ln_keep);
+            while bit < total_bits {
+                flip_payload_bit(data, bit / 8, bit % 8);
+                bit += 1 + rng.geometric_skip(ln_keep);
+            }
+            return;
+        }
+        // SECDED flits: 72 wire bits each — bits 0..64 are the flit's 8
+        // payload bytes, bits 64..72 its check byte.  The last flit may
+        // cover fewer payload bytes; its missing payload positions are
+        // treated like check bits (they pad the wire, flips there only
+        // count toward the flit's total).  Walk the flip stream once,
+        // buffering the current flit's payload hits: 0 or 1 hits per flit
+        // are absorbed by the code, >= 2 land on the payload.
+        let n_flits = data.len().div_ceil(8);
+        let total_bits = n_flits * 72;
+        let mut pending: Vec<(usize, usize)> = Vec::new(); // payload (byte, bit) hits
+        let mut pending_flit = usize::MAX;
+        let mut pending_hits = 0usize; // all hits incl. check bits
+        let flush = |data: &mut Vec<f32>, hits: usize, pend: &mut Vec<(usize, usize)>| {
+            if hits >= 2 {
+                for &(i, b) in pend.iter() {
+                    flip_payload_bit(data, i, b);
+                }
+            }
+            pend.clear();
+        };
+        let mut bit = rng.geometric_skip(ln_keep);
+        while bit < total_bits {
+            let (flit, in_flit) = (bit / 72, bit % 72);
+            if flit != pending_flit {
+                flush(data, pending_hits, &mut pending);
+                pending_flit = flit;
+                pending_hits = 0;
+            }
+            pending_hits += 1;
+            if in_flit < 64 {
+                let i = flit * 8 + in_flit / 8;
+                if i < data.len() {
+                    pending.push((i, in_flit % 8));
+                }
+            }
             bit += 1 + rng.geometric_skip(ln_keep);
         }
+        flush(data, pending_hits, &mut pending);
     }
 }
 
@@ -335,6 +387,118 @@ impl ChipSession {
         Ok((QuantActivations { q, scales: vec![255.0; k] }, metrics))
     }
 
+    /// Make sure the grid plans + register views for fused width `k`
+    /// exist (`k == 1` uses the resident plans), enforcing the
+    /// fused-geometry register-capacity gate: wider column tiling means
+    /// more resident register copies.
+    fn ensure_plans(&mut self, k: usize) -> Result<()> {
+        ensure!(k > 0, "activations carry no request scales");
+        if k > 1 {
+            let planner = self.model.cfg.planner();
+            let fused = batched_wreg_footprint(&self.model.spec, &planner, k);
+            let capacity = self.model.cfg.wreg_capacity();
+            ensure!(
+                fused <= capacity,
+                "a fused batch of {k} needs {fused} resident weight-register entries but \
+the chip holds {capacity}; lower the batch window",
+            );
+            if !self.batch_plans.contains_key(&k) {
+                if self.batch_plans.len() >= BATCH_PLAN_CACHE {
+                    if let Some(&evict) = self.batch_plans.keys().min() {
+                        self.batch_plans.remove(&evict);
+                    }
+                }
+                let plans = Self::plan_for_batch(&self.model, k);
+                self.batch_plans.insert(k, plans);
+            }
+        }
+        Ok(())
+    }
+
+    /// One resident layer's array + DPU work, **stopping before the
+    /// requantization**: ternary conv against the resident registers,
+    /// then DPU BN + ReLU (+ stem pool).  Returns the float tensor and
+    /// the layer's metrics.  Plans for `scales.len()` fused requests must
+    /// exist ([`Self::ensure_plans`]).
+    fn step_layer(&mut self, li: usize, cur: &Tensor4, scales: &[f32]) -> (Tensor4, ChipMetrics) {
+        let k = scales.len();
+        let n0 = self.model.spec.input_geometry().0;
+        let ls = &self.model.spec.layers[li];
+        let pl: &PlannedLayer =
+            if k == 1 { &self.model.planned[li] } else { &self.batch_plans[&k][li] };
+        let mut metrics = ChipMetrics::default();
+        let dpu = self.dpu;
+
+        // ternary conv against the *resident* registers: no wreg cost
+        let mut eff = ls.layer;
+        eff.n = k * ls.layer.n;
+        img2col_into(cur, &eff, &mut self.scratch);
+        // fault-injection salt: decorrelate corruption across requests
+        // (served counter) and layers; ignored on ideal chips
+        let salt = crate::testutil::seed_mix(self.served, li as u64);
+        let run = self.chip.run_planned(&self.scratch, &eff, &pl.plan, &pl.tiles, false, salt);
+        metrics.add(&run.metrics);
+
+        // DPU: BN (dequant folded into gamma) + ReLU.  The NCHW buffer
+        // is (n * c) channel blocks of oh*ow values, so the per-channel
+        // params repeat per batch element — scaled by the owning
+        // request's quantization scale.
+        let per_ch = run.output.h * run.output.w;
+        let mut gamma_rep = Vec::with_capacity(run.output.n * ls.gamma.len());
+        let mut beta_rep = Vec::with_capacity(run.output.n * ls.beta.len());
+        for n in 0..run.output.n {
+            let s = scales[n / n0];
+            gamma_rep.extend(ls.gamma.iter().map(|g| g / s));
+            beta_rep.extend_from_slice(&ls.beta);
+        }
+        let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
+        metrics.dpu_ns += pass.latency_ns;
+        metrics.latency_ns += pass.latency_ns;
+        metrics.energy_pj += pass.energy_pj;
+        let mut t = Tensor4::from_vec(
+            run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
+        );
+
+        if ls.pool_after {
+            let (pooled, ns, pj) = dpu.max_pool2(&t);
+            metrics.dpu_ns += ns;
+            metrics.latency_ns += ns;
+            metrics.energy_pj += pj;
+            t = pooled;
+        }
+        (t, metrics)
+    }
+
+    /// Advance quantized activations through resident layer `li` up to —
+    /// but **not including** — the between-layer requantization: the
+    /// stage primitive of filter-dimension tensor parallelism.  A KN
+    /// slice's conv output is exactly its channel rows of the full
+    /// layer's, so a [`super::tensor_parallel::TensorParallelSession`]
+    /// runs this on every slice chip, all-gathers the float partials, and
+    /// only then requantizes the gathered tensor with
+    /// [`requantize_requests`] — the same code (and therefore the same
+    /// bytes) as the single chip.  Counts `scales.len()` requests served.
+    pub fn run_layer_raw(
+        &mut self,
+        li: usize,
+        act: &QuantActivations,
+    ) -> Result<(Tensor4, ChipMetrics)> {
+        ensure!(li < self.model.spec.layers.len(), "layer {li} not resident");
+        let k = act.scales.len();
+        let l = &self.model.spec.layers[li].layer;
+        ensure!(
+            act.q.shape() == (k * l.n, l.c, l.h, l.w),
+            "activations {:?} do not match {} fused requests of layer {li} input {:?}",
+            act.q.shape(),
+            k,
+            (l.n, l.c, l.h, l.w)
+        );
+        self.ensure_plans(k)?;
+        let out = self.step_layer(li, &act.q, &act.scales);
+        self.served += k as u64;
+        Ok(out)
+    }
+
     /// Stream quantized activations through this chip's resident layers:
     /// ternary conv against the resident registers, then DPU BN + ReLU
     /// (+ stem pool) + per-request requantization between layers.  Returns
@@ -354,93 +518,18 @@ impl ChipSession {
             k,
             (n0, c0, h0, w0)
         );
-        if k > 1 {
-            // the fused geometry must still fit the chip's register files:
-            // wider column tiling means more resident register copies
-            let planner = self.model.cfg.planner();
-            let fused = batched_wreg_footprint(&self.model.spec, &planner, k);
-            let capacity = self.model.cfg.wreg_capacity();
-            ensure!(
-                fused <= capacity,
-                "a fused batch of {k} needs {fused} resident weight-register entries but \
-the chip holds {capacity}; lower the batch window",
-            );
-            if !self.batch_plans.contains_key(&k) {
-                if self.batch_plans.len() >= BATCH_PLAN_CACHE {
-                    if let Some(&evict) = self.batch_plans.keys().min() {
-                        self.batch_plans.remove(&evict);
-                    }
-                }
-                let plans = Self::plan_for_batch(&self.model, k);
-                self.batch_plans.insert(k, plans);
-            }
-        }
+        self.ensure_plans(k)?;
 
         let mut metrics = ChipMetrics::default();
-        let dpu = self.dpu;
         let mut cur = act.q;
         let mut scales = act.scales;
-
-        let planned: &[PlannedLayer] = if k == 1 {
-            &self.model.planned
-        } else {
-            &self.batch_plans[&k]
-        };
-        for (li, (ls, pl)) in self.model.spec.layers.iter().zip(planned).enumerate() {
-            // ternary conv against the *resident* registers: no wreg cost
-            let mut eff = ls.layer;
-            eff.n = k * ls.layer.n;
-            img2col_into(&cur, &eff, &mut self.scratch);
-            // fault-injection salt: decorrelate corruption across requests
-            // (served counter) and layers; ignored on ideal chips
-            let salt = crate::testutil::seed_mix(self.served, li as u64);
-            let run =
-                self.chip.run_planned(&self.scratch, &eff, &pl.plan, &pl.tiles, false, salt);
-            metrics.add(&run.metrics);
-
-            // DPU: BN (dequant folded into gamma) + ReLU.  The NCHW buffer
-            // is (n * c) channel blocks of oh*ow values, so the per-channel
-            // params repeat per batch element — scaled by the owning
-            // request's quantization scale.
-            let per_ch = run.output.h * run.output.w;
-            let mut gamma_rep = Vec::with_capacity(run.output.n * ls.gamma.len());
-            let mut beta_rep = Vec::with_capacity(run.output.n * ls.beta.len());
-            for n in 0..run.output.n {
-                let s = scales[n / n0];
-                gamma_rep.extend(ls.gamma.iter().map(|g| g / s));
-                beta_rep.extend_from_slice(&ls.beta);
-            }
-            let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
-            metrics.dpu_ns += pass.latency_ns;
-            metrics.latency_ns += pass.latency_ns;
-            metrics.energy_pj += pass.energy_pj;
-            let mut t = Tensor4::from_vec(
-                run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
-            );
-
-            if ls.pool_after {
-                let (pooled, ns, pj) = dpu.max_pool2(&t);
-                metrics.dpu_ns += ns;
-                metrics.latency_ns += ns;
-                metrics.energy_pj += pj;
-                t = pooled;
-            }
-
+        for li in 0..self.model.spec.layers.len() {
+            let (t, m) = self.step_layer(li, &cur, &scales);
+            metrics.add(&m);
             // requantize for the next layer's arrays — per fused request,
             // so a micro-batched run calibrates exactly like k separate
             // runs would (bit-identical re-split)
-            let block = t.data.len() / k;
-            let mut next = Vec::with_capacity(t.data.len());
-            for (r, chunk) in t.data.chunks_exact(block).enumerate() {
-                let s = Dpu::calibrate_scale(chunk);
-                let q = dpu.requantize(chunk, s);
-                metrics.dpu_ns += q.latency_ns;
-                metrics.latency_ns += q.latency_ns;
-                metrics.energy_pj += q.energy_pj;
-                next.extend_from_slice(&q.values);
-                scales[r] = s;
-            }
-            cur = Tensor4::from_vec(t.n, t.c, t.h, t.w, next);
+            cur = requantize_requests(&t, &mut scales, &mut metrics);
         }
         self.served += k as u64;
         Ok((QuantActivations { q: cur, scales }, metrics))
@@ -450,25 +539,7 @@ the chip holds {capacity}; lower the batch window",
     /// present), splitting a fused micro-batch back into per-request
     /// outputs.  Each output carries the fused run's metrics.
     pub fn finalize(&self, act: QuantActivations, metrics: ChipMetrics) -> Vec<ModelOutput> {
-        let k = act.scales.len();
-        let cur = act.q;
-        assert!(k > 0 && cur.n % k == 0, "fused batch must split evenly");
-        let n_req = cur.n / k;
-        let block = cur.data.len() / k;
-        let mut outs = Vec::with_capacity(k);
-        for (r, chunk) in cur.data.chunks_exact(block).enumerate() {
-            let scale = act.scales[r];
-            let features = Tensor4::from_vec(
-                n_req, cur.c, cur.h, cur.w,
-                chunk.iter().map(|&v| v / scale).collect(),
-            );
-            let logits = self.model.spec.head.as_ref().map(|h| {
-                let pooled = layers::global_avg_pool(&features);
-                layers::linear_ternary(&pooled, &h.wfc, features.c, h.classes, &h.bfc)
-            });
-            outs.push(ModelOutput { features, logits, metrics });
-        }
-        outs
+        finalize_outputs(self.model.spec.head.as_ref(), act, metrics)
     }
 
     /// Serve one request: float activations in [0, 1], shaped like the
@@ -521,6 +592,61 @@ the chip holds {capacity}; lower the batch window",
             })
             .collect()
     }
+}
+
+/// Per-request requantization between layers: calibrate a scale per fused
+/// request over **its** chunk of the float tensor, quantize the chunk,
+/// and refresh `scales` in place.  The single-chip session, every
+/// pipeline stage, and the tensor-parallel path (on the all-gathered
+/// tensor) run this exact code — which is what makes all of them
+/// byte-identical by construction.  DPU cost is charged into `metrics`.
+pub fn requantize_requests(t: &Tensor4, scales: &mut [f32], metrics: &mut ChipMetrics) -> Tensor4 {
+    let k = scales.len();
+    debug_assert!(k > 0 && t.data.len() % k == 0, "fused batch must split evenly");
+    let dpu = Dpu;
+    let block = t.data.len() / k;
+    let mut next = Vec::with_capacity(t.data.len());
+    for (r, chunk) in t.data.chunks_exact(block).enumerate() {
+        let s = Dpu::calibrate_scale(chunk);
+        let q = dpu.requantize(chunk, s);
+        metrics.dpu_ns += q.latency_ns;
+        metrics.latency_ns += q.latency_ns;
+        metrics.energy_pj += q.energy_pj;
+        next.extend_from_slice(&q.values);
+        scales[r] = s;
+    }
+    Tensor4::from_vec(t.n, t.c, t.h, t.w, next)
+}
+
+/// Dequantize backbone output and run the optional classifier head,
+/// splitting a fused micro-batch back into per-request outputs — the
+/// epilogue shared by [`ChipSession::finalize`], the pipeline's tail
+/// stage, and the tensor-parallel session (whose head lives outside any
+/// single slice's spec).  Each output carries the fused run's metrics.
+pub fn finalize_outputs(
+    head: Option<&HeadSpec>,
+    act: QuantActivations,
+    metrics: ChipMetrics,
+) -> Vec<ModelOutput> {
+    let k = act.scales.len();
+    let cur = act.q;
+    assert!(k > 0 && cur.n % k == 0, "fused batch must split evenly");
+    let n_req = cur.n / k;
+    let block = cur.data.len() / k;
+    let mut outs = Vec::with_capacity(k);
+    for (r, chunk) in cur.data.chunks_exact(block).enumerate() {
+        let scale = act.scales[r];
+        let features = Tensor4::from_vec(
+            n_req, cur.c, cur.h, cur.w,
+            chunk.iter().map(|&v| v / scale).collect(),
+        );
+        let logits = head.map(|h| {
+            let pooled = layers::global_avg_pool(&features);
+            layers::linear_ternary(&pooled, &h.wfc, features.c, h.classes, &h.bfc)
+        });
+        outs.push(ModelOutput { features, logits, metrics });
+    }
+    outs
 }
 
 #[cfg(test)]
@@ -837,14 +963,96 @@ mod tests {
         let q = Tensor4::from_vec(1, 1, 2, 2, vec![0.0, 255.0, 17.0, 200.0]);
         let mut act = QuantActivations { q, scales: vec![255.0] };
         let clean = act.clone();
-        act.inject_link_faults(0.0, &mut rng);
+        act.inject_link_faults(0.0, false, &mut rng);
         assert_eq!(act.q.data, clean.q.data, "ber 0.0 is a no-op");
-        act.inject_link_faults(0.5, &mut rng);
+        act.inject_link_faults(0.5, false, &mut rng);
         assert_ne!(act.q.data, clean.q.data, "ber 0.5 must corrupt 4 bytes");
         assert_eq!(act.scales, clean.scales, "scale words are protected");
         for v in &act.q.data {
             assert!((0.0..=255.0).contains(v) && v.fract() == 0.0, "still 8-bit: {v}");
         }
+    }
+
+    #[test]
+    fn link_ecc_corrects_sparse_flips_and_saturates_under_heavy_noise() {
+        // ISSUE 5 satellite: SECDED on 64-bit flits.  At a low BER almost
+        // every hit flit takes exactly one flip, so the code corrects
+        // nearly everything; the raw link at the same BER corrupts dozens
+        // of bytes.  Deterministic per seed.
+        let n = 16384;
+        let vals: Vec<f32> = (0..n).map(|i| (i % 256) as f32).collect();
+        let q = Tensor4::from_vec(1, 1, 128, 128, vals);
+        let clean = QuantActivations { q, scales: vec![255.0] };
+
+        let corrupted_bytes = |act: &QuantActivations| {
+            act.q.data.iter().zip(&clean.q.data).filter(|(a, b)| a != b).count()
+        };
+        // raw: ~131 expected flips over 128 Kib.  ECC: a flit only leaks
+        // when hit >= 2 times — ~5 expected leaky flits (~9 bytes), an
+        // order of magnitude below raw, so the 2x margin below holds with
+        // overwhelming slack for any sane seed.
+        let ber = 1e-3;
+        let mut raw = clean.clone();
+        raw.inject_link_faults(ber, false, &mut Rng::new(0xECC0));
+        let raw_bad = corrupted_bytes(&raw);
+        assert!(raw_bad > 30, "raw link must corrupt ~a hundred bytes, got {raw_bad}");
+
+        let mut ecc = clean.clone();
+        ecc.inject_link_faults(ber, true, &mut Rng::new(0xECC0));
+        let ecc_bad = corrupted_bytes(&ecc);
+        assert!(
+            ecc_bad * 2 < raw_bad,
+            "SECDED must correct the bulk of sparse flips: {ecc_bad} vs raw {raw_bad}"
+        );
+        for v in &ecc.q.data {
+            assert!((0.0..=255.0).contains(v) && v.fract() == 0.0, "still 8-bit: {v}");
+        }
+
+        // saturated link: ECC has nothing left to correct
+        let mut worst = clean.clone();
+        worst.inject_link_faults(1.0, true, &mut Rng::new(1));
+        assert!(worst.q.data.iter().zip(&clean.q.data).all(|(a, b)| a != b));
+
+        // determinism: the same seed replays the same residual corruption
+        let mut replay = clean.clone();
+        replay.inject_link_faults(ber, true, &mut Rng::new(0xECC0));
+        assert_eq!(replay.q.data, ecc.q.data);
+    }
+
+    #[test]
+    fn layer_stepping_composes_to_run_quantized_exactly() {
+        // run_layer_raw + requantize_requests is the decomposition the
+        // tensor-parallel path uses; walked layer by layer it must be
+        // byte-identical (values AND metrics) to one run_quantized call.
+        let spec = tiny_spec(71);
+        let mut whole = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let mut stepped = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+        let x = random_input(&spec, 710);
+
+        let (act, mut want_m) = whole.quantize_entry(&[&x]).unwrap();
+        let act2 = act.clone();
+        let mut got_m = want_m;
+        let (want_act, m) = whole.run_quantized(act).unwrap();
+        want_m.add(&m);
+
+        let mut cur = act2;
+        let mut step_m = ChipMetrics::default();
+        for li in 0..spec.layers.len() {
+            let (t, m) = stepped.run_layer_raw(li, &cur).unwrap();
+            step_m.add(&m);
+            let mut scales = cur.scales.clone();
+            let q = requantize_requests(&t, &mut scales, &mut step_m);
+            cur = QuantActivations { q, scales };
+        }
+        got_m.add(&step_m);
+        assert_eq!(cur.q.data, want_act.q.data, "stepped values must match");
+        assert_eq!(cur.scales, want_act.scales);
+        assert_eq!(got_m, want_m, "stepped metrics must match byte for byte");
+        // finalize through the shared epilogue agrees too
+        let want = whole.finalize(want_act, want_m);
+        let got = finalize_outputs(spec.head.as_ref(), cur, got_m);
+        assert_eq!(got[0].features.data, want[0].features.data);
+        assert_eq!(got[0].logits, want[0].logits);
     }
 
     #[test]

@@ -40,6 +40,21 @@ pub fn xfer_cost_ns(bytes: u64, hw: &HwParams) -> f64 {
     hw.link_latency_ns + bytes as f64 / hw.link_bytes_per_ns
 }
 
+/// Steady-state issue interval of any staged run (layer pipeline or
+/// hybrid): the slowest stage plus its incoming link leg bounds how
+/// often a new request can enter, because stage k computes request i+1
+/// while stage k+1 computes request i.  `legs_ns[s - 1]` is the leg into
+/// stage `s`.  Shared by [`PipelineOutput`] and the tensor-parallel
+/// session's `HybridOutput` so the two interval definitions cannot
+/// drift apart.
+pub fn staged_issue_interval_ns(stage_metrics: &[ChipMetrics], legs_ns: &[f64]) -> f64 {
+    stage_metrics
+        .iter()
+        .enumerate()
+        .map(|(s, m)| m.latency_ns + if s > 0 { legs_ns[s - 1] } else { 0.0 })
+        .fold(0.0, f64::max)
+}
+
 /// A contiguous cut of a model's layers across N chips.
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
@@ -176,6 +191,54 @@ chip holds {capacity}",
         self.ranges.len()
     }
 
+    /// Cut `spec` into exactly `shards` contiguous shards minimizing the
+    /// maximum per-shard **weight** — e.g. profiled per-layer `latency_ns`
+    /// — while still enforcing the per-chip register-capacity gate on the
+    /// resulting footprints.  This is the latency objective next to the
+    /// footprint objective: [`Self::partition`] balances what must *fit*
+    /// on each chip, this balances what bounds the pipeline's issue
+    /// interval.  The hybrid auto-planner
+    /// (`coordinator::tensor_parallel::plan_auto`) goes further and also
+    /// chooses per-stage KN splits.
+    pub fn partition_weighted(
+        spec: &ModelSpec,
+        cfg: &ChipConfig,
+        shards: usize,
+        weights: &[u64],
+    ) -> Result<Self> {
+        spec.validate()?;
+        ensure!(
+            weights.len() == spec.layers.len(),
+            "need one weight per layer: got {} for {} layers",
+            weights.len(),
+            spec.layers.len()
+        );
+        ensure!(weights.iter().all(|&w| w > 0), "per-layer weights must be positive");
+        ensure!(shards >= 1, "need at least one shard");
+        ensure!(
+            shards <= spec.layers.len(),
+            "cannot cut {} layers into {shards} shards (layer boundaries only)",
+            spec.layers.len()
+        );
+        let (ranges, _) = cut_footprints(weights, shards);
+        let planner = cfg.planner();
+        let f: Vec<u64> =
+            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+        let capacity = cfg.wreg_capacity();
+        let footprints: Vec<u64> =
+            ranges.iter().map(|&(a, b)| f[a..b].iter().sum()).collect();
+        for (&(a, b), &fp) in ranges.iter().zip(&footprints) {
+            ensure!(
+                fp <= capacity,
+                "model `{}`: latency-balanced shard of layers [{a}, {b}) needs {fp} \
+weight-register entries but a chip holds {capacity}; use more shards, or the hybrid \
+auto-planner (coordinator::tensor_parallel::plan_auto) to split layers across chips",
+                spec.name
+            );
+        }
+        Ok(Self { ranges, footprints, capacity })
+    }
+
     /// The sub-model shard `i` keeps resident: its contiguous layer slice,
     /// with the classifier head riding on the final shard only.
     pub fn subspec(&self, spec: &ModelSpec, i: usize) -> ModelSpec {
@@ -203,18 +266,10 @@ pub struct PipelineOutput {
 
 impl PipelineOutput {
     /// Steady-state issue interval of the pipeline for requests like this
-    /// one: the slowest stage plus its incoming link leg bounds how often
-    /// a new request can enter, because shard k computes request i+1
-    /// while shard k+1 computes request i.  A single chip instead pays
+    /// one ([`staged_issue_interval_ns`]).  A single chip instead pays
     /// [`Self::serial_ns`] per request.
     pub fn issue_interval_ns(&self) -> f64 {
-        self.stage_metrics
-            .iter()
-            .enumerate()
-            .map(|(s, m)| {
-                m.latency_ns + if s > 0 { self.xfer_legs_ns[s - 1] } else { 0.0 }
-            })
-            .fold(0.0, f64::max)
+        staged_issue_interval_ns(&self.stage_metrics, &self.xfer_legs_ns)
     }
 
     /// What a single chip would pay per request: the stages' latencies
@@ -347,19 +402,55 @@ impl PipelineSession {
     /// ideal link (`hw.link_ber == 0`, the default); at a positive link
     /// BER every boundary flips payload bits at that rate.
     pub fn infer(&mut self, x: &Tensor4) -> Result<PipelineOutput> {
-        let (mut act, mut metrics) = self.stages[0].quantize_entry(&[x])?;
+        let (act, metrics) = self.stages[0].quantize_entry(&[x])?;
+        let (act, metrics, stage_metrics, xfer_legs_ns) = self.run_stages(act, metrics)?;
+        let last = self.stages.last().expect("at least one shard");
+        let mut outs = last.finalize(act, metrics);
+        let out = outs.pop().expect("one request in, one output out");
+        Ok(PipelineOutput { out, stage_metrics, xfer_legs_ns })
+    }
+
+    /// Fuse several same-shape requests into one pipelined run along the
+    /// batch axis (the sharded counterpart of
+    /// [`ChipSession::infer_many`]): outputs are bit-identical to serving
+    /// each request alone, in submission order, and every boundary's hop
+    /// latency is paid **once** for the whole fused tensor — batching
+    /// amortizes the link's fixed per-leg cost over the fused requests.
+    /// Every shard must hold the fused geometry's wider register image
+    /// (the per-stage capacity gate applies; see the server's clamp).
+    /// Each output carries the fused run's metrics.
+    pub fn infer_many(&mut self, xs: &[&Tensor4]) -> Result<Vec<ModelOutput>> {
+        let (act, metrics) = self.stages[0].quantize_entry(xs)?;
+        let (act, metrics, _, _) = self.run_stages(act, metrics)?;
+        let last = self.stages.last().expect("at least one shard");
+        Ok(last.finalize(act, metrics))
+    }
+
+    /// Walk activations through every stage, charging (and, when armed,
+    /// corrupting) each boundary leg.
+    #[allow(clippy::type_complexity)]
+    fn run_stages(
+        &mut self,
+        mut act: QuantActivations,
+        mut metrics: ChipMetrics,
+    ) -> Result<(QuantActivations, ChipMetrics, Vec<ChipMetrics>, Vec<f64>)> {
         let mut stage_metrics = Vec::with_capacity(self.stages.len());
         let mut xfer_legs_ns = Vec::with_capacity(self.stages.len().saturating_sub(1));
         for (i, stage) in self.stages.iter_mut().enumerate() {
             if i > 0 {
-                let bytes = act.wire_bytes();
+                let bytes = self.hw.wire_bytes(act.wire_bytes());
                 let leg = xfer_cost_ns(bytes, &self.hw);
                 metrics.xfer_bytes += bytes;
                 metrics.xfer_ns += leg;
                 metrics.latency_ns += leg;
+                metrics.xfer_legs += 1;
                 xfer_legs_ns.push(leg);
                 if !self.link_rngs.is_empty() {
-                    act.inject_link_faults(self.hw.link_ber, &mut self.link_rngs[i - 1]);
+                    act.inject_link_faults(
+                        self.hw.link_ber,
+                        self.hw.link_ecc,
+                        &mut self.link_rngs[i - 1],
+                    );
                 }
             }
             let (next, m) = stage.run_quantized(act)?;
@@ -367,10 +458,7 @@ impl PipelineSession {
             metrics.add(&m);
             stage_metrics.push(m);
         }
-        let last = self.stages.last().expect("at least one shard");
-        let mut outs = last.finalize(act, metrics);
-        let out = outs.pop().expect("one request in, one output out");
-        Ok(PipelineOutput { out, stage_metrics, xfer_legs_ns })
+        Ok((act, metrics, stage_metrics, xfer_legs_ns))
     }
 }
 
@@ -689,6 +777,92 @@ mod tests {
         let clean = clean_pipe.infer(&x).unwrap();
         assert_eq!(got.out.metrics.xfer_bytes, clean.out.metrics.xfer_bytes);
         assert_eq!(got.xfer_legs_ns, clean.xfer_legs_ns);
+    }
+
+    #[test]
+    fn weighted_partition_balances_by_weight_but_gates_on_footprint() {
+        // tiny_spec footprints: [108, 216, 216].  Weights say layer 2 is
+        // the latency hog -> the 2-way cut isolates it, exactly like the
+        // footprint cut would a register hog.
+        let spec = tiny_spec(0xAA01);
+        let cfg = ChipConfig::fat();
+        let plan =
+            ShardPlan::partition_weighted(&spec, &cfg, 2, &[1, 1, 100]).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 2), (2, 3)]);
+        assert_eq!(plan.footprints, vec![324, 216]);
+
+        // a weight-balanced cut that violates the register capacity is
+        // rejected: [100, 1, 1] isolates layer 0, leaving layers 1+2
+        // (432 entries) on one 350-entry chip
+        let mut small = cfg;
+        small.cmas = 2;
+        small.wreg_entries_per_cma = 175;
+        let err =
+            ShardPlan::partition_weighted(&spec, &small, 2, &[100, 1, 1]).unwrap_err();
+        assert!(format!("{err:#}").contains("register entries"), "{err:#}");
+        // zero weights and wrong arity are clean errors
+        assert!(ShardPlan::partition_weighted(&spec, &cfg, 2, &[1, 0, 1]).is_err());
+        assert!(ShardPlan::partition_weighted(&spec, &cfg, 2, &[1, 1]).is_err());
+    }
+
+    #[test]
+    fn fused_pipeline_run_amortizes_the_link_and_resplits_exactly() {
+        // ISSUE 5 satellite (sharded batching), session level: fusing k
+        // requests through the pipeline returns bit-identical outputs in
+        // order, and pays each boundary's hop latency ONCE for the fused
+        // tensor instead of once per request.
+        let spec = chain5(29);
+        let hw = HwParams::default();
+        let mut solo = PipelineSession::new(ChipConfig::fat(), spec.clone(), 2, hw).unwrap();
+        let mut fused = PipelineSession::new(ChipConfig::fat(), spec.clone(), 2, hw).unwrap();
+        let mut rng = Rng::new(0xF0F0);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+
+        let wants: Vec<PipelineOutput> = xs.iter().map(|x| solo.infer(x).unwrap()).collect();
+        let refs: Vec<&Tensor4> = xs.iter().collect();
+        let got = fused.infer_many(&refs).unwrap();
+        assert_eq!(got.len(), 3);
+        for (g, w) in got.iter().zip(&wants) {
+            assert_eq!(g.features.data, w.out.features.data, "fused run must re-split exactly");
+            assert_eq!(g.logits, w.out.logits);
+            assert_eq!(g.metrics.weight_reg_writes, 0);
+        }
+        // one boundary, one hop for the whole fused run...
+        assert_eq!(got[0].metrics.xfer_legs, 1);
+        let solo_xfer: f64 = wants.iter().map(|w| w.out.metrics.xfer_ns).sum();
+        let solo_legs: u64 = wants.iter().map(|w| w.out.metrics.xfer_legs).sum();
+        assert_eq!(solo_legs, 3, "solo serving pays the hop per request");
+        // ...so the fused transfer time undercuts three solo legs even
+        // though it moves (slightly more than) the same payload bytes
+        assert!(
+            got[0].metrics.xfer_ns < solo_xfer,
+            "fused {} ns vs {} ns over 3 solo legs",
+            got[0].metrics.xfer_ns,
+            solo_xfer
+        );
+        let solo_bytes: u64 = wants.iter().map(|w| w.out.metrics.xfer_bytes).sum();
+        assert!(got[0].metrics.xfer_bytes >= solo_bytes, "payload does not shrink");
+    }
+
+    #[test]
+    fn link_ecc_charges_wire_overhead_on_every_leg() {
+        // SECDED on the link: +1 check byte per 8 payload bytes on each
+        // boundary leg, values untouched on a clean link.
+        let spec = chain5(31);
+        let mut clean_pipe =
+            PipelineSession::new(ChipConfig::fat(), spec.clone(), 2, HwParams::default())
+                .unwrap();
+        let ecc_hw = HwParams { link_ecc: true, ..HwParams::default() };
+        let mut ecc_pipe =
+            PipelineSession::new(ChipConfig::fat(), spec.clone(), 2, ecc_hw).unwrap();
+        let x = spec.random_input(&mut Rng::new(0xECC1));
+        let want = clean_pipe.infer(&x).unwrap();
+        let got = ecc_pipe.infer(&x).unwrap();
+        assert_eq!(got.out.features.data, want.out.features.data, "ECC must not change values");
+        assert_eq!(got.out.logits, want.out.logits);
+        let payload = want.out.metrics.xfer_bytes; // one leg, no ECC = raw payload
+        assert_eq!(got.out.metrics.xfer_bytes, payload + payload.div_ceil(8));
+        assert!(got.out.metrics.xfer_ns > want.out.metrics.xfer_ns, "check bytes cost time");
     }
 
     #[test]

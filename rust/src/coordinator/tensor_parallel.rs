@@ -1,0 +1,1237 @@
+//! Filter-dimension (KN) tensor parallelism: one layer across many chips.
+//!
+//! Layer-boundary sharding ([`super::sharding::ShardPlan`]) cannot help
+//! when a *single* layer's weight registers exceed one chip's
+//! [`ChipConfig::wreg_capacity`] — that model is simply rejected today.
+//! The paper's Combined-Stationary mapping (§III-C) already parallelizes
+//! a layer's KN filters across memory columns *inside* the chip; this
+//! module extends the same split *across* chips:
+//!
+//! - [`TensorPlan`] cuts one layer's KN filters into contiguous per-chip
+//!   slices.  A layer's register footprint is exactly linear in its
+//!   filter count (`kn * j_dim * col_tiles`, and `col_tiles` is
+//!   KN-independent), so near-equal KN slices are footprint-balanced by
+//!   construction, and each slice is checked against one chip's capacity.
+//! - [`TensorParallelSession`] serves a [`HybridPlan`] — a **pipeline of
+//!   tensor-parallel groups**.  A `ways = 1` stage is exactly the
+//!   familiar [`ChipSession`] shard; a `ways > 1` stage runs one resident
+//!   single-layer `ChipSession` per (layer, slice) and, after every split
+//!   layer, *all-gathers* the partial output feature maps: each chip's
+//!   slice of channels circles a ring so every chip holds the full tensor
+//!   for the next layer.  The gather is charged through
+//!   [`HwParams::link_bytes_per_ns`] / [`HwParams::link_latency_ns`] into
+//!   [`ChipMetrics::xfer_bytes`] / [`ChipMetrics::xfer_ns`] (and
+//!   `xfer_legs`), with [`HwParams::wire_bytes`] adding the SECDED
+//!   overhead when link ECC is armed.
+//! - [`plan_auto`] is the latency-balanced auto-planner: it *simulates*
+//!   each layer's per-chip latency at candidate split widths (compute
+//!   costs are value-independent, so one synthetic request prices a
+//!   configuration exactly), then a dynamic program over contiguous
+//!   stage cuts and per-stage widths minimizes the pipeline's bottleneck
+//!   stage — the issue interval — for a target chip count.
+//!
+//! **Bit-exactness is by construction.**  A KN slice's conv output is
+//! exactly its channel rows of the full layer's (per-filter dot products
+//! are independent, and the grid plan does not depend on KN); BN + ReLU
+//! and the stem pool are per-channel; concatenating the slices along the
+//! channel axis therefore reproduces the full float tensor byte for
+//! byte.  The one step that *couples* channels — the per-request
+//! requantization scale, calibrated on the max over the **whole** layer
+//! output — runs after the gather, on the gathered tensor, through the
+//! same [`requantize_requests`] the single chip uses.  (On real hardware
+//! each chip would fold its local maxima into a tiny scale all-reduce —
+//! max combines exactly — quantize its slice with the global scale, and
+//! gather quantized bytes; the simulator computes the identical values
+//! the direct way and charges the wire for the scale exchange plus the
+//! quantized payload.)  So a KN-split run is byte-identical to the
+//! single-chip oracle, and register-write conservation falls out the
+//! same way as for the pipeline: every filter's registers load exactly
+//! once, on exactly one chip.
+//!
+//! The tensor-parallel session models a *protected* link (construction
+//! rejects a positive `link_ber`): lossy-link studies live on the
+//! layer-pipeline path ([`super::sharding::PipelineSession`] and the
+//! reliability sweep), where each boundary has a single receiving stage.
+
+use std::collections::HashMap;
+
+use crate::coordinator::accelerator::ChipConfig;
+use crate::coordinator::metrics::ChipMetrics;
+use crate::coordinator::model::{HeadSpec, ModelSpec};
+use crate::coordinator::session::{
+    batched_wreg_footprint, finalize_outputs, requantize_requests, wreg_footprint, ChipSession,
+    ModelOutput, QuantActivations,
+};
+use crate::error::{bail, ensure, Result};
+use crate::mapping::schemes::HwParams;
+use crate::nn::resnet::ConvLayer;
+use crate::nn::tensor::Tensor4;
+use crate::testutil::{seed_mix, Rng};
+
+/// Ring all-gather of per-chip `chunks` (payload bytes contributed by
+/// each chip): `K - 1` synchronized steps; in each step every chip
+/// forwards one chunk to its neighbor, so a step is bounded by the
+/// largest chunk in flight and every chunk ultimately crosses `K - 1`
+/// links.  Returns `(total wire bytes, ns, hop-latency charges)`; ECC
+/// wire overhead is applied per chunk via [`HwParams::wire_bytes`].
+pub fn allgather_cost(chunks: &[u64], hw: &HwParams) -> (u64, f64, u64) {
+    let k = chunks.len();
+    if k <= 1 {
+        return (0, 0.0, 0);
+    }
+    let wire: Vec<u64> = chunks.iter().map(|&c| hw.wire_bytes(c)).collect();
+    let total: u64 = wire.iter().sum();
+    let max = *wire.iter().max().expect("at least two chunks");
+    let steps = (k - 1) as u64;
+    let ns = steps as f64 * (hw.link_latency_ns + max as f64 / hw.link_bytes_per_ns);
+    (steps * total, ns, steps)
+}
+
+/// One upstream chip feeding a `ways`-chip group: `ways` copies of the
+/// payload leave the single upstream port back to back (serialized
+/// bandwidth) under one hop of latency.  At `ways = 1` this is exactly
+/// [`super::sharding::xfer_cost_ns`] on the wire bytes — which is what
+/// makes an all-single-stage hybrid charge byte-identically to the
+/// layer pipeline.
+pub fn broadcast_cost(payload: u64, ways: usize, hw: &HwParams) -> (u64, f64) {
+    let bytes = hw.wire_bytes(payload) * ways as u64;
+    let ns = hw.link_latency_ns + bytes as f64 / hw.link_bytes_per_ns;
+    (bytes, ns)
+}
+
+/// The KN split of ONE layer across `ways` chips: contiguous filter
+/// ranges, near-equal by count — and therefore by register footprint,
+/// which is linear in the slice width.
+#[derive(Debug, Clone)]
+pub struct TensorPlan {
+    /// Per-chip `[k0, k1)` filter ranges; contiguous, covering `0..kn`
+    /// in order, sizes differing by at most one filter.
+    pub slices: Vec<(usize, usize)>,
+    /// Resident 2-bit weight-register entries per slice.
+    pub footprints: Vec<u64>,
+    /// Per-chip register capacity the split was checked against.
+    pub capacity: u64,
+}
+
+impl TensorPlan {
+    /// Split `layer`'s KN filters across `ways` chips, checking the
+    /// largest slice against one chip's register capacity.
+    pub fn split(layer: &ConvLayer, cfg: &ChipConfig, ways: usize) -> Result<Self> {
+        ensure!(ways >= 1, "need at least one slice");
+        ensure!(
+            ways <= layer.kn,
+            "layer `{}`: cannot split {} filters {ways} ways",
+            layer.name,
+            layer.kn
+        );
+        let need = Self::min_ways(layer, cfg)?;
+        let capacity = cfg.wreg_capacity();
+        ensure!(
+            need <= ways,
+            "layer `{}`: a {ways}-way KN split still exceeds one chip's {capacity} \
+weight-register entries; split at least {need} ways",
+            layer.name
+        );
+        let planner = cfg.planner();
+        let per_filter = layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
+        let (base, rem) = (layer.kn / ways, layer.kn % ways);
+        let mut slices = Vec::with_capacity(ways);
+        let mut k0 = 0usize;
+        for i in 0..ways {
+            let kn = base + usize::from(i < rem);
+            slices.push((k0, k0 + kn));
+            k0 += kn;
+        }
+        debug_assert_eq!(k0, layer.kn, "slices must partition the filters");
+        let footprints: Vec<u64> =
+            slices.iter().map(|&(a, b)| (b - a) as u64 * per_filter).collect();
+        debug_assert!(footprints.iter().all(|&f| f <= capacity));
+        Ok(Self { slices, footprints, capacity })
+    }
+
+    /// The fewest chips this layer's registers can be split across, given
+    /// one chip's capacity.  Errs when a single filter's registers exceed
+    /// the chip — no KN split can help then.
+    pub fn min_ways(layer: &ConvLayer, cfg: &ChipConfig) -> Result<usize> {
+        let planner = cfg.planner();
+        let capacity = cfg.wreg_capacity();
+        let per_filter = layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
+        ensure!(
+            per_filter <= capacity,
+            "layer `{}`: one filter alone needs {per_filter} weight-register entries but a \
+chip holds {capacity}; no KN split can help — shrink the layer or the batch",
+            layer.name
+        );
+        let max_kn = (capacity / per_filter) as usize;
+        Ok(layer.kn.div_ceil(max_kn.min(layer.kn)))
+    }
+
+    pub fn ways(&self) -> usize {
+        self.slices.len()
+    }
+}
+
+/// One stage of a hybrid plan: a contiguous layer range on `ways` chips.
+#[derive(Debug, Clone)]
+pub struct HybridStagePlan {
+    /// `[start, end)` layer range.
+    pub range: (usize, usize),
+    /// Chips this stage spans; 1 = a plain pipeline shard.
+    pub ways: usize,
+    /// Per-layer KN splits when `ways > 1` (aligned with `range`); empty
+    /// for single-chip stages.
+    pub splits: Vec<TensorPlan>,
+    /// Resident register footprint per chip of this stage (chip `c`
+    /// holds slice `c` of every split layer; `ways == 1` has one entry).
+    pub chip_footprints: Vec<u64>,
+    /// The auto-planner's simulated per-request stage latency (compute +
+    /// all-gathers + entry broadcast), ns; 0.0 on manual plans.
+    pub est_ns: f64,
+}
+
+/// A pipeline of tensor-parallel groups: the composition of
+/// layer-boundary sharding and per-layer KN splits.
+#[derive(Debug, Clone)]
+pub struct HybridPlan {
+    pub stages: Vec<HybridStagePlan>,
+    /// Per-chip register capacity the plan was validated against.
+    pub capacity: u64,
+}
+
+impl HybridPlan {
+    /// Build and validate a plan from explicit `(start, end, ways)`
+    /// stage triples: the ranges must tile the model's layers in order,
+    /// and every chip's resident slice sum must fit its registers.
+    pub fn manual(
+        spec: &ModelSpec,
+        cfg: &ChipConfig,
+        stages: &[(usize, usize, usize)],
+    ) -> Result<Self> {
+        spec.validate()?;
+        ensure!(!stages.is_empty(), "a plan needs at least one stage");
+        let planner = cfg.planner();
+        let capacity = cfg.wreg_capacity();
+        let mut cursor = 0usize;
+        let mut out = Vec::with_capacity(stages.len());
+        for &(a, b, ways) in stages {
+            ensure!(
+                a == cursor && b > a && b <= spec.layers.len(),
+                "stages must tile the layers in order: got [{a}, {b}) at layer {cursor}"
+            );
+            ensure!(ways >= 1, "stage [{a}, {b}): need at least one chip");
+            cursor = b;
+            let (splits, chip_footprints) = if ways == 1 {
+                let fp: u64 = spec.layers[a..b]
+                    .iter()
+                    .map(|ls| wreg_footprint(&ls.layer, &planner))
+                    .sum();
+                ensure!(
+                    fp <= capacity,
+                    "stage [{a}, {b}) needs {fp} weight-register entries on one chip but \
+it holds {capacity}; cut the stage or split it across chips"
+                );
+                (Vec::new(), vec![fp])
+            } else {
+                let splits: Vec<TensorPlan> = spec.layers[a..b]
+                    .iter()
+                    .map(|ls| TensorPlan::split(&ls.layer, cfg, ways))
+                    .collect::<Result<_>>()?;
+                let mut chip = vec![0u64; ways];
+                for tp in &splits {
+                    for (c, &f) in tp.footprints.iter().enumerate() {
+                        chip[c] += f;
+                    }
+                }
+                for (c, &f) in chip.iter().enumerate() {
+                    ensure!(
+                        f <= capacity,
+                        "stage [{a}, {b}): chip {c} of the {ways}-way split needs {f} \
+weight-register entries but holds {capacity}; use more chips or shorter stages"
+                    );
+                }
+                (splits, chip)
+            };
+            out.push(HybridStagePlan {
+                range: (a, b),
+                ways,
+                splits,
+                chip_footprints,
+                est_ns: 0.0,
+            });
+        }
+        ensure!(
+            cursor == spec.layers.len(),
+            "stages cover {cursor} of {} layers",
+            spec.layers.len()
+        );
+        Ok(Self { stages: out, capacity })
+    }
+
+    /// Total chips the plan occupies.
+    pub fn chips(&self) -> usize {
+        self.stages.iter().map(|s| s.ways).sum()
+    }
+
+    /// The plan's estimated issue interval: its slowest stage (only
+    /// meaningful on auto plans, whose `est_ns` is populated).
+    pub fn est_interval_ns(&self) -> f64 {
+        self.stages.iter().map(|s| s.est_ns).fold(0.0, f64::max)
+    }
+}
+
+/// Memoizing per-(layer, ways) cost probe for the auto-planner: builds a
+/// throwaway resident session for the layer's **largest** slice and
+/// serves one synthetic request.  Every compute path's simulated cost is
+/// value-independent given the weights, so one probe prices the
+/// configuration exactly; results are cached across DP transitions.
+struct CostProbe<'a> {
+    cfg: &'a ChipConfig,
+    spec: &'a ModelSpec,
+    hw: &'a HwParams,
+    cache: HashMap<(usize, usize), Option<f64>>,
+}
+
+impl CostProbe<'_> {
+    fn layer_cost(&mut self, li: usize, ways: usize) -> Option<f64> {
+        if let Some(&c) = self.cache.get(&(li, ways)) {
+            return c;
+        }
+        let v = self.probe(li, ways);
+        self.cache.insert((li, ways), v);
+        v
+    }
+
+    /// Per-chip latency of layer `li` under a `ways`-way split: slice 0's
+    /// compute (the largest slice bounds the group) plus, when split, the
+    /// post-layer scale exchange and payload all-gather.
+    fn probe(&mut self, li: usize, ways: usize) -> Option<f64> {
+        let ls = &self.spec.layers[li];
+        if ways > ls.layer.kn {
+            return None;
+        }
+        let tp = TensorPlan::split(&ls.layer, self.cfg, ways).ok()?;
+        let (k0, k1) = tp.slices[0];
+        let slice = if ways == 1 { ls.clone() } else { ls.slice_kn(k0, k1) };
+        let sub = ModelSpec {
+            name: format!("probe:{}:{ways}w", ls.layer.name),
+            layers: vec![slice],
+            head: None,
+        };
+        let mut sess = ChipSession::new(*self.cfg, sub).ok()?;
+        let l = ls.layer;
+        let mut q = Tensor4::zeros(l.n, l.c, l.h, l.w);
+        q.fill_random_ints(&mut Rng::new(seed_mix(0x9906, li as u64)), 0, 256);
+        let act = QuantActivations { q, scales: vec![255.0] };
+        let (_, m) = sess.run_quantized(act).ok()?;
+        let mut ns = m.latency_ns;
+        if ways > 1 {
+            let (mut oh, mut ow) = (l.oh(), l.ow());
+            if ls.pool_after {
+                oh = (oh / 2).max(1);
+                ow = (ow / 2).max(1);
+            }
+            // Serving requantizes the FULL gathered tensor, but the probe
+            // run above only charged the slice's share: add the missing
+            // channels' requantization time (exact — the DPU pass is
+            // linear in elements), so w > 1 stage costs stay comparable
+            // with w = 1 and the DP never picks a split on phantom
+            // savings.
+            let missing = (l.kn - (k1 - k0)) * l.n * oh * ow;
+            if missing > 0 {
+                ns += crate::coordinator::dpu::Dpu
+                    .requantize(&vec![0.0; missing], 1.0)
+                    .latency_ns;
+            }
+            let chunks: Vec<u64> = tp
+                .slices
+                .iter()
+                .map(|&(a, b)| ((b - a) * l.n * oh * ow) as u64)
+                .collect();
+            ns += allgather_cost(&vec![4u64; ways], self.hw).1; // scale exchange
+            ns += allgather_cost(&chunks, self.hw).1; // quantized partials
+        }
+        Some(ns)
+    }
+}
+
+/// Latency (and feasibility) of running layers `[i, j)` as one stage on
+/// `w` chips; `None` when some chip cannot hold its slices.  Non-head
+/// stages additionally pay the broadcast of their input tensor from the
+/// previous stage's chip.
+fn stage_cost(probe: &mut CostProbe, i: usize, j: usize, w: usize, first: bool) -> Option<f64> {
+    let planner = probe.cfg.planner();
+    let capacity = probe.cfg.wreg_capacity();
+    // chip 0 holds the largest slice of every layer, so its sum is the
+    // per-chip footprint bound (and equals the plain footprint at w = 1)
+    let mut fp = 0u64;
+    for ls in &probe.spec.layers[i..j] {
+        if w == 1 {
+            fp += wreg_footprint(&ls.layer, &planner);
+        } else {
+            if w > ls.layer.kn {
+                return None;
+            }
+            fp += TensorPlan::split(&ls.layer, probe.cfg, w).ok()?.footprints[0];
+        }
+    }
+    if fp > capacity {
+        return None;
+    }
+    let mut ns = 0.0;
+    for li in i..j {
+        ns += probe.layer_cost(li, w)?;
+    }
+    if !first {
+        let l0 = &probe.spec.layers[i].layer;
+        let payload = (l0.n * l0.c * l0.h * l0.w) as u64 + 4;
+        ns += broadcast_cost(payload, w, probe.hw).1;
+    }
+    Some(ns)
+}
+
+/// The latency-balanced auto-planner: pick the cheapest valid
+/// (shards x kn-splits) configuration for a target chip count.
+///
+/// Per-layer latencies are *simulated* (see [`CostProbe`]), then a
+/// dynamic program over contiguous stage cuts and per-stage split widths
+/// minimizes the bottleneck stage — which bounds the pipeline's issue
+/// interval — using **at most** `chips` chips.  Oversized layers are
+/// forced to the split widths that fit; everything else is free for the
+/// DP to trade between deeper pipelining and wider splits.
+pub fn plan_auto(
+    cfg: &ChipConfig,
+    spec: &ModelSpec,
+    chips: usize,
+    hw: &HwParams,
+) -> Result<HybridPlan> {
+    spec.validate()?;
+    ensure!(chips >= 1, "need at least one chip");
+    let l = spec.layers.len();
+    // surface the hopeless case (a single filter too big) as its own error
+    for ls in &spec.layers {
+        TensorPlan::min_ways(&ls.layer, cfg)?;
+    }
+    let mut probe = CostProbe { cfg, spec, hw, cache: HashMap::new() };
+
+    #[derive(Clone, Copy)]
+    struct Step {
+        cost: f64,
+        next: usize,
+        ways: usize,
+    }
+    // dp[i][c]: best bottleneck for layers i.. with c chips left
+    let mut dp: Vec<Vec<Option<Step>>> = vec![vec![None; chips + 1]; l + 1];
+    for slot in dp[l].iter_mut() {
+        *slot = Some(Step { cost: 0.0, next: l, ways: 0 });
+    }
+    for i in (0..l).rev() {
+        for c in 1..=chips {
+            let mut best: Option<Step> = None;
+            for j in (i + 1)..=l {
+                for w in 1..=c {
+                    let Some(rest) = dp[j][c - w] else { continue };
+                    let Some(stage_ns) = stage_cost(&mut probe, i, j, w, i == 0) else {
+                        continue;
+                    };
+                    let cand = stage_ns.max(rest.cost);
+                    let better = match best {
+                        None => true,
+                        Some(b) => cand < b.cost || (cand == b.cost && w < b.ways),
+                    };
+                    if better {
+                        best = Some(Step { cost: cand, next: j, ways: w });
+                    }
+                }
+            }
+            dp[i][c] = best;
+        }
+    }
+    if dp[0][chips].is_none() {
+        bail!(
+            "no (shards x kn-splits) configuration of `{}` fits {chips} chip(s) of {} \
+weight-register entries; add chips",
+            spec.name,
+            cfg.wreg_capacity()
+        );
+    }
+    let mut triples = Vec::new();
+    let (mut i, mut c) = (0usize, chips);
+    while i < l {
+        let s = dp[i][c].expect("dp reconstruction follows a feasible path");
+        triples.push((i, s.next, s.ways));
+        i = s.next;
+        c -= s.ways;
+    }
+    let mut plan = HybridPlan::manual(spec, cfg, &triples)?;
+    for st in &mut plan.stages {
+        let (a, b) = st.range;
+        st.est_ns = stage_cost(&mut probe, a, b, st.ways, a == 0)
+            .expect("chosen stages were feasible in the DP");
+    }
+    Ok(plan)
+}
+
+/// Per-layer serving profile for planning and reporting: each layer
+/// priced by the simulator at its minimum feasible KN split width
+/// (width 1 — the whole layer on one chip — whenever it fits).  Returns
+/// `(min_ways, per-chip latency_ns)` per layer; the latencies feed
+/// [`super::sharding::ShardPlan::partition_weighted`] as the
+/// latency-balanced pipeline objective.
+pub fn profile_layers(
+    cfg: &ChipConfig,
+    spec: &ModelSpec,
+    hw: &HwParams,
+) -> Result<Vec<(usize, f64)>> {
+    spec.validate()?;
+    let mut probe = CostProbe { cfg, spec, hw, cache: HashMap::new() };
+    let mut out = Vec::with_capacity(spec.layers.len());
+    for (li, ls) in spec.layers.iter().enumerate() {
+        let ways = TensorPlan::min_ways(&ls.layer, cfg)?;
+        let Some(ns) = probe.layer_cost(li, ways) else {
+            bail!("layer `{}` cannot be profiled at {ways} ways", ls.layer.name);
+        };
+        out.push((ways, ns));
+    }
+    Ok(out)
+}
+
+/// One resident layer of a tensor-parallel group: `ways` single-layer
+/// slice sessions, chip `c` holding filters `slices[c]`.
+struct TpLayer {
+    slices: Vec<ChipSession>,
+}
+
+/// One pipeline stage of the hybrid session.
+enum HybridStage {
+    /// `ways == 1`: a contiguous multi-layer shard on one chip — the
+    /// exact [`ChipSession`] stage primitive the plain pipeline uses.
+    Single(ChipSession),
+    /// `ways > 1`: every layer of the range KN-split across the same
+    /// `ways` chips, all-gathering after each layer.
+    Tp { layers: Vec<TpLayer> },
+}
+
+impl HybridStage {
+    fn ways(&self) -> usize {
+        match self {
+            HybridStage::Single(_) => 1,
+            HybridStage::Tp { layers } => layers[0].slices.len(),
+        }
+    }
+}
+
+/// The per-request result of a hybrid run (possibly micro-batched).
+#[derive(Debug, Clone)]
+pub struct HybridOutput {
+    /// Per-request outputs in submission order; fused requests share the
+    /// run's metrics (which aggregate every stage plus all link legs).
+    pub outs: Vec<ModelOutput>,
+    /// Per-stage metrics: compute plus the stage's internal all-gathers,
+    /// without the inter-stage boundary legs.
+    pub stage_metrics: Vec<ChipMetrics>,
+    /// Inter-stage boundary legs, ns (`stages - 1` entries).
+    pub boundary_legs_ns: Vec<f64>,
+}
+
+impl HybridOutput {
+    /// Steady-state issue interval
+    /// ([`super::sharding::staged_issue_interval_ns`]): the slowest
+    /// stage plus its incoming boundary leg bounds how often a new
+    /// request can enter.  For the true single-chip cost per request,
+    /// serve the same input through a capacity-unlimited oracle: a TP
+    /// stage's latency is its slowest *slice* plus gather time, which no
+    /// single chip pays, so summing stages does not reconstruct it.
+    pub fn issue_interval_ns(&self) -> f64 {
+        crate::coordinator::sharding::staged_issue_interval_ns(
+            &self.stage_metrics,
+            &self.boundary_legs_ns,
+        )
+    }
+}
+
+/// A model resident across a hybrid plan's chips, served as a pipeline
+/// of tensor-parallel groups.  Construction loads every slice's
+/// registers once; serving streams activations against the resident
+/// state, byte-identical to the single-chip oracle.
+pub struct TensorParallelSession {
+    cfg: ChipConfig,
+    plan: HybridPlan,
+    stages: Vec<HybridStage>,
+    head: Option<HeadSpec>,
+    hw: HwParams,
+    input_geometry: (usize, usize, usize, usize),
+    served: u64,
+}
+
+impl TensorParallelSession {
+    /// Load `spec` across the plan's chips.  The tensor-parallel link is
+    /// modeled as protected: a positive `hw.link_ber` is rejected here
+    /// (use [`super::sharding::PipelineSession`] for lossy-link studies).
+    pub fn new(cfg: ChipConfig, spec: ModelSpec, plan: HybridPlan, hw: HwParams) -> Result<Self> {
+        ensure!(
+            hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
+            "inter-chip link needs positive bandwidth and non-negative latency"
+        );
+        ensure!(
+            hw.link_ber == 0.0,
+            "the tensor-parallel session models a protected link; lossy links live on \
+the layer-pipeline path (PipelineSession / the reliability sweep)"
+        );
+        spec.validate()?;
+        let total_layers: usize = plan.stages.iter().map(|s| s.range.1 - s.range.0).sum();
+        ensure!(
+            total_layers == spec.layers.len()
+                && plan.stages.first().map(|s| s.range.0) == Some(0),
+            "plan does not tile `{}`'s {} layers",
+            spec.name,
+            spec.layers.len()
+        );
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        for st in &plan.stages {
+            let (a, b) = st.range;
+            if st.ways == 1 {
+                let sub = ModelSpec {
+                    name: format!("{}:stage{}", spec.name, stages.len() + 1),
+                    layers: spec.layers[a..b].to_vec(),
+                    head: None,
+                };
+                stages.push(HybridStage::Single(ChipSession::new(cfg, sub)?));
+            } else {
+                let mut layers = Vec::with_capacity(b - a);
+                for (li, ls) in spec.layers[a..b].iter().enumerate() {
+                    let tp = &st.splits[li];
+                    let mut slices = Vec::with_capacity(st.ways);
+                    for &(k0, k1) in &tp.slices {
+                        let sub = ModelSpec {
+                            name: format!(
+                                "{}:{}.kn{}-{}",
+                                spec.name, ls.layer.name, k0, k1
+                            ),
+                            layers: vec![ls.slice_kn(k0, k1)],
+                            head: None,
+                        };
+                        slices.push(ChipSession::new(cfg, sub)?);
+                    }
+                    layers.push(TpLayer { slices });
+                }
+                stages.push(HybridStage::Tp { layers });
+            }
+        }
+        Ok(Self {
+            cfg,
+            plan,
+            stages,
+            head: spec.head.clone(),
+            hw,
+            input_geometry: spec.input_geometry(),
+            served: 0,
+        })
+    }
+
+    /// Auto-plan for `chips` chips ([`plan_auto`]) and load.
+    pub fn auto(cfg: ChipConfig, spec: ModelSpec, chips: usize, hw: HwParams) -> Result<Self> {
+        let plan = plan_auto(&cfg, &spec, chips, &hw)?;
+        Self::new(cfg, spec, plan, hw)
+    }
+
+    pub fn plan(&self) -> &HybridPlan {
+        &self.plan
+    }
+
+    /// The link parameters transfers are charged against.
+    pub fn hw(&self) -> &HwParams {
+        &self.hw
+    }
+
+    /// The input geometry requests must match.
+    pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
+        self.input_geometry
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// One-time loading metrics per stage, each entry summing the
+    /// stage's chips (a `ways = 1` stage has one chip).
+    pub fn stage_loadings(&self) -> Vec<ChipMetrics> {
+        self.stages
+            .iter()
+            .map(|st| match st {
+                HybridStage::Single(s) => *s.loading(),
+                HybridStage::Tp { layers } => {
+                    let mut m = ChipMetrics::default();
+                    for tl in layers {
+                        for s in &tl.slices {
+                            m.add(s.loading());
+                        }
+                    }
+                    m
+                }
+            })
+            .collect()
+    }
+
+    /// Loading totals across every chip.  `weight_reg_writes` equals the
+    /// unsharded model's: every filter's registers load exactly once,
+    /// on exactly one chip — conservation across slices.
+    pub fn loading_total(&self) -> ChipMetrics {
+        let mut total = ChipMetrics::default();
+        for m in self.stage_loadings() {
+            total.add(&m);
+        }
+        total
+    }
+
+    /// Serve one request; see [`Self::infer_many`].
+    pub fn infer(&mut self, x: &Tensor4) -> Result<HybridOutput> {
+        self.infer_many(&[x])
+    }
+
+    /// Fuse several same-shape requests into one run through the hybrid
+    /// pipeline.  Outputs are bit-identical to the single-chip oracle
+    /// (and re-split exactly), every boundary broadcast and every ring
+    /// all-gather is charged once per fused run, and the resident
+    /// registers are never rewritten.
+    pub fn infer_many(&mut self, xs: &[&Tensor4]) -> Result<HybridOutput> {
+        ensure!(!xs.is_empty(), "micro-batch needs at least one request");
+        let k = xs.len();
+        if k > 1 {
+            self.ensure_fused_capacity(k)?;
+        }
+        let hw = self.hw;
+        let entry = match &self.stages[0] {
+            HybridStage::Single(s) => s,
+            HybridStage::Tp { layers } => &layers[0].slices[0],
+        };
+        let (mut act, mut metrics) = entry.quantize_entry(xs)?;
+        let mut stage_metrics = Vec::with_capacity(self.stages.len());
+        let mut boundary_legs_ns = Vec::with_capacity(self.stages.len().saturating_sub(1));
+        for (si, stage) in self.stages.iter_mut().enumerate() {
+            if si > 0 {
+                // the previous stage's output chip feeds every chip of
+                // this stage — same expression as the pipeline's leg for
+                // a single receiver, `ways` copies otherwise
+                let (bytes, leg) = broadcast_cost(act.wire_bytes(), stage.ways(), &hw);
+                metrics.xfer_bytes += bytes;
+                metrics.xfer_ns += leg;
+                metrics.latency_ns += leg;
+                metrics.xfer_legs += 1;
+                boundary_legs_ns.push(leg);
+            }
+            let (next, m) = match stage {
+                HybridStage::Single(sess) => sess.run_quantized(act)?,
+                HybridStage::Tp { layers } => Self::run_tp_stage(layers, act, &hw)?,
+            };
+            act = next;
+            metrics.add(&m);
+            stage_metrics.push(m);
+        }
+        self.served += k as u64;
+        let outs = finalize_outputs(self.head.as_ref(), act, metrics);
+        Ok(HybridOutput { outs, stage_metrics, boundary_legs_ns })
+    }
+
+    /// Advance a fused tensor through one tensor-parallel group: per
+    /// layer, every slice chip computes its filters' partial feature map
+    /// in parallel (latency = the slowest slice), the per-request scale
+    /// maxima circle the ring, the gathered tensor requantizes exactly
+    /// like the single chip, and the quantized partials all-gather so
+    /// every chip holds the next layer's full input.
+    fn run_tp_stage(
+        layers: &mut [TpLayer],
+        mut act: QuantActivations,
+        hw: &HwParams,
+    ) -> Result<(QuantActivations, ChipMetrics)> {
+        let k_req = act.scales.len();
+        let mut m = ChipMetrics::default();
+        for tl in layers.iter_mut() {
+            let ways = tl.slices.len();
+            let mut parts = Vec::with_capacity(ways);
+            let mut ms = Vec::with_capacity(ways);
+            for s in tl.slices.iter_mut() {
+                let (t, lm) = s.run_layer_raw(0, &act)?;
+                parts.push(t);
+                ms.push(lm);
+            }
+            m.absorb_parallel_chips(&ms);
+            // scale exchange: each chip's per-request maxima (4 bytes per
+            // fused request) circle the ring; max combines exactly, so
+            // every chip ends up with the oracle's calibration scale
+            let (b, ns, legs) = allgather_cost(&vec![4 * k_req as u64; ways], hw);
+            m.xfer_bytes += b;
+            m.xfer_ns += ns;
+            m.latency_ns += ns;
+            m.xfer_legs += legs;
+            // gather the partial maps along the channel axis and
+            // requantize per request — the same code (and bytes) as the
+            // single chip running the full layer
+            let full = concat_channels(&parts);
+            let q = requantize_requests(&full, &mut act.scales, &mut m);
+            // quantized payload all-gather: each chip ships its slice of
+            // channels once around the ring
+            let chunks: Vec<u64> = parts.iter().map(|p| p.data.len() as u64).collect();
+            let (b, ns, legs) = allgather_cost(&chunks, hw);
+            m.xfer_bytes += b;
+            m.xfer_ns += ns;
+            m.latency_ns += ns;
+            m.xfer_legs += legs;
+            act.q = q;
+        }
+        Ok((act, m))
+    }
+
+    /// Fused micro-batches widen every chip's column tiling; make sure
+    /// every chip of every stage — single-chip shards and TP slices
+    /// alike — still fits at width `k` before any stage runs (a
+    /// mid-pipeline failure would leave the run half-served).
+    fn ensure_fused_capacity(&self, k: usize) -> Result<()> {
+        let planner = self.cfg.planner();
+        let capacity = self.cfg.wreg_capacity();
+        for (si, st) in self.stages.iter().enumerate() {
+            match st {
+                HybridStage::Single(sess) => {
+                    let fused = batched_wreg_footprint(sess.spec(), &planner, k);
+                    ensure!(
+                        fused <= capacity,
+                        "a fused batch of {k} needs {fused} weight-register entries on \
+stage {si}'s chip but it holds {capacity}; lower the batch window"
+                    );
+                }
+                HybridStage::Tp { layers } => {
+                    let ways = layers[0].slices.len();
+                    for c in 0..ways {
+                        let fused: u64 = layers
+                            .iter()
+                            .map(|tl| batched_wreg_footprint(tl.slices[c].spec(), &planner, k))
+                            .sum();
+                        ensure!(
+                            fused <= capacity,
+                            "a fused batch of {k} needs {fused} weight-register entries on \
+chip {c} of stage {si} but it holds {capacity}; lower the batch window"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Concatenate per-slice partial feature maps along the channel axis:
+/// the inverse of the KN split, byte-exact.
+pub(crate) fn concat_channels(parts: &[Tensor4]) -> Tensor4 {
+    let (n, h, w) = (parts[0].n, parts[0].h, parts[0].w);
+    debug_assert!(parts.iter().all(|p| p.n == n && p.h == h && p.w == w));
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let hw = h * w;
+    let mut out = Tensor4::zeros(n, c, h, w);
+    for ni in 0..n {
+        let mut c0 = 0usize;
+        for p in parts {
+            let src = &p.data[ni * p.c * hw..(ni + 1) * p.c * hw];
+            let dst0 = (ni * c + c0) * hw;
+            out.data[dst0..dst0 + p.c * hw].copy_from_slice(src);
+            c0 += p.c;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::LoadedModel;
+    use crate::coordinator::sharding::{xfer_cost_ns, PipelineSession, ShardPlan};
+    use crate::testutil::prop_check;
+
+    /// Three chained layers whose KN widths (8, 6, 4) admit 2/3/4-way
+    /// splits.  Footprints on a 256-column planner: [216, 432, 216].
+    fn wide_kn(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "k1", n: 1, c: 3, h: 8, w: 8, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "k2", n: 1, c: 8, h: 8, w: 8, kn: 6, kh: 3, kw: 3, stride: 2, pad: 1 },
+            ConvLayer { name: "k3", n: 1, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ];
+        ModelSpec::synthetic("widekn", &geo, false, 0.5, seed, Some(5))
+    }
+
+    /// A chip generation whose 300-entry register files reject `wide_kn`
+    /// outright: layer k2 alone needs 432 entries.
+    fn small_chip() -> ChipConfig {
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 100;
+        cfg
+    }
+
+    #[test]
+    fn tensor_plan_slices_partition_kn_exactly() {
+        // ISSUE 5 satellite: property tests for the KN split.
+        prop_check(
+            "KN slices are contiguous, covering, balanced, and within capacity",
+            20,
+            0x7E50,
+            |rng| {
+                let c = rng.range(1, 9);
+                let kn = rng.range(1, 20);
+                let h = rng.range(4, 12);
+                ConvLayer { name: "p", n: 1, c, h, w: h, kn, kh: 3, kw: 3, stride: 1, pad: 1 }
+            },
+            |layer| {
+                let cfg = ChipConfig::fat();
+                let planner = cfg.planner();
+                let per_filter =
+                    layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
+                for ways in 1..=layer.kn {
+                    let tp = TensorPlan::split(layer, &cfg, ways)
+                        .map_err(|e| format!("{ways} ways: {e:#}"))?;
+                    if tp.ways() != ways {
+                        return Err(format!("wanted {ways} slices, got {:?}", tp.slices));
+                    }
+                    // contiguous cover of 0..kn, in order
+                    if tp.slices[0].0 != 0 || tp.slices[ways - 1].1 != layer.kn {
+                        return Err(format!("slices do not span KN: {:?}", tp.slices));
+                    }
+                    for w in tp.slices.windows(2) {
+                        if w[0].1 != w[1].0 {
+                            return Err(format!("gap/overlap: {:?}", tp.slices));
+                        }
+                    }
+                    let sizes: Vec<usize> =
+                        tp.slices.iter().map(|&(a, b)| b - a).collect();
+                    if sizes.iter().any(|&s| s == 0) {
+                        return Err(format!("empty slice in {:?}", tp.slices));
+                    }
+                    let (lo, hi) =
+                        (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                    if hi - lo > 1 {
+                        return Err(format!("unbalanced slices {sizes:?}"));
+                    }
+                    for (&s, &fp) in sizes.iter().zip(&tp.footprints) {
+                        if fp != s as u64 * per_filter {
+                            return Err(format!(
+                                "footprint {fp} != {s} x {per_filter}"
+                            ));
+                        }
+                        if fp > tp.capacity {
+                            return Err(format!("slice footprint {fp} over capacity"));
+                        }
+                    }
+                }
+                // min_ways is feasible and minimal under a tight capacity
+                let m = 1 + (layer.kn as u64).min(3);
+                let mut tight = cfg;
+                tight.cmas = 1;
+                tight.wreg_entries_per_cma = (per_filter * m) as usize;
+                let need = TensorPlan::min_ways(layer, &tight)
+                    .map_err(|e| format!("min_ways: {e:#}"))?;
+                if TensorPlan::split(layer, &tight, need).is_err() {
+                    return Err(format!("min_ways {need} must be feasible"));
+                }
+                if need > 1 && TensorPlan::split(layer, &tight, need - 1).is_ok() {
+                    return Err(format!("{} ways should not fit", need - 1));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn min_ways_errors_when_one_filter_cannot_fit() {
+        let layer = wide_kn(1).layers[1].layer; // k2: 72 entries per filter
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 1;
+        cfg.wreg_entries_per_cma = 71;
+        let err = TensorPlan::min_ways(&layer, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("one filter alone"), "{err:#}");
+        assert!(TensorPlan::split(&layer, &cfg, 6).is_err());
+        // and plan_auto surfaces the same hopeless case
+        let spec = wide_kn(1);
+        assert!(plan_auto(&cfg, &spec, 8, &HwParams::default()).is_err());
+    }
+
+    #[test]
+    fn kn_split_matches_the_single_chip_oracle_at_2_3_4_ways() {
+        // tentpole acceptance: whole-model KN splits are byte-identical
+        // to the single-chip oracle, conserve register writes across the
+        // slices, and charge the all-gather on every split layer.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(11);
+        let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+        let mut rng = Rng::new(0x7E51);
+        let xs: Vec<Tensor4> = (0..2).map(|_| spec.random_input(&mut rng)).collect();
+        let wants: Vec<ModelOutput> = xs.iter().map(|x| oracle.infer(x).unwrap()).collect();
+
+        for ways in [2usize, 3, 4] {
+            let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, ways)]).unwrap();
+            assert_eq!(plan.chips(), ways);
+            let mut tp = TensorParallelSession::new(cfg, spec.clone(), plan, hw).unwrap();
+
+            // register-write conservation: every filter loads exactly
+            // once, on exactly one chip
+            assert_eq!(
+                tp.loading_total().weight_reg_writes,
+                oracle.loading().weight_reg_writes,
+                "{ways}-way split must conserve register writes"
+            );
+
+            for (x, want) in xs.iter().zip(&wants) {
+                let ho = tp.infer(x).unwrap();
+                let out = &ho.outs[0];
+                assert_eq!(
+                    out.features.data, want.features.data,
+                    "{ways}-way KN split must match the oracle byte for byte"
+                );
+                assert_eq!(out.logits, want.logits, "{ways}-way logits must match");
+                // all-gather legs: 2 ring gathers (scales + payload) per
+                // split layer, ways-1 hops each, no stage boundaries
+                assert_eq!(out.metrics.xfer_legs, 3 * 2 * (ways as u64 - 1));
+                assert!(out.metrics.xfer_bytes > 0 && out.metrics.xfer_ns > 0.0);
+                assert_eq!(out.metrics.weight_reg_writes, 0, "weights stay resident");
+                assert!(ho.boundary_legs_ns.is_empty(), "one stage, no boundaries");
+                // the oracle pays no transfer
+                assert_eq!(want.metrics.xfer_ns, 0.0);
+                assert!(out.metrics.latency_ns > want.metrics.latency_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_layer_rejected_everywhere_else_serves_under_a_kn_split() {
+        // THE acceptance scenario: a model whose largest layer exceeds
+        // one chip's registers is rejected by LoadedModel::load AND by
+        // layer-boundary sharding, yet serves end-to-end bit-exactly
+        // under the hybrid auto-planner.
+        let small = small_chip(); // 300-entry chips; k2 needs 432
+        let spec = wide_kn(13);
+        let load_err = LoadedModel::load(small, spec.clone()).unwrap_err();
+        assert!(format!("{load_err:#}").contains("shard"), "{load_err:#}");
+        let shard_err = ShardPlan::partition(&spec, &small, 3).unwrap_err();
+        assert!(
+            format!("{shard_err:#}").contains("cannot help"),
+            "layer-boundary sharding must report the oversized layer: {shard_err:#}"
+        );
+        assert!(ShardPlan::min_shards(&spec, &small).is_err());
+        assert_eq!(TensorPlan::min_ways(&spec.layers[1].layer, &small).unwrap(), 2);
+
+        // too few chips: no hybrid exists (hand-checked: every <=3-chip
+        // stage assignment puts >300 entries on some chip)
+        let hw = HwParams::default();
+        assert!(plan_auto(&small, &spec, 3, &hw).is_err());
+
+        // 4 chips: the auto-planner finds a valid hybrid, k2 split >= 2
+        let plan = plan_auto(&small, &spec, 4, &hw).unwrap();
+        assert!(plan.chips() <= 4);
+        assert!(plan.est_interval_ns() > 0.0);
+        for st in &plan.stages {
+            for &fp in &st.chip_footprints {
+                assert!(fp <= small.wreg_capacity(), "plan must respect capacity");
+            }
+            if (st.range.0..st.range.1).contains(&1) {
+                assert!(st.ways >= 2, "the oversized layer k2 must be split");
+            }
+        }
+
+        // byte-identical to a big-chip oracle with the same array
+        // geometry (capacity is only a gate, never a value change)
+        let mut big = small;
+        big.wreg_entries_per_cma = 8192;
+        let mut oracle = ChipSession::new(big, spec.clone()).unwrap();
+        let mut tp = TensorParallelSession::new(small, spec.clone(), plan, hw).unwrap();
+        assert_eq!(
+            tp.loading_total().weight_reg_writes,
+            oracle.loading().weight_reg_writes
+        );
+        let mut rng = Rng::new(0x7E52);
+        for i in 0..2 {
+            let x = spec.random_input(&mut rng);
+            let want = oracle.infer(&x).unwrap();
+            let ho = tp.infer(&x).unwrap();
+            assert_eq!(
+                ho.outs[0].features.data, want.features.data,
+                "request {i}: rejected-model serving must be bit-exact under the split"
+            );
+            assert_eq!(ho.outs[0].logits, want.logits);
+            assert!(ho.outs[0].metrics.xfer_ns > 0.0, "the gathers are charged");
+        }
+    }
+
+    #[test]
+    fn all_single_stage_hybrid_is_byte_identical_to_the_pipeline() {
+        // composition sanity: with every stage at ways = 1 the hybrid
+        // session IS the layer pipeline — outputs AND full metrics.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(17);
+        let shard = ShardPlan::partition(&spec, &cfg, 2).unwrap();
+        assert_eq!(shard.ranges, vec![(0, 2), (2, 3)]);
+        let mut pipe = PipelineSession::new(cfg, spec.clone(), 2, hw).unwrap();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 2, 1), (2, 3, 1)]).unwrap();
+        let mut hybrid = TensorParallelSession::new(cfg, spec.clone(), plan, hw).unwrap();
+        assert_eq!(
+            hybrid.loading_total().weight_reg_writes,
+            pipe.loading_total().weight_reg_writes
+        );
+        let mut rng = Rng::new(0x7E53);
+        for _ in 0..2 {
+            let x = spec.random_input(&mut rng);
+            let want = pipe.infer(&x).unwrap();
+            let got = hybrid.infer(&x).unwrap();
+            assert_eq!(got.outs[0].features.data, want.out.features.data);
+            assert_eq!(got.outs[0].logits, want.out.logits);
+            assert_eq!(got.outs[0].metrics, want.out.metrics, "full metrics must match");
+            assert_eq!(got.stage_metrics, want.stage_metrics);
+            assert_eq!(got.boundary_legs_ns, want.xfer_legs_ns);
+            assert_eq!(got.issue_interval_ns(), want.issue_interval_ns());
+        }
+    }
+
+    #[test]
+    fn fused_tp_requests_resplit_bit_identically_and_amortize_gathers() {
+        // micro-batching through a tensor-parallel group: outputs re-split
+        // exactly, and the ring's hop latencies are paid once per fused
+        // run instead of once per request.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(19);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 2)]).unwrap();
+        let mut solo = TensorParallelSession::new(
+            cfg, spec.clone(), plan.clone(), hw,
+        )
+        .unwrap();
+        let mut fused = TensorParallelSession::new(cfg, spec.clone(), plan, hw).unwrap();
+        let mut rng = Rng::new(0x7E54);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+
+        let wants: Vec<ModelOutput> =
+            xs.iter().map(|x| solo.infer(x).unwrap().outs.remove(0)).collect();
+        let refs: Vec<&Tensor4> = xs.iter().collect();
+        let ho = fused.infer_many(&refs).unwrap();
+        assert_eq!(ho.outs.len(), 3);
+        assert_eq!(fused.served(), 3);
+        for (g, w) in ho.outs.iter().zip(&wants) {
+            assert_eq!(g.features.data, w.features.data, "fused TP must re-split exactly");
+            assert_eq!(g.logits, w.logits);
+        }
+        // hop charges: 6 ring steps for the fused run vs 18 for 3 solos
+        let solo_legs: u64 = wants.iter().map(|w| w.metrics.xfer_legs).sum();
+        assert_eq!(ho.outs[0].metrics.xfer_legs, 6);
+        assert_eq!(solo_legs, 18);
+        let solo_xfer: f64 = wants.iter().map(|w| w.metrics.xfer_ns).sum();
+        assert!(
+            ho.outs[0].metrics.xfer_ns < solo_xfer,
+            "fused gathers {} ns must undercut {} ns of solo gathers",
+            ho.outs[0].metrics.xfer_ns,
+            solo_xfer
+        );
+    }
+
+    #[test]
+    fn auto_planner_uses_extra_chips_only_when_they_help() {
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(23);
+        let p1 = plan_auto(&cfg, &spec, 1, &hw).unwrap();
+        assert_eq!(p1.chips(), 1);
+        assert_eq!(p1.stages.len(), 1);
+        assert_eq!(p1.stages[0].ways, 1);
+        let p3 = plan_auto(&cfg, &spec, 3, &hw).unwrap();
+        assert!(p3.chips() <= 3);
+        // the DP always considers the 1-chip plan, so more chips can
+        // never make the bottleneck worse
+        assert!(p3.est_interval_ns() <= p1.est_interval_ns() + 1e-9);
+        // the plan is servable and exact
+        let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+        let mut sess = TensorParallelSession::new(cfg, spec.clone(), p3, hw).unwrap();
+        let x = spec.random_input(&mut Rng::new(0x7E55));
+        let want = oracle.infer(&x).unwrap();
+        let got = sess.infer(&x).unwrap();
+        assert_eq!(got.outs[0].features.data, want.features.data);
+        assert_eq!(got.outs[0].logits, want.logits);
+    }
+
+    #[test]
+    fn hybrid_plan_manual_validates_tiling_and_capacity() {
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(29);
+        // gaps, overlaps, short cover, zero ways
+        assert!(HybridPlan::manual(&spec, &cfg, &[(0, 2, 1)]).is_err());
+        assert!(HybridPlan::manual(&spec, &cfg, &[(0, 2, 1), (1, 3, 1)]).is_err());
+        assert!(HybridPlan::manual(&spec, &cfg, &[(1, 3, 1)]).is_err());
+        assert!(HybridPlan::manual(&spec, &cfg, &[(0, 3, 0)]).is_err());
+        // splitting wider than KN is rejected
+        assert!(HybridPlan::manual(&spec, &cfg, &[(0, 3, 5)]).is_err());
+        // per-chip capacity on a multi-layer TP stage
+        let small = small_chip();
+        let err = HybridPlan::manual(&spec, &small, &[(0, 3, 2)]).unwrap_err();
+        assert!(format!("{err:#}").contains("chip 0"), "{err:#}");
+        assert!(HybridPlan::manual(&spec, &small, &[(0, 1, 1), (1, 2, 2), (2, 3, 1)]).is_ok());
+    }
+
+    #[test]
+    fn tensor_parallel_session_rejects_a_lossy_link() {
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(31);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 2)]).unwrap();
+        let hw = HwParams { link_ber: 0.01, ..HwParams::default() };
+        let err = TensorParallelSession::new(cfg, spec, plan, hw).unwrap_err();
+        assert!(format!("{err:#}").contains("protected link"), "{err:#}");
+    }
+
+    #[test]
+    fn gather_and_broadcast_cost_model() {
+        let hw = HwParams::default();
+        // a single chip gathers nothing
+        assert_eq!(allgather_cost(&[100], &hw), (0, 0.0, 0));
+        // 2-chip ring: one step bounded by the larger chunk
+        let (bytes, ns, legs) = allgather_cost(&[100, 60], &hw);
+        assert_eq!(bytes, 160);
+        assert_eq!(legs, 1);
+        assert!((ns - (hw.link_latency_ns + 100.0 / hw.link_bytes_per_ns)).abs() < 1e-12);
+        // 4-chip ring: 3 steps, every chunk crosses 3 links
+        let (bytes, ns, legs) = allgather_cost(&[50, 50, 50, 50], &hw);
+        assert_eq!(bytes, 3 * 200);
+        assert_eq!(legs, 3);
+        assert!((ns - 3.0 * (hw.link_latency_ns + 50.0 / hw.link_bytes_per_ns)).abs() < 1e-12);
+        // broadcast to one receiver IS the pipeline leg
+        let (b1, n1) = broadcast_cost(4096, 1, &hw);
+        assert_eq!(b1, 4096);
+        assert_eq!(n1, xfer_cost_ns(4096, &hw));
+        // ... and to three receivers, three serialized copies
+        let (b3, n3) = broadcast_cost(4096, 3, &hw);
+        assert_eq!(b3, 3 * 4096);
+        assert!(n3 > n1);
+        // SECDED wire overhead reaches the gather model
+        let ecc = HwParams { link_ecc: true, ..HwParams::default() };
+        let (eb, ens, _) = allgather_cost(&[64, 64], &ecc);
+        assert_eq!(eb, 2 * 72);
+        assert!(ens > allgather_cost(&[64, 64], &hw).1);
+    }
+
+    #[test]
+    fn concat_channels_inverts_the_split() {
+        let mut rng = Rng::new(0x7E56);
+        let mut full = Tensor4::zeros(2, 5, 3, 3);
+        full.fill_random_ints(&mut rng, 0, 100);
+        // split channels [0,2) and [2,5), then re-concatenate
+        let hw = 9usize;
+        let take = |c0: usize, c1: usize| {
+            let mut t = Tensor4::zeros(2, c1 - c0, 3, 3);
+            for n in 0..2 {
+                for (ci, c) in (c0..c1).enumerate() {
+                    for i in 0..hw {
+                        t.data[(n * (c1 - c0) + ci) * hw + i] =
+                            full.data[(n * 5 + c) * hw + i];
+                    }
+                }
+            }
+            t
+        };
+        let back = concat_channels(&[take(0, 2), take(2, 5)]);
+        assert_eq!(back.data, full.data);
+        assert_eq!(back.shape(), full.shape());
+    }
+}

@@ -69,7 +69,46 @@
 //!   in either mode: `Replicated` (a resident replica per worker over a
 //!   CMA slice, with a queue-depth-aware micro-batcher) or `Pipelined`
 //!   (workers are shard *stages* connected by channels, so shard k
-//!   computes request i+1 while shard k+1 computes request i).
+//!   computes request i+1 while shard k+1 computes request i).  The
+//!   pipelined head stage runs the same micro-batcher: a fused tensor
+//!   crosses each boundary as **one** transfer, amortizing the per-leg
+//!   hop latency over the batch.
+//!
+//! ## Tensor parallelism: layers bigger than one chip
+//!
+//! Layer-boundary sharding cannot help when a *single* layer's weight
+//! registers exceed one chip — [`coordinator::sharding::ShardPlan`]
+//! rejects that case outright.  [`coordinator::tensor_parallel`] extends
+//! the paper's Combined-Stationary KN unrolling (§III-C) *across* chips:
+//!
+//! - [`coordinator::tensor_parallel::TensorPlan`] — one layer's KN
+//!   filters cut into contiguous per-chip slices; the footprint is
+//!   linear in the slice width, so near-equal slices are balanced by
+//!   construction and each is checked against
+//!   [`coordinator::accelerator::ChipConfig::wreg_capacity`].
+//! - [`coordinator::tensor_parallel::TensorParallelSession`] — serves a
+//!   [`coordinator::tensor_parallel::HybridPlan`], a pipeline of
+//!   tensor-parallel groups (`ways = 1` stages are plain shards).  Every
+//!   split layer computes per-slice partial feature maps on the
+//!   [`coordinator::session::ChipSession::run_layer_raw`] stage
+//!   primitive, ring-all-gathers them (scale maxima, then the quantized
+//!   partials) over the link model into `ChipMetrics::{xfer_bytes,
+//!   xfer_ns, xfer_legs}`, and requantizes the gathered tensor through
+//!   the exact code the single chip runs — so KN-split serving is
+//!   **byte-identical** to the single-chip oracle and register writes
+//!   are conserved across slices (every filter loads once, somewhere).
+//! - [`coordinator::tensor_parallel::plan_auto`] — the latency-balanced
+//!   auto-planner: per-layer latencies are *simulated* at candidate
+//!   split widths (costs are value-independent, so one synthetic request
+//!   prices a width exactly), then a DP over contiguous stage cuts and
+//!   per-stage widths minimizes the bottleneck stage for a target chip
+//!   count.  [`coordinator::sharding::ShardPlan::partition_weighted`] is
+//!   the same latency objective restricted to pure layer-boundary cuts.
+//!
+//! CLI: `fat plan --chips N` (profile + plan tables), `fat resnet --auto
+//! --chips N` (serve + bit-exactness/conservation self-checks), `fat
+//! serve --mode pipelined --max-batch B`.  See
+//! `examples/tensor_parallel.rs` and `benches/tensor_parallel.rs`.
 //!
 //! ## Compute fidelity: bit-serial execution vs exact ledger replay
 //!
@@ -133,6 +172,12 @@
 //! - [`mapping::schemes::HwParams::link_ber`] — the sharded stack's extra
 //!   error source: every pipeline boundary flips bits of the transported
 //!   quantized activations at the link's bit-error rate.
+//! - [`mapping::schemes::HwParams::link_ecc`] — SECDED(72,64) on the
+//!   link: each receiving stage corrects single-bit flips per 64-bit
+//!   flit, at +12.5% wire bytes charged on every transfer leg
+//!   ([`mapping::schemes::HwParams::wire_bytes`]).  `fat reliability
+//!   --link-ecc` sweeps the protected link against the raw one — the
+//!   accuracy-vs-overhead trade-off of ECC on a lossy interconnect.
 //! - [`coordinator::reliability::sweep_model`] — the model-scale sweep:
 //!   one resident model (single chip, N-replica pool, or N-shard
 //!   pipeline), loaded once and re-armed per BER point, a fixed input

@@ -5,8 +5,11 @@ use fat_imc::config::FatConfig;
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
 use fat_imc::coordinator::model::ModelSpec;
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
-use fat_imc::coordinator::session::ChipSession;
+use fat_imc::coordinator::session::{wreg_footprint, ChipSession};
 use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
+use fat_imc::coordinator::tensor_parallel::{
+    plan_auto, profile_layers, HybridPlan, TensorParallelSession,
+};
 use fat_imc::error::Result;
 use fat_imc::mapping::schemes::{evaluate_all, HwParams};
 use fat_imc::nn::layers::TernaryFilter;
@@ -73,6 +76,7 @@ fn run(raw: &[String]) -> Result<()> {
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "resnet" => cmd_resnet(&args),
+        "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
         "reliability" => cmd_reliability(&args),
         other => {
@@ -244,9 +248,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_reliability(args: &Args) -> Result<()> {
     use fat_imc::coordinator::reliability::{ber_str, default_ber_grid, sweep_model, SweepConfig};
     args.allow(&[
-        "bers", "link-bers", "shards", "workers", "requests", "seed", "batch", "input",
-        "scale", "sparsity", "classes",
+        "bers", "link-bers", "link-ecc", "shards", "workers", "requests", "seed", "batch",
+        "input", "scale", "sparsity", "classes",
     ])?;
+    let link_ecc = args.get_bool("link-ecc");
     let shards = args.get_usize("shards", 1)?;
     let workers = args.get_usize("workers", 1)?;
     let requests = args.get_usize("requests", 4)?.max(1);
@@ -282,9 +287,15 @@ fn cmd_reliability(args: &Args) -> Result<()> {
         "  sense BER grid: [{}]",
         bers.iter().map(|&b| ber_str(b)).collect::<Vec<_>>().join(", ")
     );
-    let sc = SweepConfig { bers, link_bers, shards, workers, requests, seed };
+    let sc = SweepConfig { bers, link_bers, link_ecc, shards, workers, requests, seed };
     let t0 = std::time::Instant::now();
     let rep = sweep_model(ChipConfig::fat(), &spec, &sc)?;
+    if link_ecc {
+        println!(
+            "SECDED link ECC armed: single-bit flips per 64-bit flit corrected at every \
+stage, +12.5% wire bytes per leg (compare a run without --link-ecc for the trade-off)"
+        );
+    }
     println!("{}", rep.table().render());
     println!("{}", rep.anchor_table().render());
     // the headline: what FAT's sense margin buys at model scale.  Quote
@@ -360,10 +371,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.get("workers").is_some() {
                 fat_imc::bail!("--workers applies to replicated mode; pipelined stages come from --shards");
             }
-            if args.get("max-batch").is_some() {
-                fat_imc::bail!("--max-batch applies to replicated mode");
-            }
-            ServingMode::Pipelined { shards }
+            ServingMode::Pipelined { shards, max_batch }
         }
         other => fat_imc::bail!("--mode must be replicated or pipelined, got `{other}`"),
     };
@@ -376,9 +384,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 workers (micro-batch window {max_batch})...",
             spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
         ),
-        ServingMode::Pipelined { shards } => println!(
+        ServingMode::Pipelined { shards, max_batch } => println!(
             "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) as a \
-{shards}-stage pipeline...",
+{shards}-stage pipeline (micro-batch window {max_batch})...",
             spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
         ),
     }
@@ -388,6 +396,17 @@ workers (micro-batch window {max_batch})...",
     }
     println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
     let server = InferenceServer::start_with(chip_cfg, mode, spec.clone())?;
+    // the server clamps the fusion window to what the register files can
+    // hold fused; report the effective value when it differs
+    match server.mode() {
+        ServingMode::Replicated { max_batch: eff, .. }
+        | ServingMode::Pipelined { max_batch: eff, .. }
+            if eff != max_batch =>
+        {
+            println!("  micro-batch window clamped to {eff} (register capacity)");
+        }
+        _ => {}
+    }
     let load_ns: f64 = server.loading_metrics().iter().map(|m| m.weight_load_ns).sum();
     let load_writes: u64 = server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
     println!(
@@ -413,11 +432,15 @@ workers (micro-batch window {max_batch})...",
     let wreg: u64 = responses.iter().map(|r| r.metrics.weight_reg_writes).sum();
     println!("  simulated compute time total: {:.1} us", sim_ns / 1e3);
     if let ServingMode::Pipelined { .. } = mode {
+        // fused responses share one run's metrics: divide by `batched` so
+        // the totals count each run's transfer exactly once
         let xfer_ns: f64 =
             responses.iter().map(|r| r.metrics.xfer_ns / r.batched as f64).sum();
-        let xfer_bytes: u64 = responses.iter().map(|r| r.metrics.xfer_bytes).sum();
+        let xfer_bytes: f64 =
+            responses.iter().map(|r| r.metrics.xfer_bytes as f64 / r.batched as f64).sum();
         println!(
-            "  inter-chip transfer total: {xfer_bytes} bytes, {:.1} us over the link",
+            "  inter-chip transfer total: {:.0} bytes, {:.1} us over the link",
+            xfer_bytes,
             xfer_ns / 1e3
         );
     }
@@ -436,9 +459,16 @@ naive path would have paid the {:.1} us load {n_req} more times",
 fn cmd_resnet(args: &Args) -> Result<()> {
     args.allow(&[
         "batch", "input", "scale", "sparsity", "layers", "requests", "classes", "shards",
-        "fidelity",
+        "fidelity", "auto", "chips", "wreg",
     ])?;
     let shards = args.get_usize("shards", 1)?;
+    let auto = args.get_bool("auto");
+    if auto && args.get("shards").is_some() {
+        fat_imc::bail!("--auto plans its own stages; drop --shards (use --chips for the budget)");
+    }
+    if !auto && args.get("chips").is_some() {
+        fat_imc::bail!("--chips needs --auto (manual pipelines use --shards)");
+    }
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
     let scale = args.get_usize("scale", 16)?;
@@ -463,7 +493,12 @@ fn cmd_resnet(args: &Args) -> Result<()> {
     if let Some(f) = fidelity_flag(args)? {
         chip_cfg.fidelity = f;
     }
+    chip_cfg.wreg_entries_per_cma = args.get_usize("wreg", chip_cfg.wreg_entries_per_cma)?;
     println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
+    if auto {
+        let chips = args.get_usize("chips", 2)?;
+        return run_resnet_auto(chip_cfg, spec, chips, n_req);
+    }
     if shards > 1 {
         return run_resnet_sharded(chip_cfg, spec, shards, n_req);
     }
@@ -634,5 +669,188 @@ issue-rate speedup (mean of {n_req} requests)",
             ratio(serial_ns / interval_ns)
         );
     }
+    Ok(())
+}
+
+/// Render a hybrid plan's stage table.
+fn print_hybrid_plan(spec: &ModelSpec, plan: &HybridPlan, chips_asked: usize) {
+    let mut t = Table::new(
+        &format!(
+            "auto hybrid plan: {chips_asked} chip(s) requested, {} used \
+({} register entries per chip)",
+            plan.chips(),
+            plan.capacity
+        ),
+        &["stage", "layers", "ways", "max chip wreg", "est latency (us)"],
+    );
+    for (i, st) in plan.stages.iter().enumerate() {
+        let (a, b) = st.range;
+        t.row(vec![
+            format!("{}", i + 1),
+            format!("{}..{}", spec.layers[a].layer.name, spec.layers[b - 1].layer.name),
+            format!("{}", st.ways),
+            format!("{}", st.chip_footprints.iter().max().expect("at least one chip")),
+            format!("{:.1}", st.est_ns / 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "estimated issue interval: {:.1} us (bottleneck stage)",
+        plan.est_interval_ns() / 1e3
+    );
+}
+
+/// `fat resnet --auto --chips N`: latency-balanced hybrid serving — the
+/// auto-planner composes layer-boundary stages with per-layer KN splits,
+/// loads the model across the chosen chips, and proves bit-exactness
+/// against a capacity-unlimited single-chip oracle.
+fn run_resnet_auto(cfg: ChipConfig, spec: ModelSpec, chips: usize, n_req: usize) -> Result<()> {
+    let hw = HwParams::default();
+    let plan = plan_auto(&cfg, &spec, chips, &hw)?;
+    print_hybrid_plan(&spec, &plan, chips);
+
+    let mut sess = TensorParallelSession::new(cfg, spec.clone(), plan, hw)?;
+    // the oracle: same array geometry, register capacity lifted (capacity
+    // is only an admission gate, never a value change)
+    let mut big = cfg;
+    big.wreg_entries_per_cma = big.wreg_entries_per_cma.max(1 << 20);
+    let mut oracle = ChipSession::new(big, spec.clone())?;
+    fat_imc::ensure!(
+        sess.loading_total().weight_reg_writes == oracle.loading().weight_reg_writes,
+        "register-write conservation broken across KN slices"
+    );
+    println!(
+        "register-write conservation: {} writes across all slices == unsplit total",
+        oracle.loading().weight_reg_writes
+    );
+
+    let mut rng = Rng::new(0xE2E);
+    let mut xfer_bytes = 0u64;
+    let mut xfer_ns = 0.0f64;
+    let mut interval_sum = 0.0f64;
+    let mut serial_sum = 0.0f64;
+    for i in 0..n_req {
+        let x = spec.random_input(&mut rng);
+        let ho = sess.infer(&x)?;
+        let want = oracle.infer(&x)?;
+        fat_imc::ensure!(
+            ho.outs[0].features.data == want.features.data && ho.outs[0].logits == want.logits,
+            "request {i}: hybrid output diverged from the single-chip oracle"
+        );
+        let m = &ho.outs[0].metrics;
+        xfer_bytes += m.xfer_bytes;
+        xfer_ns += m.xfer_ns;
+        interval_sum += ho.issue_interval_ns();
+        // the honest serial baseline is the oracle's measured latency: a
+        // TP stage's latency is its slowest slice + gather time, which
+        // no single chip pays, so summing hybrid stages would misstate it
+        serial_sum += want.metrics.latency_ns;
+        println!(
+            "  request {i}: {:.1} us compute, {:.2} us on the link ({} bytes over {} hops)",
+            m.compute_ns() / 1e3,
+            m.xfer_ns / 1e3,
+            m.xfer_bytes,
+            m.xfer_legs
+        );
+    }
+    println!(
+        "hybrid outputs bit-identical to the single-chip oracle across {n_req} requests"
+    );
+    println!(
+        "all-gather + boundary transfer total: {xfer_bytes} bytes, {:.2} us",
+        xfer_ns / 1e3
+    );
+    if interval_sum > 0.0 {
+        println!(
+            "steady-state issue interval {:.1} us vs single-chip latency {:.1} us -> {} \
+issue-rate speedup (mean of {n_req} requests)",
+            interval_sum / n_req as f64 / 1e3,
+            serial_sum / n_req as f64 / 1e3,
+            ratio(serial_sum / interval_sum)
+        );
+    }
+    Ok(())
+}
+
+/// `fat plan`: profile per-layer latencies on the simulator, compare the
+/// footprint-balanced and latency-balanced pure-pipeline cuts, and print
+/// the latency-balanced hybrid (shards x kn-splits) plan for a target
+/// chip count.
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.allow(&[
+        "chips", "wreg", "batch", "input", "scale", "sparsity", "layers", "classes",
+    ])?;
+    let chips = args.get_usize("chips", 2)?;
+    let batch = args.get_usize("batch", 1)?;
+    let input = args.get_usize("input", 16)?;
+    let scale = args.get_usize("scale", 16)?;
+    let sparsity = args.get_f64("sparsity", 0.7)?;
+    let classes = args.get_usize("classes", 10)?;
+    let geo = fat_imc::nn::resnet::resnet18_conv_layers_scaled(batch, input, scale);
+    let n_layers = args.get_usize("layers", geo.len())?;
+    if n_layers == 0 || n_layers > geo.len() {
+        fat_imc::bail!("--layers must be 1..={}", geo.len());
+    }
+    let head = if n_layers == geo.len() { Some(classes) } else { None };
+    let spec = ModelSpec::synthetic("resnet18", &geo[..n_layers], true, sparsity, 0xE2E, head);
+    let mut cfg = ChipConfig::fat();
+    cfg.wreg_entries_per_cma = args.get_usize("wreg", cfg.wreg_entries_per_cma)?;
+    let hw = HwParams::default();
+    let planner = cfg.planner();
+
+    // per-layer profile: register footprint, minimum feasible KN split,
+    // and the simulated per-chip latency at that width
+    let prof = profile_layers(&cfg, &spec, &hw)?;
+    let mut t = Table::new(
+        &format!(
+            "per-layer profile ({} register entries per chip)",
+            cfg.wreg_capacity()
+        ),
+        &["layer", "KN", "wreg", "min ways", "latency (us)"],
+    );
+    let mut lat_weights = Vec::with_capacity(prof.len());
+    for (ls, &(ways, ns)) in spec.layers.iter().zip(&prof) {
+        let fp = wreg_footprint(&ls.layer, &planner);
+        lat_weights.push(ns.max(1.0) as u64);
+        t.row(vec![
+            ls.layer.name.into(),
+            format!("{}", ls.layer.kn),
+            format!("{fp}"),
+            format!("{ways}"),
+            format!("{:.1}", ns / 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // the two pure-pipeline objectives, where layer-boundary sharding is
+    // feasible at all
+    if chips <= spec.layers.len() {
+        let by_fp = ShardPlan::partition(&spec, &cfg, chips);
+        let by_lat = ShardPlan::partition_weighted(&spec, &cfg, chips, &lat_weights);
+        match (by_fp, by_lat) {
+            (Ok(fp_plan), Ok(lat_plan)) => {
+                let stage_ns = |r: &(usize, usize)| -> f64 {
+                    prof[r.0..r.1].iter().map(|&(_, ns)| ns).sum()
+                };
+                let b_fp =
+                    fp_plan.ranges.iter().map(stage_ns).fold(0.0, f64::max);
+                let b_lat =
+                    lat_plan.ranges.iter().map(stage_ns).fold(0.0, f64::max);
+                println!(
+                    "pure pipeline over {chips} chips: footprint-balanced bottleneck \
+{:.1} us vs latency-balanced {:.1} us",
+                    b_fp / 1e3,
+                    b_lat / 1e3
+                );
+            }
+            _ => println!(
+                "pure layer-boundary pipeline infeasible at {chips} chip(s) (oversized \
+layer or capacity) — the hybrid plan below is required"
+            ),
+        }
+    }
+
+    let plan = plan_auto(&cfg, &spec, chips, &hw)?;
+    print_hybrid_plan(&spec, &plan, chips);
     Ok(())
 }

@@ -25,6 +25,18 @@ impl Default for PlannerConfig {
     }
 }
 
+impl PlannerConfig {
+    /// Column tiles a layer's Img2Col matrix occupies (its `N*I` columns
+    /// cut into MW-wide groups).  Every column tile keeps its own copy of
+    /// the SACU weight registers, so this is the multiplier in a layer's
+    /// resident register footprint — and it is independent of KN, which is
+    /// what makes a filter-dimension (KN) split's footprint exactly linear
+    /// in the slice width (see `coordinator::tensor_parallel`).
+    pub fn col_tiles(&self, layer: &ConvLayer) -> usize {
+        (layer.n * layer.i_dim()).div_ceil(self.mw)
+    }
+}
+
 /// One tile of the activation matrix assigned to a CMA at a given step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Assignment {
@@ -107,6 +119,18 @@ mod tests {
         assert_eq!(plan.j_tiles, 36);
         assert_eq!(plan.assignments.len(), 144);
         assert_eq!(plan.steps, 1);
+    }
+
+    #[test]
+    fn col_tiles_helper_matches_the_plan() {
+        let layer = resnet18_layer10();
+        let cfg = PlannerConfig::default();
+        let plan = GridPlan::plan(&layer, cfg);
+        assert_eq!(cfg.col_tiles(&layer), plan.col_tiles);
+        // independent of KN: slicing the filter dimension cannot change it
+        let mut sliced = layer;
+        sliced.kn = 7;
+        assert_eq!(cfg.col_tiles(&sliced), plan.col_tiles);
     }
 
     #[test]

@@ -78,6 +78,13 @@ pub struct HwParams {
     /// Root seed of the deterministic link-corruption streams; each
     /// pipeline stage derives its own stream from (seed, stage index).
     pub link_fault_seed: u64,
+    /// SECDED error correction on the link: every 64-bit payload flit
+    /// carries 8 Hamming check bits (a (72,64) code), so single-bit flips
+    /// per flit are corrected at the receiver and only multi-flip flits
+    /// corrupt the payload — at a 12.5% wire overhead charged on every
+    /// transfer leg (see [`Self::wire_bytes`] and
+    /// `coordinator::session::QuantActivations::inject_link_faults`).
+    pub link_ecc: bool,
 }
 
 impl Default for HwParams {
@@ -93,6 +100,22 @@ impl Default for HwParams {
             link_latency_ns: 20.0,
             link_ber: 0.0,
             link_fault_seed: 0,
+            link_ecc: false,
+        }
+    }
+}
+
+impl HwParams {
+    /// Bytes a transfer leg actually moves for `payload` payload bytes:
+    /// with SECDED link ECC armed, every 64-bit flit (8 payload bytes)
+    /// carries one extra check byte — `ceil(payload / 8)` bytes of
+    /// overhead, 12.5% on flit-aligned payloads.  Without ECC the wire
+    /// carries the payload verbatim.
+    pub fn wire_bytes(&self, payload: u64) -> u64 {
+        if self.link_ecc {
+            payload + payload.div_ceil(8)
+        } else {
+            payload
         }
     }
 }
@@ -440,6 +463,18 @@ mod tests {
         let cs = costs.iter().find(|c| c.kind == MappingKind::Img2ColCs).unwrap();
         assert!(is.utilization > 0.85);
         assert!((cs.utilization - is.utilization / 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn link_ecc_charges_one_check_byte_per_flit() {
+        let mut hw = HwParams::default();
+        assert_eq!(hw.wire_bytes(64), 64, "no ECC, no overhead");
+        hw.link_ecc = true;
+        assert_eq!(hw.wire_bytes(64), 72, "8 flits -> 8 check bytes");
+        assert_eq!(hw.wire_bytes(0), 0);
+        assert_eq!(hw.wire_bytes(9), 9 + 2, "partial flits still pay a check byte");
+        // 12.5% on flit-aligned payloads
+        assert_eq!(hw.wire_bytes(4096), 4096 + 512);
     }
 
     #[test]

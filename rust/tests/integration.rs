@@ -246,6 +246,78 @@ fn cli_sharded_resnet_smoke() {
 }
 
 #[test]
+fn cli_plan_and_auto_smoke() {
+    // `fat plan` profiles the layers and prints the latency-balanced
+    // hybrid plan; `fat resnet --auto` serves it and self-checks
+    // bit-exactness + register-write conservation against the oracle
+    // (a divergence exits non-zero).
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args(["plan", "--input", "16", "--scale", "16", "--chips", "3"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "plan failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("per-layer profile"), "{text}");
+    assert!(text.contains("auto hybrid plan"), "{text}");
+    assert!(text.contains("estimated issue interval"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args([
+            "resnet", "--auto", "--chips", "2", "--input", "16", "--scale", "16",
+            "--requests", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resnet --auto failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("register-write conservation"), "{text}");
+    assert!(text.contains("bit-identical to the single-chip oracle"), "{text}");
+
+    // --auto and --shards are mutually exclusive; --chips needs --auto
+    let out = std::process::Command::new(exe)
+        .args(["resnet", "--auto", "--shards", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["resnet", "--chips", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_pipelined_batching_smoke() {
+    // the sharded micro-batcher from the CLI: pipelined mode now takes
+    // --max-batch and reports per-request metrics without deadlocking
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args([
+            "serve", "--mode", "pipelined", "--shards", "2", "--max-batch", "3",
+            "--requests", "4", "--input", "16", "--scale", "16",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "pipelined --max-batch serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("micro-batch window 3"), "{text}");
+    assert!(text.contains("inter-chip transfer total"), "{text}");
+}
+
+#[test]
 fn cli_reliability_smoke() {
     // `fat reliability` sweeps accuracy-vs-BER through the serving stack
     // and self-checks that the zero-BER point is bit-identical to the
@@ -314,6 +386,28 @@ fn cli_reliability_smoke() {
     assert!(!out.status.success(), "link BER without a pipeline must be rejected");
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("link"), "{err}");
+
+    // SECDED link ECC: accepted on a pipeline (and surfaced in the
+    // report), a clean error without one
+    let out = std::process::Command::new(exe)
+        .args([
+            "reliability", "--input", "8", "--scale", "64", "--requests", "1",
+            "--classes", "5", "--bers", "0,0", "--link-bers", "0,0.01",
+            "--shards", "2", "--link-ecc",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "ECC reliability failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("SECDED"));
+    let out = std::process::Command::new(exe)
+        .args(["reliability", "--bers", "0", "--link-ecc"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "link ECC without a pipeline must be rejected");
 }
 
 #[test]
