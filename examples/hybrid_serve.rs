@@ -1,0 +1,110 @@
+//! Hybrid serving demo: the auto-planner's (shards x kn-splits) plan
+//! served on the threaded execution fabric — every stage is a thread on
+//! the channel pipeline, and inside a tensor-parallel stage each KN
+//! slice chip computes its partials on its own thread before the
+//! all-gather.  A deliberately small chip generation forces the planner
+//! to actually split layers, and every response is asserted
+//! bit-identical to the inline `TensorParallelSession` running the same
+//! plan (the refactor contract: one fabric, byte-equal paths).
+//!
+//!     cargo run --release --example hybrid_serve [requests] [chips]
+
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::server::{InferenceServer, Request, ServingMode};
+use fat_imc::coordinator::session::{wreg_footprint, ModelSpec};
+use fat_imc::coordinator::tensor_parallel::{plan_auto, TensorParallelSession};
+use fat_imc::mapping::schemes::HwParams;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::testutil::Rng;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let n_req: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(8).max(1);
+    let min_chips: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2).max(2);
+
+    let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 0x4B5E, 10);
+    let hw = HwParams::default();
+
+    // Shrink the register files until the largest layer overflows one
+    // chip: the auto plan then *must* contain a tensor-parallel stage,
+    // so the demo exercises the threaded slice fan-out, not just the
+    // plain pipeline.
+    let planner_probe = ChipConfig::fat().planner();
+    let biggest = spec
+        .layers
+        .iter()
+        .map(|ls| wreg_footprint(&ls.layer, &planner_probe))
+        .max()
+        .expect("at least one layer");
+    let mut cfg = ChipConfig::fat();
+    cfg.wreg_entries_per_cma = ((biggest * 60 / 100) as usize).div_ceil(cfg.cmas).max(1);
+    println!(
+        "== {}: largest layer needs {biggest} register entries, chip holds {} ==",
+        spec.name,
+        cfg.wreg_capacity()
+    );
+
+    // smallest budget >= min_chips that admits a plan (an oversized layer
+    // raises the floor; mirror the tensor_parallel example's search)
+    let (chips, plan) = (min_chips..=16)
+        .find_map(|c| plan_auto(&cfg, &spec, c, &hw).ok().map(|p| (c, p)))
+        .expect("a hybrid plan within 16 chips");
+    let tp_stages = plan.stages.iter().filter(|st| st.ways > 1).count();
+    println!(
+        "auto plan at a {chips}-chip budget: {} stage(s) over {} chip(s), {tp_stages} \
+tensor-parallel",
+        plan.stages.len(),
+        plan.chips()
+    );
+    assert!(tp_stages > 0, "the shrunken chip must force at least one KN split");
+
+    // The inline session is the reference: same plan, same chips, no
+    // threads.  Byte-identity with it is the fabric's contract.
+    let mut inline_sess =
+        TensorParallelSession::new(cfg, spec.clone(), plan.clone(), hw).expect("plan fits");
+    let mut rng = Rng::new(0x4B5F);
+    let xs: Vec<Tensor4> = (0..n_req).map(|_| spec.random_input(&mut rng)).collect();
+    let wants: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let mut ho = inline_sess.infer(x).expect("inline inference");
+            ho.outs.remove(0)
+        })
+        .collect();
+
+    let server = InferenceServer::start_with_hw(
+        cfg,
+        ServingMode::Hybrid { plan, max_batch: 1 },
+        spec.clone(),
+        hw,
+    )
+    .expect("hybrid server starts");
+    let t0 = std::time::Instant::now();
+    for (id, x) in xs.iter().enumerate() {
+        server.submit(Request { id: id as u64, x: x.clone() }).expect("submit");
+    }
+    let mut responses = server
+        .collect_timeout(n_req, std::time::Duration::from_secs(600))
+        .expect("all submitted requests must come back");
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    responses.sort_by_key(|r| r.id);
+    for (r, want) in responses.iter().zip(&wants) {
+        assert_eq!(r.features.data, want.features.data, "features diverged on {}", r.id);
+        assert_eq!(r.logits, want.logits, "logits diverged on {}", r.id);
+        assert_eq!(r.metrics, want.metrics, "simulated metrics diverged on {}", r.id);
+    }
+    println!(
+        "  {n_req} requests in {wall:.3}s ({:.1} req/s), every response bit-identical \
+(outputs AND metrics) to the inline session",
+        n_req as f64 / wall
+    );
+    println!(
+        "  per request: {:.1} us simulated compute, {} bytes over {} link hops",
+        wants[0].metrics.latency_ns / 1e3,
+        wants[0].metrics.xfer_bytes,
+        wants[0].metrics.xfer_legs
+    );
+    println!("hybrid_serve OK");
+}

@@ -1,0 +1,141 @@
+//! Hybrid serving bench: the threaded execution fabric vs the inline
+//! sessions it subsumed, at an equal chip count.
+//!
+//! Three claims are gated: (1) `ServingMode::Hybrid` responses are
+//! bit-identical — outputs *and* simulated metrics — to the inline
+//! `TensorParallelSession` running the same auto plan; (2) on a
+//! multi-core host, threading the stages (and the TP slices inside each
+//! stage) beats serving the same requests inline, because stage N of
+//! request i overlaps stage N-1 of request i+1; (3) the plain pipelined
+//! server at the same chip count also round-trips bit-identically, so
+//! the issue-rate comparison across the three paths is apples-to-apples.
+//! `finish()` writes `BENCH_hybrid_serving.json`.
+
+use std::time::{Duration, Instant};
+
+use fat_imc::bench_harness::{fmt_ns, BenchRun};
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::server::{InferenceServer, Request, Response, ServingMode};
+use fat_imc::coordinator::session::ModelSpec;
+use fat_imc::coordinator::tensor_parallel::{plan_auto, TensorParallelSession};
+use fat_imc::mapping::schemes::HwParams;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::{ratio, Table};
+use fat_imc::testutil::Rng;
+
+const REQUESTS: usize = 24;
+const CHIP_BUDGET: usize = 4;
+
+/// Push every request through a fresh server and return (wall seconds,
+/// responses sorted by request id).
+fn serve(
+    cfg: ChipConfig,
+    mode: ServingMode,
+    spec: &ModelSpec,
+    xs: &[Tensor4],
+) -> (f64, Vec<Response>) {
+    let server = InferenceServer::start_with(cfg, mode, spec.clone()).expect("server starts");
+    let t0 = Instant::now();
+    for (id, x) in xs.iter().enumerate() {
+        server.submit(Request { id: id as u64, x: x.clone() }).expect("submit");
+    }
+    let mut responses =
+        server.collect_timeout(xs.len(), Duration::from_secs(600)).expect("collect");
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    responses.sort_by_key(|r| r.id);
+    (wall, responses)
+}
+
+fn main() {
+    let mut run = BenchRun::new("hybrid_serving");
+    let cfg = ChipConfig::fat();
+    let hw = HwParams::default();
+    let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 0x4B01, 10);
+    let mut rng = Rng::new(0x4B02);
+    let xs: Vec<Tensor4> = (0..REQUESTS).map(|_| spec.random_input(&mut rng)).collect();
+
+    let plan = plan_auto(&cfg, &spec, CHIP_BUDGET, &hw).expect("auto plan");
+    let chips = plan.chips();
+    let stages = plan.stages.len();
+    println!("  auto plan: {stages} stage(s) over {chips} chip(s) (budget {CHIP_BUDGET})");
+
+    // ---- inline baseline: the same plan, one request at a time ----------
+    let mut inline_sess =
+        TensorParallelSession::new(cfg, spec.clone(), plan.clone(), hw).expect("session");
+    let t0 = Instant::now();
+    let inline_outs: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let mut ho = inline_sess.infer(x).expect("inline inference");
+            ho.outs.remove(0)
+        })
+        .collect();
+    let inline_wall = t0.elapsed().as_secs_f64();
+
+    // ---- threaded hybrid server on the identical plan -------------------
+    let (hybrid_wall, hybrid_rs) =
+        serve(cfg, ServingMode::Hybrid { plan, max_batch: 1 }, &spec, &xs);
+    run.check(
+        "hybrid responses are bit-identical to the inline session",
+        hybrid_rs.iter().zip(&inline_outs).all(|(r, o)| {
+            r.features.data == o.features.data && r.logits == o.logits && r.metrics == o.metrics
+        }),
+        "output or metrics divergence between threaded and inline".into(),
+    );
+    // threading only buys wall-clock time when the host has cores to run
+    // the stages on; a single-core runner gets a tolerance, not a gate
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (ok, what) = if cores >= 2 {
+        (hybrid_wall < inline_wall, "multi-core host")
+    } else {
+        (hybrid_wall < inline_wall * 1.10, "single-core host, 10% tolerance")
+    };
+    run.check(
+        "threaded hybrid serving beats the inline session's issue rate",
+        ok,
+        format!("{hybrid_wall:.3}s threaded vs {inline_wall:.3}s inline ({what}, {cores} core(s))"),
+    );
+
+    // ---- plain pipelined server at the same chip count ------------------
+    let (pipe_wall, pipe_rs) =
+        serve(cfg, ServingMode::Pipelined { shards: chips, max_batch: 1 }, &spec, &xs);
+    run.check(
+        "pipelined responses at equal chips are bit-identical too",
+        pipe_rs
+            .iter()
+            .zip(&inline_outs)
+            .all(|(r, o)| r.features.data == o.features.data && r.logits == o.logits),
+        "pipelined outputs diverged".into(),
+    );
+
+    let mut table = Table::new(
+        &format!("issue rate over {REQUESTS} requests, {chips} chip(s) each (host time)"),
+        &["config", "threads", "wall", "req/s", "speedup vs inline"],
+    );
+    for (name, threads, wall) in [
+        ("inline TensorParallelSession", 1, inline_wall),
+        ("hybrid server (stage + TP slice threads)", chips, hybrid_wall),
+        ("pipelined server (stage threads)", chips, pipe_wall),
+    ] {
+        table.row(vec![
+            name.into(),
+            format!("{threads}"),
+            format!("{:.3} s", wall),
+            format!("{:.1}", REQUESTS as f64 / wall),
+            ratio(inline_wall / wall),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- host-time color: one inline request vs its simulated latency ---
+    let m = run.time("inline hybrid infer, host time", || {
+        inline_sess.infer(&xs[0]).expect("inline inference")
+    });
+    println!(
+        "  one request: {} host vs {} simulated",
+        m.human(),
+        fmt_ns(inline_outs[0].metrics.latency_ns)
+    );
+    run.finish();
+}

@@ -8,9 +8,10 @@
 //!   infer    --sparsity 0.8 --layer 10 [--baseline] [--config f]
 //!   map      --layer 10          Table VII/VIII mapping sweep for a layer
 //!   verify   [--artifacts dir]   simulator vs PJRT cross-check
-//!   resnet   --input 16 --scale 16 --requests 4 [--shards 2 | --auto --chips 4]
+//!   resnet   --input 16 --scale 16 --requests 4 [--shards 2 | --auto --chips 4 [--serve]]
 //!   plan     --chips 4 [--wreg 256]  latency-balanced hybrid auto-plan
 //!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2 --max-batch 4]
+//!                                     [--mode hybrid --chips 4 --max-batch 4]
 //! ```
 
 use std::collections::HashMap;
@@ -148,6 +149,10 @@ COMMANDS:
                            the link; self-checks bit-exactness and
                            register-write conservation vs the oracle
       --chips <n>          chip budget for --auto (default 2)
+      --serve              after the inline --auto proof, replay the same
+                           plan through the threaded hybrid server (stage
+                           threads + in-stage TP slice threads) and check
+                           bit-identity against the oracle again
       --wreg <n>           override register entries per CMA (shrink to
                            force sharding/splitting demos)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
@@ -164,13 +169,19 @@ COMMANDS:
                            CMA slice and serves model-level requests
       --requests <n>       requests to push (default 16)
       --workers <n>        worker threads (default 4, replicated mode)
-      --mode <m>           replicated | pipelined (default replicated)
+      --mode <m>           replicated | pipelined | hybrid (default
+                           replicated); hybrid runs the latency-balanced
+                           auto-plan for --chips chips on the stage fabric,
+                           with each TP group's slices computing on their
+                           own threads
       --shards <n>         pipeline stages in pipelined mode (default 2)
+      --chips <n>          chip budget for hybrid mode's auto-planner
+                           (default 2)
       --max-batch <n>      micro-batch window per dequeue (default 1 = no
-                           fusion); in pipelined mode the head stage
-                           fuses, the fused tensor crosses each boundary
-                           as one transfer, and the per-leg hop latency
-                           amortizes over the batch
+                           fusion); in pipelined/hybrid mode the head
+                           stage fuses, the fused tensor crosses each
+                           boundary as one transfer, and the per-leg hop
+                           latency amortizes over the batch
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model

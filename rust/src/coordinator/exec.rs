@@ -1,0 +1,680 @@
+//! The unified execution fabric every serving path runs on.
+//!
+//! Before this layer existed the crate had three near-copies of the same
+//! stage-walking code: [`super::sharding::PipelineSession`] walked plain
+//! shards inline, [`super::tensor_parallel::TensorParallelSession`] walked
+//! shards *and* KN-split groups inline (slices sequentially!), and
+//! [`super::server::InferenceServer`] re-implemented the walk once more
+//! across worker threads — each with its own copy of the boundary-leg
+//! charging, the fault-seed derivation, and the micro-batch drain.  This
+//! module is the single implementation they all delegate to:
+//!
+//! - [`StagePlan`] describes one pipeline stage — a plain shard's
+//!   sub-model, or a tensor-parallel group's `layers x slices` grid of
+//!   single-layer sub-models — and [`StagePlan::build`] loads it into a
+//!   [`StageRunner`] holding the resident [`ChipSession`]s.
+//! - [`StageRunner::run`] advances quantized activations through one
+//!   stage.  A `Tp` stage fans its slice chips out onto **scoped threads**
+//!   (the chips are independent hardware; the simulator now computes them
+//!   concurrently too), joins in slice-index order so metric folds and
+//!   the channel concat stay deterministic, and charges the ring
+//!   all-gathers exactly as the inline path always has.
+//! - [`run_stages`] is the inline walk (boundary legs via
+//!   [`charge_boundary_leg`], optional link corruption) shared by both
+//!   session facades; the threaded channel fabric in `server.rs` runs the
+//!   same per-stage code with one thread per stage.
+//! - [`stage_fault`] / [`link_rng_for_stage`] are the one derivation of
+//!   per-(worker, stage) fault seeds and link-corruption streams, so a
+//!   corruption case reproduces identically on every path.
+//! - [`drain_batch`] / [`clamp_batch_window`] / [`ensure_fused_capacity`]
+//!   are the shared micro-batcher pieces.
+//!
+//! Byte-identity is the refactor contract: every helper here reproduces
+//! the exact arithmetic (and charge order) of the code it replaced, and
+//! the serving test suites pin outputs *and* full [`ChipMetrics`] across
+//! the paths.
+
+use std::sync::mpsc;
+
+use crate::coordinator::accelerator::{ChipConfig, SenseFault};
+use crate::coordinator::metrics::ChipMetrics;
+use crate::coordinator::model::ModelSpec;
+use crate::coordinator::session::{
+    batched_wreg_footprint, finalize_outputs, requantize_requests, ChipSession, ModelOutput,
+    QuantActivations,
+};
+use crate::coordinator::sharding::ShardPlan;
+use crate::coordinator::tensor_parallel::{
+    allgather_cost, broadcast_cost, concat_channels, HybridPlan,
+};
+use crate::error::{ensure, Result};
+use crate::mapping::schemes::HwParams;
+use crate::nn::tensor::Tensor4;
+use crate::testutil::{seed_mix, Rng};
+
+/// Derive stage (or worker) `index`'s sensing-fault arming from the base
+/// config: same BER, a seed mixed with the index so replicas and stages
+/// decorrelate.  This is THE derivation — the replicated pool, the
+/// pipelined server, and `PipelineSession` (construction and re-arming)
+/// all call it, so a sweep reproduces identically on every path.
+pub fn stage_fault(base: Option<SenseFault>, index: usize) -> Option<SenseFault> {
+    base.map(|f| SenseFault { ber: f.ber, seed: seed_mix(f.seed, index as u64) })
+}
+
+/// The deterministic link-corruption stream for the leg INTO stage
+/// `stage` (so stage 0 never has one), rooted at the link's fault seed.
+pub fn link_rng_for_stage(seed: u64, stage: usize) -> Rng {
+    Rng::new(seed_mix(seed, stage as u64))
+}
+
+/// Charge one inter-stage boundary leg into `metrics` and return its
+/// latency: the previous stage's output chip feeds every chip of the
+/// receiving stage ([`broadcast_cost`]).  At `ways = 1` this is exactly
+/// the plain pipeline's `wire_bytes` + [`super::sharding::xfer_cost_ns`]
+/// charge, which is what keeps the hybrid fabric byte-identical to the
+/// layer pipeline on all-single-stage plans.
+pub fn charge_boundary_leg(
+    metrics: &mut ChipMetrics,
+    payload: u64,
+    ways: usize,
+    hw: &HwParams,
+) -> f64 {
+    let (bytes, leg) = broadcast_cost(payload, ways, hw);
+    metrics.xfer_bytes += bytes;
+    metrics.xfer_ns += leg;
+    metrics.latency_ns += leg;
+    metrics.xfer_legs += 1;
+    leg
+}
+
+/// Charge a ring all-gather of per-chip `chunks` into `metrics`
+/// ([`allgather_cost`]: `K - 1` hop-latency steps, every chunk crossing
+/// `K - 1` links).
+pub fn charge_gather(metrics: &mut ChipMetrics, chunks: &[u64], hw: &HwParams) {
+    let (bytes, ns, legs) = allgather_cost(chunks, hw);
+    metrics.xfer_bytes += bytes;
+    metrics.xfer_ns += ns;
+    metrics.latency_ns += ns;
+    metrics.xfer_legs += legs;
+}
+
+/// Queue-depth-aware micro-batch drain: block for one item, then take
+/// whatever else is already queued (up to `max_batch`) into the same
+/// batch.  `None` when the channel is closed and drained — the worker's
+/// signal to exit.  Every serving worker loop (replicated, pipelined,
+/// hybrid) drains through this one helper.
+pub fn drain_batch<T>(rx: &mpsc::Receiver<T>, max_batch: usize) -> Option<Vec<T>> {
+    let Ok(first) = rx.recv() else { return None };
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// One resident layer of a tensor-parallel group: `ways` single-layer
+/// slice sessions, chip `c` holding filters `slices[c]`.
+pub struct TpLayer {
+    pub slices: Vec<ChipSession>,
+}
+
+/// Plan-side description of one pipeline stage, ready to load.
+pub enum StagePlan {
+    /// A contiguous multi-layer shard resident on one chip.
+    Shard {
+        spec: ModelSpec,
+        /// Fault arming for this stage's chip (already stage-derived
+        /// where the caller wants decorrelation).
+        fault: Option<SenseFault>,
+    },
+    /// Every layer of the range KN-split across the same chips:
+    /// `layer_slices[l][c]` is the single-layer sub-model chip `c` keeps
+    /// resident for layer `l`.
+    TpGroup {
+        layer_slices: Vec<Vec<ModelSpec>>,
+        fault: Option<SenseFault>,
+    },
+}
+
+impl StagePlan {
+    /// Load the stage onto chips of configuration `cfg` (each session
+    /// pays its one-time register load here).
+    pub fn build(self, cfg: ChipConfig) -> Result<StageRunner> {
+        match self {
+            StagePlan::Shard { spec, fault } => {
+                let mut stage_cfg = cfg;
+                stage_cfg.fault = fault;
+                Ok(StageRunner::Single(ChipSession::new(stage_cfg, spec)?))
+            }
+            StagePlan::TpGroup { layer_slices, fault } => {
+                ensure!(
+                    layer_slices.iter().all(|row| row.len() > 1),
+                    "a TP group needs at least two slices per layer (ways = 1 is a Shard)"
+                );
+                let mut stage_cfg = cfg;
+                stage_cfg.fault = fault;
+                let mut layers = Vec::with_capacity(layer_slices.len());
+                for row in layer_slices {
+                    let mut slices = Vec::with_capacity(row.len());
+                    for sub in row {
+                        slices.push(ChipSession::new(stage_cfg, sub)?);
+                    }
+                    layers.push(TpLayer { slices });
+                }
+                ensure!(!layers.is_empty(), "a TP group needs at least one layer");
+                Ok(StageRunner::Tp { layers })
+            }
+        }
+    }
+}
+
+/// The stage plans of a layer-boundary [`ShardPlan`]: one shard sub-model
+/// per stage, each with its own decorrelated fault seed (the derivation
+/// `PipelineSession` and the pipelined server have always shared).
+pub fn shard_stage_plans(
+    spec: &ModelSpec,
+    plan: &ShardPlan,
+    base_fault: Option<SenseFault>,
+) -> Vec<StagePlan> {
+    (0..plan.shards())
+        .map(|i| StagePlan::Shard {
+            spec: plan.subspec(spec, i),
+            fault: stage_fault(base_fault, i),
+        })
+        .collect()
+}
+
+/// The stage plans of a [`HybridPlan`]: `ways = 1` stages become plain
+/// shards, wider stages become TP groups of single-layer slice specs.
+/// Validates that the plan tiles the model's layers.  TP chips share the
+/// base fault arming unchanged — the tensor-parallel path has never
+/// decorrelated within a group (its link is protected and the session
+/// rejects lossy links before any fault can ride one).
+pub fn hybrid_stage_plans(
+    spec: &ModelSpec,
+    plan: &HybridPlan,
+    fault: Option<SenseFault>,
+) -> Result<Vec<StagePlan>> {
+    let total_layers: usize = plan.stages.iter().map(|s| s.range.1 - s.range.0).sum();
+    ensure!(
+        total_layers == spec.layers.len() && plan.stages.first().map(|s| s.range.0) == Some(0),
+        "plan does not tile `{}`'s {} layers",
+        spec.name,
+        spec.layers.len()
+    );
+    let mut out = Vec::with_capacity(plan.stages.len());
+    for st in &plan.stages {
+        let (a, b) = st.range;
+        if st.ways == 1 {
+            out.push(StagePlan::Shard {
+                spec: ModelSpec {
+                    name: format!("{}:stage{}", spec.name, out.len() + 1),
+                    layers: spec.layers[a..b].to_vec(),
+                    head: None,
+                },
+                fault,
+            });
+        } else {
+            let mut layer_slices = Vec::with_capacity(b - a);
+            for (li, ls) in spec.layers[a..b].iter().enumerate() {
+                let tp = &st.splits[li];
+                let row: Vec<ModelSpec> = tp
+                    .slices
+                    .iter()
+                    .map(|&(k0, k1)| ModelSpec {
+                        name: format!("{}:{}.kn{}-{}", spec.name, ls.layer.name, k0, k1),
+                        layers: vec![ls.slice_kn(k0, k1)],
+                        head: None,
+                    })
+                    .collect();
+                layer_slices.push(row);
+            }
+            out.push(StagePlan::TpGroup { layer_slices, fault });
+        }
+    }
+    Ok(out)
+}
+
+/// Build every stage of a plan list (each chip loads its registers once).
+pub fn build_stages(cfg: ChipConfig, plans: Vec<StagePlan>) -> Result<Vec<StageRunner>> {
+    plans.into_iter().map(|p| p.build(cfg)).collect()
+}
+
+/// One loaded pipeline stage: a plain shard, or a tensor-parallel group
+/// whose slice chips compute on their own threads.
+pub enum StageRunner {
+    /// `ways == 1`: a contiguous multi-layer shard on one chip — the
+    /// exact [`ChipSession`] stage primitive the plain pipeline uses.
+    Single(ChipSession),
+    /// `ways > 1`: every layer of the range KN-split across the same
+    /// `ways` chips, all-gathering after each layer.
+    Tp { layers: Vec<TpLayer> },
+}
+
+impl StageRunner {
+    /// Chips this stage spans (receivers of its incoming boundary leg).
+    pub fn ways(&self) -> usize {
+        match self {
+            StageRunner::Single(_) => 1,
+            StageRunner::Tp { layers } => layers[0].slices.len(),
+        }
+    }
+
+    /// The session requests enter through (also the stage's served
+    /// counter of record): the shard itself, or the group's first slice.
+    pub fn entry(&self) -> &ChipSession {
+        match self {
+            StageRunner::Single(s) => s,
+            StageRunner::Tp { layers } => &layers[0].slices[0],
+        }
+    }
+
+    /// Requests this stage has served.
+    pub fn served(&self) -> u64 {
+        self.entry().served()
+    }
+
+    /// One-time loading metrics summed over the stage's chips.
+    pub fn loading(&self) -> ChipMetrics {
+        match self {
+            StageRunner::Single(s) => *s.loading(),
+            StageRunner::Tp { layers } => {
+                let mut m = ChipMetrics::default();
+                for tl in layers {
+                    for s in &tl.slices {
+                        m.add(s.loading());
+                    }
+                }
+                m
+            }
+        }
+    }
+
+    /// (Re)arm or disarm sensing-fault injection on every chip of the
+    /// stage without reloading any registers.
+    pub fn set_fault(&mut self, fault: Option<SenseFault>) {
+        match self {
+            StageRunner::Single(s) => s.set_fault(fault),
+            StageRunner::Tp { layers } => {
+                for tl in layers {
+                    for s in &mut tl.slices {
+                        s.set_fault(fault);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The widest per-chip register footprint of this stage at fused
+    /// batch width `k` — what [`clamp_batch_window`] gates against.
+    pub fn fused_footprint(&self, planner: &crate::mapping::planner::PlannerConfig, k: usize) -> u64 {
+        match self {
+            StageRunner::Single(s) => batched_wreg_footprint(s.spec(), planner, k),
+            StageRunner::Tp { layers } => {
+                let ways = layers[0].slices.len();
+                (0..ways)
+                    .map(|c| {
+                        layers
+                            .iter()
+                            .map(|tl| batched_wreg_footprint(tl.slices[c].spec(), planner, k))
+                            .sum()
+                    })
+                    .max()
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Advance quantized activations through this stage.  A `Tp` stage
+    /// fans its slice chips out onto scoped threads.
+    pub fn run(
+        &mut self,
+        act: QuantActivations,
+        hw: &HwParams,
+    ) -> Result<(QuantActivations, ChipMetrics)> {
+        match self {
+            StageRunner::Single(sess) => sess.run_quantized(act),
+            StageRunner::Tp { layers } => run_tp_stage(layers, act, hw),
+        }
+    }
+
+    /// Dequantize (and classify, when the resident sub-model carries the
+    /// head) the stage's final activations.
+    pub fn finalize(&self, act: QuantActivations, metrics: ChipMetrics) -> Vec<ModelOutput> {
+        match self {
+            StageRunner::Single(s) => s.finalize(act, metrics),
+            StageRunner::Tp { .. } => finalize_outputs(None, act, metrics),
+        }
+    }
+}
+
+/// Advance a fused tensor through one tensor-parallel group: per layer,
+/// every slice chip computes its filters' partial feature map **on its
+/// own thread** (the chips are parallel hardware; joining in slice-index
+/// order keeps the metric folds and the channel concat deterministic),
+/// the per-request scale maxima circle the ring, the gathered tensor
+/// requantizes exactly like the single chip, and the quantized partials
+/// all-gather so every chip holds the next layer's full input.
+pub fn run_tp_stage(
+    layers: &mut [TpLayer],
+    mut act: QuantActivations,
+    hw: &HwParams,
+) -> Result<(QuantActivations, ChipMetrics)> {
+    let k_req = act.scales.len();
+    let mut m = ChipMetrics::default();
+    for tl in layers.iter_mut() {
+        let ways = tl.slices.len();
+        // fan out / fan in: each slice session is owned by exactly one
+        // thread, so its served counter (the fault-salt source) advances
+        // exactly as on the inline path
+        let results: Vec<Result<(Tensor4, ChipMetrics)>> = if ways == 1 {
+            vec![tl.slices[0].run_layer_raw(0, &act)]
+        } else {
+            std::thread::scope(|scope| {
+                let act = &act;
+                let handles: Vec<_> = tl
+                    .slices
+                    .iter_mut()
+                    .map(|s| scope.spawn(move || s.run_layer_raw(0, act)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("TP slice thread panicked"))
+                    .collect()
+            })
+        };
+        let mut parts = Vec::with_capacity(ways);
+        let mut ms = Vec::with_capacity(ways);
+        for r in results {
+            let (t, lm) = r?;
+            parts.push(t);
+            ms.push(lm);
+        }
+        m.absorb_parallel_chips(&ms);
+        // scale exchange: each chip's per-request maxima (4 bytes per
+        // fused request) circle the ring; max combines exactly, so
+        // every chip ends up with the oracle's calibration scale
+        charge_gather(&mut m, &vec![4 * k_req as u64; ways], hw);
+        // gather the partial maps along the channel axis and
+        // requantize per request — the same code (and bytes) as the
+        // single chip running the full layer
+        let full = concat_channels(&parts);
+        let q = requantize_requests(&full, &mut act.scales, &mut m);
+        // quantized payload all-gather: each chip ships its slice of
+        // channels once around the ring
+        let chunks: Vec<u64> = parts.iter().map(|p| p.data.len() as u64).collect();
+        charge_gather(&mut m, &chunks, hw);
+        act.q = q;
+    }
+    Ok((act, m))
+}
+
+/// The result of one staged run (possibly micro-batched).
+pub struct StagedRun {
+    /// Final quantized activations, ready for
+    /// [`finalize_outputs`] / [`StageRunner::finalize`].
+    pub act: QuantActivations,
+    /// Aggregate metrics: the entry charge the caller seeded, every
+    /// stage, and every boundary leg.
+    pub metrics: ChipMetrics,
+    /// Per-stage compute metrics (a TP stage's internal all-gathers
+    /// included; inter-stage boundary legs excluded).
+    pub stage_metrics: Vec<ChipMetrics>,
+    /// Inter-stage boundary legs, ns (`stages - 1` entries).
+    pub boundary_legs_ns: Vec<f64>,
+}
+
+/// The inline stage walk shared by both session facades: charge (and,
+/// when `link_rngs` is armed, corrupt) each boundary leg, then run the
+/// stage.  `link_rngs` is empty on protected/ideal links; when armed it
+/// holds one stream per receiving stage (`link_rngs[i - 1]` for the leg
+/// into stage `i`).
+pub fn run_stages(
+    stages: &mut [StageRunner],
+    mut act: QuantActivations,
+    mut metrics: ChipMetrics,
+    hw: &HwParams,
+    link_rngs: &mut [Rng],
+) -> Result<StagedRun> {
+    let mut stage_metrics = Vec::with_capacity(stages.len());
+    let mut boundary_legs_ns = Vec::with_capacity(stages.len().saturating_sub(1));
+    for (i, stage) in stages.iter_mut().enumerate() {
+        if i > 0 {
+            let leg = charge_boundary_leg(&mut metrics, act.wire_bytes(), stage.ways(), hw);
+            boundary_legs_ns.push(leg);
+            if !link_rngs.is_empty() {
+                act.inject_link_faults(hw.link_ber, hw.link_ecc, &mut link_rngs[i - 1]);
+            }
+        }
+        let (next, m) = stage.run(act, hw)?;
+        act = next;
+        metrics.add(&m);
+        stage_metrics.push(m);
+    }
+    Ok(StagedRun { act, metrics, stage_metrics, boundary_legs_ns })
+}
+
+/// Gate a fused batch of `k` against every chip of every stage before
+/// any stage runs (a mid-pipeline failure would leave the run
+/// half-served).
+pub fn ensure_fused_capacity(stages: &[StageRunner], cfg: &ChipConfig, k: usize) -> Result<()> {
+    let planner = cfg.planner();
+    let capacity = cfg.wreg_capacity();
+    for (si, st) in stages.iter().enumerate() {
+        match st {
+            StageRunner::Single(sess) => {
+                let fused = batched_wreg_footprint(sess.spec(), &planner, k);
+                ensure!(
+                    fused <= capacity,
+                    "a fused batch of {k} needs {fused} weight-register entries on \
+stage {si}'s chip but it holds {capacity}; lower the batch window"
+                );
+            }
+            StageRunner::Tp { layers } => {
+                let ways = layers[0].slices.len();
+                for c in 0..ways {
+                    let fused: u64 = layers
+                        .iter()
+                        .map(|tl| batched_wreg_footprint(tl.slices[c].spec(), &planner, k))
+                        .sum();
+                    ensure!(
+                        fused <= capacity,
+                        "a fused batch of {k} needs {fused} weight-register entries on \
+chip {c} of stage {si} but it holds {capacity}; lower the batch window"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Clamp a requested fusion window to the widest batch every chip of
+/// every stage can keep resident — the serving front-ends report the
+/// clamped window from `mode()` and never trip a mid-flight capacity
+/// check.
+pub fn clamp_batch_window(stages: &[StageRunner], cfg: &ChipConfig, requested: usize) -> usize {
+    let planner = cfg.planner();
+    let capacity = cfg.wreg_capacity();
+    let mut max_batch = requested;
+    while max_batch > 1
+        && stages.iter().any(|s| s.fused_footprint(&planner, max_batch) > capacity)
+    {
+        max_batch -= 1;
+    }
+    max_batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sharding::xfer_cost_ns;
+    use crate::nn::resnet::ConvLayer;
+
+    /// Three chained layers whose KN widths (8, 6, 4) admit 2/3/4-way
+    /// splits — the exec-layer twin of the tensor-parallel test model.
+    fn wide_kn(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "k1", n: 1, c: 3, h: 8, w: 8, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "k2", n: 1, c: 8, h: 8, w: 8, kn: 6, kh: 3, kw: 3, stride: 2, pad: 1 },
+            ConvLayer { name: "k3", n: 1, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ];
+        ModelSpec::synthetic("execkn", &geo, false, 0.5, seed, Some(5))
+    }
+
+    #[test]
+    fn fault_and_link_seed_derivations_match_the_legacy_sites() {
+        // ISSUE 6 satellite: the per-(worker, stage) seed derivation used
+        // to be copy-pasted at four sites (replicated workers, pipelined
+        // server stages, PipelineSession::new, PipelineSession::set_fault).
+        // Pin the shared helper to that exact derivation.
+        let base = SenseFault { ber: 0.25, seed: 0xFA11 };
+        for index in [0usize, 1, 2, 7, 63] {
+            let derived = stage_fault(Some(base), index).expect("armed stays armed");
+            assert_eq!(derived.ber, base.ber, "BER must pass through unchanged");
+            assert_eq!(
+                derived.seed,
+                seed_mix(base.seed, index as u64),
+                "stage {index} seed must be seed_mix(base, index)"
+            );
+        }
+        assert!(stage_fault(None, 3).is_none(), "disarmed stays disarmed");
+        // the link stream for stage i is Rng::new(seed_mix(seed, i)) —
+        // compare the first draws of the streams
+        for stage in [1usize, 2, 5] {
+            let mut a = link_rng_for_stage(0xC0DE, stage);
+            let mut b = Rng::new(seed_mix(0xC0DE, stage as u64));
+            for _ in 0..4 {
+                assert_eq!(a.next_u64(), b.next_u64(), "stage {stage} stream must match");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_leg_charge_matches_the_plain_pipeline_expression() {
+        // at ways = 1 the shared helper must charge the exact bytes and
+        // ns the pipeline's inline `wire_bytes` + `xfer_cost_ns` code
+        // charged — including under link ECC.
+        for hw in [HwParams::default(), HwParams { link_ecc: true, ..HwParams::default() }] {
+            let payload = 4321u64;
+            let mut got = ChipMetrics::default();
+            let leg = charge_boundary_leg(&mut got, payload, 1, &hw);
+            let mut want = ChipMetrics::default();
+            let bytes = hw.wire_bytes(payload);
+            let want_leg = xfer_cost_ns(bytes, &hw);
+            want.xfer_bytes += bytes;
+            want.xfer_ns += want_leg;
+            want.latency_ns += want_leg;
+            want.xfer_legs += 1;
+            assert_eq!(got, want, "ecc={}", hw.link_ecc);
+            assert_eq!(leg, want_leg);
+        }
+    }
+
+    #[test]
+    fn threaded_tp_stage_matches_the_sequential_reference_exactly() {
+        // the tentpole's byte-identity contract for the threading change:
+        // fanning slices onto scoped threads must reproduce the inline
+        // sequential loop bit for bit — activations, scales, AND metrics.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(37);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 3)]).unwrap();
+        let build = || {
+            let plans = hybrid_stage_plans(&spec, &plan, None).unwrap();
+            build_stages(cfg, plans).unwrap()
+        };
+        let mut threaded = build();
+        let mut sequential = build();
+        let entry = threaded[0].entry();
+        let x = spec.random_input(&mut Rng::new(0xE8E1));
+        let (act, _) = entry.quantize_entry(&[&x]).unwrap();
+
+        // sequential reference: the pre-exec inline loop, verbatim
+        let seq_ref = |layers: &mut [TpLayer], mut act: QuantActivations| {
+            let k_req = act.scales.len();
+            let mut m = ChipMetrics::default();
+            for tl in layers.iter_mut() {
+                let ways = tl.slices.len();
+                let mut parts = Vec::with_capacity(ways);
+                let mut ms = Vec::with_capacity(ways);
+                for s in tl.slices.iter_mut() {
+                    let (t, lm) = s.run_layer_raw(0, &act).unwrap();
+                    parts.push(t);
+                    ms.push(lm);
+                }
+                m.absorb_parallel_chips(&ms);
+                charge_gather(&mut m, &vec![4 * k_req as u64; ways], &hw);
+                let full = concat_channels(&parts);
+                let q = requantize_requests(&full, &mut act.scales, &mut m);
+                let chunks: Vec<u64> = parts.iter().map(|p| p.data.len() as u64).collect();
+                charge_gather(&mut m, &chunks, &hw);
+                act.q = q;
+            }
+            (act, m)
+        };
+
+        let (got_act, got_m) = match &mut threaded[0] {
+            StageRunner::Tp { layers } => run_tp_stage(layers, act.clone(), &hw).unwrap(),
+            StageRunner::Single(_) => unreachable!("3-way plan builds a TP group"),
+        };
+        let (want_act, want_m) = match &mut sequential[0] {
+            StageRunner::Tp { layers } => seq_ref(layers, act),
+            StageRunner::Single(_) => unreachable!(),
+        };
+        assert_eq!(got_act.q.data, want_act.q.data, "threaded activations must match");
+        assert_eq!(got_act.scales, want_act.scales);
+        assert_eq!(got_m, want_m, "threaded metrics must match the inline fold");
+        // and a second run still matches (served counters advanced in
+        // lockstep on both sides)
+        let x2 = spec.random_input(&mut Rng::new(0xE8E2));
+        let (act2, _) = sequential[0].entry().quantize_entry(&[&x2]).unwrap();
+        let (g2, gm2) = match &mut threaded[0] {
+            StageRunner::Tp { layers } => run_tp_stage(layers, act2.clone(), &hw).unwrap(),
+            StageRunner::Single(_) => unreachable!(),
+        };
+        let (w2, wm2) = match &mut sequential[0] {
+            StageRunner::Tp { layers } => seq_ref(layers, act2),
+            StageRunner::Single(_) => unreachable!(),
+        };
+        assert_eq!(g2.q.data, w2.q.data);
+        assert_eq!(gm2, wm2);
+    }
+
+    #[test]
+    fn drain_batch_blocks_for_one_then_takes_whats_queued() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        for v in 0..5 {
+            tx.send(v).unwrap();
+        }
+        let first = drain_batch(&rx, 3).expect("items queued");
+        assert_eq!(first, vec![0, 1, 2], "window caps the drain");
+        let rest = drain_batch(&rx, 8).expect("items queued");
+        assert_eq!(rest, vec![3, 4], "drain takes what is there, no blocking past one");
+        drop(tx);
+        assert!(drain_batch(&rx, 3).is_none(), "closed + empty channel ends the worker");
+    }
+
+    #[test]
+    fn clamp_and_capacity_gate_agree_across_stage_kinds() {
+        // a mixed plan on a small chip: the clamped window is exactly the
+        // widest k that ensure_fused_capacity accepts.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 300;
+        let spec = wide_kn(41);
+        let plan =
+            HybridPlan::manual(&spec, &cfg, &[(0, 1, 1), (1, 2, 2), (2, 3, 1)]).unwrap();
+        let stages =
+            build_stages(cfg, hybrid_stage_plans(&spec, &plan, None).unwrap()).unwrap();
+        let clamped = clamp_batch_window(&stages, &cfg, 64);
+        assert!(clamped >= 1 && clamped < 64, "a 64-wide ask must clamp, got {clamped}");
+        assert!(ensure_fused_capacity(&stages, &cfg, clamped).is_ok());
+        assert!(ensure_fused_capacity(&stages, &cfg, clamped + 1).is_err());
+        // ways-aware bookkeeping on the runners themselves
+        assert_eq!(stages.iter().map(StageRunner::ways).collect::<Vec<_>>(), vec![1, 2, 1]);
+    }
+}

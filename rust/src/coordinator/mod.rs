@@ -21,9 +21,16 @@
 //!   all-gather of the partial feature maps after every split layer, and
 //!   [`tensor_parallel::plan_auto`] is the latency-balanced auto-planner
 //!   over (shards x kn-splits) for a target chip count;
-//! - [`server`] — a threaded [`server::InferenceServer`] that runs either
-//!   `Replicated` (a resident replica per worker, with a micro-batcher)
-//!   or `Pipelined` (workers are shard *stages* connected by channels);
+//! - [`exec`] — the shared execution fabric under all of the above:
+//!   [`exec::StagePlan`] → [`exec::StageRunner`] (a plain shard or a TP
+//!   group whose slice chips compute on scoped threads), the one
+//!   implementation of boundary-leg charging, fault-seed derivation, and
+//!   the micro-batch drain;
+//! - [`server`] — a threaded [`server::InferenceServer`] that runs
+//!   `Replicated` (a resident replica per worker, with a micro-batcher),
+//!   `Pipelined` (workers are shard *stages* connected by channels), or
+//!   `Hybrid` (any [`tensor_parallel::plan_auto`] plan on the same
+//!   channel fabric, TP slices threading inside each stage);
 //! - [`reliability`] — the §IV-A3 sensing-reliability analysis at model
 //!   scale: [`reliability::sweep_model`] drives a resident model through
 //!   either serving topology at swept sense/link bit-error rates and
@@ -31,6 +38,7 @@
 
 pub mod accelerator;
 pub mod dpu;
+pub mod exec;
 pub mod metrics;
 pub mod model;
 pub mod reliability;
@@ -42,6 +50,7 @@ pub mod tensor_parallel;
 
 pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
 pub use dpu::Dpu;
+pub use exec::{StagePlan, StageRunner};
 pub use metrics::ChipMetrics;
 pub use model::{HeadSpec, LayerSpec, ModelSpec};
 pub use reliability::{default_ber_grid, sweep_model, SweepConfig, SweepReport};

@@ -5,6 +5,9 @@
 //! use this analytic model: the same mapping/addition cost formulas, with
 //! the SACU's sparsity skip applied to the accumulation step count.  The
 //! two models are cross-checked on small layers in integration tests.
+//! Served execution never comes through here — resident sessions and the
+//! serving stack run the simulated chip on the [`super::exec`] stage
+//! fabric; this module prices what is too big to simulate.
 
 use crate::addition::scheme;
 use crate::circuit::sense_amp::SaKind;

@@ -2,7 +2,7 @@
 //!
 //! The image has no tokio (offline vendor set), so the service is a
 //! std-thread worker pool over mpsc channels.  The server is
-//! *weight-stationary* in both of its modes:
+//! *weight-stationary* in all of its modes:
 //!
 //! - [`ServingMode::Replicated`] — every worker builds a resident
 //!   [`ChipSession`] over its slice of the chip's CMAs (weights planned
@@ -22,6 +22,25 @@
 //!   whose tensor crosses each boundary as a single transfer — the
 //!   per-leg hop latency amortizes over the fused batch (the ROADMAP's
 //!   "sharded batching" item).
+//! - [`ServingMode::Hybrid`] — an arbitrary
+//!   [`HybridPlan`](super::tensor_parallel::HybridPlan) (hand-built or
+//!   from [`super::tensor_parallel::plan_auto`]): a pipeline whose stages
+//!   are plain shards *or* tensor-parallel groups.  Each stage is one
+//!   worker thread on the same channel fabric as `Pipelined`, and inside
+//!   a TP stage the slice chips compute their `run_layer_raw` partials on
+//!   **scoped threads** ([`exec::run_tp_stage`]) — pipeline parallelism
+//!   across stages, tensor parallelism within one.  The link is modeled
+//!   as protected (a positive `link_ber` is rejected), and the head stage
+//!   runs the same micro-batcher, so sharded batching works on any plan.
+//!
+//! All three modes execute through the shared fabric in [`super::exec`]:
+//! a stage is a [`StageRunner`] built from a [`exec::StagePlan`], the
+//! micro-batch drain is [`exec::drain_batch`], boundary legs are
+//! [`exec::charge_boundary_leg`], and fault seeds / link-corruption
+//! streams come from [`exec::stage_fault`] / [`exec::link_rng_for_stage`]
+//! — so serving here is byte-identical (outputs *and* metrics) to the
+//! inline [`super::sharding::PipelineSession`] and
+//! [`super::tensor_parallel::TensorParallelSession`] facades.
 //!
 //! Responses report per-request compute metrics — always zero
 //! weight-register writes — while the one-time loading cost per worker is
@@ -44,14 +63,16 @@ use std::time::{Duration, Instant};
 use crate::error::{bail, ensure, Result};
 use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
-use crate::testutil::{seed_mix, Rng};
 
-use super::accelerator::{ChipConfig, SenseFault};
+use super::accelerator::ChipConfig;
+use super::exec::{self, StageRunner};
 use super::metrics::ChipMetrics;
 use super::session::{
-    batched_wreg_footprint, wreg_footprint, ChipSession, ModelSpec, QuantActivations,
+    batched_wreg_footprint, finalize_outputs, wreg_footprint, ChipSession, ModelOutput, ModelSpec,
+    QuantActivations,
 };
-use super::sharding::{xfer_cost_ns, ShardPlan};
+use super::sharding::ShardPlan;
+use super::tensor_parallel::HybridPlan;
 
 /// One inference request: activations for the resident model.
 pub struct Request {
@@ -82,7 +103,7 @@ pub struct Response {
 }
 
 /// How the worker pool maps onto chips.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ServingMode {
     /// Today's mode: `workers` full-model replicas, one per CMA slice.
     /// Each dequeue fuses up to `max_batch` queued requests into one
@@ -95,6 +116,15 @@ pub enum ServingMode {
     /// boundary as ONE transfer, so the per-leg hop latency amortizes
     /// over the batch.
     Pipelined { shards: usize, max_batch: usize },
+    /// A pipeline of shards *and* tensor-parallel groups, straight from
+    /// any [`HybridPlan`] (e.g. the output of
+    /// [`super::tensor_parallel::plan_auto`]).  Stage workers stream over
+    /// the same channel fabric as `Pipelined`; a TP stage's slice chips
+    /// compute concurrently on scoped threads.  The head stage fuses up
+    /// to `max_batch` queued requests per dequeue, and the effective
+    /// (capacity-clamped) window is reported back from
+    /// [`InferenceServer::mode`].
+    Hybrid { plan: HybridPlan, max_batch: usize },
 }
 
 /// Split `total` CMAs over `workers` chips: every worker gets the base
@@ -173,6 +203,9 @@ impl InferenceServer {
             ServingMode::Pipelined { shards, max_batch } => {
                 Self::start_pipelined(cfg, shards, max_batch, spec, hw)
             }
+            ServingMode::Hybrid { plan, max_batch } => {
+                Self::start_hybrid(cfg, plan, max_batch, spec, hw)
+            }
         }
     }
 
@@ -238,50 +271,32 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                 // per-worker fault seed: replicas must decorrelate, or a
                 // reliability sweep would see identical corruption on
                 // every replica of the same request stream
-                worker_cfg.fault = cfg.fault.map(|f| SenseFault {
-                    ber: f.ber,
-                    seed: seed_mix(f.seed, wi as u64),
-                });
+                worker_cfg.fault = exec::stage_fault(cfg.fault, wi);
                 std::thread::spawn(move || {
                     // one-time: plan + write the weight registers
                     let mut session = ChipSession::new(worker_cfg, (*spec).clone())
                         .expect("spec validated before spawn");
                     let _ = tx_ready.send((wi, *session.loading()));
                     loop {
-                        // Queue-depth-aware micro-batching: block for one
-                        // request, then drain whatever else is already
-                        // queued (up to max_batch) into the same fused run.
+                        // Queue-depth-aware micro-batching under the
+                        // shared queue's lock: block for one request,
+                        // then drain whatever else is already queued.
                         let batch: Vec<Request> = {
                             let guard = rx.lock().unwrap();
-                            let Ok(first) = guard.recv() else { break };
-                            let mut batch = vec![first];
-                            while batch.len() < max_batch {
-                                match guard.try_recv() {
-                                    Ok(req) => batch.push(req),
-                                    Err(_) => break,
-                                }
+                            match exec::drain_batch(&guard, max_batch) {
+                                Some(batch) => batch,
+                                None => break,
                             }
-                            batch
                         };
                         let t0 = Instant::now();
                         // shapes were validated at submit, so infer cannot
                         // fail; a panic here is loud, a dropped response
                         // would deadlock the caller's collect()
+                        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
                         let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
                         let outs =
                             session.infer_many(&xs).expect("requests validated at submit");
-                        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-                        let fused = batch.len();
-                        for (req, out) in batch.iter().zip(outs) {
-                            let _ = tx_out.send(Response {
-                                id: req.id,
-                                features: out.features,
-                                logits: out.logits,
-                                metrics: out.metrics,
-                                batched: fused,
-                                wall_us,
-                            });
-                        }
+                        fan_out(&tx_out, ids, outs, t0.elapsed().as_secs_f64() * 1e6);
                     }
                 })
             })
@@ -313,42 +328,69 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         );
         ensure!(max_batch >= 1, "max_batch must be at least 1");
         let plan = ShardPlan::partition(&spec, &cfg, shards)?;
+        // per-stage fault seeds mirror PipelineSession: stages are
+        // distinct chips and must corrupt independently
+        let stages = exec::build_stages(cfg, exec::shard_stage_plans(&spec, &plan, cfg.fault))?;
         // Clamp the fusion window to what EVERY stage can keep resident:
         // a fused tensor widens the column tiling (and with it the
         // register footprint) on each shard it passes through, and must
-        // never trip a mid-pipeline capacity check.
-        let planner = cfg.planner();
-        let capacity = cfg.wreg_capacity();
-        let mut max_batch = max_batch;
-        for i in 0..shards {
-            let sub = plan.subspec(&spec, i);
-            while max_batch > 1
-                && batched_wreg_footprint(&sub, &planner, max_batch) > capacity
-            {
-                max_batch -= 1;
-            }
-        }
-        // report the *effective* window from mode(), not the requested one
+        // never trip a mid-pipeline capacity check.  mode() reports the
+        // *effective* window, not the requested one.
+        let max_batch = exec::clamp_batch_window(&stages, &cfg, max_batch);
         let mode = ServingMode::Pipelined { shards, max_batch };
+        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw)
+    }
+
+    fn start_hybrid(
+        cfg: ChipConfig,
+        plan: HybridPlan,
+        max_batch: usize,
+        spec: ModelSpec,
+        hw: HwParams,
+    ) -> Result<Self> {
+        ensure!(
+            hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
+            "inter-chip link needs positive bandwidth and non-negative latency"
+        );
+        ensure!(
+            hw.link_ber == 0.0,
+            "hybrid serving models a protected link; lossy links live on \
+the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
+        );
+        ensure!(max_batch >= 1, "max_batch must be at least 1");
+        let stages = exec::build_stages(cfg, exec::hybrid_stage_plans(&spec, &plan, cfg.fault)?)?;
+        // mode() reports the *effective* (capacity-clamped) window
+        let max_batch = exec::clamp_batch_window(&stages, &cfg, max_batch);
+        let mode = ServingMode::Hybrid { plan, max_batch };
+        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw)
+    }
+
+    /// The staged channel fabric `Pipelined` and `Hybrid` share: one
+    /// worker thread per stage, activations streamed stage-to-stage, the
+    /// head stage micro-batching and the tail stage fanning responses
+    /// out.  The stages were built (registers loaded) before this call.
+    fn start_staged(
+        stages: Vec<StageRunner>,
+        cfg: ChipConfig,
+        max_batch: usize,
+        mode: ServingMode,
+        spec: &ModelSpec,
+        hw: HwParams,
+    ) -> Result<Self> {
+        let n = stages.len();
         let input_geometry = spec.input_geometry();
+        let head = spec.head.clone();
+        let loading: Vec<ChipMetrics> = stages.iter().map(StageRunner::loading).collect();
+        // every stage spans `ways` whole chips of its own
+        let worker_cmas: Vec<usize> = stages.iter().map(|s| s.ways() * cfg.cmas).collect();
         let (tx, rx_in) = mpsc::channel::<Request>();
         let (tx_out, rx_out) = mpsc::channel::<Response>();
-        let (tx_ready, rx_ready) = mpsc::channel::<(usize, ChipMetrics)>();
 
-        let mut handles = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(n);
         let mut rx_in = Some(rx_in);
         let mut rx_stage: Option<mpsc::Receiver<StageMsg>> = None;
-        for i in 0..shards {
-            let sub = plan.subspec(&spec, i);
-            let is_last = i + 1 == shards;
-            let tx_ready = tx_ready.clone();
-            // per-stage fault seed, mirroring PipelineSession: stages are
-            // distinct chips and must corrupt independently
-            let mut stage_cfg = cfg;
-            stage_cfg.fault = cfg.fault.map(|f| SenseFault {
-                ber: f.ber,
-                seed: seed_mix(f.seed, i as u64),
-            });
+        for (i, mut runner) in stages.into_iter().enumerate() {
+            let is_last = i + 1 == n;
             // stage i's inputs: raw requests for the head stage, in-flight
             // activations for the rest
             let in_req = if i == 0 { rx_in.take() } else { None };
@@ -362,34 +404,25 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
             };
             rx_stage = rx_next;
             let out_resp = if is_last { Some(tx_out.clone()) } else { None };
+            // the model head runs once, on the tail stage's output
+            let stage_head = if is_last { head.clone() } else { None };
             handles.push(std::thread::spawn(move || {
-                // one-time: this shard's registers onto this stage's chip
-                let mut session =
-                    ChipSession::new(stage_cfg, sub).expect("shard spec validated before spawn");
-                let _ = tx_ready.send((i, *session.loading()));
                 // deterministic link-corruption stream for this stage's
                 // incoming leg (armed only at a positive link BER)
                 let mut link_rng = (i > 0 && hw.link_ber > 0.0)
-                    .then(|| Rng::new(seed_mix(hw.link_fault_seed, i as u64)));
+                    .then(|| exec::link_rng_for_stage(hw.link_fault_seed, i));
                 loop {
                     let (ids, act, metrics, t0) = if let Some(rx) = &in_req {
                         // Queue-depth-aware micro-batching at the head
-                        // stage: block for one request, then drain what is
-                        // already queued (up to the clamped window) into
-                        // one fused run.  The fused tensor crosses every
-                        // boundary as a single transfer, so each leg's hop
-                        // latency is paid once per batch.
-                        let Ok(first) = rx.recv() else { break };
-                        let mut batch = vec![first];
-                        while batch.len() < max_batch {
-                            match rx.try_recv() {
-                                Ok(req) => batch.push(req),
-                                Err(_) => break,
-                            }
-                        }
+                        // stage: one fused run per dequeue; the fused
+                        // tensor crosses every boundary as a single
+                        // transfer, so each leg's hop latency is paid
+                        // once per batch.
+                        let Some(batch) = exec::drain_batch(rx, max_batch) else { break };
                         let t0 = Instant::now();
                         let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
-                        let (act, m) = session
+                        let (act, m) = runner
+                            .entry()
                             .quantize_entry(&xs)
                             .expect("requests validated at submit");
                         (batch.iter().map(|r| r.id).collect::<Vec<u64>>(), act, m, t0)
@@ -397,23 +430,18 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                         let rx = in_msg.as_ref().expect("inner stage has a stage channel");
                         let Ok(mut msg) = rx.recv() else { break };
                         // the activations just crossed the inter-chip
-                        // link: charge the transfer leg, then apply the
+                        // link: charge the transfer leg (a broadcast when
+                        // this stage spans several chips), then apply the
                         // link's error model to the payload
                         let mut m = msg.metrics;
-                        let bytes = hw.wire_bytes(msg.act.wire_bytes());
-                        let leg = xfer_cost_ns(bytes, &hw);
-                        m.xfer_bytes += bytes;
-                        m.xfer_ns += leg;
-                        m.latency_ns += leg;
-                        m.xfer_legs += 1;
+                        exec::charge_boundary_leg(&mut m, msg.act.wire_bytes(), runner.ways(), &hw);
                         if let Some(rng) = &mut link_rng {
                             msg.act.inject_link_faults(hw.link_ber, hw.link_ecc, rng);
                         }
                         (msg.ids, msg.act, m, msg.t0)
                     };
-                    let (act, m) = session
-                        .run_quantized(act)
-                        .expect("shard geometry chained by the plan");
+                    let (act, m) =
+                        runner.run(act, &hw).expect("stage geometry chained by the plan");
                     let mut metrics = metrics;
                     metrics.add(&m);
                     if let Some(tx) = &out_msg {
@@ -422,27 +450,12 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                         }
                     } else {
                         let tx = out_resp.as_ref().expect("tail stage owns the response queue");
-                        let outs = session.finalize(act, metrics);
-                        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-                        let fused = ids.len();
-                        debug_assert_eq!(outs.len(), fused, "one response per fused request");
-                        for (id, out) in ids.into_iter().zip(outs) {
-                            let _ = tx.send(Response {
-                                id,
-                                features: out.features,
-                                logits: out.logits,
-                                metrics: out.metrics,
-                                batched: fused,
-                                wall_us,
-                            });
-                        }
+                        let outs = finalize_outputs(stage_head.as_ref(), act, metrics);
+                        fan_out(tx, ids, outs, t0.elapsed().as_secs_f64() * 1e6);
                     }
                 }
             }));
         }
-        let loading = Self::collect_loading(&rx_ready, shards);
-        // every pipeline stage is a whole chip of its own
-        let worker_cmas = vec![cfg.cmas; shards];
         Ok(Self {
             tx: Some(tx),
             rx_out,
@@ -469,13 +482,15 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         loading
     }
 
-    /// The mode this pool is running in.
+    /// The mode this pool is running in (with the *effective*,
+    /// capacity-clamped batch window).
     pub fn mode(&self) -> ServingMode {
-        self.mode
+        self.mode.clone()
     }
 
     /// Per-worker CMA allotment.  Replicated: slices summing to the
-    /// chip's CMA count.  Pipelined: one whole chip per stage.
+    /// chip's CMA count.  Pipelined/Hybrid: `ways` whole chips per stage
+    /// (one for a shard stage, one per slice of a TP group).
     pub fn worker_cmas(&self) -> &[usize] {
         &self.worker_cmas
     }
@@ -557,6 +572,24 @@ impl Drop for InferenceServer {
     }
 }
 
+/// Re-split one fused run's outputs into per-request responses; every
+/// response reports the fused width whose metrics it shares.  The one
+/// fan-out every worker loop (replicated, staged tail) sends through.
+fn fan_out(tx: &mpsc::Sender<Response>, ids: Vec<u64>, outs: Vec<ModelOutput>, wall_us: f64) {
+    let fused = ids.len();
+    debug_assert_eq!(outs.len(), fused, "one response per fused request");
+    for (id, out) in ids.into_iter().zip(outs) {
+        let _ = tx.send(Response {
+            id,
+            features: out.features,
+            logits: out.logits,
+            metrics: out.metrics,
+            batched: fused,
+            wall_us,
+        });
+    }
+}
+
 /// p50/p99 summary over wall-clock service times, microseconds.
 pub fn latency_percentiles(mut wall_us: Vec<f64>) -> (f64, f64) {
     assert!(!wall_us.is_empty());
@@ -581,6 +614,218 @@ mod tests {
 
     fn request(id: u64, spec: &ModelSpec, rng: &mut Rng) -> Request {
         Request { id, x: spec.random_input(rng) }
+    }
+
+    /// Three chained layers whose KN widths (8, 6, 4) admit 2/3/4-way
+    /// splits — the serving twin of the tensor-parallel test model.
+    fn wide_kn(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer { name: "k1", n: 1, c: 3, h: 8, w: 8, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvLayer { name: "k2", n: 1, c: 8, h: 8, w: 8, kn: 6, kh: 3, kw: 3, stride: 2, pad: 1 },
+            ConvLayer { name: "k3", n: 1, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ];
+        ModelSpec::synthetic("hsrv", &geo, false, 0.5, seed, Some(5))
+    }
+
+    #[test]
+    fn hybrid_serving_is_byte_identical_to_the_inline_sessions() {
+        // ISSUE 6 satellite: ServingMode::Hybrid must reproduce the
+        // inline TensorParallelSession byte for byte — outputs AND the
+        // full ChipMetrics (xfer_legs and gather bytes included) — for
+        // all-single-stage, single-group, and mixed plans at 3, 2, and 4
+        // chips, plus register-write conservation across every chip.
+        use crate::coordinator::tensor_parallel::TensorParallelSession;
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(0xAB10);
+        let mut rng = Rng::new(0xAB11);
+        let xs: Vec<Tensor4> = (0..4).map(|_| spec.random_input(&mut rng)).collect();
+        let mut oracle =
+            crate::coordinator::session::ChipSession::new(cfg, spec.clone()).unwrap();
+        let plans: [&[(usize, usize, usize)]; 3] = [
+            &[(0, 1, 1), (1, 2, 1), (2, 3, 1)], // all single stages, 3 chips
+            &[(0, 3, 2)],                       // one TP group, 2 chips
+            &[(0, 1, 1), (1, 2, 2), (2, 3, 1)], // mixed, 4 chips
+        ];
+        for cuts in plans {
+            let plan = crate::coordinator::tensor_parallel::HybridPlan::manual(
+                &spec, &cfg, cuts,
+            )
+            .unwrap();
+            let mut tp =
+                TensorParallelSession::new(cfg, spec.clone(), plan.clone(), hw).unwrap();
+            let wants: Vec<_> = xs.iter().map(|x| tp.infer(x).unwrap()).collect();
+
+            let server = InferenceServer::start_with_hw(
+                cfg,
+                ServingMode::Hybrid { plan: plan.clone(), max_batch: 1 },
+                spec.clone(),
+                hw,
+            )
+            .unwrap();
+            assert_eq!(
+                server.mode(),
+                ServingMode::Hybrid { plan: plan.clone(), max_batch: 1 },
+                "{cuts:?}"
+            );
+            // every stage spans `ways` whole chips
+            let want_cmas: Vec<usize> =
+                cuts.iter().map(|&(_, _, w)| w * cfg.cmas).collect();
+            assert_eq!(server.worker_cmas(), &want_cmas[..], "{cuts:?}");
+            // loading: per-stage equality with the inline session, and
+            // register-write conservation against the single-chip oracle
+            let loadings = tp.stage_loadings();
+            assert_eq!(server.loading_metrics().len(), cuts.len());
+            for (got, want) in server.loading_metrics().iter().zip(&loadings) {
+                assert_eq!(got, want, "{cuts:?}: stage loading must match the session");
+            }
+            let sharded: u64 =
+                server.loading_metrics().iter().map(|m| m.weight_reg_writes).sum();
+            assert_eq!(
+                sharded,
+                oracle.loading().weight_reg_writes,
+                "{cuts:?}: every filter's registers load exactly once"
+            );
+
+            for (id, x) in xs.iter().enumerate() {
+                server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+            }
+            let mut responses = server.collect_timeout(4, Duration::from_secs(120)).unwrap();
+            responses.sort_by_key(|r| r.id);
+            for (r, want) in responses.iter().zip(&wants) {
+                let want = &want.outs[0];
+                assert_eq!(
+                    r.features.data, want.features.data,
+                    "{cuts:?}: request {} must match the inline session",
+                    r.id
+                );
+                assert_eq!(r.logits, want.logits, "{cuts:?}: request {}", r.id);
+                assert_eq!(
+                    r.metrics, want.metrics,
+                    "{cuts:?}: request {} full metrics (xfer_legs, gather bytes, \
+energy) must match the inline session",
+                    r.id
+                );
+                assert_eq!(r.metrics.weight_reg_writes, 0);
+            }
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn hybrid_all_single_stage_plan_matches_the_plain_pipeline() {
+        // a hybrid plan with no TP groups is exactly the layer pipeline:
+        // outputs and metrics must match PipelineSession shard for shard.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(0xAB20);
+        let mut rng = Rng::new(0xAB21);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+        let mut pipe =
+            crate::coordinator::sharding::PipelineSession::new(cfg, spec.clone(), 3, hw)
+                .unwrap();
+        let wants: Vec<_> = xs.iter().map(|x| pipe.infer(x).unwrap().out).collect();
+        let plan = crate::coordinator::tensor_parallel::HybridPlan::manual(
+            &spec,
+            &cfg,
+            &[(0, 1, 1), (1, 2, 1), (2, 3, 1)],
+        )
+        .unwrap();
+        let server = InferenceServer::start_with_hw(
+            cfg,
+            ServingMode::Hybrid { plan, max_batch: 1 },
+            spec.clone(),
+            hw,
+        )
+        .unwrap();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+        }
+        let mut responses = server.collect_timeout(3, Duration::from_secs(60)).unwrap();
+        responses.sort_by_key(|r| r.id);
+        for (r, want) in responses.iter().zip(&wants) {
+            assert_eq!(r.features.data, want.features.data, "request {}", r.id);
+            assert_eq!(r.logits, want.logits);
+            assert_eq!(r.metrics, want.metrics, "request {}: boundary legs must charge \
+exactly like the plain pipeline's", r.id);
+            assert_eq!(r.metrics.xfer_legs, 2, "two boundaries in a 3-stage pipeline");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn hybrid_micro_batching_is_bit_identical_and_the_window_clamps() {
+        // sharded batching on a mixed plan: fused responses re-split bit
+        // identically, and an oversized window clamps to what every chip
+        // (shard stages and TP slices alike) can keep resident.
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 300;
+        let hw = HwParams::default();
+        let spec = wide_kn(0xAB30);
+        let mut rng = Rng::new(0xAB31);
+        let plan = crate::coordinator::tensor_parallel::HybridPlan::manual(
+            &spec,
+            &cfg,
+            &[(0, 1, 1), (1, 2, 2), (2, 3, 1)],
+        )
+        .unwrap();
+        let mut tp = crate::coordinator::tensor_parallel::TensorParallelSession::new(
+            cfg,
+            spec.clone(),
+            plan.clone(),
+            hw,
+        )
+        .unwrap();
+        let xs: Vec<Tensor4> = (0..4).map(|_| spec.random_input(&mut rng)).collect();
+        let wants: Vec<_> = xs.iter().map(|x| tp.infer(x).unwrap()).collect();
+        let server = InferenceServer::start_with_hw(
+            cfg,
+            ServingMode::Hybrid { plan, max_batch: 64 },
+            spec.clone(),
+            hw,
+        )
+        .unwrap();
+        let ServingMode::Hybrid { max_batch: eff, .. } = server.mode() else {
+            panic!("mode must stay hybrid");
+        };
+        assert!((1..64).contains(&eff), "window must clamp below 64, got {eff}");
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).unwrap();
+        }
+        let responses = server.collect_timeout(4, Duration::from_secs(120)).unwrap();
+        for r in &responses {
+            assert!(r.batched >= 1 && r.batched <= eff, "no run may exceed the window");
+            assert_eq!(
+                r.features.data, wants[r.id as usize].outs[0].features.data,
+                "fused hybrid request {} must stay bit-identical to solo serving",
+                r.id
+            );
+            assert_eq!(r.logits, wants[r.id as usize].outs[0].logits);
+            assert_eq!(r.metrics.weight_reg_writes, 0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn hybrid_mode_rejects_a_lossy_link() {
+        let spec = wide_kn(0xAB40);
+        let cfg = ChipConfig::fat();
+        let plan = crate::coordinator::tensor_parallel::HybridPlan::manual(
+            &spec,
+            &cfg,
+            &[(0, 3, 2)],
+        )
+        .unwrap();
+        let hw = HwParams { link_ber: 0.01, ..HwParams::default() };
+        let err = InferenceServer::start_with_hw(
+            cfg,
+            ServingMode::Hybrid { plan, max_batch: 1 },
+            spec,
+            hw,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("protected link"), "{err:#}");
     }
 
     #[test]

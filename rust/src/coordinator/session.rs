@@ -478,6 +478,10 @@ the chip holds {capacity}; lower the batch window",
     /// only then requantizes the gathered tensor with
     /// [`requantize_requests`] — the same code (and therefore the same
     /// bytes) as the single chip.  Counts `scales.len()` requests served.
+    /// In a [`super::exec`] TP stage each slice chip runs this on its own
+    /// scoped thread; the session is exclusively owned by that thread, so
+    /// the served counter (the fault-salt source) advances exactly as it
+    /// would inline.
     pub fn run_layer_raw(
         &mut self,
         li: usize,

@@ -5,14 +5,16 @@
 //! ([`ChipConfig::wreg_capacity`]).  A [`ShardPlan`] cuts a validated
 //! [`ModelSpec`] at layer boundaries into contiguous shards balanced by
 //! weight-register footprint; a [`PipelineSession`] then owns one resident
-//! [`ChipSession`] per shard and chains them: quantized activations leave
+//! [`ChipSession`](super::session::ChipSession) per shard and chains
+//! them: quantized activations leave
 //! chip `k` and enter chip `k+1` over an inter-chip link whose cost —
 //! [`xfer_cost_ns`], from [`HwParams::link_bytes_per_ns`] /
 //! [`HwParams::link_latency_ns`] — is charged on every boundary into the
 //! request's [`ChipMetrics`] (`xfer_bytes`, `xfer_ns`).
 //!
 //! Bit-exactness is the contract: each stage runs the *same*
-//! [`ChipSession::run_quantized`] code path the single-chip session uses,
+//! [`ChipSession::run_quantized`](super::session::ChipSession::run_quantized)
+//! code path the single-chip session uses,
 //! and the transferred tensor is exactly the quantized inter-layer
 //! activation the single chip would have kept in its DPU buffers, so an
 //! N-shard run produces byte-identical features and logits to the
@@ -20,19 +22,27 @@
 //! way: every layer is loaded exactly once, on exactly one chip, so
 //! per-shard loading metrics sum to the unsharded total.
 //!
+//! The stage walk itself lives in the shared execution fabric
+//! ([`super::exec`]): [`PipelineSession`] builds its stages through
+//! [`super::exec::shard_stage_plans`] and serves through
+//! [`super::exec::run_stages`] — the same runner code the
+//! tensor-parallel session and the threaded server execute, so the three
+//! paths cannot drift apart.
+//!
 //! The partition minimizes the maximum shard footprint over all
 //! contiguous cuts (binary search + greedy), which guarantees
 //! `max_shard <= ceil(total / shards) + max_layer` — balanced to within
 //! one layer's footprint, the best a layer-granular cut can promise.
 
 use crate::coordinator::accelerator::{ChipConfig, SenseFault};
+use crate::coordinator::exec::{self, StageRunner};
 use crate::coordinator::metrics::ChipMetrics;
 use crate::coordinator::model::ModelSpec;
-use crate::coordinator::session::{wreg_footprint, ChipSession, ModelOutput};
+use crate::coordinator::session::{wreg_footprint, ModelOutput};
 use crate::error::{ensure, Result};
 use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
-use crate::testutil::{seed_mix, Rng};
+use crate::testutil::Rng;
 
 /// Latency of moving `bytes` over the inter-chip link: one hop latency
 /// plus the serialization time at the link bandwidth.
@@ -280,12 +290,13 @@ impl PipelineOutput {
 }
 
 /// A model resident across N chips, served as a chain of weight-stationary
-/// sessions.  Inference walks the shards in order; a threaded serving
+/// sessions.  Inference walks the shards in order through the shared
+/// execution fabric ([`super::exec::run_stages`]); a threaded serving
 /// front-end that overlaps stages lives in
 /// [`super::server::InferenceServer`] (`Pipelined` mode).
 pub struct PipelineSession {
     plan: ShardPlan,
-    stages: Vec<ChipSession>,
+    stages: Vec<StageRunner>,
     hw: HwParams,
     /// Deterministic link-corruption streams, armed when
     /// `hw.link_ber > 0`: one per receiving stage (`link_rngs[i - 1]` for
@@ -311,15 +322,7 @@ impl PipelineSession {
             "inter-chip link needs positive bandwidth and non-negative latency"
         );
         let plan = ShardPlan::partition(&spec, &cfg, shards)?;
-        let mut stages = Vec::with_capacity(shards);
-        for i in 0..plan.shards() {
-            let mut stage_cfg = cfg;
-            stage_cfg.fault = cfg.fault.map(|f| SenseFault {
-                ber: f.ber,
-                seed: seed_mix(f.seed, i as u64),
-            });
-            stages.push(ChipSession::new(stage_cfg, plan.subspec(&spec, i))?);
-        }
+        let stages = exec::build_stages(cfg, exec::shard_stage_plans(&spec, &plan, cfg.fault))?;
         let (link_ber, link_seed) = (hw.link_ber, hw.link_fault_seed);
         let mut pipe = Self { plan, stages, hw, link_rngs: Vec::new() };
         pipe.set_link_fault(link_ber, link_seed)?;
@@ -328,10 +331,6 @@ impl PipelineSession {
 
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
-    }
-
-    pub fn stages(&self) -> &[ChipSession] {
-        &self.stages
     }
 
     /// The link parameters transfers are charged against.
@@ -345,10 +344,7 @@ impl PipelineSession {
     /// reliability sweep re-arms one resident pipeline per BER point.
     pub fn set_fault(&mut self, fault: Option<SenseFault>) {
         for (i, stage) in self.stages.iter_mut().enumerate() {
-            stage.set_fault(fault.map(|f| SenseFault {
-                ber: f.ber,
-                seed: seed_mix(f.seed, i as u64),
-            }));
+            stage.set_fault(exec::stage_fault(fault, i));
         }
     }
 
@@ -365,7 +361,7 @@ impl PipelineSession {
         self.hw.link_ber = link_ber;
         self.hw.link_fault_seed = seed;
         self.link_rngs = if link_ber > 0.0 {
-            (1..self.stages.len()).map(|i| Rng::new(seed_mix(seed, i as u64))).collect()
+            (1..self.stages.len()).map(|i| exec::link_rng_for_stage(seed, i)).collect()
         } else {
             Vec::new()
         };
@@ -374,7 +370,7 @@ impl PipelineSession {
 
     /// Per-shard one-time loading metrics, in shard order.
     pub fn shard_loadings(&self) -> Vec<ChipMetrics> {
-        self.stages.iter().map(|s| *s.loading()).collect()
+        self.stages.iter().map(StageRunner::loading).collect()
     }
 
     /// Loading totals across all shards.  `weight_reg_writes` here equals
@@ -382,14 +378,14 @@ impl PipelineSession {
     pub fn loading_total(&self) -> ChipMetrics {
         let mut total = ChipMetrics::default();
         for s in &self.stages {
-            total.add(s.loading());
+            total.add(&s.loading());
         }
         total
     }
 
     /// The input geometry requests must match (the first shard's).
     pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
-        self.stages[0].spec().input_geometry()
+        self.stages[0].entry().spec().input_geometry()
     }
 
     /// Requests served so far.
@@ -402,17 +398,23 @@ impl PipelineSession {
     /// ideal link (`hw.link_ber == 0`, the default); at a positive link
     /// BER every boundary flips payload bits at that rate.
     pub fn infer(&mut self, x: &Tensor4) -> Result<PipelineOutput> {
-        let (act, metrics) = self.stages[0].quantize_entry(&[x])?;
-        let (act, metrics, stage_metrics, xfer_legs_ns) = self.run_stages(act, metrics)?;
+        let (act, metrics) = self.stages[0].entry().quantize_entry(&[x])?;
+        let run =
+            exec::run_stages(&mut self.stages, act, metrics, &self.hw, &mut self.link_rngs)?;
         let last = self.stages.last().expect("at least one shard");
-        let mut outs = last.finalize(act, metrics);
+        let mut outs = last.finalize(run.act, run.metrics);
         let out = outs.pop().expect("one request in, one output out");
-        Ok(PipelineOutput { out, stage_metrics, xfer_legs_ns })
+        Ok(PipelineOutput {
+            out,
+            stage_metrics: run.stage_metrics,
+            xfer_legs_ns: run.boundary_legs_ns,
+        })
     }
 
     /// Fuse several same-shape requests into one pipelined run along the
     /// batch axis (the sharded counterpart of
-    /// [`ChipSession::infer_many`]): outputs are bit-identical to serving
+    /// [`ChipSession::infer_many`](super::session::ChipSession::infer_many)):
+    /// outputs are bit-identical to serving
     /// each request alone, in submission order, and every boundary's hop
     /// latency is paid **once** for the whole fused tensor — batching
     /// amortizes the link's fixed per-leg cost over the fused requests.
@@ -420,45 +422,11 @@ impl PipelineSession {
     /// (the per-stage capacity gate applies; see the server's clamp).
     /// Each output carries the fused run's metrics.
     pub fn infer_many(&mut self, xs: &[&Tensor4]) -> Result<Vec<ModelOutput>> {
-        let (act, metrics) = self.stages[0].quantize_entry(xs)?;
-        let (act, metrics, _, _) = self.run_stages(act, metrics)?;
+        let (act, metrics) = self.stages[0].entry().quantize_entry(xs)?;
+        let run =
+            exec::run_stages(&mut self.stages, act, metrics, &self.hw, &mut self.link_rngs)?;
         let last = self.stages.last().expect("at least one shard");
-        Ok(last.finalize(act, metrics))
-    }
-
-    /// Walk activations through every stage, charging (and, when armed,
-    /// corrupting) each boundary leg.
-    #[allow(clippy::type_complexity)]
-    fn run_stages(
-        &mut self,
-        mut act: QuantActivations,
-        mut metrics: ChipMetrics,
-    ) -> Result<(QuantActivations, ChipMetrics, Vec<ChipMetrics>, Vec<f64>)> {
-        let mut stage_metrics = Vec::with_capacity(self.stages.len());
-        let mut xfer_legs_ns = Vec::with_capacity(self.stages.len().saturating_sub(1));
-        for (i, stage) in self.stages.iter_mut().enumerate() {
-            if i > 0 {
-                let bytes = self.hw.wire_bytes(act.wire_bytes());
-                let leg = xfer_cost_ns(bytes, &self.hw);
-                metrics.xfer_bytes += bytes;
-                metrics.xfer_ns += leg;
-                metrics.latency_ns += leg;
-                metrics.xfer_legs += 1;
-                xfer_legs_ns.push(leg);
-                if !self.link_rngs.is_empty() {
-                    act.inject_link_faults(
-                        self.hw.link_ber,
-                        self.hw.link_ecc,
-                        &mut self.link_rngs[i - 1],
-                    );
-                }
-            }
-            let (next, m) = stage.run_quantized(act)?;
-            act = next;
-            metrics.add(&m);
-            stage_metrics.push(m);
-        }
-        Ok((act, metrics, stage_metrics, xfer_legs_ns))
+        Ok(last.finalize(run.act, run.metrics))
     }
 }
 
@@ -466,6 +434,7 @@ impl PipelineSession {
 mod tests {
     use super::*;
     use crate::coordinator::model::tests::tiny_spec;
+    use crate::coordinator::session::ChipSession;
     use crate::nn::resnet::ConvLayer;
     use crate::testutil::{prop_check, Rng};
 

@@ -38,7 +38,8 @@
 //! byte.  The one step that *couples* channels — the per-request
 //! requantization scale, calibrated on the max over the **whole** layer
 //! output — runs after the gather, on the gathered tensor, through the
-//! same [`requantize_requests`] the single chip uses.  (On real hardware
+//! same [`requantize_requests`](super::session::requantize_requests) the
+//! single chip uses.  (On real hardware
 //! each chip would fold its local maxima into a tiny scale all-reduce —
 //! max combines exactly — quantize its slice with the global scale, and
 //! gather quantized bytes; the simulator computes the identical values
@@ -52,15 +53,23 @@
 //! rejects a positive `link_ber`): lossy-link studies live on the
 //! layer-pipeline path ([`super::sharding::PipelineSession`] and the
 //! reliability sweep), where each boundary has a single receiving stage.
+//!
+//! The stage machinery itself lives in the shared execution fabric
+//! ([`super::exec`]): this module keeps the *planning* (KN splits, the
+//! DP auto-planner, the cost probe) while the session builds its stages
+//! through [`super::exec::hybrid_stage_plans`] and serves through
+//! [`super::exec::run_stages`] — whose TP groups fan slice chips out
+//! onto scoped threads — the same runner code the plain pipeline and
+//! the threaded server execute.
 
 use std::collections::HashMap;
 
 use crate::coordinator::accelerator::ChipConfig;
+use crate::coordinator::exec::{self, StageRunner};
 use crate::coordinator::metrics::ChipMetrics;
 use crate::coordinator::model::{HeadSpec, ModelSpec};
 use crate::coordinator::session::{
-    batched_wreg_footprint, finalize_outputs, requantize_requests, wreg_footprint, ChipSession,
-    ModelOutput, QuantActivations,
+    finalize_outputs, wreg_footprint, ChipSession, ModelOutput, QuantActivations,
 };
 use crate::error::{bail, ensure, Result};
 use crate::mapping::schemes::HwParams;
@@ -102,7 +111,7 @@ pub fn broadcast_cost(payload: u64, ways: usize, hw: &HwParams) -> (u64, f64) {
 /// The KN split of ONE layer across `ways` chips: contiguous filter
 /// ranges, near-equal by count — and therefore by register footprint,
 /// which is linear in the slice width.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TensorPlan {
     /// Per-chip `[k0, k1)` filter ranges; contiguous, covering `0..kn`
     /// in order, sizes differing by at most one filter.
@@ -172,7 +181,7 @@ chip holds {capacity}; no KN split can help — shrink the layer or the batch",
 }
 
 /// One stage of a hybrid plan: a contiguous layer range on `ways` chips.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HybridStagePlan {
     /// `[start, end)` layer range.
     pub range: (usize, usize),
@@ -191,7 +200,7 @@ pub struct HybridStagePlan {
 
 /// A pipeline of tensor-parallel groups: the composition of
 /// layer-boundary sharding and per-layer KN splits.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HybridPlan {
     pub stages: Vec<HybridStagePlan>,
     /// Per-chip register capacity the plan was validated against.
@@ -495,31 +504,6 @@ pub fn profile_layers(
     Ok(out)
 }
 
-/// One resident layer of a tensor-parallel group: `ways` single-layer
-/// slice sessions, chip `c` holding filters `slices[c]`.
-struct TpLayer {
-    slices: Vec<ChipSession>,
-}
-
-/// One pipeline stage of the hybrid session.
-enum HybridStage {
-    /// `ways == 1`: a contiguous multi-layer shard on one chip — the
-    /// exact [`ChipSession`] stage primitive the plain pipeline uses.
-    Single(ChipSession),
-    /// `ways > 1`: every layer of the range KN-split across the same
-    /// `ways` chips, all-gathering after each layer.
-    Tp { layers: Vec<TpLayer> },
-}
-
-impl HybridStage {
-    fn ways(&self) -> usize {
-        match self {
-            HybridStage::Single(_) => 1,
-            HybridStage::Tp { layers } => layers[0].slices.len(),
-        }
-    }
-}
-
 /// The per-request result of a hybrid run (possibly micro-batched).
 #[derive(Debug, Clone)]
 pub struct HybridOutput {
@@ -556,7 +540,7 @@ impl HybridOutput {
 pub struct TensorParallelSession {
     cfg: ChipConfig,
     plan: HybridPlan,
-    stages: Vec<HybridStage>,
+    stages: Vec<StageRunner>,
     head: Option<HeadSpec>,
     hw: HwParams,
     input_geometry: (usize, usize, usize, usize),
@@ -578,45 +562,7 @@ impl TensorParallelSession {
 the layer-pipeline path (PipelineSession / the reliability sweep)"
         );
         spec.validate()?;
-        let total_layers: usize = plan.stages.iter().map(|s| s.range.1 - s.range.0).sum();
-        ensure!(
-            total_layers == spec.layers.len()
-                && plan.stages.first().map(|s| s.range.0) == Some(0),
-            "plan does not tile `{}`'s {} layers",
-            spec.name,
-            spec.layers.len()
-        );
-        let mut stages = Vec::with_capacity(plan.stages.len());
-        for st in &plan.stages {
-            let (a, b) = st.range;
-            if st.ways == 1 {
-                let sub = ModelSpec {
-                    name: format!("{}:stage{}", spec.name, stages.len() + 1),
-                    layers: spec.layers[a..b].to_vec(),
-                    head: None,
-                };
-                stages.push(HybridStage::Single(ChipSession::new(cfg, sub)?));
-            } else {
-                let mut layers = Vec::with_capacity(b - a);
-                for (li, ls) in spec.layers[a..b].iter().enumerate() {
-                    let tp = &st.splits[li];
-                    let mut slices = Vec::with_capacity(st.ways);
-                    for &(k0, k1) in &tp.slices {
-                        let sub = ModelSpec {
-                            name: format!(
-                                "{}:{}.kn{}-{}",
-                                spec.name, ls.layer.name, k0, k1
-                            ),
-                            layers: vec![ls.slice_kn(k0, k1)],
-                            head: None,
-                        };
-                        slices.push(ChipSession::new(cfg, sub)?);
-                    }
-                    layers.push(TpLayer { slices });
-                }
-                stages.push(HybridStage::Tp { layers });
-            }
-        }
+        let stages = exec::build_stages(cfg, exec::hybrid_stage_plans(&spec, &plan, cfg.fault)?)?;
         Ok(Self {
             cfg,
             plan,
@@ -656,21 +602,7 @@ the layer-pipeline path (PipelineSession / the reliability sweep)"
     /// One-time loading metrics per stage, each entry summing the
     /// stage's chips (a `ways = 1` stage has one chip).
     pub fn stage_loadings(&self) -> Vec<ChipMetrics> {
-        self.stages
-            .iter()
-            .map(|st| match st {
-                HybridStage::Single(s) => *s.loading(),
-                HybridStage::Tp { layers } => {
-                    let mut m = ChipMetrics::default();
-                    for tl in layers {
-                        for s in &tl.slices {
-                            m.add(s.loading());
-                        }
-                    }
-                    m
-                }
-            })
-            .collect()
+        self.stages.iter().map(StageRunner::loading).collect()
     }
 
     /// Loading totals across every chip.  `weight_reg_writes` equals the
@@ -698,124 +630,17 @@ the layer-pipeline path (PipelineSession / the reliability sweep)"
         ensure!(!xs.is_empty(), "micro-batch needs at least one request");
         let k = xs.len();
         if k > 1 {
-            self.ensure_fused_capacity(k)?;
+            exec::ensure_fused_capacity(&self.stages, &self.cfg, k)?;
         }
-        let hw = self.hw;
-        let entry = match &self.stages[0] {
-            HybridStage::Single(s) => s,
-            HybridStage::Tp { layers } => &layers[0].slices[0],
-        };
-        let (mut act, mut metrics) = entry.quantize_entry(xs)?;
-        let mut stage_metrics = Vec::with_capacity(self.stages.len());
-        let mut boundary_legs_ns = Vec::with_capacity(self.stages.len().saturating_sub(1));
-        for (si, stage) in self.stages.iter_mut().enumerate() {
-            if si > 0 {
-                // the previous stage's output chip feeds every chip of
-                // this stage — same expression as the pipeline's leg for
-                // a single receiver, `ways` copies otherwise
-                let (bytes, leg) = broadcast_cost(act.wire_bytes(), stage.ways(), &hw);
-                metrics.xfer_bytes += bytes;
-                metrics.xfer_ns += leg;
-                metrics.latency_ns += leg;
-                metrics.xfer_legs += 1;
-                boundary_legs_ns.push(leg);
-            }
-            let (next, m) = match stage {
-                HybridStage::Single(sess) => sess.run_quantized(act)?,
-                HybridStage::Tp { layers } => Self::run_tp_stage(layers, act, &hw)?,
-            };
-            act = next;
-            metrics.add(&m);
-            stage_metrics.push(m);
-        }
+        let (act, metrics) = self.stages[0].entry().quantize_entry(xs)?;
+        let run = exec::run_stages(&mut self.stages, act, metrics, &self.hw, &mut [])?;
         self.served += k as u64;
-        let outs = finalize_outputs(self.head.as_ref(), act, metrics);
-        Ok(HybridOutput { outs, stage_metrics, boundary_legs_ns })
-    }
-
-    /// Advance a fused tensor through one tensor-parallel group: per
-    /// layer, every slice chip computes its filters' partial feature map
-    /// in parallel (latency = the slowest slice), the per-request scale
-    /// maxima circle the ring, the gathered tensor requantizes exactly
-    /// like the single chip, and the quantized partials all-gather so
-    /// every chip holds the next layer's full input.
-    fn run_tp_stage(
-        layers: &mut [TpLayer],
-        mut act: QuantActivations,
-        hw: &HwParams,
-    ) -> Result<(QuantActivations, ChipMetrics)> {
-        let k_req = act.scales.len();
-        let mut m = ChipMetrics::default();
-        for tl in layers.iter_mut() {
-            let ways = tl.slices.len();
-            let mut parts = Vec::with_capacity(ways);
-            let mut ms = Vec::with_capacity(ways);
-            for s in tl.slices.iter_mut() {
-                let (t, lm) = s.run_layer_raw(0, &act)?;
-                parts.push(t);
-                ms.push(lm);
-            }
-            m.absorb_parallel_chips(&ms);
-            // scale exchange: each chip's per-request maxima (4 bytes per
-            // fused request) circle the ring; max combines exactly, so
-            // every chip ends up with the oracle's calibration scale
-            let (b, ns, legs) = allgather_cost(&vec![4 * k_req as u64; ways], hw);
-            m.xfer_bytes += b;
-            m.xfer_ns += ns;
-            m.latency_ns += ns;
-            m.xfer_legs += legs;
-            // gather the partial maps along the channel axis and
-            // requantize per request — the same code (and bytes) as the
-            // single chip running the full layer
-            let full = concat_channels(&parts);
-            let q = requantize_requests(&full, &mut act.scales, &mut m);
-            // quantized payload all-gather: each chip ships its slice of
-            // channels once around the ring
-            let chunks: Vec<u64> = parts.iter().map(|p| p.data.len() as u64).collect();
-            let (b, ns, legs) = allgather_cost(&chunks, hw);
-            m.xfer_bytes += b;
-            m.xfer_ns += ns;
-            m.latency_ns += ns;
-            m.xfer_legs += legs;
-            act.q = q;
-        }
-        Ok((act, m))
-    }
-
-    /// Fused micro-batches widen every chip's column tiling; make sure
-    /// every chip of every stage — single-chip shards and TP slices
-    /// alike — still fits at width `k` before any stage runs (a
-    /// mid-pipeline failure would leave the run half-served).
-    fn ensure_fused_capacity(&self, k: usize) -> Result<()> {
-        let planner = self.cfg.planner();
-        let capacity = self.cfg.wreg_capacity();
-        for (si, st) in self.stages.iter().enumerate() {
-            match st {
-                HybridStage::Single(sess) => {
-                    let fused = batched_wreg_footprint(sess.spec(), &planner, k);
-                    ensure!(
-                        fused <= capacity,
-                        "a fused batch of {k} needs {fused} weight-register entries on \
-stage {si}'s chip but it holds {capacity}; lower the batch window"
-                    );
-                }
-                HybridStage::Tp { layers } => {
-                    let ways = layers[0].slices.len();
-                    for c in 0..ways {
-                        let fused: u64 = layers
-                            .iter()
-                            .map(|tl| batched_wreg_footprint(tl.slices[c].spec(), &planner, k))
-                            .sum();
-                        ensure!(
-                            fused <= capacity,
-                            "a fused batch of {k} needs {fused} weight-register entries on \
-chip {c} of stage {si} but it holds {capacity}; lower the batch window"
-                        );
-                    }
-                }
-            }
-        }
-        Ok(())
+        let outs = finalize_outputs(self.head.as_ref(), run.act, run.metrics);
+        Ok(HybridOutput {
+            outs,
+            stage_metrics: run.stage_metrics,
+            boundary_legs_ns: run.boundary_legs_ns,
+        })
     }
 }
 

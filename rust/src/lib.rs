@@ -20,7 +20,9 @@
 //! - [`mapping`] — Img2Col and the five data-mapping schemes of Table VII
 //!   (Direct-OS, Img2Col-OS/IS/WS/CS) with the CMA grid planner of Fig. 9.
 //! - [`coordinator`] — the 4096-CMA chip: scheduler, DPU (BN + ReLU),
-//!   metrics, and a thread-pool inference server.
+//!   metrics, and the serving stack — single-chip sessions, layer-boundary
+//!   sharding, KN tensor parallelism, and a threaded inference server, all
+//!   executing on one shared stage fabric ([`coordinator::exec`]).
 //! - [`runtime`] — PJRT bridge: loads the AOT-compiled HLO text artifacts
 //!   produced by `python/compile/aot.py` and cross-validates the simulator
 //!   against XLA execution.  The offline image has no `xla` crate, so the
@@ -66,13 +68,15 @@
 //!   same `run_quantized` stage code — and per-shard loading sums to the
 //!   unsharded register-write total.
 //! - [`coordinator::server::InferenceServer`] — the threaded front-end,
-//!   in either mode: `Replicated` (a resident replica per worker over a
-//!   CMA slice, with a queue-depth-aware micro-batcher) or `Pipelined`
+//!   in three modes: `Replicated` (a resident replica per worker over a
+//!   CMA slice, with a queue-depth-aware micro-batcher), `Pipelined`
 //!   (workers are shard *stages* connected by channels, so shard k
-//!   computes request i+1 while shard k+1 computes request i).  The
-//!   pipelined head stage runs the same micro-batcher: a fused tensor
-//!   crosses each boundary as **one** transfer, amortizing the per-leg
-//!   hop latency over the batch.
+//!   computes request i+1 while shard k+1 computes request i), and
+//!   `Hybrid` (any auto-planned pipeline of tensor-parallel groups on
+//!   the same channel fabric — see the next sections).  The staged head
+//!   runs the same micro-batcher: a fused tensor crosses each boundary
+//!   as **one** transfer, amortizing the per-leg hop latency over the
+//!   batch.
 //!
 //! ## Tensor parallelism: layers bigger than one chip
 //!
@@ -105,10 +109,34 @@
 //!   count.  [`coordinator::sharding::ShardPlan::partition_weighted`] is
 //!   the same latency objective restricted to pure layer-boundary cuts.
 //!
+//! ## One execution fabric under every serving path
+//!
+//! All of the above execute on [`coordinator::exec`], the shared
+//! stage fabric: [`coordinator::exec::StagePlan`] (a plain shard or a
+//! tensor-parallel group) builds into a
+//! [`coordinator::exec::StageRunner`], and one runner implementation
+//! owns boundary-leg charging, per-stage fault-seed derivation, the
+//! micro-batch drain, and the fused-capacity gate.  Inside a TP stage
+//! each KN slice chip computes its `run_layer_raw` partials on its own
+//! scoped thread (fan-out/fan-in, joined in slice order so the f64
+//! metric folds stay deterministic), then the gathers are charged
+//! exactly as inline.  [`coordinator::sharding::PipelineSession`] and
+//! [`coordinator::tensor_parallel::TensorParallelSession`] are thin
+//! facades over the same runners, and
+//! `ServingMode::Hybrid { plan, max_batch }` serves any
+//! [`coordinator::tensor_parallel::plan_auto`] output on the threaded
+//! channel pipeline — the refactor contract, pinned by tests and the
+//! `hybrid_serving` bench, is **byte-identity** (outputs and full
+//! [`coordinator::metrics::ChipMetrics`]) between the threaded server
+//! and the inline sessions.
+//!
 //! CLI: `fat plan --chips N` (profile + plan tables), `fat resnet --auto
-//! --chips N` (serve + bit-exactness/conservation self-checks), `fat
-//! serve --mode pipelined --max-batch B`.  See
-//! `examples/tensor_parallel.rs` and `benches/tensor_parallel.rs`.
+//! --chips N [--serve]` (inline self-checks, then optionally the same
+//! plan replayed through the hybrid server), `fat serve --mode
+//! pipelined --shards N --max-batch B`, `fat serve --mode hybrid
+//! --chips N --max-batch B`.  See `examples/tensor_parallel.rs`,
+//! `examples/hybrid_serve.rs`, `benches/tensor_parallel.rs`, and
+//! `benches/hybrid_serving.rs`.
 //!
 //! ## Compute fidelity: bit-serial execution vs exact ledger replay
 //!

@@ -347,7 +347,7 @@ perturbing the hot path"
 fn cmd_serve(args: &Args) -> Result<()> {
     args.allow(&[
         "requests", "workers", "batch", "input", "scale", "sparsity", "classes", "mode",
-        "shards", "max-batch", "fidelity",
+        "shards", "chips", "max-batch", "fidelity",
     ])?;
     let n_req = args.get_usize("requests", 16)?.max(1);
     let workers = args.get_usize("workers", 4)?;
@@ -357,7 +357,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sparsity = args.get_f64("sparsity", 0.7)?;
     let classes = args.get_usize("classes", 10)?;
     let shards = args.get_usize("shards", 2)?;
+    let chips = args.get_usize("chips", 2)?;
     let max_batch = args.get_usize("max-batch", 1)?;
+    let spec = ModelSpec::synthetic_resnet18(batch, input, scale, sparsity, 7, classes);
+    let mut chip_cfg = ChipConfig::fat();
+    if let Some(f) = fidelity_flag(args)? {
+        chip_cfg.fidelity = f;
+    }
     // mode-mismatched flags are an error, not silently dropped: a user who
     // asks for --shards must not end up benchmarking an unsharded pool
     let mode = match args.get_or("mode", "replicated") {
@@ -365,20 +371,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.get("shards").is_some() {
                 fat_imc::bail!("--shards needs --mode pipelined");
             }
+            if args.get("chips").is_some() {
+                fat_imc::bail!("--chips needs --mode hybrid");
+            }
             ServingMode::Replicated { workers, max_batch }
         }
         "pipelined" => {
             if args.get("workers").is_some() {
                 fat_imc::bail!("--workers applies to replicated mode; pipelined stages come from --shards");
             }
+            if args.get("chips").is_some() {
+                fat_imc::bail!("--chips needs --mode hybrid");
+            }
             ServingMode::Pipelined { shards, max_batch }
         }
-        other => fat_imc::bail!("--mode must be replicated or pipelined, got `{other}`"),
+        "hybrid" => {
+            if args.get("workers").is_some() || args.get("shards").is_some() {
+                fat_imc::bail!(
+                    "hybrid mode plans its own stages from --chips; drop --workers/--shards"
+                );
+            }
+            let plan = plan_auto(&chip_cfg, &spec, chips, &HwParams::default())?;
+            print_hybrid_plan(&spec, &plan, chips);
+            ServingMode::Hybrid { plan, max_batch }
+        }
+        other => fat_imc::bail!("--mode must be replicated, pipelined, or hybrid, got `{other}`"),
     };
     let mut rng = Rng::new(7);
 
-    let spec = ModelSpec::synthetic_resnet18(batch, input, scale, sparsity, 7, classes);
-    match mode {
+    match &mode {
         ServingMode::Replicated { workers, max_batch } => println!(
             "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) on {workers} \
 workers (micro-batch window {max_batch})...",
@@ -389,18 +410,25 @@ workers (micro-batch window {max_batch})...",
 {shards}-stage pipeline (micro-batch window {max_batch})...",
             spec.name, spec.layers.len(), spec.weight_count(), spec.sparsity() * 100.0
         ),
-    }
-    let mut chip_cfg = ChipConfig::fat();
-    if let Some(f) = fidelity_flag(args)? {
-        chip_cfg.fidelity = f;
+        ServingMode::Hybrid { plan, max_batch } => println!(
+            "loading {} ({} conv layers, {} ternary weights, sparsity {:.0}%) as a \
+{}-stage hybrid pipeline over {} chips (micro-batch window {max_batch})...",
+            spec.name,
+            spec.layers.len(),
+            spec.weight_count(),
+            spec.sparsity() * 100.0,
+            plan.stages.len(),
+            plan.chips()
+        ),
     }
     println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
-    let server = InferenceServer::start_with(chip_cfg, mode, spec.clone())?;
+    let server = InferenceServer::start_with(chip_cfg, mode.clone(), spec.clone())?;
     // the server clamps the fusion window to what the register files can
     // hold fused; report the effective value when it differs
     match server.mode() {
         ServingMode::Replicated { max_batch: eff, .. }
         | ServingMode::Pipelined { max_batch: eff, .. }
+        | ServingMode::Hybrid { max_batch: eff, .. }
             if eff != max_batch =>
         {
             println!("  micro-batch window clamped to {eff} (register capacity)");
@@ -431,7 +459,7 @@ workers (micro-batch window {max_batch})...",
         responses.iter().map(|r| r.metrics.latency_ns / r.batched as f64).sum();
     let wreg: u64 = responses.iter().map(|r| r.metrics.weight_reg_writes).sum();
     println!("  simulated compute time total: {:.1} us", sim_ns / 1e3);
-    if let ServingMode::Pipelined { .. } = mode {
+    if matches!(mode, ServingMode::Pipelined { .. } | ServingMode::Hybrid { .. }) {
         // fused responses share one run's metrics: divide by `batched` so
         // the totals count each run's transfer exactly once
         let xfer_ns: f64 =
@@ -459,15 +487,19 @@ naive path would have paid the {:.1} us load {n_req} more times",
 fn cmd_resnet(args: &Args) -> Result<()> {
     args.allow(&[
         "batch", "input", "scale", "sparsity", "layers", "requests", "classes", "shards",
-        "fidelity", "auto", "chips", "wreg",
+        "fidelity", "auto", "chips", "wreg", "serve",
     ])?;
     let shards = args.get_usize("shards", 1)?;
     let auto = args.get_bool("auto");
+    let serve = args.get_bool("serve");
     if auto && args.get("shards").is_some() {
         fat_imc::bail!("--auto plans its own stages; drop --shards (use --chips for the budget)");
     }
     if !auto && args.get("chips").is_some() {
         fat_imc::bail!("--chips needs --auto (manual pipelines use --shards)");
+    }
+    if serve && !auto {
+        fat_imc::bail!("--serve replays the auto plan through the hybrid server; add --auto");
     }
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
@@ -497,7 +529,7 @@ fn cmd_resnet(args: &Args) -> Result<()> {
     println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
     if auto {
         let chips = args.get_usize("chips", 2)?;
-        return run_resnet_auto(chip_cfg, spec, chips, n_req);
+        return run_resnet_auto(chip_cfg, spec, chips, n_req, serve);
     }
     if shards > 1 {
         return run_resnet_sharded(chip_cfg, spec, shards, n_req);
@@ -704,12 +736,18 @@ fn print_hybrid_plan(spec: &ModelSpec, plan: &HybridPlan, chips_asked: usize) {
 /// auto-planner composes layer-boundary stages with per-layer KN splits,
 /// loads the model across the chosen chips, and proves bit-exactness
 /// against a capacity-unlimited single-chip oracle.
-fn run_resnet_auto(cfg: ChipConfig, spec: ModelSpec, chips: usize, n_req: usize) -> Result<()> {
+fn run_resnet_auto(
+    cfg: ChipConfig,
+    spec: ModelSpec,
+    chips: usize,
+    n_req: usize,
+    serve: bool,
+) -> Result<()> {
     let hw = HwParams::default();
     let plan = plan_auto(&cfg, &spec, chips, &hw)?;
     print_hybrid_plan(&spec, &plan, chips);
 
-    let mut sess = TensorParallelSession::new(cfg, spec.clone(), plan, hw)?;
+    let mut sess = TensorParallelSession::new(cfg, spec.clone(), plan.clone(), hw)?;
     // the oracle: same array geometry, register capacity lifted (capacity
     // is only an admission gate, never a value change)
     let mut big = cfg;
@@ -767,6 +805,39 @@ issue-rate speedup (mean of {n_req} requests)",
             interval_sum / n_req as f64 / 1e3,
             serial_sum / n_req as f64 / 1e3,
             ratio(serial_sum / interval_sum)
+        );
+    }
+    if serve {
+        // the same plan on the threaded server: stages on their own
+        // threads, TP slices fanning out inside each stage
+        println!("replaying the plan through the hybrid server ({n_req} requests)...");
+        let server = InferenceServer::start_with(
+            cfg,
+            ServingMode::Hybrid { plan, max_batch: 1 },
+            spec.clone(),
+        )?;
+        let mut rng = Rng::new(0x5E12);
+        let xs: Vec<_> = (0..n_req).map(|_| spec.random_input(&mut rng)).collect();
+        let t0 = std::time::Instant::now();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() })?;
+        }
+        let mut responses =
+            server.collect_timeout(n_req, std::time::Duration::from_secs(600))?;
+        let wall = t0.elapsed().as_secs_f64();
+        responses.sort_by_key(|r| r.id);
+        for r in &responses {
+            let want = oracle.infer(&xs[r.id as usize])?;
+            fat_imc::ensure!(
+                r.features.data == want.features.data && r.logits == want.logits,
+                "served request {} diverged from the single-chip oracle",
+                r.id
+            );
+        }
+        server.shutdown();
+        println!(
+            "  served {n_req} requests in {wall:.3}s ({:.1} req/s), bit-identical to the oracle",
+            n_req as f64 / wall
         );
     }
     Ok(())

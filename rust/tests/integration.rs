@@ -318,6 +318,65 @@ fn cli_pipelined_batching_smoke() {
 }
 
 #[test]
+fn cli_hybrid_serving_smoke() {
+    // `fat serve --mode hybrid --chips N` plans with plan_auto and serves
+    // on the threaded stage fabric; `fat resnet --auto --serve` replays
+    // the auto plan through the same server and re-checks bit-identity
+    // against the oracle (a divergence exits non-zero).
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args([
+            "serve", "--mode", "hybrid", "--chips", "2", "--max-batch", "2", "--requests",
+            "3", "--input", "16", "--scale", "16",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "hybrid serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("auto hybrid plan"), "{text}");
+    assert!(text.contains("hybrid pipeline over"), "{text}");
+    assert!(text.contains("served 3 requests"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args([
+            "resnet", "--auto", "--chips", "2", "--serve", "--input", "16", "--scale",
+            "16", "--requests", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resnet --auto --serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("replaying the plan through the hybrid server"), "{text}");
+    assert!(text.contains("bit-identical to the oracle"), "{text}");
+
+    // flag discipline: hybrid plans its own stages; --serve needs --auto
+    let out = std::process::Command::new(exe)
+        .args(["serve", "--mode", "hybrid", "--shards", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("hybrid mode plans its own stages"), "{err}");
+    let out = std::process::Command::new(exe)
+        .args(["serve", "--mode", "replicated", "--chips", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe).args(["resnet", "--serve"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--auto"), "{err}");
+}
+
+#[test]
 fn cli_reliability_smoke() {
     // `fat reliability` sweeps accuracy-vs-BER through the serving stack
     // and self-checks that the zero-BER point is bit-identical to the
