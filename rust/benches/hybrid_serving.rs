@@ -137,5 +137,8 @@ fn main() {
         m.human(),
         fmt_ns(inline_outs[0].metrics.latency_ns)
     );
+    // regression gate against the committed baseline, like hotpath: the
+    // tolerance is generous because this is host time on a shared runner
+    run.check_against_baseline("BENCH_hybrid_serving.baseline.json", 5.0);
     run.finish();
 }

@@ -35,6 +35,22 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// The `q`-quantile of an ascending-sorted sample by nearest-rank
+/// (`sorted[round((len-1) * q)]`) — the same convention the serving
+/// percentile reports have always used, now shared so p50/p99/p999 agree
+/// across the CLI, the benches, and the load generator.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1], got {q}");
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Sort once, then read several quantiles (e.g. `&[0.50, 0.99, 0.999]`).
+pub fn percentiles(mut xs: Vec<f64>, qs: &[f64]) -> Vec<f64> {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter().map(|&q| percentile(&xs, q)).collect()
+}
+
 /// Measure `f` with `warmup` discarded runs and `samples` timed runs.
 pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
     assert!(samples > 0);
@@ -272,6 +288,15 @@ mod tests {
         let m = measure(1, 5, || (0..1000).sum::<u64>());
         assert!(m.median_ns > 0.0);
         assert_eq!(m.samples, 5);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank_on_the_sorted_sample() {
+        let xs: Vec<f64> = (0..=100).map(f64::from).collect();
+        let ps = percentiles(xs.iter().rev().cloned().collect(), &[0.0, 0.50, 0.99, 0.999, 1.0]);
+        assert_eq!(ps, vec![0.0, 50.0, 99.0, 100.0, 100.0]);
+        // single sample: every quantile is that sample
+        assert_eq!(percentiles(vec![7.5], &[0.50, 0.999]), vec![7.5, 7.5]);
     }
 
     #[test]

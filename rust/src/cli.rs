@@ -12,6 +12,8 @@
 //!   plan     --chips 4 [--wreg 256]  latency-balanced hybrid auto-plan
 //!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2 --max-batch 4]
 //!                                     [--mode hybrid --chips 4 --max-batch 4]
+//!   loadgen  --load 3 --seed 7        open-loop Poisson load vs the
+//!                                     continuous-batching engine
 //! ```
 
 use std::collections::HashMap;
@@ -182,6 +184,38 @@ COMMANDS:
                            stage fuses, the fused tensor crosses each
                            boundary as one transfer, and the per-leg hop
                            latency amortizes over the batch
+      --fidelity <f>       ledger (default) | bit-serial (as in infer)
+      --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
+  loadgen                  open-loop Poisson load generator vs the
+                           continuous-batching serving engine: replay one
+                           deterministic arrival trace through the
+                           SLO-aware engine AND the dequeue-fusion
+                           baseline scheduler on a virtual clock, then
+                           print offered/admitted/shed/goodput and
+                           p50/p99/p999 latency for both (all simulated
+                           time — bit-reproducible per seed)
+      --rate <r/s>         offered arrival rate, requests per second of
+                           simulated time (default: --load x the solo
+                           service rate measured on this model)
+      --load <x>           offered load as a multiple of the measured
+                           solo service rate (default 3 = overload;
+                           ignored when --rate is given)
+      --duration <s>       simulated seconds of arrivals (default: sized
+                           so roughly 160 requests arrive)
+      --seed <n>           arrival-trace seed (default 0x10AD);
+                           identical seed -> identical trace, decisions,
+                           and outputs
+      --window <n>         fused-batch window (default 4; clamped to
+                           register capacity like serve --max-batch)
+      --queue-windows <n>  admission queue depth, in units of the
+                           effective window (default 4)
+      --deadline-us <us>   relative SLO deadline for batch-class
+                           requests (default 10x the solo latency)
+      --interactive <0..1> share of requests in the interactive class,
+                           which gets half the batch deadline and
+                           priority in the SLO queue (default 0.25)
+      --chips <n>          serve the engine on the auto-planner's hybrid
+                           plan for n chips (default 1 = single chip)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model

@@ -1,0 +1,1255 @@
+//! The continuous-batching serving engine (ISSUE 7).
+//!
+//! [`super::server::InferenceServer`] fuses same-shape requests only at
+//! *dequeue* time: whatever happens to be queued when a worker drains is
+//! one window, and a bursty arrival process leaves the fabric running
+//! half-empty windows while later requests wait.  This module puts a
+//! real engine in front of the PR-6 stage fabric ([`super::exec`]):
+//!
+//! 1. **Admission control / backpressure** — the queue is bounded by a
+//!    register-footprint-derived depth (`queue_windows` windows of the
+//!    *clamped* fusion width, the same
+//!    [`super::exec::clamp_batch_window`] accounting the server uses),
+//!    and [`EngineServer::submit`] returns
+//!    [`super::server::SubmitError::QueueFull`] instead of growing an
+//!    unbounded channel.
+//! 2. **In-flight batch re-forming** — every fused window is formed at
+//!    dispatch time from whatever is admitted *now*: requests that
+//!    arrived while the previous window was running board the next one
+//!    instead of waiting for a fixed batch to drain.  A window runs
+//!    through the exact fused path the inline sessions use
+//!    ([`super::session::ChipSession::quantize_entry`] →
+//!    [`super::exec::run_stages`] →
+//!    [`super::session::finalize_outputs`]), so per-request requant
+//!    scales are preserved and fused responses stay **byte-identical**
+//!    (outputs and metrics) to the inline oracle.
+//! 3. **SLO-aware scheduling** — two priority classes
+//!    ([`SloClass::Interactive`] ahead of [`SloClass::Batch`]),
+//!    earliest-deadline-first within a class, and shed-on-overload: a
+//!    request whose deadline cannot be met even by boarding the very
+//!    next window (feasibility horizon = now + the last fused run's
+//!    simulated latency) is shed and counted, not served late.  The
+//!    [`SchedPolicy::FifoDequeue`] policy disables both (arrival order,
+//!    never sheds) and models the PR-6 dequeue-time-fusion server as an
+//!    in-simulator baseline.
+//! 4. **Open-loop load generation** — [`poisson_trace`] draws a
+//!    deterministic Poisson arrival process ([`crate::testutil::Rng`],
+//!    seeded via [`crate::testutil::seed_mix`]); [`ServingEngine::run_trace`]
+//!    replays a trace on a *virtual clock* advanced by the simulated
+//!    per-window latency, so admission decisions, batch compositions,
+//!    and latency percentiles are bit-reproducible across runs and
+//!    host thread counts.  `fat loadgen` and `benches/serving_engine.rs`
+//!    drive it.
+//!
+//! [`ServingEngine::serve`] lifts the same scheduler onto a host thread
+//! with wall-clock deadlines for live submission ([`EngineServer`]).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{ensure, Result};
+use crate::mapping::schemes::HwParams;
+use crate::nn::tensor::Tensor4;
+use crate::testutil::{seed_mix, Rng};
+
+use super::accelerator::ChipConfig;
+use super::exec::{self, StageRunner};
+use super::metrics::ChipMetrics;
+use super::server::SubmitError;
+use super::session::{finalize_outputs, HeadSpec, ModelOutput, ModelSpec};
+use super::tensor_parallel::HybridPlan;
+
+/// Service classes, ordered: `Interactive` is always scheduled ahead of
+/// `Batch`; deadlines order requests *within* a class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    Interactive,
+    Batch,
+}
+
+/// How the engine orders and sheds queued work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Two-level (class, deadline) priority with shed-on-overload: the
+    /// production policy.
+    SloEdf,
+    /// Arrival order, never sheds: the PR-6 dequeue-time-fusion server's
+    /// behavior, kept as the in-simulator baseline the engine is gated
+    /// against.
+    FifoDequeue,
+}
+
+/// One request of an arrival trace (deadlines are absolute trace time).
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub x: Tensor4,
+    pub class: SloClass,
+    pub arrival_us: f64,
+    pub deadline_us: f64,
+}
+
+/// A served request: the fused run's outputs plus the scheduling record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineResponse {
+    pub id: u64,
+    pub class: SloClass,
+    pub arrival_us: f64,
+    pub deadline_us: f64,
+    /// When the fused window containing this request dispatched.
+    pub start_us: f64,
+    /// When it completed (start + the window's simulated latency).
+    pub finish_us: f64,
+    /// `finish_us <= deadline_us`: the goodput criterion.
+    pub on_time: bool,
+    /// Requests fused into this window (they share the run's metrics).
+    pub batched: usize,
+    pub features: Tensor4,
+    pub logits: Option<Vec<Vec<f32>>>,
+    pub metrics: ChipMetrics,
+}
+
+impl EngineResponse {
+    /// Queueing + service time.
+    pub fn latency_us(&self) -> f64 {
+        self.finish_us - self.arrival_us
+    }
+}
+
+/// A shed request: admitted, then dropped unserved because its deadline
+/// could no longer be met.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedNotice {
+    pub id: u64,
+    pub class: SloClass,
+    pub deadline_us: f64,
+    pub shed_us: f64,
+}
+
+/// First-class accounting: every offered request is exactly one of
+/// rejected (backpressure), shed (overload), or served.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub offered: u64,
+    pub admitted: u64,
+    /// Refused at admission: the bounded queue was full.
+    pub rejected: u64,
+    /// Admitted, then dropped by the SLO scheduler.
+    pub shed: u64,
+    pub served: u64,
+    /// Served with `finish <= deadline`.
+    pub on_time: u64,
+    /// Fused windows dispatched.
+    pub windows: u64,
+    /// Widest window dispatched.
+    pub max_window: usize,
+}
+
+/// Everything a trace replay produced, bit-reproducible per trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceReport {
+    pub responses: Vec<EngineResponse>,
+    pub shed: Vec<ShedNotice>,
+    /// Ids refused at admission, in arrival order.
+    pub rejected: Vec<u64>,
+    /// The exact fused-window compositions, in dispatch order — replay
+    /// these through an inline session to reproduce every response.
+    pub batch_log: Vec<Vec<u64>>,
+    pub stats: EngineStats,
+    /// Virtual time when the last window completed, µs.
+    pub makespan_us: f64,
+}
+
+impl TraceReport {
+    /// On-time completions per second of simulated time — the number the
+    /// serving bench gates.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_us <= 0.0 {
+            return 0.0;
+        }
+        self.stats.on_time as f64 / (self.makespan_us / 1e6)
+    }
+
+    /// Latencies of the served requests, µs (feed to
+    /// [`crate::bench_harness::percentiles`]).
+    pub fn served_latencies_us(&self) -> Vec<f64> {
+        self.responses.iter().map(EngineResponse::latency_us).collect()
+    }
+}
+
+/// Engine sizing.  `max_batch` is clamped to what every chip's weight
+/// registers can keep resident fused ([`super::exec::clamp_batch_window`]);
+/// the admission bound defaults to `queue_windows` windows of the
+/// clamped width, so the queue depth is derived from the same footprint
+/// model that sizes the fusion window.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub queue_windows: usize,
+    /// Explicit admission bound; `None` derives it from the footprint
+    /// model as above.
+    pub queue_depth: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, queue_windows: 4, queue_depth: None }
+    }
+}
+
+/// An admitted request waiting for a window.
+struct Pending {
+    /// Admission order: the deterministic tie-breaker.
+    seq: u64,
+    id: u64,
+    x: Tensor4,
+    class: SloClass,
+    arrival_us: f64,
+    deadline_us: f64,
+}
+
+/// The bounded two-level priority queue both the trace replay and the
+/// live server schedule from.
+struct SchedQueue {
+    policy: SchedPolicy,
+    depth: usize,
+    pending: Vec<Pending>,
+    seq: u64,
+}
+
+impl SchedQueue {
+    fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit or refuse (bounded queue: refusal is the backpressure
+    /// signal, never an allocation).
+    fn admit(&mut self, id: u64, x: Tensor4, class: SloClass, arrival_us: f64, deadline_us: f64) -> bool {
+        if self.pending.len() >= self.depth {
+            return false;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.pending.push(Pending { seq, id, x, class, arrival_us, deadline_us });
+        true
+    }
+
+    /// Re-form the next fused window from everything admitted so far:
+    /// up to `max_batch` requests in (class, deadline, admission) order.
+    /// Under [`SchedPolicy::SloEdf`], a popped request whose deadline
+    /// precedes `horizon_us` (= now + the latest window-latency
+    /// estimate) cannot finish on time and is shed instead of occupying
+    /// a window slot.  Returns `(picked, shed)`.
+    fn form_window(&mut self, horizon_us: f64, max_batch: usize) -> (Vec<Pending>, Vec<Pending>) {
+        let policy = self.policy;
+        let key = |p: &Pending| match policy {
+            SchedPolicy::SloEdf => (p.class as u8, p.deadline_us, p.seq),
+            SchedPolicy::FifoDequeue => (0u8, 0.0f64, p.seq),
+        };
+        let mut picked = Vec::new();
+        let mut shed = Vec::new();
+        while picked.len() < max_batch && !self.pending.is_empty() {
+            let best = (0..self.pending.len())
+                .min_by(|&a, &b| {
+                    key(&self.pending[a])
+                        .partial_cmp(&key(&self.pending[b]))
+                        .expect("deadlines are validated finite")
+                })
+                .expect("non-empty queue");
+            let p = self.pending.remove(best);
+            if policy == SchedPolicy::SloEdf && p.deadline_us < horizon_us {
+                shed.push(p);
+            } else {
+                picked.push(p);
+            }
+        }
+        (picked, shed)
+    }
+}
+
+/// The loaded stage fabric a window runs on: exactly the state
+/// [`super::tensor_parallel::TensorParallelSession`] holds, so a fused
+/// window reproduces the inline session byte for byte.
+struct Fabric {
+    cfg: ChipConfig,
+    hw: HwParams,
+    stages: Vec<StageRunner>,
+    head: Option<HeadSpec>,
+}
+
+impl Fabric {
+    /// Run one fused window through the resident stages.  This is the
+    /// inline `infer_many` recipe verbatim — per-request requant scales
+    /// ride [`super::session::QuantActivations::scales`] and the final
+    /// re-split divides each request by its own scale, so fused runs are
+    /// bit-identical to solo runs.
+    fn run_window(&mut self, picked: &[Pending]) -> Result<Vec<ModelOutput>> {
+        if picked.len() > 1 {
+            exec::ensure_fused_capacity(&self.stages, &self.cfg, picked.len())?;
+        }
+        let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
+        let (act, entry) = self.stages[0].entry().quantize_entry(&xs)?;
+        let run = exec::run_stages(&mut self.stages, act, entry, &self.hw, &mut [])?;
+        Ok(finalize_outputs(self.head.as_ref(), run.act, run.metrics))
+    }
+}
+
+/// The continuous-batching engine: a bounded SLO queue scheduling fused
+/// windows onto one resident stage fabric.
+///
+/// Use [`Self::run_trace`] for deterministic open-loop replay (the load
+/// generator, benches, and every determinism test), or [`Self::serve`]
+/// to mount the same scheduler on a host thread for live submission.
+pub struct ServingEngine {
+    fabric: Fabric,
+    input_geometry: (usize, usize, usize, usize),
+    max_batch: usize,
+    queue: SchedQueue,
+    /// Simulated latency of the last dispatched window, µs: the
+    /// feasibility horizon for shed-on-overload.  Starts at 0 (shed only
+    /// the already-expired until a window has run).
+    est_window_us: f64,
+}
+
+impl ServingEngine {
+    /// Load `spec` across `plan`'s chips and put the engine in front.
+    /// The engine runs on the protected tensor-parallel fabric, so a
+    /// lossy link is rejected here (reliability studies stay on
+    /// [`super::sharding::PipelineSession`]).
+    pub fn new(
+        cfg: ChipConfig,
+        spec: ModelSpec,
+        plan: HybridPlan,
+        hw: HwParams,
+        policy: SchedPolicy,
+        config: EngineConfig,
+    ) -> Result<Self> {
+        ensure!(
+            hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
+            "inter-chip link needs positive bandwidth and non-negative latency"
+        );
+        ensure!(
+            hw.link_ber == 0.0,
+            "the serving engine runs on the protected tensor-parallel fabric; lossy links \
+live on the layer-pipeline path (PipelineSession / the reliability sweep)"
+        );
+        ensure!(config.max_batch >= 1, "the fusion window needs at least one slot");
+        ensure!(config.queue_windows >= 1, "admission needs at least one window of queue");
+        spec.validate()?;
+        let head = spec.head.clone();
+        let input_geometry = spec.input_geometry();
+        let stages = exec::build_stages(cfg, exec::hybrid_stage_plans(&spec, &plan, cfg.fault)?)?;
+        let max_batch = exec::clamp_batch_window(&stages, &cfg, config.max_batch);
+        let depth = config.queue_depth.unwrap_or(config.queue_windows * max_batch).max(1);
+        Ok(Self {
+            fabric: Fabric { cfg, hw, stages, head },
+            input_geometry,
+            max_batch,
+            queue: SchedQueue { policy, depth, pending: Vec::new(), seq: 0 },
+            est_window_us: 0.0,
+        })
+    }
+
+    /// The whole model resident on one chip (a one-stage plan): the
+    /// engine's simplest deployment and the oracle topology for tests.
+    pub fn single_chip(
+        cfg: ChipConfig,
+        spec: ModelSpec,
+        policy: SchedPolicy,
+        config: EngineConfig,
+    ) -> Result<Self> {
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, spec.layers.len(), 1)])?;
+        Self::new(cfg, spec, plan, HwParams::default(), policy, config)
+    }
+
+    /// The fusion window after the register-capacity clamp.
+    pub fn effective_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// The admission bound (requests the queue will hold).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth
+    }
+
+    /// The input geometry every request must match.
+    pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
+        self.input_geometry
+    }
+
+    /// One-time loading metrics per stage (registers are written once;
+    /// serving never rewrites them).
+    pub fn loading_metrics(&self) -> Vec<ChipMetrics> {
+        self.fabric.stages.iter().map(StageRunner::loading).collect()
+    }
+
+    /// Replay an arrival trace on a virtual clock advanced by each fused
+    /// window's *simulated* latency.  Admission, window compositions,
+    /// shedding, outputs, and percentiles are all functions of the trace
+    /// alone — bit-reproducible across runs and host thread counts,
+    /// which is what makes the latency harness CI-stable.
+    pub fn run_trace(&mut self, trace: Vec<EngineRequest>) -> Result<TraceReport> {
+        ensure!(
+            trace.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+            "the arrival trace must be sorted by arrival time"
+        );
+        let mut stats = EngineStats { offered: trace.len() as u64, ..Default::default() };
+        let mut arrivals: VecDeque<EngineRequest> = trace.into();
+        let mut responses = Vec::new();
+        let mut shed = Vec::new();
+        let mut rejected = Vec::new();
+        let mut batch_log: Vec<Vec<u64>> = Vec::new();
+        let mut t_us = 0.0f64;
+        loop {
+            // (a) admit everything that has arrived by now
+            while arrivals.front().is_some_and(|r| r.arrival_us <= t_us) {
+                let r = arrivals.pop_front().expect("front checked");
+                let got = (r.x.n, r.x.c, r.x.h, r.x.w);
+                ensure!(
+                    got == self.input_geometry,
+                    "request {} is {:?} but the engine serves {:?}",
+                    r.id,
+                    got,
+                    self.input_geometry
+                );
+                ensure!(
+                    r.deadline_us.is_finite() && r.deadline_us >= r.arrival_us,
+                    "request {} needs a finite deadline at or after its arrival",
+                    r.id
+                );
+                if self.queue.admit(r.id, r.x, r.class, r.arrival_us, r.deadline_us) {
+                    stats.admitted += 1;
+                } else {
+                    stats.rejected += 1;
+                    rejected.push(r.id);
+                }
+            }
+            // (b) idle: jump the clock to the next arrival, or finish
+            if self.queue.is_empty() {
+                if let Some(next) = arrivals.front() {
+                    t_us = next.arrival_us;
+                    continue;
+                }
+                break;
+            }
+            // (c) re-form the next window from everything admitted now
+            let (picked, dropped) =
+                self.queue.form_window(t_us + self.est_window_us, self.max_batch);
+            for p in dropped {
+                stats.shed += 1;
+                shed.push(ShedNotice {
+                    id: p.id,
+                    class: p.class,
+                    deadline_us: p.deadline_us,
+                    shed_us: t_us,
+                });
+            }
+            if picked.is_empty() {
+                continue;
+            }
+            // (d) one fused run; the virtual clock advances by its
+            // simulated latency
+            let start_us = t_us;
+            let outs = self.fabric.run_window(&picked)?;
+            let window_us = outs[0].metrics.latency_ns / 1e3;
+            t_us += window_us;
+            self.est_window_us = window_us;
+            stats.windows += 1;
+            stats.max_window = stats.max_window.max(picked.len());
+            batch_log.push(picked.iter().map(|p| p.id).collect());
+            let fused = picked.len();
+            for (p, out) in picked.into_iter().zip(outs) {
+                let on_time = t_us <= p.deadline_us;
+                stats.served += 1;
+                if on_time {
+                    stats.on_time += 1;
+                }
+                responses.push(EngineResponse {
+                    id: p.id,
+                    class: p.class,
+                    arrival_us: p.arrival_us,
+                    deadline_us: p.deadline_us,
+                    start_us,
+                    finish_us: t_us,
+                    on_time,
+                    batched: fused,
+                    features: out.features,
+                    logits: out.logits,
+                    metrics: out.metrics,
+                });
+            }
+        }
+        Ok(TraceReport { responses, shed, rejected, batch_log, stats, makespan_us: t_us })
+    }
+
+    /// Mount the engine on a host scheduler thread for live submission:
+    /// same queue, same window re-forming, wall-clock deadlines.
+    pub fn serve(self) -> EngineServer {
+        let ServingEngine { mut fabric, input_geometry, max_batch, queue, mut est_window_us } =
+            self;
+        let depth = queue.depth;
+        let shared = Arc::new(LiveShared {
+            state: Mutex::new(LiveState { queue, closed: false, stats: EngineStats::default() }),
+            wake: Condvar::new(),
+        });
+        let (tx_out, rx_out) = mpsc::channel::<EngineReply>();
+        let t0 = Instant::now();
+        let sched = Arc::clone(&shared);
+        let scheduler = std::thread::spawn(move || loop {
+            let mut st = sched.state.lock().expect("engine state lock");
+            while st.queue.is_empty() && !st.closed {
+                st = sched.wake.wait(st).expect("engine state lock");
+            }
+            if st.queue.is_empty() && st.closed {
+                // graceful shutdown: everything admitted has been
+                // served or shed
+                break;
+            }
+            let now_us = t0.elapsed().as_secs_f64() * 1e6;
+            let (picked, dropped) = st.queue.form_window(now_us + est_window_us, max_batch);
+            st.stats.shed += dropped.len() as u64;
+            drop(st);
+            for p in dropped {
+                let _ = tx_out.send(EngineReply::Shed {
+                    id: p.id,
+                    class: p.class,
+                    deadline_us: p.deadline_us,
+                });
+            }
+            if picked.is_empty() {
+                continue;
+            }
+            let start_us = t0.elapsed().as_secs_f64() * 1e6;
+            let outs =
+                fabric.run_window(&picked).expect("admitted requests were validated at submit");
+            est_window_us = outs[0].metrics.latency_ns / 1e3;
+            let finish_us = t0.elapsed().as_secs_f64() * 1e6;
+            let fused = picked.len();
+            let on_time_count =
+                picked.iter().filter(|p| finish_us <= p.deadline_us).count() as u64;
+            let mut st = sched.state.lock().expect("engine state lock");
+            st.stats.windows += 1;
+            st.stats.max_window = st.stats.max_window.max(fused);
+            st.stats.served += fused as u64;
+            st.stats.on_time += on_time_count;
+            drop(st);
+            for (p, out) in picked.into_iter().zip(outs) {
+                let _ = tx_out.send(EngineReply::Served(EngineResponse {
+                    id: p.id,
+                    class: p.class,
+                    arrival_us: p.arrival_us,
+                    deadline_us: p.deadline_us,
+                    start_us,
+                    finish_us,
+                    on_time: finish_us <= p.deadline_us,
+                    batched: fused,
+                    features: out.features,
+                    logits: out.logits,
+                    metrics: out.metrics,
+                }));
+            }
+        });
+        EngineServer {
+            shared,
+            rx_out,
+            collected: Mutex::new(VecDeque::new()),
+            scheduler: Some(scheduler),
+            t0,
+            depth,
+            max_batch,
+            input_geometry,
+        }
+    }
+}
+
+struct LiveState {
+    queue: SchedQueue,
+    closed: bool,
+    stats: EngineStats,
+}
+
+struct LiveShared {
+    state: Mutex<LiveState>,
+    wake: Condvar,
+}
+
+/// What the live engine hands back per admitted request: served, or
+/// shed with its deadline already unmeetable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineReply {
+    Served(EngineResponse),
+    Shed { id: u64, class: SloClass, deadline_us: f64 },
+}
+
+impl EngineReply {
+    pub fn id(&self) -> u64 {
+        match self {
+            EngineReply::Served(r) => r.id,
+            EngineReply::Shed { id, .. } => *id,
+        }
+    }
+}
+
+/// The live front of [`ServingEngine::serve`]: bounded non-blocking
+/// submission with wall-clock deadlines, one reply per admitted request.
+pub struct EngineServer {
+    shared: Arc<LiveShared>,
+    rx_out: mpsc::Receiver<EngineReply>,
+    collected: Mutex<VecDeque<EngineReply>>,
+    scheduler: Option<JoinHandle<()>>,
+    t0: Instant,
+    depth: usize,
+    max_batch: usize,
+    input_geometry: (usize, usize, usize, usize),
+}
+
+impl EngineServer {
+    /// Submit a request with a deadline `deadline_rel_us` µs from now.
+    /// Never blocks and never queues unboundedly: a full queue returns
+    /// [`SubmitError::QueueFull`] — the backpressure signal callers are
+    /// expected to handle (retry, downgrade class, or drop).
+    pub fn submit(
+        &self,
+        id: u64,
+        x: Tensor4,
+        class: SloClass,
+        deadline_rel_us: f64,
+    ) -> std::result::Result<(), SubmitError> {
+        let got = (x.n, x.c, x.h, x.w);
+        if got != self.input_geometry {
+            return Err(SubmitError::ShapeMismatch { id, got, want: self.input_geometry });
+        }
+        if !(deadline_rel_us > 0.0 && deadline_rel_us.is_finite()) {
+            return Err(SubmitError::InvalidDeadline { deadline_us: deadline_rel_us });
+        }
+        let now_us = self.t0.elapsed().as_secs_f64() * 1e6;
+        let mut st = self.shared.state.lock().expect("engine state lock");
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        st.stats.offered += 1;
+        if st.queue.admit(id, x, class, now_us, now_us + deadline_rel_us) {
+            st.stats.admitted += 1;
+            drop(st);
+            self.shared.wake.notify_one();
+            Ok(())
+        } else {
+            st.stats.rejected += 1;
+            Err(SubmitError::QueueFull { depth: self.depth })
+        }
+    }
+
+    /// Collect `n` replies (served or shed), waiting at most `timeout`.
+    /// Replies beyond `n` stay buffered for the next call.
+    pub fn collect_timeout(&self, n: usize, timeout: Duration) -> Result<Vec<EngineReply>> {
+        let deadline = Instant::now() + timeout;
+        let mut collected = self.collected.lock().expect("collect lock");
+        while collected.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx_out.recv_timeout(deadline - now) {
+                Ok(r) => collected.push_back(r),
+                Err(_) => break,
+            }
+        }
+        ensure!(
+            collected.len() >= n,
+            "collected {} of {n} engine replies before the {timeout:?} deadline; completed \
+replies stay buffered",
+            collected.len()
+        );
+        Ok(collected.drain(..n).collect())
+    }
+
+    /// Live counters (offered / admitted / rejected / shed / served /
+    /// on-time / windows).
+    pub fn stats(&self) -> EngineStats {
+        self.shared.state.lock().expect("engine state lock").stats
+    }
+
+    /// The clamped fusion window.
+    pub fn effective_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// The admission bound.
+    pub fn queue_depth(&self) -> usize {
+        self.depth
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("engine state lock");
+            st.closed = true;
+        }
+        self.shared.wake.notify_all();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop admitting, drain everything already admitted, join the
+    /// scheduler.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+}
+
+impl Drop for EngineServer {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Parameters of the open-loop Poisson arrival process.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Offered load, requests per second of trace time.
+    pub rate_rps: f64,
+    /// Trace horizon, seconds.
+    pub duration_s: f64,
+    /// Generator seed (mixed via [`seed_mix`]; same seed → same trace).
+    pub seed: u64,
+    /// Relative deadline of a [`SloClass::Batch`] request, µs.
+    pub deadline_us: f64,
+    /// Fraction of requests drawn as [`SloClass::Interactive`].
+    pub interactive_share: f64,
+    /// Relative deadline of an interactive request, µs.
+    pub interactive_deadline_us: f64,
+}
+
+/// Draw a deterministic open-loop Poisson arrival trace: exponential
+/// inter-arrival gaps at `rate_rps`, each request a fresh random input
+/// with a class drawn at `interactive_share`.  Open-loop means arrivals
+/// never wait on completions — exactly the load a server cannot flow
+/// control, which is what exposes queue growth.
+pub fn poisson_trace(spec: &ModelSpec, tc: &TraceConfig) -> Result<Vec<EngineRequest>> {
+    ensure!(
+        tc.rate_rps > 0.0 && tc.rate_rps.is_finite(),
+        "offered load must be a positive finite rate, got {}",
+        tc.rate_rps
+    );
+    ensure!(
+        tc.duration_s > 0.0 && tc.duration_s.is_finite(),
+        "trace duration must be positive and finite, got {}",
+        tc.duration_s
+    );
+    ensure!(
+        (0.0..=1.0).contains(&tc.interactive_share),
+        "interactive share must be in [0, 1], got {}",
+        tc.interactive_share
+    );
+    ensure!(
+        tc.deadline_us > 0.0 && tc.interactive_deadline_us > 0.0,
+        "relative deadlines must be positive"
+    );
+    let mut rng = Rng::new(seed_mix(tc.seed, 0x0A15_50AD));
+    let horizon_us = tc.duration_s * 1e6;
+    let mut t_us = 0.0f64;
+    let mut out = Vec::new();
+    loop {
+        // inverse-CDF exponential gap; 1 - u is in (0, 1] so ln is finite
+        let u = rng.f64();
+        t_us += -(1.0 - u).ln() / tc.rate_rps * 1e6;
+        if t_us > horizon_us {
+            break;
+        }
+        ensure!(
+            out.len() < 200_000,
+            "rate {} over {} s draws more than 200k requests; lower one of them",
+            tc.rate_rps,
+            tc.duration_s
+        );
+        let class =
+            if rng.chance(tc.interactive_share) { SloClass::Interactive } else { SloClass::Batch };
+        let rel = match class {
+            SloClass::Interactive => tc.interactive_deadline_us,
+            SloClass::Batch => tc.deadline_us,
+        };
+        out.push(EngineRequest {
+            id: out.len() as u64,
+            x: spec.random_input(&mut rng),
+            class,
+            arrival_us: t_us,
+            deadline_us: t_us + rel,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::ChipSession;
+    use crate::nn::resnet::ConvLayer;
+
+    /// Two small chained layers (the server tests' model shape).
+    fn small_spec(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer {
+                name: "e1",
+                n: 1,
+                c: 2,
+                h: 8,
+                w: 8,
+                kn: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            ConvLayer {
+                name: "e2",
+                n: 1,
+                c: 4,
+                h: 8,
+                w: 8,
+                kn: 4,
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+            },
+        ];
+        ModelSpec::synthetic("eng", &geo, false, 0.5, seed, Some(3))
+    }
+
+    /// Three chained layers whose KN widths admit 2/3/4-way splits (the
+    /// exec tests' tensor-parallel model).
+    fn wide_kn(seed: u64) -> ModelSpec {
+        let geo = vec![
+            ConvLayer {
+                name: "k1",
+                n: 1,
+                c: 3,
+                h: 8,
+                w: 8,
+                kn: 8,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            ConvLayer {
+                name: "k2",
+                n: 1,
+                c: 8,
+                h: 8,
+                w: 8,
+                kn: 6,
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+            },
+            ConvLayer {
+                name: "k3",
+                n: 1,
+                c: 6,
+                h: 4,
+                w: 4,
+                kn: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+        ];
+        ModelSpec::synthetic("engkn", &geo, false, 0.5, seed, Some(5))
+    }
+
+    fn req(id: u64, x: Tensor4, class: SloClass, arrival_us: f64, deadline_us: f64) -> EngineRequest {
+        EngineRequest { id, x, class, arrival_us, deadline_us }
+    }
+
+    const FOREVER: f64 = 1e15;
+
+    #[test]
+    fn trace_serving_is_byte_identical_to_the_inline_oracle_under_reforming() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xE71);
+        let mut rng = Rng::new(0xE72);
+        let xs: Vec<Tensor4> = (0..7).map(|_| spec.random_input(&mut rng)).collect();
+
+        // probe the simulated latencies the virtual clock will advance
+        // by, so arrivals can be placed mid-window deliberately
+        let (l1_us, l2_us) = {
+            let mut probe = ChipSession::new(cfg, spec.clone()).expect("probe session");
+            let l1 = probe.infer(&xs[0]).expect("solo probe").metrics.latency_ns / 1e3;
+            let l2 = probe.infer_many(&[&xs[0], &xs[1]]).expect("fused probe")[0]
+                .metrics
+                .latency_ns
+                / 1e3;
+            (l1, l2)
+        };
+
+        // ids 0,1 arrive up front; 2,3,4 land while window [0,1] runs
+        // and must form the next fused window; 5,6 land while [2,3,4]
+        // runs — three re-formed windows, none waiting for a full batch.
+        let trace: Vec<EngineRequest> = vec![
+            req(0, xs[0].clone(), SloClass::Batch, 0.0, FOREVER),
+            req(1, xs[1].clone(), SloClass::Batch, 0.0, FOREVER),
+            req(2, xs[2].clone(), SloClass::Batch, 0.5 * l1_us, FOREVER),
+            req(3, xs[3].clone(), SloClass::Batch, 0.5 * l1_us, FOREVER),
+            req(4, xs[4].clone(), SloClass::Batch, 0.5 * l1_us, FOREVER),
+            req(5, xs[5].clone(), SloClass::Batch, l2_us + 0.5, FOREVER),
+            req(6, xs[6].clone(), SloClass::Batch, l2_us + 0.5, FOREVER),
+        ];
+
+        let mut engine = ServingEngine::single_chip(
+            cfg,
+            spec.clone(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 3, queue_windows: 4, queue_depth: None },
+        )
+        .expect("engine loads");
+        let report = engine.run_trace(trace).expect("trace serves");
+
+        assert_eq!(
+            report.batch_log,
+            vec![vec![0, 1], vec![2, 3, 4], vec![5, 6]],
+            "windows must re-form from in-flight arrivals"
+        );
+        assert_eq!(report.stats.offered, 7);
+        assert_eq!(report.stats.admitted, 7);
+        assert_eq!(report.stats.served, 7);
+        assert_eq!(report.stats.on_time, 7);
+        assert_eq!(report.stats.shed, 0);
+        assert_eq!(report.stats.windows, 3);
+        assert_eq!(report.stats.max_window, 3);
+
+        // oracle 1: a fresh inline session replaying the engine's exact
+        // window compositions must match outputs AND metrics
+        let mut oracle = ChipSession::new(cfg, spec.clone()).expect("oracle session");
+        let mut want = Vec::new();
+        for window in &report.batch_log {
+            let refs: Vec<&Tensor4> = window.iter().map(|&id| &xs[id as usize]).collect();
+            want.extend(oracle.infer_many(&refs).expect("oracle window"));
+        }
+        assert_eq!(report.responses.len(), want.len());
+        for (r, w) in report.responses.iter().zip(&want) {
+            assert_eq!(r.features.data, w.features.data, "features diverged on {}", r.id);
+            assert_eq!(r.logits, w.logits, "logits diverged on {}", r.id);
+            assert_eq!(r.metrics, w.metrics, "metrics diverged on {}", r.id);
+        }
+
+        // oracle 2: fused windows are also bit-identical to solo serving
+        let mut solo = ChipSession::new(cfg, spec).expect("solo session");
+        for r in &report.responses {
+            let w = solo.infer(&xs[r.id as usize]).expect("solo run");
+            assert_eq!(r.features.data, w.features.data, "fused != solo on {}", r.id);
+            assert_eq!(r.logits, w.logits, "fused logits != solo on {}", r.id);
+        }
+    }
+
+    #[test]
+    fn engine_is_deterministic_across_runs_and_thread_counts() {
+        let spec = wide_kn(0xD31);
+        let hw = HwParams::default();
+        let base = ChipConfig::fat();
+        let plan =
+            HybridPlan::manual(&spec, &base, &[(0, 3, 2)]).expect("2-way tensor-parallel plan");
+        let config = EngineConfig { max_batch: 2, queue_windows: 2, queue_depth: None };
+
+        // probe the service latency so the offered load is a definite
+        // overload: rejections and sheds must be part of what's compared
+        let l_us = {
+            let mut probe = ServingEngine::new(
+                base,
+                spec.clone(),
+                plan.clone(),
+                hw,
+                SchedPolicy::SloEdf,
+                config,
+            )
+            .expect("probe engine");
+            let x = spec.random_input(&mut Rng::new(1));
+            probe
+                .run_trace(vec![req(0, x, SloClass::Batch, 0.0, FOREVER)])
+                .expect("probe trace")
+                .makespan_us
+        };
+        let tc = TraceConfig {
+            rate_rps: 4.0 * 1e6 / l_us,
+            duration_s: 30.0 * l_us / 4e6,
+            seed: 0xD32,
+            deadline_us: 2.0 * l_us,
+            interactive_share: 0.3,
+            interactive_deadline_us: l_us,
+        };
+        let trace = poisson_trace(&spec, &tc).expect("trace");
+        assert!(trace.len() > 5, "overload trace must have arrivals, got {}", trace.len());
+
+        let run_at = |threads: usize| {
+            let mut cfg = base;
+            cfg.threads = threads;
+            let mut engine = ServingEngine::new(
+                cfg,
+                spec.clone(),
+                plan.clone(),
+                hw,
+                SchedPolicy::SloEdf,
+                config,
+            )
+            .expect("engine loads");
+            engine.run_trace(trace.clone()).expect("trace serves")
+        };
+        let a = run_at(1);
+        let b = run_at(1);
+        let c = run_at(4);
+        assert_eq!(a, b, "same seed + trace must reproduce bit-for-bit");
+        assert_eq!(a, c, "the report must not depend on the host thread count");
+        assert_eq!(a.stats.admitted + a.stats.rejected, a.stats.offered);
+        assert_eq!(a.stats.served + a.stats.shed, a.stats.admitted);
+    }
+
+    #[test]
+    fn admission_bounds_the_queue_and_backpressure_is_counted() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xAD1);
+        let mut rng = Rng::new(0xAD2);
+        let mut engine = ServingEngine::single_chip(
+            cfg,
+            spec.clone(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 2, queue_depth: None },
+        )
+        .expect("engine loads");
+        assert_eq!(engine.effective_batch(), 2, "a fat chip holds the 2-wide window");
+        assert_eq!(engine.queue_depth(), 4, "depth derives from the footprint model");
+
+        // nine simultaneous arrivals against a depth-4 queue: exactly
+        // four admitted, five refused, refusals recorded in order
+        let trace: Vec<EngineRequest> = (0..9)
+            .map(|id| req(id, spec.random_input(&mut rng), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report = engine.run_trace(trace).expect("trace serves");
+        assert_eq!(report.stats.offered, 9);
+        assert_eq!(report.stats.admitted, 4);
+        assert_eq!(report.stats.rejected, 5);
+        assert_eq!(report.rejected, vec![4, 5, 6, 7, 8]);
+        assert_eq!(report.batch_log, vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(report.stats.served, 4);
+        assert_eq!(report.stats.shed, 0);
+    }
+
+    #[test]
+    fn slo_queue_orders_interactive_before_batch_and_sheds_expired() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0x510);
+        let mut rng = Rng::new(0x511);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+        // id 2's deadline (1e-3 µs) expires before any first window can
+        // complete; id 1 is interactive and must jump ahead of id 0 even
+        // though its absolute deadline is later.
+        let trace = |specx: &[Tensor4]| {
+            vec![
+                req(0, specx[0].clone(), SloClass::Batch, 0.0, 1e9),
+                req(1, specx[1].clone(), SloClass::Interactive, 0.0, 2e9),
+                req(2, specx[2].clone(), SloClass::Batch, 0.0, 1e-3),
+            ]
+        };
+        let config = EngineConfig { max_batch: 1, queue_windows: 4, queue_depth: None };
+
+        let mut edf =
+            ServingEngine::single_chip(cfg, spec.clone(), SchedPolicy::SloEdf, config)
+                .expect("engine loads");
+        let r = edf.run_trace(trace(&xs)).expect("trace serves");
+        assert_eq!(
+            r.batch_log,
+            vec![vec![1], vec![0]],
+            "interactive first, then batch by deadline"
+        );
+        assert_eq!(r.stats.shed, 1, "the expired request is shed, not served late");
+        assert_eq!(r.shed.len(), 1);
+        assert_eq!(r.shed[0].id, 2);
+        assert_eq!(r.stats.served, 2);
+        assert_eq!(r.stats.on_time, 2);
+
+        // the dequeue-fusion baseline: pure arrival order, nothing shed,
+        // the expired request served late
+        let mut fifo =
+            ServingEngine::single_chip(cfg, spec, SchedPolicy::FifoDequeue, config)
+                .expect("engine loads");
+        let r = fifo.run_trace(trace(&xs)).expect("trace serves");
+        assert_eq!(r.batch_log, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(r.stats.shed, 0);
+        assert_eq!(r.stats.served, 3);
+        assert_eq!(r.stats.on_time, 2, "the expired request completes past its deadline");
+    }
+
+    #[test]
+    fn fused_windows_clamp_to_register_capacity() {
+        // the exec tests' mixed plan on a shrunken chip: a 64-wide ask
+        // must clamp, and the admission bound follows the clamped width
+        let mut cfg = ChipConfig::fat();
+        cfg.cmas = 3;
+        cfg.wreg_entries_per_cma = 300;
+        let spec = wide_kn(0xC1A);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 1, 1), (1, 2, 2), (2, 3, 1)])
+            .expect("mixed plan");
+        let mut engine = ServingEngine::new(
+            cfg,
+            spec.clone(),
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 64, queue_windows: 1, queue_depth: Some(66) },
+        )
+        .expect("engine loads");
+        let eff = engine.effective_batch();
+        assert!((1..64).contains(&eff), "a 64-wide ask must clamp, got {eff}");
+
+        let mut rng = Rng::new(0xC1B);
+        let trace: Vec<EngineRequest> = (0..(eff as u64 + 2))
+            .map(|id| req(id, spec.random_input(&mut rng), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report = engine.run_trace(trace).expect("trace serves");
+        assert_eq!(
+            report.batch_log[0].len(),
+            eff,
+            "the first window fuses exactly the clamped width"
+        );
+        assert_eq!(report.stats.max_window, eff);
+        assert_eq!(report.stats.served, eff as u64 + 2);
+    }
+
+    #[test]
+    fn live_engine_serves_byte_identically_and_applies_backpressure() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0x1F1);
+        let mut rng = Rng::new(0x1F2);
+        let xs: Vec<Tensor4> = (0..6).map(|_| spec.random_input(&mut rng)).collect();
+
+        let engine = ServingEngine::single_chip(
+            cfg,
+            spec.clone(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 4, queue_windows: 4, queue_depth: None },
+        )
+        .expect("engine loads");
+        let server = engine.serve();
+        for (id, x) in xs.iter().enumerate() {
+            server
+                .submit(id as u64, x.clone(), SloClass::Batch, 1e12)
+                .expect("deadline is far out, queue is deep enough");
+        }
+        let replies =
+            server.collect_timeout(6, Duration::from_secs(600)).expect("all replies return");
+        let stats = server.stats();
+        server.shutdown();
+
+        let mut served: Vec<EngineResponse> = replies
+            .into_iter()
+            .map(|r| match r {
+                EngineReply::Served(resp) => resp,
+                EngineReply::Shed { id, .. } => panic!("request {id} shed under huge deadline"),
+            })
+            .collect();
+        served.sort_by_key(|r| r.id);
+        let mut oracle = ChipSession::new(cfg, spec.clone()).expect("oracle");
+        for r in &served {
+            let w = oracle.infer(&xs[r.id as usize]).expect("oracle run");
+            assert_eq!(r.features.data, w.features.data, "live features diverged on {}", r.id);
+            assert_eq!(r.logits, w.logits, "live logits diverged on {}", r.id);
+            assert!(r.on_time, "huge deadline must be met");
+        }
+        assert_eq!(stats.offered, 6);
+        assert_eq!(stats.admitted, 6);
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.shed, 0);
+
+        // a depth-1 engine must push back: submission is microseconds,
+        // a window is milliseconds, so a tight submit loop saturates
+        let tiny = ServingEngine::single_chip(
+            cfg,
+            spec.clone(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 1, queue_windows: 1, queue_depth: Some(1) },
+        )
+        .expect("engine loads");
+        let server = tiny.serve();
+        let mut accepted = 0usize;
+        let mut saturated = false;
+        for id in 0..10_000u64 {
+            match server.submit(id, xs[0].clone(), SloClass::Batch, 1e12) {
+                Ok(()) => accepted += 1,
+                Err(SubmitError::QueueFull { depth }) => {
+                    assert_eq!(depth, 1);
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(saturated, "a depth-1 queue must refuse under a tight submit loop");
+        assert!(accepted >= 1);
+        let replies = server
+            .collect_timeout(accepted, Duration::from_secs(600))
+            .expect("accepted requests drain");
+        assert!(replies.iter().all(|r| matches!(r, EngineReply::Served(_))));
+        assert_eq!(server.stats().rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_rate_scaled() {
+        let spec = small_spec(0x901);
+        let tc = TraceConfig {
+            rate_rps: 100.0,
+            duration_s: 1.0,
+            seed: 0x902,
+            deadline_us: 5_000.0,
+            interactive_share: 0.25,
+            interactive_deadline_us: 2_500.0,
+        };
+        let a = poisson_trace(&spec, &tc).expect("trace");
+        let b = poisson_trace(&spec, &tc).expect("trace");
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.class, rb.class);
+            assert_eq!(ra.arrival_us, rb.arrival_us);
+            assert_eq!(ra.deadline_us, rb.deadline_us);
+            assert_eq!(ra.x.data, rb.x.data, "inputs must reproduce bit-for-bit");
+        }
+
+        // mean 100 arrivals; [40, 200] is > 6 sigma on both sides
+        assert!(
+            (40..=200).contains(&a.len()),
+            "100 req/s over 1 s drew {} arrivals",
+            a.len()
+        );
+        assert!(a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(a.iter().all(|r| r.arrival_us >= 0.0 && r.arrival_us <= 1e6));
+        for r in &a {
+            let rel = match r.class {
+                SloClass::Interactive => 2_500.0,
+                SloClass::Batch => 5_000.0,
+            };
+            assert_eq!(r.deadline_us, r.arrival_us + rel);
+        }
+        let interactive = a.iter().filter(|r| r.class == SloClass::Interactive).count();
+        assert!(interactive > 0 && interactive < a.len(), "both classes must be drawn");
+
+        let other = poisson_trace(
+            &spec,
+            &TraceConfig { seed: 0x903, ..tc },
+        )
+        .expect("trace");
+        assert!(
+            other.len() != a.len()
+                || other
+                    .iter()
+                    .zip(&a)
+                    .any(|(x, y)| x.arrival_us != y.arrival_us),
+            "a different seed must draw a different trace"
+        );
+    }
+}

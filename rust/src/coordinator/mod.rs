@@ -26,6 +26,15 @@
 //!   group whose slice chips compute on scoped threads), the one
 //!   implementation of boundary-leg charging, fault-seed derivation, and
 //!   the micro-batch drain;
+//! - [`engine`] — the continuous-batching serving engine on top of the
+//!   fabric: [`engine::ServingEngine`] bounds admission from the
+//!   register-footprint model, re-forms fused windows in flight as
+//!   requests complete, schedules by (SLO class, deadline) with
+//!   shed-on-overload, and replays deterministic Poisson arrival traces
+//!   ([`engine::poisson_trace`]) on a virtual clock for bit-reproducible
+//!   latency/goodput measurement; [`engine::ServingEngine::serve`]
+//!   mounts the same scheduler on a host thread for live submission
+//!   with backpressure ([`server::SubmitError::QueueFull`]);
 //! - [`server`] — a threaded [`server::InferenceServer`] that runs
 //!   `Replicated` (a resident replica per worker, with a micro-batcher),
 //!   `Pipelined` (workers are shard *stages* connected by channels), or
@@ -38,6 +47,7 @@
 
 pub mod accelerator;
 pub mod dpu;
+pub mod engine;
 pub mod exec;
 pub mod metrics;
 pub mod model;
@@ -50,12 +60,16 @@ pub mod tensor_parallel;
 
 pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
 pub use dpu::Dpu;
+pub use engine::{
+    poisson_trace, EngineConfig, EngineRequest, EngineResponse, EngineServer, EngineStats,
+    SchedPolicy, ServingEngine, SloClass, TraceConfig, TraceReport,
+};
 pub use exec::{StagePlan, StageRunner};
 pub use metrics::ChipMetrics;
 pub use model::{HeadSpec, LayerSpec, ModelSpec};
 pub use reliability::{default_ber_grid, sweep_model, SweepConfig, SweepReport};
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
-pub use server::{InferenceServer, Request, Response, ServingMode};
+pub use server::{InferenceServer, Request, Response, ServingMode, SubmitError};
 pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};
 pub use sharding::{PipelineSession, ShardPlan};
 pub use tensor_parallel::{plan_auto, HybridPlan, TensorParallelSession, TensorPlan};

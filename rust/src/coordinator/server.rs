@@ -48,6 +48,16 @@
 //! measurable.  [`InferenceServer::collect_timeout`] bounds a collection
 //! that would otherwise wait forever on an undersubmitted queue.
 //!
+//! The request queue is **bounded** ([`InferenceServer::start_bounded`];
+//! default depth [`DEFAULT_QUEUE_DEPTH`]): a submission against a full
+//! queue fails with [`SubmitError::QueueFull`] instead of growing an
+//! unbounded channel until the host dies.  [`InferenceServer::submit`]
+//! folds that into the crate error; [`InferenceServer::try_submit`]
+//! returns the typed [`SubmitError`] so callers can react to
+//! backpressure (retry, shed, or slow the arrival process).  The
+//! continuous-batching engine ([`super::engine`]) builds its admission
+//! control on the same error type.
+//!
 //! Every worker inherits [`ChipConfig::fidelity`]: fault-free serving runs
 //! the exact ledger-replay fast path by default (byte-identical responses
 //! and metrics, an order of magnitude less host time per request), and
@@ -55,6 +65,7 @@
 //! execution.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -127,6 +138,54 @@ pub enum ServingMode {
     Hybrid { plan: HybridPlan, max_batch: usize },
 }
 
+/// Default bound on the request queue: deep enough that every in-repo
+/// burst (tests, benches, examples submit tens of requests) never sees
+/// backpressure, shallow enough that a runaway open-loop producer fails
+/// fast instead of exhausting host memory.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// Why a submission was refused.  `submit` folds these into the crate
+/// error; `try_submit` (and the continuous-batching engine's
+/// [`super::engine::EngineServer::submit`]) return them typed so callers
+/// can distinguish backpressure from caller bugs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// The bounded request queue is at capacity: the caller is producing
+    /// faster than the workers drain.  Retry later, shed, or slow down.
+    QueueFull { depth: usize },
+    /// The request tensor does not match the resident model's input
+    /// geometry.
+    ShapeMismatch {
+        id: u64,
+        got: (usize, usize, usize, usize),
+        want: (usize, usize, usize, usize),
+    },
+    /// A relative deadline that is not a positive finite duration
+    /// (engine submissions only; the plain server has no deadlines).
+    InvalidDeadline { deadline_us: f64 },
+    /// The service was shut down (or its workers died).
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::QueueFull { depth } => {
+                write!(f, "request queue full (bounded depth {depth}); backpressure")
+            }
+            Self::ShapeMismatch { id, got, want } => {
+                write!(f, "request {id} shape {got:?} does not match model input {want:?}")
+            }
+            Self::InvalidDeadline { deadline_us } => {
+                write!(f, "relative deadline must be positive and finite, got {deadline_us} us")
+            }
+            Self::Closed => write!(f, "service closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Split `total` CMAs over `workers` chips: every worker gets the base
 /// share and the remainder is distributed one-per-worker from the front,
 /// so no CMA is dropped when `workers` does not divide `total`.  The
@@ -150,7 +209,7 @@ struct StageMsg {
 
 /// Threaded weight-stationary inference server.
 pub struct InferenceServer {
-    tx: Option<mpsc::Sender<Request>>,
+    tx: Option<mpsc::SyncSender<Request>>,
     rx_out: mpsc::Receiver<Response>,
     /// Responses pulled off `rx_out` by a `collect_timeout` that then hit
     /// its deadline: they stay buffered here for the next collect call
@@ -162,6 +221,8 @@ pub struct InferenceServer {
     mode: ServingMode,
     /// Model input geometry, for request validation at submit time.
     input_geometry: (usize, usize, usize, usize),
+    /// Bound on the request queue (backpressure threshold).
+    queue_depth: usize,
 }
 
 impl InferenceServer {
@@ -195,16 +256,33 @@ impl InferenceServer {
         spec: ModelSpec,
         hw: HwParams,
     ) -> Result<Self> {
+        Self::start_bounded(cfg, mode, spec, hw, DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// [`Self::start_with_hw`] with an explicit bound on the request
+    /// queue.  Once `queue_depth` requests are in flight (queued but not
+    /// yet dequeued by a worker), [`Self::try_submit`] fails with
+    /// [`SubmitError::QueueFull`] instead of buffering without bound —
+    /// the backpressure signal an open-loop producer needs to shed or
+    /// slow down.
+    pub fn start_bounded(
+        cfg: ChipConfig,
+        mode: ServingMode,
+        spec: ModelSpec,
+        hw: HwParams,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        ensure!(queue_depth >= 1, "queue_depth must be at least 1");
         spec.validate()?;
         match mode {
             ServingMode::Replicated { workers, max_batch } => {
-                Self::start_replicated(cfg, workers, max_batch, spec)
+                Self::start_replicated(cfg, workers, max_batch, spec, queue_depth)
             }
             ServingMode::Pipelined { shards, max_batch } => {
-                Self::start_pipelined(cfg, shards, max_batch, spec, hw)
+                Self::start_pipelined(cfg, shards, max_batch, spec, hw, queue_depth)
             }
             ServingMode::Hybrid { plan, max_batch } => {
-                Self::start_hybrid(cfg, plan, max_batch, spec, hw)
+                Self::start_hybrid(cfg, plan, max_batch, spec, hw, queue_depth)
             }
         }
     }
@@ -214,6 +292,7 @@ impl InferenceServer {
         workers: usize,
         max_batch: usize,
         spec: ModelSpec,
+        queue_depth: usize,
     ) -> Result<Self> {
         ensure!(
             workers > 0 && workers <= cfg.cmas,
@@ -252,7 +331,7 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         let mode = ServingMode::Replicated { workers, max_batch };
         let input_geometry = spec.input_geometry();
         let spec = Arc::new(spec);
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<Response>();
         let (tx_ready, rx_ready) = mpsc::channel::<(usize, ChipMetrics)>();
@@ -311,6 +390,7 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
             loading,
             mode,
             input_geometry,
+            queue_depth,
         })
     }
 
@@ -320,6 +400,7 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         max_batch: usize,
         spec: ModelSpec,
         hw: HwParams,
+        queue_depth: usize,
     ) -> Result<Self> {
         ensure!(
             (0.0..=1.0).contains(&hw.link_ber),
@@ -338,7 +419,7 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         // *effective* window, not the requested one.
         let max_batch = exec::clamp_batch_window(&stages, &cfg, max_batch);
         let mode = ServingMode::Pipelined { shards, max_batch };
-        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw)
+        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw, queue_depth)
     }
 
     fn start_hybrid(
@@ -347,6 +428,7 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
         max_batch: usize,
         spec: ModelSpec,
         hw: HwParams,
+        queue_depth: usize,
     ) -> Result<Self> {
         ensure!(
             hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
@@ -362,7 +444,7 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
         // mode() reports the *effective* (capacity-clamped) window
         let max_batch = exec::clamp_batch_window(&stages, &cfg, max_batch);
         let mode = ServingMode::Hybrid { plan, max_batch };
-        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw)
+        Self::start_staged(stages, cfg, max_batch, mode, &spec, hw, queue_depth)
     }
 
     /// The staged channel fabric `Pipelined` and `Hybrid` share: one
@@ -376,6 +458,7 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
         mode: ServingMode,
         spec: &ModelSpec,
         hw: HwParams,
+        queue_depth: usize,
     ) -> Result<Self> {
         let n = stages.len();
         let input_geometry = spec.input_geometry();
@@ -383,7 +466,7 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
         let loading: Vec<ChipMetrics> = stages.iter().map(StageRunner::loading).collect();
         // every stage spans `ways` whole chips of its own
         let worker_cmas: Vec<usize> = stages.iter().map(|s| s.ways() * cfg.cmas).collect();
-        let (tx, rx_in) = mpsc::channel::<Request>();
+        let (tx, rx_in) = mpsc::sync_channel::<Request>(queue_depth);
         let (tx_out, rx_out) = mpsc::channel::<Response>();
 
         let mut handles = Vec::with_capacity(n);
@@ -465,6 +548,7 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
             loading,
             mode,
             input_geometry,
+            queue_depth,
         })
     }
 
@@ -501,19 +585,46 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
         &self.loading
     }
 
-    /// Enqueue a request.  The tensor shape is validated here — a
-    /// mismatched request is rejected up front rather than silently
-    /// dropped by a worker (which would leave `collect` waiting forever).
+    /// Bound on the request queue: the number of submitted-but-undequeued
+    /// requests at which [`Self::try_submit`] starts returning
+    /// [`SubmitError::QueueFull`].
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Enqueue a request, folding any refusal into the crate error.  The
+    /// tensor shape is validated here — a mismatched request is rejected
+    /// up front rather than silently dropped by a worker (which would
+    /// leave `collect` waiting forever).  Against a saturated queue this
+    /// fails with the [`SubmitError::QueueFull`] message; callers that
+    /// want to *react* to backpressure should use [`Self::try_submit`].
     pub fn submit(&self, req: Request) -> Result<()> {
-        ensure!(
-            req.x.shape() == self.input_geometry,
-            "request {} shape {:?} does not match model input {:?}",
-            req.id,
-            req.x.shape(),
-            self.input_geometry
-        );
-        self.tx.as_ref().expect("server closed").send(req).expect("workers gone");
-        Ok(())
+        let id = req.id;
+        self.try_submit(req).map_err(|e| crate::anyhow!("request {id}: {e}"))
+    }
+
+    /// Enqueue a request, reporting refusals as typed [`SubmitError`]s:
+    /// `ShapeMismatch` for a caller bug, `QueueFull` when the bounded
+    /// queue is at capacity (backpressure — retry, shed, or slow down),
+    /// `Closed` when the workers are gone.
+    pub fn try_submit(&self, req: Request) -> std::result::Result<(), SubmitError> {
+        if req.x.shape() != self.input_geometry {
+            return Err(SubmitError::ShapeMismatch {
+                id: req.id,
+                got: req.x.shape(),
+                want: self.input_geometry,
+            });
+        }
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::Closed);
+        };
+        match tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(_)) => {
+                Err(SubmitError::QueueFull { depth: self.queue_depth })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
     }
 
     /// Blockingly collect `n` responses (any order).  Waits forever if
@@ -590,12 +701,11 @@ fn fan_out(tx: &mpsc::Sender<Response>, ids: Vec<u64>, outs: Vec<ModelOutput>, w
     }
 }
 
-/// p50/p99 summary over wall-clock service times, microseconds.
-pub fn latency_percentiles(mut wall_us: Vec<f64>) -> (f64, f64) {
-    assert!(!wall_us.is_empty());
-    wall_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p = |q: f64| wall_us[((wall_us.len() - 1) as f64 * q).round() as usize];
-    (p(0.50), p(0.99))
+/// p50/p99 summary over wall-clock service times, microseconds (the
+/// shared nearest-rank convention of [`crate::bench_harness::percentiles`]).
+pub fn latency_percentiles(wall_us: Vec<f64>) -> (f64, f64) {
+    let ps = crate::bench_harness::percentiles(wall_us, &[0.50, 0.99]);
+    (ps[0], ps[1])
 }
 
 #[cfg(test)]
@@ -1291,7 +1401,69 @@ exactly like the plain pipeline's", r.id);
         let server = InferenceServer::start(ChipConfig::fat(), 1, spec).unwrap();
         let bad = Request { id: 9, x: Tensor4::zeros(1, 3, 4, 4) }; // model wants 8x8
         assert!(server.submit(bad).is_err(), "wrong shape must be rejected up front");
+        // the typed path names the variant (and both report the geometry)
+        let bad = Request { id: 9, x: Tensor4::zeros(1, 3, 4, 4) };
+        match server.try_submit(bad) {
+            Err(SubmitError::ShapeMismatch { id: 9, got, want }) => {
+                assert_eq!(got, (1, 3, 4, 4));
+                assert_eq!(want, (1, 3, 8, 8));
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
         server.shutdown(); // and the queue is still clean: no deadlock
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_and_saturated_collect_timeout() {
+        // ISSUE 7 satellite: the request path is a bounded queue.  Flood a
+        // depth-2 single-worker server until try_submit reports QueueFull
+        // — the channel must refuse, not buffer without bound — then show
+        // collect_timeout on the saturated backlog: asking for more than
+        // was ever admitted errs at the deadline without losing the
+        // responses that did arrive, and a follow-up collect drains every
+        // admitted id exactly once.
+        let spec = small_spec(0xB0);
+        let mut rng = Rng::new(0xB1);
+        let server = InferenceServer::start_bounded(
+            ChipConfig::fat(),
+            ServingMode::Replicated { workers: 1, max_batch: 1 },
+            spec.clone(),
+            HwParams::default(),
+            2,
+        )
+        .unwrap();
+        assert_eq!(server.queue_depth(), 2);
+        let mut accepted: Vec<u64> = Vec::new();
+        let mut saturated = false;
+        for id in 0..10_000u64 {
+            match server.try_submit(request(id, &spec, &mut rng)) {
+                Ok(()) => accepted.push(id),
+                Err(SubmitError::QueueFull { depth }) => {
+                    assert_eq!(depth, 2);
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit refusal: {e}"),
+            }
+        }
+        assert!(saturated, "a depth-2 queue must push back against a tight submit loop");
+        assert!(!accepted.is_empty(), "the first request always fits an empty queue");
+        // more than was admitted: deadline-bounded error, responses kept
+        let err = server
+            .collect_timeout(accepted.len() + 1, Duration::from_millis(200))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stay buffered"), "unexpected message: {err}");
+        // exactly what was admitted: all there, each id once
+        let mut got: Vec<u64> = server
+            .collect_timeout(accepted.len(), Duration::from_secs(120))
+            .unwrap()
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, accepted, "every admitted request must be answered exactly once");
+        server.shutdown();
     }
 
     #[test]

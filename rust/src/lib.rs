@@ -138,6 +138,45 @@
 //! `examples/hybrid_serve.rs`, `benches/tensor_parallel.rs`, and
 //! `benches/hybrid_serving.rs`.
 //!
+//! ## Serving engine: continuous batching over the fabric
+//!
+//! [`coordinator::engine`] puts a continuous-batching scheduler in
+//! front of the fabric, closing the loop from open-loop arrivals to
+//! SLO-aware service:
+//!
+//! - **Admission control / backpressure** — a bounded queue sized from
+//!   the register-footprint-clamped fused window
+//!   (`queue_windows x effective_batch` by default); a full queue
+//!   *rejects* at submit rather than buffering unboundedly.  The plain
+//!   [`coordinator::server::InferenceServer`] shares the contract via
+//!   `start_bounded` / `try_submit` /
+//!   [`coordinator::server::SubmitError::QueueFull`].
+//! - **In-flight batch re-forming** — each fused window is re-formed
+//!   from whatever is queued at dispatch time (late arrivals join the
+//!   next window; nothing waits for a fixed batch to fill).  Per-request
+//!   requant-scale calibration is preserved through the same
+//!   `quantize_entry` + fused-capacity clamp the sessions use, so every
+//!   served response is **byte-identical** — outputs *and* simulated
+//!   [`coordinator::metrics::ChipMetrics`] — to the inline session
+//!   replaying the logged windows (test- and bench-gated).
+//! - **SLO-aware scheduling** — `SchedPolicy::SloEdf` orders a
+//!   two-level queue (interactive over batch, earliest-deadline-first
+//!   within class) and *sheds* requests whose deadline cannot be met by
+//!   the feasibility horizon, keeping served-request p99 bounded at
+//!   overload; `SchedPolicy::FifoDequeue` is the dequeue-fusion
+//!   baseline whose p99 collapses there.  Shed counts are first-class
+//!   [`coordinator::engine::EngineStats`], not hidden timeouts.
+//! - **Open-loop harness** — [`coordinator::engine::poisson_trace`]
+//!   draws a deterministic Poisson arrival trace and
+//!   `ServingEngine::run_trace` replays it on the *simulated* clock
+//!   (windows advance virtual time by their fused `latency_ns`), so
+//!   goodput / p50 / p99 / p999 curves are reproducible across runs
+//!   and hosts.  `serve()` runs the same scheduler live on a host
+//!   thread.  CLI: `fat loadgen --load 3 --seed 7` (or `--rate R
+//!   --duration S`); see `examples/serving_engine.rs` and
+//!   `benches/serving_engine.rs` (emits `BENCH_serving_engine.json`,
+//!   CI-gated at >= 1.5x baseline goodput at overload).
+//!
 //! ## Compute fidelity: bit-serial execution vs exact ledger replay
 //!
 //! Every compute path is governed by

@@ -3,6 +3,9 @@
 use fat_imc::cli::{Args, HELP};
 use fat_imc::config::FatConfig;
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
+use fat_imc::coordinator::engine::{
+    poisson_trace, EngineConfig, SchedPolicy, ServingEngine, TraceConfig,
+};
 use fat_imc::coordinator::model::ModelSpec;
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
 use fat_imc::coordinator::session::{wreg_footprint, ChipSession};
@@ -75,6 +78,7 @@ fn run(raw: &[String]) -> Result<()> {
         "map" => cmd_map(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "resnet" => cmd_resnet(&args),
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
@@ -478,6 +482,152 @@ naive path would have paid the {:.1} us load {n_req} more times",
         load_ns / 1e3
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Open-loop Poisson load vs the continuous-batching engine: replay one
+/// deterministic arrival trace through the SLO-aware engine AND the
+/// dequeue-fusion baseline scheduler on a virtual clock, print both
+/// sides' accounting and percentiles, and gate engine goodput >= the
+/// baseline's — the CI smoke's sanity check lives in this command.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    args.allow(&[
+        "rate", "load", "duration", "seed", "window", "queue-windows", "deadline-us",
+        "interactive", "chips", "fidelity", "batch", "input", "scale", "sparsity", "classes",
+    ])?;
+    let batch = args.get_usize("batch", 1)?;
+    let input = args.get_usize("input", 16)?;
+    let scale = args.get_usize("scale", 16)?;
+    let sparsity = args.get_f64("sparsity", 0.7)?;
+    let classes = args.get_usize("classes", 10)?;
+    let seed = args.get_usize("seed", 0x10AD)? as u64;
+    let window = args.get_usize("window", 4)?;
+    let queue_windows = args.get_usize("queue-windows", 4)?;
+    let chips = args.get_usize("chips", 1)?;
+    let spec = ModelSpec::synthetic_resnet18(batch, input, scale, sparsity, 7, classes);
+    let mut cfg = ChipConfig::fat();
+    if let Some(f) = fidelity_flag(args)? {
+        cfg.fidelity = f;
+    }
+    let hw = HwParams::default();
+
+    // Probe the solo simulated latency once: the default rate, duration,
+    // and deadlines all scale from it, so `fat loadgen` is meaningfully
+    // overloaded (or not) at any model size.
+    let mut probe = ChipSession::new(cfg, spec.clone())?;
+    let solo = probe.infer(&spec.random_input(&mut Rng::new(1)))?;
+    let solo_us = solo.metrics.latency_ns / 1e3;
+    drop(probe);
+    let service_rate = 1e6 / solo_us; // solo requests per simulated second
+    let rate = match args.get("rate") {
+        Some(_) => args.get_f64("rate", 0.0)?,
+        None => args.get_f64("load", 3.0)? * service_rate,
+    };
+    let duration_s = args.get_f64("duration", 160.0 / rate)?;
+    let deadline_us = args.get_f64("deadline-us", 10.0 * solo_us)?;
+    let share = args.get_f64("interactive", 0.25)?;
+    let tc = TraceConfig {
+        rate_rps: rate,
+        duration_s,
+        seed,
+        deadline_us,
+        interactive_share: share,
+        interactive_deadline_us: 0.5 * deadline_us,
+    };
+    let trace = poisson_trace(&spec, &tc)?;
+    println!(
+        "model {}: solo simulated latency {:.1} us ({:.0} req/s solo service rate)",
+        spec.name, solo_us, service_rate
+    );
+    println!(
+        "offered: {} requests at {:.0} req/s over {:.4} s simulated ({:.2}x solo load), \
+seed {seed:#x}",
+        trace.len(),
+        rate,
+        duration_s,
+        rate / service_rate
+    );
+    println!(
+        "SLO: batch deadline {:.1} us, interactive {:.1} us ({:.0}% interactive)",
+        deadline_us,
+        0.5 * deadline_us,
+        share * 100.0
+    );
+
+    let build = |policy: SchedPolicy| -> Result<ServingEngine> {
+        let config = EngineConfig { max_batch: window, queue_windows, queue_depth: None };
+        if chips > 1 {
+            let plan = plan_auto(&cfg, &spec, chips, &hw)?;
+            ServingEngine::new(cfg, spec.clone(), plan, hw, policy, config)
+        } else {
+            ServingEngine::single_chip(cfg, spec.clone(), policy, config)
+        }
+    };
+    let mut engine = build(SchedPolicy::SloEdf)?;
+    if engine.effective_batch() != window {
+        println!(
+            "  fused window clamped to {} (register capacity), queue depth {}",
+            engine.effective_batch(),
+            engine.queue_depth()
+        );
+    }
+    let engine_report = engine.run_trace(trace.clone())?;
+    let fifo_report = build(SchedPolicy::FifoDequeue)?.run_trace(trace)?;
+
+    println!(
+        "\n{:<14} {:>8} {:>9} {:>9} {:>6} {:>7} {:>8} {:>11} {:>10} {:>10} {:>10}",
+        "scheduler", "offered", "admitted", "rejected", "shed", "served", "on-time",
+        "goodput r/s", "p50 us", "p99 us", "p999 us"
+    );
+    for (name, rep) in [("slo-edf", &engine_report), ("fifo-dequeue", &fifo_report)] {
+        let lat = rep.served_latencies_us();
+        let (p50, p99, p999) = if lat.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN)
+        } else {
+            let ps = fat_imc::bench_harness::percentiles(lat, &[0.50, 0.99, 0.999]);
+            (ps[0], ps[1], ps[2])
+        };
+        println!(
+            "{:<14} {:>8} {:>9} {:>9} {:>6} {:>7} {:>8} {:>11.1} {:>10.1} {:>10.1} {:>10.1}",
+            name,
+            rep.stats.offered,
+            rep.stats.admitted,
+            rep.stats.rejected,
+            rep.stats.shed,
+            rep.stats.served,
+            rep.stats.on_time,
+            rep.goodput_rps(),
+            p50,
+            p99,
+            p999
+        );
+    }
+
+    // sanity gates (the CI smoke runs this command in overload and relies
+    // on a non-zero exit when they fail)
+    for (name, rep) in [("slo-edf", &engine_report), ("fifo-dequeue", &fifo_report)] {
+        fat_imc::ensure!(
+            rep.stats.admitted + rep.stats.rejected == rep.stats.offered
+                && rep.stats.served + rep.stats.shed == rep.stats.admitted,
+            "{name}: accounting must conserve requests, got {:?}",
+            rep.stats
+        );
+    }
+    // 2% tie tolerance: at underload the two schedulers serve the same
+    // requests and differ only in data-dependent fused-window latencies
+    fat_imc::ensure!(
+        engine_report.goodput_rps() >= 0.98 * fifo_report.goodput_rps(),
+        "the SLO engine must not lose goodput to the dequeue-fusion baseline: {:.1} vs {:.1} r/s",
+        engine_report.goodput_rps(),
+        fifo_report.goodput_rps()
+    );
+    println!(
+        "\ngoodput: slo-edf {:.1} r/s vs fifo-dequeue {:.1} r/s ({:.2}x)",
+        engine_report.goodput_rps(),
+        fifo_report.goodput_rps(),
+        engine_report.goodput_rps() / fifo_report.goodput_rps().max(1e-12)
+    );
+    println!("loadgen OK");
     Ok(())
 }
 

@@ -531,3 +531,40 @@ fn all_four_sa_designs_drive_a_correct_layer() {
         assert_eq!(run.output.data, want.data, "{sa:?}");
     }
 }
+
+#[test]
+fn cli_loadgen_smoke() {
+    // `fat loadgen` replays one deterministic Poisson trace through the
+    // SLO engine and the dequeue-fusion baseline; its in-binary gates
+    // (request conservation, engine goodput >= baseline) exit non-zero on
+    // failure, so a clean exit IS the goodput sanity check.  Tiny model +
+    // modest overload keeps the debug binary fast.
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args([
+            "loadgen", "--load", "4", "--seed", "7", "--input", "8", "--scale", "64",
+            "--classes", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "loadgen failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("slo-edf"), "{text}");
+    assert!(text.contains("fifo-dequeue"), "{text}");
+    assert!(text.contains("goodput"), "{text}");
+    assert!(text.contains("loadgen OK"), "{text}");
+
+    // flag discipline: typos are rejected, bad rates are clean errors
+    let out = std::process::Command::new(exe)
+        .args(["loadgen", "--laod", "3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["loadgen", "--rate", "-5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("rate"), "{err}");
+}
