@@ -11,7 +11,7 @@
 
 use fat_imc::coordinator::accelerator::ChipConfig;
 use fat_imc::coordinator::server::{InferenceServer, Request, ServingMode};
-use fat_imc::coordinator::session::{wreg_footprint, ModelSpec};
+use fat_imc::coordinator::session::{op_wreg_footprint, ModelSpec};
 use fat_imc::coordinator::tensor_parallel::{plan_auto, TensorParallelSession};
 use fat_imc::mapping::schemes::HwParams;
 use fat_imc::nn::tensor::Tensor4;
@@ -33,7 +33,7 @@ fn main() {
     let biggest = spec
         .layers
         .iter()
-        .map(|ls| wreg_footprint(&ls.layer, &planner_probe))
+        .map(|ls| op_wreg_footprint(&ls.op, &planner_probe))
         .max()
         .expect("at least one layer");
     let mut cfg = ChipConfig::fat();

@@ -9,7 +9,7 @@
 
 use fat_imc::coordinator::accelerator::ChipConfig;
 use fat_imc::coordinator::model::ModelSpec;
-use fat_imc::coordinator::session::{wreg_footprint, ChipSession};
+use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession};
 use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
 use fat_imc::mapping::schemes::HwParams;
 use fat_imc::testutil::Rng;
@@ -25,7 +25,7 @@ fn main() {
     let full = ChipConfig::fat();
     let planner = full.planner();
     let footprints: Vec<u64> =
-        spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+        spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
     let total: u64 = footprints.iter().sum();
     let biggest = *footprints.iter().max().unwrap();
     println!(
@@ -55,8 +55,8 @@ fn main() {
         println!(
             "  shard {}: layers {}..{} ({} layers, {fp} register entries, {:.0}% of capacity)",
             i + 1,
-            spec.layers[a].layer.name,
-            spec.layers[b - 1].layer.name,
+            spec.layers[a].op.name(),
+            spec.layers[b - 1].op.name(),
             b - a,
             100.0 * fp as f64 / capacity as f64
         );

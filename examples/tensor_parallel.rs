@@ -12,7 +12,7 @@
 
 use fat_imc::coordinator::accelerator::ChipConfig;
 use fat_imc::coordinator::model::ModelSpec;
-use fat_imc::coordinator::session::{wreg_footprint, ChipSession, LoadedModel};
+use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession, LoadedModel};
 use fat_imc::coordinator::sharding::ShardPlan;
 use fat_imc::coordinator::tensor_parallel::{plan_auto, TensorParallelSession, TensorPlan};
 use fat_imc::mapping::schemes::HwParams;
@@ -29,7 +29,7 @@ fn main() {
     let full = ChipConfig::fat();
     let planner = full.planner();
     let footprints: Vec<u64> =
-        spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+        spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
     let total: u64 = footprints.iter().sum();
     let (big_idx, &biggest) = footprints
         .iter()
@@ -41,7 +41,7 @@ fn main() {
 needs {biggest} ==",
         spec.name,
         spec.layers.len(),
-        spec.layers[big_idx].layer.name
+        spec.layers[big_idx].op.name()
     );
 
     // A chip generation whose register files hold ~60% of the largest
@@ -61,14 +61,14 @@ needs {biggest} ==",
         Err(e) => println!("layer-boundary sharding cannot help either: {e:#}"),
         Ok(_) => panic!("an oversized layer must defeat layer-granular sharding"),
     }
-    let need = TensorPlan::min_ways(&spec.layers[big_idx].layer, &small)
-        .expect("a single filter fits");
+    let need =
+        TensorPlan::min_ways(&spec.layers[big_idx], &small).expect("a single filter fits");
     assert!(need >= 2, "the largest layer should require a KN split");
     println!(
         "`{}` must be KN-split across at least {need} chips ({} filters, {} entries each)",
-        spec.layers[big_idx].layer.name,
-        spec.layers[big_idx].layer.kn,
-        biggest / spec.layers[big_idx].layer.kn as u64
+        spec.layers[big_idx].op.name(),
+        spec.layers[big_idx].op.kn(),
+        biggest / spec.layers[big_idx].op.kn() as u64
     );
 
     // The auto-planner: smallest chip budget that admits a hybrid plan.
@@ -93,8 +93,8 @@ needs {biggest} ==",
             "  stage {}: {}..{} ({} layers) on {} chip(s), max {} entries/chip \
 ({:.0}% of capacity), est {:.1} us",
             i + 1,
-            spec.layers[a].layer.name,
-            spec.layers[b - 1].layer.name,
+            spec.layers[a].op.name(),
+            spec.layers[b - 1].op.name(),
             b - a,
             st.ways,
             st.chip_footprints.iter().max().unwrap(),

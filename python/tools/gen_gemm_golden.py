@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Generate the committed golden vectors for the rust GEMM-path cross-check.
+
+Writes ``rust/tests/golden/ternary_gemm.golden``: a small ``y = x @ w``
+instance with ``w`` in {-1, 0, +1}, computed exactly the way the L1 Pallas
+kernel (``python/compile/kernels/ternary_gemm.py``) computes it — two masked
+accumulations (the +1 pass and the -1 pass) followed by one subtraction,
+never a multiply by a weight value.  All values are integers well below
+2^24, so f32 on either side of the interchange is exact and the rust
+simulator's lowered-GEMM output can be compared bit for bit.
+
+The script is dependency-free (the fixture must regenerate in a bare
+checkout); when jax is importable it additionally cross-checks the fixture
+against the real Pallas kernel before writing.
+
+Usage: python3 python/tools/gen_gemm_golden.py
+"""
+
+from __future__ import annotations
+
+import os
+
+SEED = 0x60D
+M, K, N = 5, 7, 4
+SPARSITY = 0.5  # target share of zero weights
+
+MASK64 = (1 << 64) - 1
+
+
+def xorshift64star(state: int):
+    """The same xorshift64* generator family as rust's ``testutil::Rng``."""
+    while True:
+        state ^= (state >> 12) & MASK64
+        state = (state ^ (state << 25)) & MASK64
+        state ^= (state >> 27) & MASK64
+        yield (state * 0x2545F4914F6CDD1D) & MASK64
+
+
+def main() -> None:
+    rng = xorshift64star(SEED)
+    # 8-bit activations, exactly what the chip's entry quantizer produces
+    x = [[next(rng) % 256 for _ in range(K)] for _ in range(M)]
+    w = []
+    for _ in range(K):
+        row = []
+        for _ in range(N):
+            if (next(rng) % 1000) < SPARSITY * 1000:
+                row.append(0)
+            else:
+                row.append(1 if next(rng) % 2 == 0 else -1)
+        w.append(row)
+
+    # the kernel's three SACU stages: +1 pass, -1 pass, subtract
+    y = [
+        [
+            sum(x[mi][kk] for kk in range(K) if w[kk][ni] == 1)
+            - sum(x[mi][kk] for kk in range(K) if w[kk][ni] == -1)
+            for ni in range(N)
+        ]
+        for mi in range(M)
+    ]
+
+    try:  # optional: prove the fixture against the real Pallas kernel
+        import jax.numpy as jnp
+
+        from python.compile.kernels.ternary_gemm import ternary_gemm
+
+        got = ternary_gemm(
+            jnp.array(x, dtype=jnp.float32), jnp.array(w, dtype=jnp.float32)
+        )
+        assert got.tolist() == [[float(v) for v in row] for row in y], (
+            "pure-python masked accumulation diverged from the Pallas kernel"
+        )
+        print("cross-checked against the Pallas kernel: exact")
+    except ImportError:
+        print("jax unavailable; fixture written from the pure-python reference")
+
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    path = os.path.join(root, "rust", "tests", "golden", "ternary_gemm.golden")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    flat = lambda rows: " ".join(str(v) for row in rows for v in row)
+    with open(path, "w") as fh:
+        fh.write(
+            "# golden vectors for the rust GEMM-path cross-check (do not edit)\n"
+            f"# regenerate: python3 python/tools/gen_gemm_golden.py (seed {SEED:#x})\n"
+            "# semantics: y = x @ w via the ternary_gemm.py masked accumulations\n"
+            "# x is row-major (m x k), w row-major (k x n), y row-major (m x n)\n"
+            f"m {M}\n"
+            f"k {K}\n"
+            f"n {N}\n"
+            f"x {flat(x)}\n"
+            f"w {flat(w)}\n"
+            f"y {flat(y)}\n"
+        )
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

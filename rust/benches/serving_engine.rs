@@ -214,5 +214,11 @@ SLO {rel_batch_us:.1} us batch / {rel_int_us:.1} us interactive"
         "regenerated trace + fresh engine diverged from the recorded report".into(),
     );
 
+    // Host-time regression guard against the committed baseline (same
+    // 5x-tolerance scheme as hotpath; the virtual-clock gates above are
+    // the real behavioral gates).  Regenerate by copying a representative
+    // CI `BENCH_serving_engine.json` over the baseline file.
+    run.check_against_baseline("BENCH_serving_engine.baseline.json", 5.0);
+
     run.finish();
 }

@@ -11,6 +11,7 @@ use fat_imc::bench_harness::{fmt_ns, BenchRun};
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip, Fidelity};
 use fat_imc::coordinator::session::{ChipSession, ModelSpec};
 use fat_imc::mapping::img2col::{img2col, img2col_into, Img2ColMatrix};
+use fat_imc::nn::ops::LayerOp;
 use fat_imc::nn::resnet::resnet18_conv_layers_scaled;
 use fat_imc::nn::tensor::Tensor4;
 use fat_imc::report::Table;
@@ -48,7 +49,11 @@ fn main() {
         let q: Vec<f32> = x.data.iter().map(|&v| (v * 255.0).round()).collect();
         let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q);
         for (i, ls) in spec.layers.iter().enumerate() {
-            let layer_run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+            let conv = match ls.op {
+                LayerOp::Conv(l) => l,
+                _ => unreachable!("resnet bench spec is conv-only"),
+            };
+            let layer_run = chip.run_conv_layer(&cur, &ls.filter, &conv);
             naive_wreg_ns += layer_run.metrics.weight_load_ns;
             naive_wreg_writes += layer_run.metrics.weight_reg_writes;
             naive_total_ns += layer_run.metrics.latency_ns;

@@ -1,0 +1,141 @@
+//! Workload-shape bench: the three compute shapes the op IR serves —
+//! ResNet-style 3x3 conv chains, a ternary transformer block (GEMMs +
+//! multi-head attention epilogue on the DPU), and a mobilenet-style
+//! grouped depthwise/pointwise backbone — on identical chips, with the
+//! simulated latency/energy economics side by side.
+//!
+//! Gates: weights stay resident for every shape, outputs are
+//! bit-reproducible across fresh sessions, the attention epilogue is
+//! actually charged to the DPU, and depthwise grouping actually cuts
+//! MACs relative to a dense conv of the same geometry.  `finish()`
+//! writes `BENCH_workloads.json` (uploaded by CI).
+
+use fat_imc::bench_harness::{fmt_ns, BenchRun};
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::nn::ops::LayerOp;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::Table;
+use fat_imc::testutil::Rng;
+
+const REQUESTS: usize = 4;
+
+struct ShapeReport {
+    name: String,
+    layers: usize,
+    weights: usize,
+    macs: u64,
+    latency_ns: f64,
+    energy_pj: f64,
+    dpu_ns: f64,
+}
+
+fn serve(run: &mut BenchRun, cfg: ChipConfig, spec: &ModelSpec, seed: u64) -> ShapeReport {
+    let mut session = ChipSession::new(cfg, spec.clone()).expect("model fits the fat chip");
+    let mut rng = Rng::new(seed);
+    let xs: Vec<Tensor4> = (0..REQUESTS).map(|_| spec.random_input(&mut rng)).collect();
+    let outs = session.run_batch(&xs).expect("batch serves");
+
+    run.check(
+        &format!("{}: weights stay resident across the batch", spec.name),
+        outs.iter().all(|o| o.metrics.weight_reg_writes == 0),
+        format!("{:?}", outs.iter().map(|o| o.metrics.weight_reg_writes).collect::<Vec<_>>()),
+    );
+    let mut fresh = ChipSession::new(cfg, spec.clone()).expect("model fits the fat chip");
+    let again = fresh.infer(&xs[0]).expect("fresh session serves");
+    run.check(
+        &format!("{}: outputs bit-reproducible across fresh sessions", spec.name),
+        again.features.data == outs[0].features.data
+            && again.logits == outs[0].logits
+            && again.metrics == outs[0].metrics,
+        "fresh-session output or metrics diverged".into(),
+    );
+
+    run.time(&format!("{} infer, host time", spec.name), || session.infer(&xs[0]));
+
+    ShapeReport {
+        name: spec.name.clone(),
+        layers: spec.layers.len(),
+        weights: spec.weight_count(),
+        macs: spec.layers.iter().map(|ls| ls.op.macs()).sum(),
+        latency_ns: outs.iter().map(|o| o.metrics.latency_ns).sum(),
+        energy_pj: outs.iter().map(|o| o.metrics.energy_pj).sum(),
+        dpu_ns: outs.iter().map(|o| o.metrics.dpu_ns).sum(),
+    }
+}
+
+fn main() {
+    let mut run = BenchRun::new("workloads");
+    let cfg = ChipConfig::fat();
+
+    let resnet = ModelSpec::synthetic_resnet18(1, 16, 16, 0.6, 0xC0A1, 10);
+    let transformer = ModelSpec::synthetic_transformer(16, 32, 4, 2, 0.6, 0xC0A2);
+    let mobilenet = ModelSpec::synthetic_mobilenet(1, 16, 8, 0.6, 0xC0A3, 10);
+
+    let reports = vec![
+        serve(&mut run, cfg, &resnet, 0xC0B1),
+        serve(&mut run, cfg, &transformer, 0xC0B2),
+        serve(&mut run, cfg, &mobilenet, 0xC0B3),
+    ];
+
+    let mut table = Table::new(
+        &format!("three compute shapes, {REQUESTS}-request batch on one chip (simulated)"),
+        &["workload", "layers", "weights", "MACs", "latency", "energy", "DPU share", "pJ/MAC"],
+    );
+    for r in &reports {
+        table.row(vec![
+            r.name.clone(),
+            format!("{}", r.layers),
+            format!("{}", r.weights),
+            format!("{}", r.macs),
+            fmt_ns(r.latency_ns),
+            format!("{:.0} pJ", r.energy_pj),
+            format!("{:.1}%", 100.0 * r.dpu_ns / r.latency_ns),
+            format!("{:.4}", r.energy_pj / (REQUESTS as u64 * r.macs) as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    for r in &reports {
+        run.check(
+            &format!("{}: simulated latency and energy are positive and finite", r.name),
+            r.latency_ns > 0.0
+                && r.latency_ns.is_finite()
+                && r.energy_pj > 0.0
+                && r.energy_pj.is_finite(),
+            format!("{} / {:.1} pJ", fmt_ns(r.latency_ns), r.energy_pj),
+        );
+    }
+    run.check(
+        "transformer: the attention epilogue is charged on the DPU",
+        reports[1].dpu_ns > reports[0].dpu_ns / reports[0].macs as f64 * reports[1].macs as f64,
+        format!(
+            "{} DPU over {} MACs vs conv's {} over {}",
+            fmt_ns(reports[1].dpu_ns),
+            reports[1].macs,
+            fmt_ns(reports[0].dpu_ns),
+            reports[0].macs
+        ),
+    );
+
+    // depthwise grouping must actually cut work: each grouped layer's MAC
+    // count is 1/groups of the dense conv with the same geometry
+    let dw_ok = mobilenet.layers.iter().all(|ls| match ls.op {
+        LayerOp::GroupedConv(g) => {
+            let dense = g.unit();
+            let mut full = dense;
+            full.c = g.c_in;
+            full.kn = g.groups * g.kg;
+            ls.op.macs() * g.groups as u64 == full.macs()
+        }
+        _ => true,
+    });
+    run.check(
+        "mobilenet: grouped conv MACs are 1/groups of the dense equivalent",
+        dw_ok,
+        "a grouped layer's MAC count does not shrink with its group count".into(),
+    );
+
+    run.check_against_baseline("BENCH_workloads.baseline.json", 5.0);
+    run.finish();
+}

@@ -9,6 +9,7 @@
 //!   map      --layer 10          Table VII/VIII mapping sweep for a layer
 //!   verify   [--artifacts dir]   simulator vs PJRT cross-check
 //!   resnet   --input 16 --scale 16 --requests 4 [--shards 2 | --auto --chips 4 [--serve]]
+//!   workload --net transformer|mobilenet [--auto --chips 3 [--serve]]
 //!   plan     --chips 4 [--wreg 256]  latency-balanced hybrid auto-plan
 //!   serve    --requests 16 --workers 4 [--mode pipelined --shards 2 --max-batch 4]
 //!                                     [--mode hybrid --chips 4 --max-batch 4]
@@ -157,6 +158,34 @@ COMMANDS:
                            bit-identity against the oracle again
       --wreg <n>           override register entries per CMA (shrink to
                            force sharding/splitting demos)
+      --fidelity <f>       ledger (default) | bit-serial (as in infer)
+  workload                 serve a non-conv workload through the op IR:
+                           a ternary transformer block (fused-QKV GEMMs +
+                           attention epilogue + FFN) or a mobilenet-style
+                           backbone (grouped depthwise + pointwise convs);
+                           prints the per-layer op table (kind, geometry,
+                           KN, register footprint, MACs), then either runs
+                           it on a single resident chip or proves the
+                           auto-planned hybrid fabric byte-identical to
+                           the single-chip oracle
+      --net <n>            transformer | mobilenet (required)
+      --seq <n>            transformer sequence length (default 8)
+      --dim <n>            transformer model width (default 8)
+      --heads <n>          transformer attention heads (default 2)
+      --ffn <x>            transformer FFN expansion multiple (default 2)
+      --batch <n>          mobilenet batch size (default 1)
+      --input <px>         mobilenet input height/width (default 16)
+      --width <n>          mobilenet base channel width (default 8)
+      --classes <n>        mobilenet classifier classes (default 10)
+      --sparsity <0..1>    weight sparsity (default 0.6)
+      --requests <n>       requests to serve (default 4)
+      --auto               auto-plan the model across --chips chips and
+                           self-check bit-exactness + register-write
+                           conservation vs the single-chip oracle
+      --chips <n>          chip budget for --auto (default 2)
+      --serve              after the inline --auto proof, replay the plan
+                           through the threaded hybrid server and check
+                           bit-identity again (needs --auto)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
   plan                     profile per-layer latency on the simulator and
                            print the latency-balanced hybrid plan

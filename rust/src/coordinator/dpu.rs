@@ -94,6 +94,81 @@ impl Dpu {
         (y, latency_ns, energy_pj)
     }
 
+    /// Multi-head scaled-dot-product attention scores over a fused-QKV
+    /// buffer — the transformer epilogue of the op IR.  `values` is the
+    /// BN output of a QKV GEMM in channel-major layout
+    /// `values[(b * 3d + c) * m + t]`: for each of `n` batch elements,
+    /// `3d` feature channels over `m` tokens, split as Q = channels
+    /// `0..d`, K = `d..2d`, V = `2d..3d`.  Per head (width `d / heads`):
+    /// `softmax(Qh^T Kh / sqrt(dh)) Vh`, with max-subtracted softmax for
+    /// stability.  Returns the `(n, d, m)` attended channels in the same
+    /// channel-major layout.  Pure per-batch-element f32 math, so fused
+    /// micro-batches reproduce solo requests bit-exactly.
+    pub fn attention(
+        &self,
+        values: &[f32],
+        n: usize,
+        d3: usize,
+        m: usize,
+        heads: usize,
+    ) -> DpuPass {
+        assert_eq!(values.len(), n * d3 * m, "fused QKV buffer shape");
+        assert!(d3 % 3 == 0, "channels must fuse Q/K/V");
+        let d = d3 / 3;
+        assert!(heads >= 1 && d % heads == 0, "heads must divide d");
+        let dh = d / heads;
+        let mut out = vec![0.0f32; n * d * m];
+        // channel-major accessor into one batch element's QKV block
+        let at = |base: usize, c: usize, t: usize| values[base + c * m + t];
+        let mut scores = vec![0.0f32; m * m];
+        for b in 0..n {
+            let base = b * d3 * m;
+            let obase = b * d * m;
+            for h in 0..heads {
+                let (q0, k0, v0) = (h * dh, d + h * dh, 2 * d + h * dh);
+                let scale = 1.0 / (dh as f32).sqrt();
+                for t in 0..m {
+                    for s in 0..m {
+                        let mut dot = 0.0f32;
+                        for c in 0..dh {
+                            dot += at(base, q0 + c, t) * at(base, k0 + c, s);
+                        }
+                        scores[t * m + s] = dot * scale;
+                    }
+                }
+                for t in 0..m {
+                    let row = &mut scores[t * m..(t + 1) * m];
+                    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0f32;
+                    for s in row.iter_mut() {
+                        *s = (*s - mx).exp();
+                        sum += *s;
+                    }
+                    for s in row.iter_mut() {
+                        *s /= sum;
+                    }
+                }
+                for c in 0..dh {
+                    for t in 0..m {
+                        let mut acc = 0.0f32;
+                        for s in 0..m {
+                            acc += scores[t * m + s] * at(base, v0 + c, s);
+                        }
+                        out[obase + (q0 + c) * m + t] = acc;
+                    }
+                }
+            }
+        }
+        // per head: 2*dh*m^2 score MACs, ~3*m^2 softmax ops (max scan,
+        // exp-subtract, normalize), 2*dh*m^2 value MACs — LANES-wide
+        let ops = n * heads * (4 * dh * m * m + 3 * m * m);
+        DpuPass {
+            values: out,
+            latency_ns: (ops as f64 / LANES as f64) * T_OP_NS,
+            energy_pj: ops as f64 * E_OP_PJ,
+        }
+    }
+
     /// Choose a requantization scale so the max observed value maps near
     /// full range.
     pub fn calibrate_scale(values: &[f32]) -> f32 {
@@ -168,5 +243,42 @@ mod tests {
         let small = dpu.requantize(&vec![1.0; 256], 1.0);
         let large = dpu.requantize(&vec![1.0; 2560], 1.0);
         assert!((large.latency_ns / small.latency_ns - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_with_equal_scores_averages_values() {
+        // constant Q and K make every score row uniform, so each output
+        // token is the mean of V over tokens, per channel
+        let dpu = Dpu;
+        let (d, m) = (2, 3);
+        let mut v = vec![1.0f32; 3 * d * m]; // Q = K = 1
+        // V channel 0: [3, 6, 9]; channel 1: [1, 2, 3]
+        v[2 * d * m..2 * d * m + m].copy_from_slice(&[3.0, 6.0, 9.0]);
+        v[2 * d * m + m..].copy_from_slice(&[1.0, 2.0, 3.0]);
+        let p = dpu.attention(&v, 1, 3 * d, m, 1);
+        assert_eq!(p.values.len(), d * m);
+        for t in 0..m {
+            assert!((p.values[t] - 6.0).abs() < 1e-5, "ch0 token {t}");
+            assert!((p.values[m + t] - 2.0).abs() < 1e-5, "ch1 token {t}");
+        }
+        assert!(p.latency_ns > 0.0 && p.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn attention_is_independent_per_batch_element() {
+        // fused micro-batches must reproduce solo requests bit-exactly:
+        // running two elements together equals running each alone
+        let dpu = Dpu;
+        let (d3, m, heads) = (6, 4, 2);
+        let a: Vec<f32> = (0..d3 * m).map(|i| ((i * 7 + 3) % 11) as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..d3 * m).map(|i| ((i * 5 + 1) % 13) as f32 * 0.5 - 2.0).collect();
+        let mut fused = a.clone();
+        fused.extend_from_slice(&b);
+        let pf = dpu.attention(&fused, 2, d3, m, heads);
+        let pa = dpu.attention(&a, 1, d3, m, heads);
+        let pb = dpu.attention(&b, 1, d3, m, heads);
+        assert_eq!(&pf.values[..pa.values.len()], &pa.values[..]);
+        assert_eq!(&pf.values[pa.values.len()..], &pb.values[..]);
+        assert!((pf.latency_ns - 2.0 * pa.latency_ns).abs() < 1e-9);
     }
 }

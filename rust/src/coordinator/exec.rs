@@ -224,12 +224,14 @@ pub fn hybrid_stage_plans(
                 let row: Vec<ModelSpec> = tp
                     .slices
                     .iter()
-                    .map(|&(k0, k1)| ModelSpec {
-                        name: format!("{}:{}.kn{}-{}", spec.name, ls.layer.name, k0, k1),
-                        layers: vec![ls.slice_kn(k0, k1)],
-                        head: None,
+                    .map(|&(k0, k1)| {
+                        Ok(ModelSpec {
+                            name: format!("{}:{}.kn{}-{}", spec.name, ls.op.name(), k0, k1),
+                            layers: vec![ls.slice_kn(k0, k1)?],
+                            head: None,
+                        })
                     })
-                    .collect();
+                    .collect::<Result<_>>()?;
                 layer_slices.push(row);
             }
             out.push(StagePlan::TpGroup { layer_slices, fault });

@@ -66,7 +66,7 @@ pub use engine::{
 };
 pub use exec::{StagePlan, StageRunner};
 pub use metrics::ChipMetrics;
-pub use model::{HeadSpec, LayerSpec, ModelSpec};
+pub use model::{AttnSpec, HeadSpec, LayerSpec, ModelSpec};
 pub use reliability::{default_ber_grid, sweep_model, SweepConfig, SweepReport};
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response, ServingMode, SubmitError};

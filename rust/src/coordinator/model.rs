@@ -1,54 +1,108 @@
 //! Model descriptions for the serving stack: what a chip (or a pipeline
 //! of chips) is asked to keep resident.
 //!
-//! A [`ModelSpec`] is pure description — geometry, ternary weights, folded
-//! BN, optional stem pool and classifier head — with *validation* but no
-//! hardware state.  Loading it onto one chip is [`super::session`]'s job;
-//! cutting it across several chips is [`super::sharding`]'s.
+//! A [`ModelSpec`] is pure description — a chain of ternary ops
+//! ([`LayerOp`]: dense conv, grouped/depthwise conv, GEMM), resident
+//! ternary weights, folded BN, optional attention epilogue, stem pool
+//! and classifier head — with *validation* but no hardware state.
+//! Loading it onto one chip is [`super::session`]'s job; cutting it
+//! across several chips is [`super::sharding`]'s.
 
 use crate::error::{ensure, Result};
 use crate::nn::layers::TernaryFilter;
+use crate::nn::ops::LayerOp;
 use crate::nn::resnet::{resnet18_conv_layers_scaled, ConvLayer};
 use crate::nn::tensor::Tensor4;
+use crate::nn::workloads::{
+    mobilenet_style_backbone, ternary_transformer_block, WorkloadLayer,
+};
 use crate::testutil::Rng;
 
-/// One conv stage of a model: geometry, resident ternary weights, folded
-/// BN parameters, and whether the DPU max-pools the output (ResNet stem).
+/// The multi-head attention-score epilogue: the layer's `3d` output
+/// channels are read as fused Q/K/V over the spatial (token) axis and
+/// reduced to `d` attended channels by the DPU (scaled dot product +
+/// softmax per head).  Couples the QKV channels, so a layer carrying it
+/// cannot be KN-sliced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnSpec {
+    pub heads: usize,
+}
+
+/// One stage of a model: a ternary op, its resident weights, folded BN
+/// parameters, and the DPU epilogues (attention scores, 2x2/s2 max
+/// pool).
 #[derive(Debug, Clone)]
 pub struct LayerSpec {
-    pub layer: ConvLayer,
+    pub op: LayerOp,
     pub filter: TernaryFilter,
     pub gamma: Vec<f32>,
     pub beta: Vec<f32>,
     /// Apply the DPU's 2x2/s2 max pool after BN + ReLU.
     pub pool_after: bool,
+    /// Multi-head attention-score epilogue (transformer QKV layers).
+    pub attn: Option<AttnSpec>,
 }
 
 impl LayerSpec {
+    /// Channels this layer hands to the next one: the op's raw KN, except
+    /// the attention epilogue folds fused QKV (3d) back to d.
+    pub fn out_channels(&self) -> usize {
+        match self.attn {
+            Some(_) => self.op.kn() / 3,
+            None => self.op.kn(),
+        }
+    }
+
+    /// Output spatial extent after the op and the optional pool.
+    pub fn out_spatial(&self) -> (usize, usize) {
+        let (_, _, oh, ow) = self.op.out_geometry();
+        if self.pool_after {
+            ((oh / 2).max(1), (ow / 2).max(1))
+        } else {
+            (oh, ow)
+        }
+    }
+
     /// The contiguous KN slice `[k0, k1)` of this layer: the same
-    /// geometry with only filters `k0..k1` (and their BN parameters)
-    /// resident — the per-chip unit of filter-dimension tensor
-    /// parallelism (see `coordinator::tensor_parallel`).  The slice's
-    /// conv output is exactly channels `k0..k1` of the full layer's,
+    /// geometry with only output channels `k0..k1` (and their BN
+    /// parameters) resident — the per-chip unit of filter-dimension
+    /// tensor parallelism (see `coordinator::tensor_parallel`).  The
+    /// slice's output is exactly channels `k0..k1` of the full layer's,
     /// because per-filter dot products are independent.
-    pub fn slice_kn(&self, k0: usize, k1: usize) -> LayerSpec {
-        assert!(k0 < k1 && k1 <= self.layer.kn, "bad KN slice [{k0}, {k1})");
-        let mut layer = self.layer;
-        layer.kn = k1 - k0;
-        let flat = self.layer.j_dim();
-        LayerSpec {
-            layer,
+    ///
+    /// Grouped convs can only be cut at group boundaries (a group's
+    /// filters share input channels no other slice would hold), and
+    /// attention layers cannot be sliced at all.
+    pub fn slice_kn(&self, k0: usize, k1: usize) -> Result<LayerSpec> {
+        let kn = self.op.kn();
+        ensure!(k0 < k1 && k1 <= kn, "bad KN slice [{k0}, {k1}) of {kn} channels");
+        ensure!(
+            self.attn.is_none(),
+            "layer `{}`: the attention epilogue couples QKV channels; KN slicing unavailable",
+            self.op.name()
+        );
+        let kg = self.op.kn_granularity();
+        ensure!(
+            k0 % kg == 0 && k1 % kg == 0,
+            "layer `{}`: KN slice [{k0}, {k1}) crosses a group boundary (granularity {kg})",
+            self.op.name()
+        );
+        let (_, fc, fkh, fkw) = self.op.filter_dims();
+        let flat = fc * fkh * fkw;
+        Ok(LayerSpec {
+            op: self.op.slice_kn(k0, k1),
             filter: TernaryFilter::new(
                 k1 - k0,
-                self.layer.c,
-                self.layer.kh,
-                self.layer.kw,
+                fc,
+                fkh,
+                fkw,
                 self.filter.w[k0 * flat..k1 * flat].to_vec(),
             ),
             gamma: self.gamma[k0..k1].to_vec(),
             beta: self.beta[k0..k1].to_vec(),
             pool_after: self.pool_after,
-        }
+            attn: None,
+        })
     }
 }
 
@@ -72,8 +126,7 @@ pub struct ModelSpec {
 impl ModelSpec {
     /// The input tensor geometry a request must match: (n, c, h, w).
     pub fn input_geometry(&self) -> (usize, usize, usize, usize) {
-        let l = &self.layers[0].layer;
-        (l.n, l.c, l.h, l.w)
+        self.layers[0].op.in_geometry()
     }
 
     /// A random request tensor for this model: quantization-friendly
@@ -89,63 +142,112 @@ impl ModelSpec {
 
     /// Total ternary weights resident on the chip.
     pub fn weight_count(&self) -> usize {
-        self.layers.iter().map(|l| l.layer.weights()).sum::<usize>()
+        self.layers.iter().map(|l| l.op.weights()).sum::<usize>()
             + self.head.as_ref().map_or(0, |h| h.wfc.len())
     }
 
-    /// Mean weight sparsity across the conv layers.
+    /// Weight sparsity across the layers, weighted by per-layer weight
+    /// count (an unweighted per-layer mean would let tiny layers — e.g.
+    /// depthwise groups next to wide pointwise convs — skew the figure).
     pub fn sparsity(&self) -> f64 {
-        if self.layers.is_empty() {
+        let total: usize = self.layers.iter().map(|l| l.filter.w.len()).sum();
+        if total == 0 {
             return 0.0;
         }
-        self.layers.iter().map(|l| l.filter.sparsity()).sum::<f64>() / self.layers.len() as f64
+        self.layers
+            .iter()
+            .map(|l| l.filter.sparsity() * l.filter.w.len() as f64)
+            .sum::<f64>()
+            / total as f64
     }
 
-    /// Check internal consistency: filter/BN dims per layer and exact
-    /// layer-to-layer chaining of channels, batch, and spatial extents
-    /// (through the stem pool when `pool_after` is set).
+    /// Check internal consistency: filter/BN/epilogue dims per layer and
+    /// exact layer-to-layer chaining of channels, batch, and spatial
+    /// extents (through the stem pool when `pool_after` is set).  A GEMM
+    /// may follow a spatial op by *flattening* it: the NCHW layouts of
+    /// `(n, c, h, w)` and `(n, c, h*w, 1)` are byte-identical, so the
+    /// chain is legal whenever `m == h * w`.
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.layers.is_empty(), "model `{}` has no layers", self.name);
         for (i, ls) in self.layers.iter().enumerate() {
-            let l = &ls.layer;
+            let kn = ls.op.kn();
+            let (fkn, fc, fkh, fkw) = ls.op.filter_dims();
             ensure!(
-                ls.filter.kn == l.kn && ls.filter.c == l.c
-                    && ls.filter.kh == l.kh && ls.filter.kw == l.kw,
-                "layer {i} ({}): filter dims do not match geometry", l.name
+                ls.filter.kn == fkn && ls.filter.c == fc
+                    && ls.filter.kh == fkh && ls.filter.kw == fkw,
+                "layer {i} ({}): filter dims do not match op geometry", ls.op.name()
             );
             ensure!(
-                ls.gamma.len() == l.kn && ls.beta.len() == l.kn,
-                "layer {i} ({}): BN params must be per output channel", l.name
+                ls.gamma.len() == kn && ls.beta.len() == kn,
+                "layer {i} ({}): BN params must be per output channel", ls.op.name()
             );
+            if let LayerOp::GroupedConv(g) = &ls.op {
+                ensure!(
+                    g.groups > 0 && g.cg > 0 && g.kg > 0,
+                    "layer {i} ({}): degenerate grouping", ls.op.name()
+                );
+                ensure!(
+                    g.c_offset + g.groups * g.cg <= g.c_in,
+                    "layer {i} ({}): groups read past the incoming tensor", ls.op.name()
+                );
+            }
+            if let Some(a) = &ls.attn {
+                ensure!(
+                    matches!(ls.op, LayerOp::Gemm(_)),
+                    "layer {i} ({}): the attention epilogue requires a GEMM layer",
+                    ls.op.name()
+                );
+                ensure!(a.heads >= 1, "layer {i} ({}): zero heads", ls.op.name());
+                ensure!(
+                    kn % 3 == 0,
+                    "layer {i} ({}): fused QKV needs kn divisible by 3", ls.op.name()
+                );
+                ensure!(
+                    (kn / 3) % a.heads == 0,
+                    "layer {i} ({}): d_model {} must divide into {} heads",
+                    ls.op.name(), kn / 3, a.heads
+                );
+                ensure!(
+                    !ls.pool_after,
+                    "layer {i} ({}): pooling the token axis after attention is unsupported",
+                    ls.op.name()
+                );
+            }
         }
         for i in 1..self.layers.len() {
             let prev = &self.layers[i - 1];
-            let cur = &self.layers[i].layer;
-            let p = &prev.layer;
-            ensure!(cur.n == p.n, "layer {i}: batch changes mid-model");
+            let cur = &self.layers[i].op;
+            let pc = prev.out_channels();
+            let (eh, ew) = prev.out_spatial();
+            ensure!(cur.batch() == prev.op.batch(), "layer {i}: batch changes mid-model");
+            let (_, c_in, h_in, w_in) = cur.in_geometry();
             ensure!(
-                cur.c == p.kn,
+                c_in == pc,
                 "layer {i} ({}): consumes {} channels but `{}` produces {}",
-                cur.name, cur.c, p.name, p.kn
+                cur.name(), c_in, prev.op.name(), pc
             );
-            let (mut eh, mut ew) = (p.oh(), p.ow());
-            if prev.pool_after {
-                eh = (eh / 2).max(1);
-                ew = (ew / 2).max(1);
+            match cur {
+                // a GEMM may flatten the incoming spatial extent
+                LayerOp::Gemm(g) => ensure!(
+                    g.m == eh * ew,
+                    "layer {i} ({}): GEMM of m = {} cannot flatten the {}x{} input",
+                    cur.name(), g.m, eh, ew
+                ),
+                _ => ensure!(
+                    h_in == eh && w_in == ew,
+                    "layer {i} ({}): expects {}x{} input but `{}` produces {}x{}",
+                    cur.name(), h_in, w_in, prev.op.name(), eh, ew
+                ),
             }
-            ensure!(
-                cur.h == eh && cur.w == ew,
-                "layer {i} ({}): expects {}x{} input but `{}` produces {}x{}",
-                cur.name, cur.h, cur.w, p.name, eh, ew
-            );
         }
         if let Some(h) = &self.head {
-            let last = &self.layers[self.layers.len() - 1].layer;
+            let last = &self.layers[self.layers.len() - 1];
+            let c_last = last.out_channels();
             ensure!(h.classes > 0, "head: zero classes");
             ensure!(
-                h.wfc.len() == last.kn * h.classes,
+                h.wfc.len() == c_last * h.classes,
                 "head: FC wants {} weights, got {}",
-                last.kn * h.classes,
+                c_last * h.classes,
                 h.wfc.len()
             );
             ensure!(h.bfc.len() == h.classes, "head: bias/classes mismatch");
@@ -153,9 +255,51 @@ impl ModelSpec {
         Ok(())
     }
 
-    /// Synthetic weights/BN for a conv-layer chain at a target sparsity —
-    /// the Fig. 14 workload generator lifted to whole models.
-    /// `pool_after_first` models the ResNet stem.
+    /// Synthetic weights/BN for an arbitrary op chain at a target
+    /// sparsity — the generator behind every synthetic model.  Each
+    /// layer draws its ternary filter, then gamma, then beta, in order;
+    /// the head (if any) draws last.
+    pub fn synthetic_ops(
+        name: &str,
+        layers: &[WorkloadLayer],
+        sparsity: f64,
+        seed: u64,
+        classes: Option<usize>,
+    ) -> Self {
+        assert!(!layers.is_empty(), "synthetic model needs at least one layer");
+        let mut rng = Rng::new(seed);
+        let layers: Vec<LayerSpec> = layers
+            .iter()
+            .map(|wl| {
+                let (kn, c, kh, kw) = wl.op.filter_dims();
+                LayerSpec {
+                    op: wl.op,
+                    filter: TernaryFilter::new(
+                        kn, c, kh, kw,
+                        rng.ternary_vec(kn * c * kh * kw, sparsity),
+                    ),
+                    // positive, smallish scales keep the float path stable
+                    gamma: (0..kn).map(|_| rng.f32_range(0.02, 0.08)).collect(),
+                    beta: (0..kn).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+                    pool_after: wl.pool_after,
+                    attn: wl.attn_heads.map(|heads| AttnSpec { heads }),
+                }
+            })
+            .collect();
+        let head = classes.map(|classes| {
+            let c_last = layers[layers.len() - 1].out_channels();
+            HeadSpec {
+                classes,
+                wfc: rng.ternary_vec(c_last * classes, sparsity),
+                bfc: (0..classes).map(|_| rng.f32_range(-0.2, 0.2)).collect(),
+            }
+        });
+        Self { name: name.to_string(), layers, head }
+    }
+
+    /// Synthetic weights/BN for a plain conv-layer chain — the Fig. 14
+    /// workload generator lifted to whole models.  `pool_after_first`
+    /// models the ResNet stem.
     pub fn synthetic(
         name: &str,
         geo: &[ConvLayer],
@@ -165,31 +309,16 @@ impl ModelSpec {
         classes: Option<usize>,
     ) -> Self {
         assert!(!geo.is_empty(), "synthetic model needs at least one conv layer");
-        let mut rng = Rng::new(seed);
-        let layers: Vec<LayerSpec> = geo
+        let layers: Vec<WorkloadLayer> = geo
             .iter()
             .enumerate()
-            .map(|(i, l)| LayerSpec {
-                layer: *l,
-                filter: TernaryFilter::new(
-                    l.kn, l.c, l.kh, l.kw,
-                    rng.ternary_vec(l.kn * l.j_dim(), sparsity),
-                ),
-                // positive, smallish scales keep the float path stable
-                gamma: (0..l.kn).map(|_| rng.f32_range(0.02, 0.08)).collect(),
-                beta: (0..l.kn).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+            .map(|(i, l)| WorkloadLayer {
+                op: LayerOp::Conv(*l),
+                attn_heads: None,
                 pool_after: pool_after_first && i == 0,
             })
             .collect();
-        let head = classes.map(|classes| {
-            let c_last = geo[geo.len() - 1].kn;
-            HeadSpec {
-                classes,
-                wfc: rng.ternary_vec(c_last * classes, sparsity),
-                bfc: (0..classes).map(|_| rng.f32_range(-0.2, 0.2)).collect(),
-            }
-        });
-        Self { name: name.to_string(), layers, head }
+        Self::synthetic_ops(name, &layers, sparsity, seed, classes)
     }
 
     /// A scaled ResNet-18 with synthetic ternary weights — the end-to-end
@@ -205,11 +334,42 @@ impl ModelSpec {
         let geo = resnet18_conv_layers_scaled(batch, input_hw, ch_div);
         Self::synthetic("resnet18", &geo, true, sparsity, seed, Some(classes))
     }
+
+    /// One ternary transformer block (QKV + attention epilogue + FFN as
+    /// GEMMs) with synthetic weights.  No classifier head: the block's
+    /// output features are the response.
+    pub fn synthetic_transformer(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        ffn_mult: usize,
+        sparsity: f64,
+        seed: u64,
+    ) -> Self {
+        let geo = ternary_transformer_block(seq, d_model, heads, ffn_mult);
+        Self::synthetic_ops("transformer", &geo, sparsity, seed, None)
+    }
+
+    /// A MobileNet-style depthwise/pointwise backbone with synthetic
+    /// weights and a classifier head.
+    pub fn synthetic_mobilenet(
+        batch: usize,
+        input_hw: usize,
+        width: usize,
+        sparsity: f64,
+        seed: u64,
+        classes: usize,
+    ) -> Self {
+        let geo = mobilenet_style_backbone(batch, input_hw, width);
+        Self::synthetic_ops("mobilenet", &geo, sparsity, seed, Some(classes))
+    }
 }
 
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
+    use crate::nn::ops::{GemmLayer, GroupedConvLayer};
+    use crate::testutil::prop_check;
 
     /// A tiny but multi-layer spec (with stem pool + head) shared with the
     /// session and sharding tests — kept here so the validation cases live
@@ -224,6 +384,13 @@ pub(crate) mod tests {
         ModelSpec::synthetic("tiny", &geo, true, 0.6, seed, Some(5))
     }
 
+    fn conv_mut(ls: &mut LayerSpec) -> &mut ConvLayer {
+        match &mut ls.op {
+            LayerOp::Conv(l) => l,
+            _ => panic!("not a plain conv layer"),
+        }
+    }
+
     #[test]
     fn spec_validates_and_rejects_broken_chains() {
         let spec = tiny_spec(1);
@@ -231,7 +398,7 @@ pub(crate) mod tests {
         assert!(spec.sparsity() > 0.3 && spec.sparsity() < 0.9);
 
         let mut bad = tiny_spec(1);
-        bad.layers[1].layer.c = 5; // t1 produces 4 channels
+        conv_mut(&mut bad.layers[1]).c = 5; // t1 produces 4 channels
         assert!(bad.validate().is_err());
 
         let mut bad_spatial = tiny_spec(1);
@@ -247,9 +414,9 @@ pub(crate) mod tests {
     fn kn_slice_takes_matching_filter_and_bn_rows() {
         let spec = tiny_spec(9);
         let ls = &spec.layers[1]; // t2: kn = 6
-        let s = ls.slice_kn(2, 5);
-        assert_eq!(s.layer.kn, 3);
-        assert_eq!((s.layer.c, s.layer.h, s.layer.stride), (ls.layer.c, ls.layer.h, ls.layer.stride));
+        let s = ls.slice_kn(2, 5).unwrap();
+        assert_eq!(s.op.kn(), 3);
+        assert_eq!(s.op.in_geometry(), ls.op.in_geometry());
         assert_eq!(s.gamma, ls.gamma[2..5].to_vec());
         assert_eq!(s.beta, ls.beta[2..5].to_vec());
         for k in 0..3 {
@@ -263,7 +430,174 @@ pub(crate) mod tests {
     #[test]
     fn weight_count_includes_head() {
         let spec = tiny_spec(3);
-        let conv: usize = spec.layers.iter().map(|l| l.layer.weights()).sum();
+        let conv: usize = spec.layers.iter().map(|l| l.op.weights()).sum();
         assert_eq!(spec.weight_count(), conv + 4 * 5);
+    }
+
+    #[test]
+    fn sparsity_is_weighted_by_layer_size() {
+        // one huge dense-ish layer next to a tiny all-zero layer: the
+        // unweighted mean would report ~0.5; the weighted figure must sit
+        // near the big layer's sparsity.
+        let mut spec = tiny_spec(5);
+        spec.layers.truncate(2);
+        spec.head = None;
+        let w_big = spec.layers[0].filter.w.len() + spec.layers[1].filter.w.len();
+        for v in spec.layers[1].filter.w.iter_mut() {
+            *v = 1; // layer 1 fully dense
+        }
+        for v in spec.layers[0].filter.w.iter_mut() {
+            *v = 0; // layer 0 fully sparse
+        }
+        let want = spec.layers[0].filter.w.len() as f64 / w_big as f64;
+        assert!((spec.sparsity() - want).abs() < 1e-12, "weighted mean");
+    }
+
+    #[test]
+    fn transformer_and_mobilenet_specs_validate() {
+        let t = ModelSpec::synthetic_transformer(8, 6, 2, 2, 0.5, 11);
+        t.validate().expect("transformer spec");
+        assert_eq!(t.input_geometry(), (1, 6, 8, 1));
+        assert_eq!(t.layers[0].out_channels(), 6, "attention folds 3d back to d");
+        let m = ModelSpec::synthetic_mobilenet(2, 16, 8, 0.5, 12, 5);
+        m.validate().expect("mobilenet spec");
+        assert_eq!(m.layers.len(), 9);
+    }
+
+    #[test]
+    fn attention_layer_refuses_kn_slices_and_bad_shapes() {
+        let t = ModelSpec::synthetic_transformer(8, 6, 2, 2, 0.5, 13);
+        let err = t.layers[0].slice_kn(0, 3).unwrap_err();
+        assert!(format!("{err}").contains("attention"), "{err}");
+        // heads must divide d_model
+        let mut bad = t.clone();
+        bad.layers[0].attn = Some(AttnSpec { heads: 4 });
+        assert!(bad.validate().is_err());
+        // attention on a non-GEMM op is rejected
+        let mut conv_attn = tiny_spec(1);
+        conv_attn.layers[2].attn = Some(AttnSpec { heads: 1 });
+        assert!(conv_attn.validate().is_err());
+    }
+
+    #[test]
+    fn grouped_slice_kn_rejects_cross_group_cuts() {
+        // property: a KN slice of a grouped conv succeeds iff both cut
+        // points sit on group boundaries; every legal slice is a valid
+        // standalone model holding exactly its groups' filter rows.
+        prop_check(
+            "grouped-slice-boundaries",
+            64,
+            0x61AB,
+            |rng| {
+                let groups = rng.range(2, 6);
+                let kg = rng.range(1, 4);
+                let cg = rng.range(1, 3);
+                let kn = groups * kg;
+                let k0 = rng.range(0, kn);
+                let k1 = rng.range(k0 + 1, kn + 1);
+                (groups, kg, cg, k0, k1)
+            },
+            |&(groups, kg, cg, k0, k1)| {
+                let g = GroupedConvLayer {
+                    name: "g", n: 1, h: 6, w: 6, kh: 3, kw: 3, stride: 1, pad: 1,
+                    groups, cg, kg, c_offset: 0, c_in: groups * cg,
+                };
+                let wl = WorkloadLayer::plain(LayerOp::GroupedConv(g));
+                let spec = ModelSpec::synthetic_ops("g", &[wl], 0.5, 7, None);
+                spec.validate().map_err(|e| format!("base spec invalid: {e}"))?;
+                let ls = &spec.layers[0];
+                let aligned = k0 % kg == 0 && k1 % kg == 0;
+                match ls.slice_kn(k0, k1) {
+                    Err(e) if aligned => Err(format!("aligned slice rejected: {e}")),
+                    Ok(_) if !aligned => Err("cross-group slice accepted".into()),
+                    Err(_) => Ok(()),
+                    Ok(s) => {
+                        let (_, fc, fkh, fkw) = ls.op.filter_dims();
+                        let flat = fc * fkh * fkw;
+                        if s.filter.w != ls.filter.w[k0 * flat..k1 * flat] {
+                            return Err("slice holds wrong filter rows".into());
+                        }
+                        let solo =
+                            ModelSpec { name: "s".into(), layers: vec![s], head: None };
+                        solo.validate().map_err(|e| format!("slice spec invalid: {e}"))
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn validate_enforces_chaining_for_every_op_adjacency() {
+        // property: a conv -> depthwise -> pointwise -> flattening GEMM ->
+        // GEMM chain validates, and breaking any junction (channel count,
+        // spatial extent, GEMM m) is caught.
+        prop_check(
+            "op-adjacency-chaining",
+            32,
+            0x5EED,
+            |rng| (rng.range(1, 3), rng.range(2, 5), rng.range(6, 11)),
+            |&(n, c_div, hw)| {
+                let c = 2 * c_div;
+                let conv = ConvLayer {
+                    name: "c", n, c: 3, h: hw, w: hw, kn: c, kh: 3, kw: 3, stride: 1, pad: 1,
+                };
+                let dwb = ConvLayer {
+                    name: "dw", n, c, h: hw, w: hw, kn: c, kh: 3, kw: 3, stride: 1, pad: 1,
+                };
+                let dw = GroupedConvLayer::depthwise("dw", dwb);
+                let pw = ConvLayer {
+                    name: "pw", n, c, h: hw, w: hw, kn: 2 * c, kh: 1, kw: 1, stride: 1, pad: 0,
+                };
+                let flat = GemmLayer { name: "flat", b: n, m: hw * hw, k: 2 * c, n: c };
+                let gm = GemmLayer { name: "gm", b: n, m: hw * hw, k: c, n: c };
+                let chain = [
+                    WorkloadLayer::plain(LayerOp::Conv(conv)),
+                    WorkloadLayer::plain(LayerOp::GroupedConv(dw)),
+                    WorkloadLayer::plain(LayerOp::Conv(pw)),
+                    WorkloadLayer::plain(LayerOp::Gemm(flat)),
+                    WorkloadLayer::plain(LayerOp::Gemm(gm)),
+                ];
+                let build = |ops: &[WorkloadLayer]| {
+                    ModelSpec::synthetic_ops("chain", ops, 0.5, 3, None)
+                };
+                build(&chain)
+                    .validate()
+                    .map_err(|e| format!("clean chain rejected: {e}"))?;
+                // break one junction at a time — each broken chain is
+                // regenerated so every layer stays internally consistent
+                // and only the adjacency is wrong
+                let breakages: [(usize, &str, WorkloadLayer); 4] = [
+                    (1, "depthwise channel identity", {
+                        let mut b = dw;
+                        b.groups += 1;
+                        b.c_in += 1;
+                        WorkloadLayer::plain(LayerOp::GroupedConv(b))
+                    }),
+                    (2, "pointwise channel count", {
+                        let mut b = pw;
+                        b.c += 1;
+                        WorkloadLayer::plain(LayerOp::Conv(b))
+                    }),
+                    (3, "gemm flatten extent", {
+                        let mut b = flat;
+                        b.m += 1;
+                        WorkloadLayer::plain(LayerOp::Gemm(b))
+                    }),
+                    (4, "gemm reduction width", {
+                        let mut b = gm;
+                        b.k += 1;
+                        WorkloadLayer::plain(LayerOp::Gemm(b))
+                    }),
+                ];
+                for (li, what, wl) in breakages {
+                    let mut bad = chain;
+                    bad[li] = wl;
+                    if build(&bad).validate().is_ok() {
+                        return Err(format!("broken junction at layer {li} ({what}) accepted"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -79,8 +79,8 @@ use super::accelerator::ChipConfig;
 use super::exec::{self, StageRunner};
 use super::metrics::ChipMetrics;
 use super::session::{
-    batched_wreg_footprint, finalize_outputs, wreg_footprint, ChipSession, ModelOutput, ModelSpec,
-    QuantActivations,
+    batched_wreg_footprint, finalize_outputs, op_wreg_footprint, ChipSession, ModelOutput,
+    ModelSpec, QuantActivations,
 };
 use super::sharding::ShardPlan;
 use super::tensor_parallel::HybridPlan;
@@ -310,7 +310,7 @@ impl InferenceServer {
         slice_cfg.cmas = min_cmas;
         let planner = slice_cfg.planner();
         let footprint: u64 =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).sum();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).sum();
         ensure!(
             footprint <= slice_cfg.wreg_capacity(),
             "model `{}` needs {footprint} weight-register entries but a {min_cmas}-CMA \
@@ -1485,7 +1485,9 @@ exactly like the plain pipeline's", r.id);
     #[test]
     fn invalid_spec_is_rejected_before_spawning() {
         let mut bad = small_spec(2);
-        bad.layers[1].layer.c = 7;
+        if let crate::nn::ops::LayerOp::Conv(ref mut l) = bad.layers[1].op {
+            l.c = 7;
+        }
         assert!(InferenceServer::start(ChipConfig::fat(), 2, bad).is_err());
     }
 

@@ -6,10 +6,13 @@
 //! precisely so weights stay resident while activations stream, and this
 //! module models that contract end to end:
 //!
-//! - [`ModelSpec`] (see [`super::model`]) describes a multi-layer ternary
-//!   conv pipeline (filters plus folded BN per layer, optional stem
-//!   pooling and classifier head), e.g. the ResNet-18 backbone from
-//!   [`crate::nn::resnet::resnet18_conv_layers_scaled`];
+//! - [`ModelSpec`] (see [`super::model`]) describes a multi-layer chain
+//!   of ternary ops ([`crate::nn::ops::LayerOp`]: dense conv, grouped/
+//!   depthwise conv, GEMM — each with folded BN, optional attention
+//!   epilogue, stem pooling and classifier head), e.g. the ResNet-18
+//!   backbone from [`crate::nn::resnet::resnet18_conv_layers_scaled`],
+//!   a transformer block, or a MobileNet-style backbone
+//!   (see [`crate::nn::workloads`]);
 //! - [`LoadedModel::load`] checks the model's weight-register footprint
 //!   against the chip's [`ChipConfig::wreg_capacity`] — a model too big
 //!   for one chip is **rejected**, not silently overpacked; shard it with
@@ -52,20 +55,28 @@ use crate::coordinator::metrics::ChipMetrics;
 use crate::error::{bail, ensure, Result};
 use crate::mapping::img2col::{img2col_into, Img2ColMatrix};
 use crate::mapping::planner::{GridPlan, PlannerConfig};
-use crate::nn::layers;
+use crate::nn::layers::{self, TernaryFilter};
+use crate::nn::ops::LayerOp;
 use crate::nn::resnet::ConvLayer;
 use crate::nn::tensor::Tensor4;
 
-pub use super::model::{HeadSpec, LayerSpec, ModelSpec};
+pub use super::model::{AttnSpec, HeadSpec, LayerSpec, ModelSpec};
 
-/// Resident SACU weight-register entries (2-bit) one layer occupies on a
-/// chip: every column tile keeps its own copy of the `kn * j` register
-/// image, so the footprint is `kn * j_dim * col_tiles`.  This is exactly
-/// the number of register writes loading the layer costs, which is how
-/// the sharding conservation invariant (writes sum across shards to the
-/// unsharded total) falls out for free.
+/// Resident SACU weight-register entries (2-bit) one *native conv unit*
+/// occupies on a chip: every column tile keeps its own copy of the
+/// `kn * j` register image, so the footprint is `kn * j_dim * col_tiles`.
+/// This is exactly the number of register writes loading the unit costs,
+/// which is how the sharding conservation invariant (writes sum across
+/// shards to the unsharded total) falls out for free.
 pub fn wreg_footprint(layer: &ConvLayer, planner: &PlannerConfig) -> u64 {
     (layer.kn * layer.j_dim()) as u64 * planner.col_tiles(layer) as u64
+}
+
+/// Resident register entries a whole [`LayerOp`] occupies: the sum over
+/// its native units (one for conv/GEMM, one per group for grouped
+/// convs — each group plans its own tiny grid).
+pub fn op_wreg_footprint(op: &LayerOp, planner: &PlannerConfig) -> u64 {
+    op.units().iter().map(|u| wreg_footprint(&u.conv, planner)).sum()
 }
 
 /// Register footprint of a whole spec fused `k`-wide along N: micro-
@@ -76,19 +87,64 @@ pub fn wreg_footprint(layer: &ConvLayer, planner: &PlannerConfig) -> u64 {
 pub fn batched_wreg_footprint(spec: &ModelSpec, planner: &PlannerConfig, k: usize) -> u64 {
     spec.layers
         .iter()
-        .map(|ls| {
-            let mut layer = ls.layer;
-            layer.n *= k;
-            wreg_footprint(&layer, planner)
-        })
+        .map(|ls| op_wreg_footprint(&ls.op.with_batch_factor(k), planner))
         .sum()
 }
 
-/// One layer planned onto the grid with its weight registers packed.
+/// One native unit of a layer planned onto the grid with its weight
+/// registers packed: the unit's conv geometry (at the planned batch
+/// factor) plus its channel placement inside the layer (`c0`: first
+/// input channel consumed; `k0`: first output channel produced).
 #[derive(Debug, Clone)]
-pub struct PlannedLayer {
+pub struct PlannedUnit {
+    pub conv: ConvLayer,
+    pub c0: usize,
+    pub k0: usize,
     pub plan: GridPlan,
     pub tiles: Vec<TileWeights>,
+}
+
+/// One layer planned onto the grid: every native unit of its op, in
+/// output-channel order.  Conv and GEMM layers hold a single unit;
+/// grouped convs hold one per group.
+#[derive(Debug, Clone)]
+pub struct PlannedLayer {
+    pub units: Vec<PlannedUnit>,
+}
+
+impl PlannedLayer {
+    /// Plan (and pack registers for) one layer at fused batch factor `k`.
+    /// Packing is a host-side transformation of the spec's weights; the
+    /// *charge* for writing the registers is the caller's business.
+    fn plan(ls: &LayerSpec, k: usize, planner: PlannerConfig) -> Self {
+        let op = if k == 1 { ls.op } else { ls.op.with_batch_factor(k) };
+        let (_, fc, fkh, fkw) = ls.op.filter_dims();
+        let flat = fc * fkh * fkw;
+        let units = op
+            .units()
+            .into_iter()
+            .map(|u| {
+                let plan = GridPlan::plan(&u.conv, planner);
+                // per-unit register image: the unit's contiguous filter
+                // rows (unit-local rows ARE the layer rows for single-unit
+                // ops, so no copy is wasted there)
+                let tiles = if u.conv.kn == ls.filter.kn {
+                    TileWeights::pack_plan(&ls.filter, &plan)
+                } else {
+                    let uf = TernaryFilter::new(
+                        u.conv.kn,
+                        fc,
+                        fkh,
+                        fkw,
+                        ls.filter.w[u.k0 * flat..(u.k0 + u.conv.kn) * flat].to_vec(),
+                    );
+                    TileWeights::pack_plan(&uf, &plan)
+                };
+                PlannedUnit { conv: u.conv, c0: u.c0, k0: u.k0, plan, tiles }
+            })
+            .collect();
+        Self { units }
+    }
 }
 
 /// A model resident on the chip: grid planned and every SACU weight
@@ -110,7 +166,7 @@ impl LoadedModel {
         // "weight-stationary" means.  Too big for one chip is an error
         // here, and a ShardPlan across several chips elsewhere.
         let footprint: u64 =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).sum();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).sum();
         let capacity = cfg.wreg_capacity();
         ensure!(
             footprint <= capacity,
@@ -123,25 +179,28 @@ holds {capacity} ({} CMAs x {}); shard it across chips (coordinator::sharding::S
         let mut loading = ChipMetrics::default();
         let mut planned = Vec::with_capacity(spec.layers.len());
         for ls in &spec.layers {
-            let plan = GridPlan::plan(&ls.layer, planner);
-            let tiles = TileWeights::pack_plan(&ls.filter, &plan);
+            let pl = PlannedLayer::plan(ls, 1, planner);
             // Register writes happen in parallel across a step's CMAs and
             // sequentially across steps — the same folding convention the
             // per-layer ledger uses, so naive-vs-resident is comparable.
-            for step in 0..plan.steps {
-                let mut step_writes = 0u64;
-                let mut step_max_ns = 0.0f64;
-                for (a, t) in plan.assignments.iter().zip(&tiles) {
-                    if a.step == step {
-                        step_writes += t.wreg_writes;
-                        step_max_ns = step_max_ns.max(t.wreg_writes as f64 * T_WREG_NS);
+            // A grouped conv's units load one after another: each group is
+            // its own (tiny) grid occupancy.
+            for u in &pl.units {
+                for step in 0..u.plan.steps {
+                    let mut step_writes = 0u64;
+                    let mut step_max_ns = 0.0f64;
+                    for (a, t) in u.plan.assignments.iter().zip(&u.tiles) {
+                        if a.step == step {
+                            step_writes += t.wreg_writes;
+                            step_max_ns = step_max_ns.max(t.wreg_writes as f64 * T_WREG_NS);
+                        }
                     }
+                    loading.weight_reg_writes += step_writes;
+                    loading.weight_load_ns += step_max_ns;
+                    loading.latency_ns += step_max_ns;
                 }
-                loading.weight_reg_writes += step_writes;
-                loading.weight_load_ns += step_max_ns;
-                loading.latency_ns += step_max_ns;
             }
-            planned.push(PlannedLayer { plan, tiles });
+            planned.push(pl);
         }
         debug_assert_eq!(
             loading.weight_reg_writes, footprint,
@@ -416,10 +475,11 @@ the chip holds {capacity}; lower the batch window",
     }
 
     /// One resident layer's array + DPU work, **stopping before the
-    /// requantization**: ternary conv against the resident registers,
-    /// then DPU BN + ReLU (+ stem pool).  Returns the float tensor and
-    /// the layer's metrics.  Plans for `scales.len()` fused requests must
-    /// exist ([`Self::ensure_plans`]).
+    /// requantization**: the op's native units against the resident
+    /// registers, then DPU BN + ReLU (+ the attention epilogue, + stem
+    /// pool).  Returns the float tensor and the layer's metrics.  Plans
+    /// for `scales.len()` fused requests must exist
+    /// ([`Self::ensure_plans`]).
     fn step_layer(&mut self, li: usize, cur: &Tensor4, scales: &[f32]) -> (Tensor4, ChipMetrics) {
         let k = scales.len();
         let n0 = self.model.spec.input_geometry().0;
@@ -429,35 +489,103 @@ the chip holds {capacity}; lower the batch window",
         let mut metrics = ChipMetrics::default();
         let dpu = self.dpu;
 
-        // ternary conv against the *resident* registers: no wreg cost
-        let mut eff = ls.layer;
-        eff.n = k * ls.layer.n;
-        img2col_into(cur, &eff, &mut self.scratch);
         // fault-injection salt: decorrelate corruption across requests
-        // (served counter) and layers; ignored on ideal chips
+        // (served counter) and layers; ignored on ideal chips.  Units
+        // past the first (grouped convs) extend the derivation chain.
         let salt = crate::testutil::seed_mix(self.served, li as u64);
-        let run = self.chip.run_planned(&self.scratch, &eff, &pl.plan, &pl.tiles, false, salt);
-        metrics.add(&run.metrics);
+
+        // The op's native units against the *resident* registers: no
+        // wreg cost.  Conv/GEMM ops run as the single unit `cur` already
+        // matches; a grouped conv runs one unit per group on its channel
+        // slice, assembling output channels in group order.
+        let kn = ls.op.kn();
+        let multi = pl.units.len() > 1;
+        let mut assembled: Option<Tensor4> = None;
+        let mut single: Option<Tensor4> = None;
+        for (ui, unit) in pl.units.iter().enumerate() {
+            let mut eff = unit.conv;
+            if (eff.h, eff.w) != (cur.h, cur.w)
+                && eff.kh == 1
+                && eff.kw == 1
+                && eff.stride == 1
+                && eff.pad == 0
+            {
+                // A GEMM flattens its spatial input: the NCHW layouts of
+                // (h, w) and (h*w, 1) are byte-identical, and a 1x1/s1/p0
+                // kernel makes Img2Col — and the grid plan, which depends
+                // only on n * i_dim and j_dim — invariant to the
+                // factorization.  Adopt the incoming one; no data moves.
+                debug_assert_eq!(eff.h * eff.w, cur.h * cur.w, "flat geometry mismatch");
+                eff.h = cur.h;
+                eff.w = cur.w;
+            }
+            let sliced;
+            let xin: &Tensor4 = if unit.c0 == 0 && eff.c == cur.c {
+                cur
+            } else {
+                sliced = slice_channels(cur, unit.c0, unit.c0 + eff.c);
+                &sliced
+            };
+            img2col_into(xin, &eff, &mut self.scratch);
+            let unit_salt =
+                if ui == 0 { salt } else { crate::testutil::seed_mix(salt, ui as u64) };
+            let run = self.chip.run_planned(
+                &self.scratch,
+                &eff,
+                &unit.plan,
+                &unit.tiles,
+                false,
+                unit_salt,
+            );
+            metrics.add(&run.metrics);
+            if multi {
+                let dst = assembled.get_or_insert_with(|| {
+                    Tensor4::zeros(run.output.n, kn, run.output.h, run.output.w)
+                });
+                let hw = run.output.h * run.output.w;
+                let ukn = unit.conv.kn;
+                for n in 0..run.output.n {
+                    let src = &run.output.data[n * ukn * hw..(n + 1) * ukn * hw];
+                    let at = (n * kn + unit.k0) * hw;
+                    dst.data[at..at + ukn * hw].copy_from_slice(src);
+                }
+            } else {
+                single = Some(run.output);
+            }
+        }
+        let conv_out = if multi { assembled.unwrap() } else { single.unwrap() };
 
         // DPU: BN (dequant folded into gamma) + ReLU.  The NCHW buffer
         // is (n * c) channel blocks of oh*ow values, so the per-channel
         // params repeat per batch element — scaled by the owning
         // request's quantization scale.
-        let per_ch = run.output.h * run.output.w;
-        let mut gamma_rep = Vec::with_capacity(run.output.n * ls.gamma.len());
-        let mut beta_rep = Vec::with_capacity(run.output.n * ls.beta.len());
-        for n in 0..run.output.n {
+        let per_ch = conv_out.h * conv_out.w;
+        let mut gamma_rep = Vec::with_capacity(conv_out.n * ls.gamma.len());
+        let mut beta_rep = Vec::with_capacity(conv_out.n * ls.beta.len());
+        for n in 0..conv_out.n {
             let s = scales[n / n0];
             gamma_rep.extend(ls.gamma.iter().map(|g| g / s));
             beta_rep.extend_from_slice(&ls.beta);
         }
-        let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
+        let pass = dpu.bn_relu(&conv_out.data, &gamma_rep, &beta_rep, per_ch);
         metrics.dpu_ns += pass.latency_ns;
         metrics.latency_ns += pass.latency_ns;
         metrics.energy_pj += pass.energy_pj;
-        let mut t = Tensor4::from_vec(
-            run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
-        );
+        let mut t = Tensor4::from_vec(conv_out.n, conv_out.c, conv_out.h, conv_out.w, pass.values);
+
+        if let Some(a) = ls.attn {
+            // Multi-head attention epilogue: the 3d BN'd channels are
+            // fused Q/K/V over the token axis (spatial), reduced to d
+            // attended channels on the DPU.  Per-batch-element math, so
+            // fused micro-batches re-split bit-identically.
+            let d3 = t.c;
+            let m = t.h * t.w;
+            let pass = dpu.attention(&t.data, t.n, d3, m, a.heads);
+            metrics.dpu_ns += pass.latency_ns;
+            metrics.latency_ns += pass.latency_ns;
+            metrics.energy_pj += pass.energy_pj;
+            t = Tensor4::from_vec(t.n, d3 / 3, t.h, t.w, pass.values);
+        }
 
         if ls.pool_after {
             let (pooled, ns, pj) = dpu.max_pool2(&t);
@@ -489,13 +617,19 @@ the chip holds {capacity}; lower the batch window",
     ) -> Result<(Tensor4, ChipMetrics)> {
         ensure!(li < self.model.spec.layers.len(), "layer {li} not resident");
         let k = act.scales.len();
-        let l = &self.model.spec.layers[li].layer;
+        let op = &self.model.spec.layers[li].op;
+        let (n, c, h, w) = op.in_geometry();
+        // A GEMM accepts any spatial factorization of its token axis
+        // (NCHW data is identical for (h, w) and (h*w, 1)): a TP stage
+        // hands the gathered conv tensor straight to a flattening GEMM.
+        let spatial_ok = (act.q.h, act.q.w) == (h, w)
+            || (matches!(op, LayerOp::Gemm(_)) && act.q.h * act.q.w == h * w);
         ensure!(
-            act.q.shape() == (k * l.n, l.c, l.h, l.w),
+            act.q.n == k * n && act.q.c == c && spatial_ok,
             "activations {:?} do not match {} fused requests of layer {li} input {:?}",
             act.q.shape(),
             k,
-            (l.n, l.c, l.h, l.w)
+            (n, c, h, w)
         );
         self.ensure_plans(k)?;
         let out = self.step_layer(li, &act.q, &act.scales);
@@ -583,19 +717,22 @@ the chip holds {capacity}; lower the batch window",
     /// always called with `charge_wreg = false` on this path.
     fn plan_for_batch(model: &LoadedModel, k: usize) -> Vec<PlannedLayer> {
         let planner = model.cfg.planner();
-        model
-            .spec
-            .layers
-            .iter()
-            .map(|ls| {
-                let mut layer = ls.layer;
-                layer.n *= k;
-                let plan = GridPlan::plan(&layer, planner);
-                let tiles = TileWeights::pack_plan(&ls.filter, &plan);
-                PlannedLayer { plan, tiles }
-            })
-            .collect()
+        model.spec.layers.iter().map(|ls| PlannedLayer::plan(ls, k, planner)).collect()
     }
+}
+
+/// The contiguous channel slice `[c0, c1)` of an NCHW tensor — the input
+/// view one grouped-conv unit consumes.
+fn slice_channels(x: &Tensor4, c0: usize, c1: usize) -> Tensor4 {
+    debug_assert!(c0 < c1 && c1 <= x.c, "channel slice out of range");
+    let hw = x.h * x.w;
+    let cw = c1 - c0;
+    let mut data = Vec::with_capacity(x.n * cw * hw);
+    for n in 0..x.n {
+        let base = (n * x.c + c0) * hw;
+        data.extend_from_slice(&x.data[base..base + cw * hw]);
+    }
+    Tensor4::from_vec(x.n, cw, x.h, x.w, data)
 }
 
 /// Per-request requantization between layers: calibrate a scale per fused
@@ -665,6 +802,14 @@ mod tests {
         spec.random_input(&mut Rng::new(seed))
     }
 
+    /// The plain-conv geometry of a layer (tests on conv-only specs).
+    fn conv(ls: &LayerSpec) -> ConvLayer {
+        match ls.op {
+            LayerOp::Conv(l) => l,
+            _ => panic!("expected a plain conv layer"),
+        }
+    }
+
     #[test]
     fn synthetic_resnet18_is_a_valid_17_layer_model() {
         let spec = ModelSpec::synthetic_resnet18(1, 16, 16, 0.7, 42, 10);
@@ -718,7 +863,7 @@ mod tests {
         let q0 = dpu.requantize(&x.data, scale);
         let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q0.values);
         for ls in &spec.layers {
-            let run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+            let run = chip.run_conv_layer(&cur, &ls.filter, &conv(ls));
             assert!(run.metrics.weight_reg_writes > 0, "naive path reloads registers");
             let per_ch = run.output.h * run.output.w;
             let mut gamma_rep = Vec::new();
@@ -765,7 +910,7 @@ mod tests {
             let q: Vec<f32> = x.data.iter().map(|&v| (v * 255.0).round()).collect();
             let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q);
             for ls in &spec.layers {
-                let run = chip.run_conv_layer(&cur, &ls.filter, &ls.layer);
+                let run = chip.run_conv_layer(&cur, &ls.filter, &conv(ls));
                 naive_wreg_ns += run.metrics.weight_load_ns;
                 // re-quantize roughly for the next layer (the weight-load
                 // cost is activation-independent, so exact values between
@@ -1065,7 +1210,7 @@ mod tests {
         let spec = tiny_spec(6);
         let planner = cfg.planner();
         let want: u64 =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).sum();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).sum();
         let model = LoadedModel::load(cfg, spec).unwrap();
         assert_eq!(model.footprint(), want);
         assert_eq!(model.loading.weight_reg_writes, want);
@@ -1082,7 +1227,139 @@ mod tests {
         // spot-check: the first layer's img2col of the quantized input
         let q: Vec<f32> = x.data.iter().map(|&v| (v * 255.0).round()).collect();
         let qx = Tensor4::from_vec(x.n, x.c, x.h, x.w, q);
-        let fresh = img2col(&qx, &spec.layers[0].layer);
+        let fresh = img2col(&qx, &conv(&spec.layers[0]));
         assert!(fresh.cols > 0 && out.metrics.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn grouped_conv_matches_block_diagonal_dense_conv() {
+        // A grouped conv is mathematically a dense conv whose filter is
+        // block-diagonal over input channels.  The multi-unit session
+        // path (channel slicing, per-group grids, output assembly) must
+        // produce the same integer accumulations — and therefore the
+        // same served features — as the dense session on the expanded
+        // filter.  Metrics differ (the dense layer charges the zero
+        // blocks' columns), so this compares values only.
+        use crate::nn::ops::GroupedConvLayer;
+        use crate::nn::workloads::WorkloadLayer;
+        let base = ConvLayer {
+            name: "dw", n: 2, c: 4, h: 6, w: 6, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let gl = GroupedConvLayer::depthwise("dw", base);
+        let wl = [WorkloadLayer::plain(LayerOp::GroupedConv(gl))];
+        let gspec = ModelSpec::synthetic_ops("grouped", &wl, 0.4, 77, None);
+
+        // dense twin: same weights scattered onto the block diagonal
+        let mut dspec = gspec.clone();
+        dspec.name = "dense".into();
+        let (kn, fc, fkh, fkw) = gspec.layers[0].op.filter_dims();
+        assert_eq!((fc, fkh, fkw), (1, 3, 3), "depthwise units see one channel");
+        let flat = fc * fkh * fkw;
+        let mut dense_w = vec![0i8; kn * base.c * fkh * fkw];
+        for k in 0..kn {
+            // depthwise group k covers exactly input channel k
+            let src = &gspec.layers[0].filter.w[k * flat..(k + 1) * flat];
+            let dst = (k * base.c + k) * fkh * fkw;
+            dense_w[dst..dst + flat].copy_from_slice(src);
+        }
+        dspec.layers[0].op = LayerOp::Conv(base);
+        dspec.layers[0].filter = TernaryFilter::new(kn, base.c, fkh, fkw, dense_w);
+        dspec.validate().expect("dense twin");
+
+        let mut gs = ChipSession::new(ChipConfig::fat(), gspec.clone()).unwrap();
+        let mut ds = ChipSession::new(ChipConfig::fat(), dspec).unwrap();
+        let x = random_input(&gspec, 770);
+        let g = gs.infer(&x).unwrap();
+        let d = ds.infer(&x).unwrap();
+        assert_eq!(g.features.shape(), d.features.shape());
+        assert_eq!(g.features.data, d.features.data, "grouped == block-diagonal dense");
+    }
+
+    #[test]
+    fn transformer_session_matches_naive_composition() {
+        // The GEMM + attention path must reproduce composing
+        // run_conv_layer on each GEMM's lowered conv with the same DPU
+        // epilogues — the op-IR analogue of the conv naive-composition
+        // gate above.
+        let cfg = ChipConfig::fat();
+        let spec = ModelSpec::synthetic_transformer(6, 6, 2, 2, 0.5, 91);
+        let mut session = ChipSession::new(cfg, spec.clone()).unwrap();
+        let x = random_input(&spec, 910);
+        let out = session.infer(&x).unwrap();
+
+        let chip = FatChip::new(cfg);
+        let dpu = Dpu;
+        let mut scale = 255.0f32;
+        let q0 = dpu.requantize(&x.data, scale);
+        let mut cur = Tensor4::from_vec(x.n, x.c, x.h, x.w, q0.values);
+        for ls in &spec.layers {
+            let l = match ls.op {
+                LayerOp::Gemm(g) => g.lower(),
+                _ => panic!("transformer layers are GEMMs"),
+            };
+            let run = chip.run_conv_layer(&cur, &ls.filter, &l);
+            let per_ch = run.output.h * run.output.w;
+            let mut gamma_rep = Vec::new();
+            let mut beta_rep = Vec::new();
+            for _ in 0..run.output.n {
+                gamma_rep.extend(ls.gamma.iter().map(|g| g / scale));
+                beta_rep.extend_from_slice(&ls.beta);
+            }
+            let pass = dpu.bn_relu(&run.output.data, &gamma_rep, &beta_rep, per_ch);
+            let mut t = Tensor4::from_vec(
+                run.output.n, run.output.c, run.output.h, run.output.w, pass.values,
+            );
+            if let Some(a) = ls.attn {
+                let m = t.h * t.w;
+                let ap = dpu.attention(&t.data, t.n, t.c, m, a.heads);
+                t = Tensor4::from_vec(t.n, t.c / 3, t.h, t.w, ap.values);
+            }
+            let next_scale = Dpu::calibrate_scale(&t.data);
+            let q = dpu.requantize(&t.data, next_scale);
+            cur = Tensor4::from_vec(t.n, t.c, t.h, t.w, q.values);
+            scale = next_scale;
+        }
+        let want: Vec<f32> = cur.data.iter().map(|&v| v / scale).collect();
+        assert_eq!(out.features.data, want, "op-IR and naive GEMM paths must agree");
+    }
+
+    #[test]
+    fn workload_sessions_fuse_bit_identically() {
+        // infer_many's bit-identical re-split contract, extended to both
+        // new compute shapes (GEMM + attention; grouped + pointwise).
+        let specs = [
+            ModelSpec::synthetic_transformer(6, 6, 2, 2, 0.5, 93),
+            ModelSpec::synthetic_mobilenet(1, 16, 6, 0.5, 94, 4),
+        ];
+        for spec in specs {
+            let mut solo = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+            let mut fused = ChipSession::new(ChipConfig::fat(), spec.clone()).unwrap();
+            let xs: Vec<Tensor4> =
+                (0..3).map(|i| random_input(&spec, 930 + i)).collect();
+            let want: Vec<ModelOutput> = xs.iter().map(|x| solo.infer(x).unwrap()).collect();
+            let refs: Vec<&Tensor4> = xs.iter().collect();
+            let got = fused.infer_many(&refs).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.features.data, w.features.data, "{}: re-split exactly", spec.name);
+                assert_eq!(g.logits, w.logits, "{}", spec.name);
+                assert_eq!(g.metrics.weight_reg_writes, 0, "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_footprint_and_loading_stay_conserved() {
+        // op_wreg_footprint over per-group units must match the packed
+        // register writes exactly (the conservation invariant sharding
+        // relies on), for the workload with the most units.
+        let cfg = ChipConfig::fat();
+        let spec = ModelSpec::synthetic_mobilenet(1, 16, 6, 0.5, 95, 4);
+        let planner = cfg.planner();
+        let want: u64 =
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).sum();
+        let model = LoadedModel::load(cfg, spec).unwrap();
+        assert_eq!(model.footprint(), want);
+        assert_eq!(model.loading.weight_reg_writes, want);
+        assert!(model.loading.weight_load_ns > 0.0);
     }
 }

@@ -38,7 +38,7 @@ use crate::coordinator::accelerator::{ChipConfig, SenseFault};
 use crate::coordinator::exec::{self, StageRunner};
 use crate::coordinator::metrics::ChipMetrics;
 use crate::coordinator::model::ModelSpec;
-use crate::coordinator::session::{wreg_footprint, ModelOutput};
+use crate::coordinator::session::{op_wreg_footprint, ModelOutput};
 use crate::error::{ensure, Result};
 use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
@@ -148,7 +148,7 @@ impl ShardPlan {
         );
         let planner = cfg.planner();
         let f: Vec<u64> =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
         let capacity = cfg.wreg_capacity();
         let max_layer = *f.iter().max().expect("validated: at least one layer");
         ensure!(
@@ -185,7 +185,7 @@ the best {shards}-way cut, but a chip holds {capacity}; use at least {} shards",
         spec.validate()?;
         let planner = cfg.planner();
         let f: Vec<u64> =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
         let capacity = cfg.wreg_capacity();
         let max_layer = *f.iter().max().expect("validated: at least one layer");
         ensure!(
@@ -233,7 +233,7 @@ chip holds {capacity}",
         let (ranges, _) = cut_footprints(weights, shards);
         let planner = cfg.planner();
         let f: Vec<u64> =
-            spec.layers.iter().map(|ls| wreg_footprint(&ls.layer, &planner)).collect();
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
         let capacity = cfg.wreg_capacity();
         let footprints: Vec<u64> =
             ranges.iter().map(|&(a, b)| f[a..b].iter().sum()).collect();
@@ -478,7 +478,7 @@ mod tests {
                 let f: Vec<u64> = spec
                     .layers
                     .iter()
-                    .map(|ls| wreg_footprint(&ls.layer, &planner))
+                    .map(|ls| op_wreg_footprint(&ls.op, &planner))
                     .collect();
                 let total: u64 = f.iter().sum();
                 let max_layer = *f.iter().max().unwrap();

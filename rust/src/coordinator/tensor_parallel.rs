@@ -67,13 +67,12 @@ use std::collections::HashMap;
 use crate::coordinator::accelerator::ChipConfig;
 use crate::coordinator::exec::{self, StageRunner};
 use crate::coordinator::metrics::ChipMetrics;
-use crate::coordinator::model::{HeadSpec, ModelSpec};
+use crate::coordinator::model::{HeadSpec, LayerSpec, ModelSpec};
 use crate::coordinator::session::{
-    finalize_outputs, wreg_footprint, ChipSession, ModelOutput, QuantActivations,
+    finalize_outputs, op_wreg_footprint, ChipSession, ModelOutput, QuantActivations,
 };
 use crate::error::{bail, ensure, Result};
 use crate::mapping::schemes::HwParams;
-use crate::nn::resnet::ConvLayer;
 use crate::nn::tensor::Tensor4;
 use crate::testutil::{seed_mix, Rng};
 
@@ -111,10 +110,17 @@ pub fn broadcast_cost(payload: u64, ways: usize, hw: &HwParams) -> (u64, f64) {
 /// The KN split of ONE layer across `ways` chips: contiguous filter
 /// ranges, near-equal by count — and therefore by register footprint,
 /// which is linear in the slice width.
+///
+/// Splitting happens in *granule* space ([`crate::nn::ops::LayerOp::kn_granularity`]):
+/// a plain conv or GEMM cuts anywhere (granule = one filter), a grouped
+/// conv only at group boundaries (granule = one group's `kg` filters —
+/// a group's filters share input channels no other slice would hold),
+/// and a layer carrying the attention epilogue cannot be split at all
+/// (the epilogue couples every QKV channel).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorPlan {
     /// Per-chip `[k0, k1)` filter ranges; contiguous, covering `0..kn`
-    /// in order, sizes differing by at most one filter.
+    /// in order, sizes differing by at most one granule.
     pub slices: Vec<(usize, usize)>,
     /// Resident 2-bit weight-register entries per slice.
     pub footprints: Vec<u64>,
@@ -123,56 +129,78 @@ pub struct TensorPlan {
 }
 
 impl TensorPlan {
-    /// Split `layer`'s KN filters across `ways` chips, checking the
+    /// Split a layer's KN filters across `ways` chips, checking the
     /// largest slice against one chip's register capacity.
-    pub fn split(layer: &ConvLayer, cfg: &ChipConfig, ways: usize) -> Result<Self> {
+    pub fn split(ls: &LayerSpec, cfg: &ChipConfig, ways: usize) -> Result<Self> {
         ensure!(ways >= 1, "need at least one slice");
+        let name = ls.op.name();
+        let kn = ls.op.kn();
+        let kg = ls.op.kn_granularity();
+        let granules = kn / kg;
+        if ways > 1 {
+            ensure!(
+                ls.attn.is_none(),
+                "layer `{name}`: the attention epilogue couples the QKV channels; \
+a KN split cannot serve it"
+            );
+        }
         ensure!(
-            ways <= layer.kn,
-            "layer `{}`: cannot split {} filters {ways} ways",
-            layer.name,
-            layer.kn
+            ways <= granules,
+            "layer `{name}`: cannot split {granules} filter granules {ways} ways"
         );
-        let need = Self::min_ways(layer, cfg)?;
+        let need = Self::min_ways(ls, cfg)?;
         let capacity = cfg.wreg_capacity();
         ensure!(
             need <= ways,
-            "layer `{}`: a {ways}-way KN split still exceeds one chip's {capacity} \
-weight-register entries; split at least {need} ways",
-            layer.name
+            "layer `{name}`: a {ways}-way KN split still exceeds one chip's {capacity} \
+weight-register entries; split at least {need} ways"
         );
         let planner = cfg.planner();
-        let per_filter = layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
-        let (base, rem) = (layer.kn / ways, layer.kn % ways);
+        // footprint is exactly linear in granules (per-group grids are
+        // identical; a conv's is linear in KN), so this divides evenly
+        let per_granule = op_wreg_footprint(&ls.op, &planner) / granules as u64;
+        let (base, rem) = (granules / ways, granules % ways);
         let mut slices = Vec::with_capacity(ways);
-        let mut k0 = 0usize;
+        let mut footprints = Vec::with_capacity(ways);
+        let mut g0 = 0usize;
         for i in 0..ways {
-            let kn = base + usize::from(i < rem);
-            slices.push((k0, k0 + kn));
-            k0 += kn;
+            let g = base + usize::from(i < rem);
+            slices.push((g0 * kg, (g0 + g) * kg));
+            footprints.push(g as u64 * per_granule);
+            g0 += g;
         }
-        debug_assert_eq!(k0, layer.kn, "slices must partition the filters");
-        let footprints: Vec<u64> =
-            slices.iter().map(|&(a, b)| (b - a) as u64 * per_filter).collect();
+        debug_assert_eq!(g0 * kg, kn, "slices must partition the filters");
         debug_assert!(footprints.iter().all(|&f| f <= capacity));
         Ok(Self { slices, footprints, capacity })
     }
 
     /// The fewest chips this layer's registers can be split across, given
-    /// one chip's capacity.  Errs when a single filter's registers exceed
-    /// the chip — no KN split can help then.
-    pub fn min_ways(layer: &ConvLayer, cfg: &ChipConfig) -> Result<usize> {
+    /// one chip's capacity.  Errs when a single granule's registers
+    /// exceed the chip (no KN split can help then) — or when the layer
+    /// cannot be split at all (attention epilogue) and does not fit.
+    pub fn min_ways(ls: &LayerSpec, cfg: &ChipConfig) -> Result<usize> {
         let planner = cfg.planner();
         let capacity = cfg.wreg_capacity();
-        let per_filter = layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
+        let name = ls.op.name();
+        let total = op_wreg_footprint(&ls.op, &planner);
+        if ls.attn.is_some() {
+            ensure!(
+                total <= capacity,
+                "layer `{name}`: needs {total} weight-register entries on one chip but it \
+holds {capacity}, and the attention epilogue couples the QKV channels; no KN split \
+can help — shrink the layer or the batch"
+            );
+            return Ok(1);
+        }
+        let granules = (ls.op.kn() / ls.op.kn_granularity()) as u64;
+        let per_granule = total / granules;
         ensure!(
-            per_filter <= capacity,
-            "layer `{}`: one filter alone needs {per_filter} weight-register entries but a \
-chip holds {capacity}; no KN split can help — shrink the layer or the batch",
-            layer.name
+            per_granule <= capacity,
+            "layer `{name}`: one filter alone needs {per_granule} weight-register entries \
+but a chip holds {capacity}; no KN split can help — shrink the layer or the batch"
         );
-        let max_kn = (capacity / per_filter) as usize;
-        Ok(layer.kn.div_ceil(max_kn.min(layer.kn)))
+        let max_g = capacity / per_granule;
+        Ok(granules.div_ceil(max_g.min(granules)) as usize)
     }
 
     pub fn ways(&self) -> usize {
@@ -232,7 +260,7 @@ impl HybridPlan {
             let (splits, chip_footprints) = if ways == 1 {
                 let fp: u64 = spec.layers[a..b]
                     .iter()
-                    .map(|ls| wreg_footprint(&ls.layer, &planner))
+                    .map(|ls| op_wreg_footprint(&ls.op, &planner))
                     .sum();
                 ensure!(
                     fp <= capacity,
@@ -243,7 +271,7 @@ it holds {capacity}; cut the stage or split it across chips"
             } else {
                 let splits: Vec<TensorPlan> = spec.layers[a..b]
                     .iter()
-                    .map(|ls| TensorPlan::split(&ls.layer, cfg, ways))
+                    .map(|ls| TensorPlan::split(ls, cfg, ways))
                     .collect::<Result<_>>()?;
                 let mut chip = vec![0u64; ways];
                 for tp in &splits {
@@ -315,37 +343,37 @@ impl CostProbe<'_> {
     /// post-layer scale exchange and payload all-gather.
     fn probe(&mut self, li: usize, ways: usize) -> Option<f64> {
         let ls = &self.spec.layers[li];
-        if ways > ls.layer.kn {
-            return None;
-        }
-        let tp = TensorPlan::split(&ls.layer, self.cfg, ways).ok()?;
+        let tp = TensorPlan::split(ls, self.cfg, ways).ok()?;
         let (k0, k1) = tp.slices[0];
-        let slice = if ways == 1 { ls.clone() } else { ls.slice_kn(k0, k1) };
+        let slice = if ways == 1 { ls.clone() } else { ls.slice_kn(k0, k1).ok()? };
         let sub = ModelSpec {
-            name: format!("probe:{}:{ways}w", ls.layer.name),
+            name: format!("probe:{}:{ways}w", ls.op.name()),
             layers: vec![slice],
             head: None,
         };
         let mut sess = ChipSession::new(*self.cfg, sub).ok()?;
-        let l = ls.layer;
-        let mut q = Tensor4::zeros(l.n, l.c, l.h, l.w);
+        let (n, c, h, w) = ls.op.in_geometry();
+        let mut q = Tensor4::zeros(n, c, h, w);
         q.fill_random_ints(&mut Rng::new(seed_mix(0x9906, li as u64)), 0, 256);
         let act = QuantActivations { q, scales: vec![255.0] };
         let (_, m) = sess.run_quantized(act).ok()?;
         let mut ns = m.latency_ns;
         if ways > 1 {
-            let (mut oh, mut ow) = (l.oh(), l.ow());
+            // attention layers never reach here: split() rejects them at
+            // ways > 1, so kn below is the layer's raw channel count
+            let (_, kn, mut oh, mut ow) = ls.op.out_geometry();
             if ls.pool_after {
                 oh = (oh / 2).max(1);
                 ow = (ow / 2).max(1);
             }
+            let batch = ls.op.batch();
             // Serving requantizes the FULL gathered tensor, but the probe
             // run above only charged the slice's share: add the missing
             // channels' requantization time (exact — the DPU pass is
             // linear in elements), so w > 1 stage costs stay comparable
             // with w = 1 and the DP never picks a split on phantom
             // savings.
-            let missing = (l.kn - (k1 - k0)) * l.n * oh * ow;
+            let missing = (kn - (k1 - k0)) * batch * oh * ow;
             if missing > 0 {
                 ns += crate::coordinator::dpu::Dpu
                     .requantize(&vec![0.0; missing], 1.0)
@@ -354,7 +382,7 @@ impl CostProbe<'_> {
             let chunks: Vec<u64> = tp
                 .slices
                 .iter()
-                .map(|&(a, b)| ((b - a) * l.n * oh * ow) as u64)
+                .map(|&(a, b)| ((b - a) * batch * oh * ow) as u64)
                 .collect();
             ns += allgather_cost(&vec![4u64; ways], self.hw).1; // scale exchange
             ns += allgather_cost(&chunks, self.hw).1; // quantized partials
@@ -375,12 +403,9 @@ fn stage_cost(probe: &mut CostProbe, i: usize, j: usize, w: usize, first: bool) 
     let mut fp = 0u64;
     for ls in &probe.spec.layers[i..j] {
         if w == 1 {
-            fp += wreg_footprint(&ls.layer, &planner);
+            fp += op_wreg_footprint(&ls.op, &planner);
         } else {
-            if w > ls.layer.kn {
-                return None;
-            }
-            fp += TensorPlan::split(&ls.layer, probe.cfg, w).ok()?.footprints[0];
+            fp += TensorPlan::split(ls, probe.cfg, w).ok()?.footprints[0];
         }
     }
     if fp > capacity {
@@ -391,8 +416,8 @@ fn stage_cost(probe: &mut CostProbe, i: usize, j: usize, w: usize, first: bool) 
         ns += probe.layer_cost(li, w)?;
     }
     if !first {
-        let l0 = &probe.spec.layers[i].layer;
-        let payload = (l0.n * l0.c * l0.h * l0.w) as u64 + 4;
+        let (n, c, h, wd) = probe.spec.layers[i].op.in_geometry();
+        let payload = (n * c * h * wd) as u64 + 4;
         ns += broadcast_cost(payload, w, probe.hw).1;
     }
     Some(ns)
@@ -416,9 +441,10 @@ pub fn plan_auto(
     spec.validate()?;
     ensure!(chips >= 1, "need at least one chip");
     let l = spec.layers.len();
-    // surface the hopeless case (a single filter too big) as its own error
+    // surface the hopeless case (a single granule too big, or an
+    // unsplittable attention layer over capacity) as its own error
     for ls in &spec.layers {
-        TensorPlan::min_ways(&ls.layer, cfg)?;
+        TensorPlan::min_ways(ls, cfg)?;
     }
     let mut probe = CostProbe { cfg, spec, hw, cache: HashMap::new() };
 
@@ -495,9 +521,9 @@ pub fn profile_layers(
     let mut probe = CostProbe { cfg, spec, hw, cache: HashMap::new() };
     let mut out = Vec::with_capacity(spec.layers.len());
     for (li, ls) in spec.layers.iter().enumerate() {
-        let ways = TensorPlan::min_ways(&ls.layer, cfg)?;
+        let ways = TensorPlan::min_ways(ls, cfg)?;
         let Some(ns) = probe.layer_cost(li, ways) else {
-            bail!("layer `{}` cannot be profiled at {ways} ways", ls.layer.name);
+            bail!("layer `{}` cannot be profiled at {ways} ways", ls.op.name());
         };
         out.push((ways, ns));
     }
@@ -669,6 +695,9 @@ mod tests {
     use super::*;
     use crate::coordinator::session::LoadedModel;
     use crate::coordinator::sharding::{xfer_cost_ns, PipelineSession, ShardPlan};
+    use crate::nn::ops::{GroupedConvLayer, LayerOp};
+    use crate::nn::resnet::ConvLayer;
+    use crate::nn::workloads::WorkloadLayer;
     use crate::testutil::prop_check;
 
     /// Three chained layers whose KN widths (8, 6, 4) admit 2/3/4-way
@@ -709,8 +738,10 @@ mod tests {
                 let planner = cfg.planner();
                 let per_filter =
                     layer.j_dim() as u64 * planner.col_tiles(layer) as u64;
+                let spec = ModelSpec::synthetic("p", &[*layer], false, 0.5, 7, None);
+                let ls = &spec.layers[0];
                 for ways in 1..=layer.kn {
-                    let tp = TensorPlan::split(layer, &cfg, ways)
+                    let tp = TensorPlan::split(ls, &cfg, ways)
                         .map_err(|e| format!("{ways} ways: {e:#}"))?;
                     if tp.ways() != ways {
                         return Err(format!("wanted {ways} slices, got {:?}", tp.slices));
@@ -750,12 +781,12 @@ mod tests {
                 let mut tight = cfg;
                 tight.cmas = 1;
                 tight.wreg_entries_per_cma = (per_filter * m) as usize;
-                let need = TensorPlan::min_ways(layer, &tight)
+                let need = TensorPlan::min_ways(ls, &tight)
                     .map_err(|e| format!("min_ways: {e:#}"))?;
-                if TensorPlan::split(layer, &tight, need).is_err() {
+                if TensorPlan::split(ls, &tight, need).is_err() {
                     return Err(format!("min_ways {need} must be feasible"));
                 }
-                if need > 1 && TensorPlan::split(layer, &tight, need - 1).is_ok() {
+                if need > 1 && TensorPlan::split(ls, &tight, need - 1).is_ok() {
                     return Err(format!("{} ways should not fit", need - 1));
                 }
                 Ok(())
@@ -765,13 +796,14 @@ mod tests {
 
     #[test]
     fn min_ways_errors_when_one_filter_cannot_fit() {
-        let layer = wide_kn(1).layers[1].layer; // k2: 72 entries per filter
+        let wspec = wide_kn(1);
+        let ls = &wspec.layers[1]; // k2: 72 entries per filter
         let mut cfg = ChipConfig::fat();
         cfg.cmas = 1;
         cfg.wreg_entries_per_cma = 71;
-        let err = TensorPlan::min_ways(&layer, &cfg).unwrap_err();
+        let err = TensorPlan::min_ways(ls, &cfg).unwrap_err();
         assert!(format!("{err:#}").contains("one filter alone"), "{err:#}");
-        assert!(TensorPlan::split(&layer, &cfg, 6).is_err());
+        assert!(TensorPlan::split(ls, &cfg, 6).is_err());
         // and plan_auto surfaces the same hopeless case
         let spec = wide_kn(1);
         assert!(plan_auto(&cfg, &spec, 8, &HwParams::default()).is_err());
@@ -840,7 +872,7 @@ mod tests {
             "layer-boundary sharding must report the oversized layer: {shard_err:#}"
         );
         assert!(ShardPlan::min_shards(&spec, &small).is_err());
-        assert_eq!(TensorPlan::min_ways(&spec.layers[1].layer, &small).unwrap(), 2);
+        assert_eq!(TensorPlan::min_ways(&spec.layers[1], &small).unwrap(), 2);
 
         // too few chips: no hybrid exists (hand-checked: every <=3-chip
         // stage assignment puts >300 entries on some chip)
@@ -1058,5 +1090,122 @@ mod tests {
         let back = concat_channels(&[take(0, 2), take(2, 5)]);
         assert_eq!(back.data, full.data);
         assert_eq!(back.shape(), full.shape());
+    }
+
+    #[test]
+    fn grouped_split_cuts_only_group_boundaries() {
+        // 4 groups x kg = 3 filters: splits happen in granule space, so
+        // slice edges always land on multiples of kg, and a split wider
+        // than the group count is refused even though kn would allow it.
+        let cfg = ChipConfig::fat();
+        let g = GroupedConvLayer {
+            name: "g4",
+            n: 1,
+            h: 6,
+            w: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            groups: 4,
+            cg: 2,
+            kg: 3,
+            c_offset: 0,
+            c_in: 8,
+        };
+        let wl = [WorkloadLayer::plain(LayerOp::GroupedConv(g))];
+        let spec = ModelSpec::synthetic_ops("g4", &wl, 0.5, 0x7E60, None);
+        let ls = &spec.layers[0];
+        let tp = TensorPlan::split(ls, &cfg, 3).unwrap();
+        assert_eq!(tp.slices, vec![(0, 6), (6, 9), (9, 12)], "granule-aligned slices");
+        assert_eq!(tp.footprints[0], 2 * tp.footprints[1], "footprint linear in granules");
+        let err = TensorPlan::split(ls, &cfg, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("granules"), "{err:#}");
+
+        // and a 2-way grouped split serves byte-identically to the oracle
+        let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 1, 2)]).unwrap();
+        assert_eq!(plan.stages[0].splits[0].slices, vec![(0, 6), (6, 12)]);
+        let mut tp_sess =
+            TensorParallelSession::new(cfg, spec.clone(), plan, HwParams::default()).unwrap();
+        assert_eq!(
+            tp_sess.loading_total().weight_reg_writes,
+            oracle.loading().weight_reg_writes,
+            "grouped split must conserve register writes"
+        );
+        let x = spec.random_input(&mut Rng::new(0x7E61));
+        let want = oracle.infer(&x).unwrap();
+        let got = tp_sess.infer(&x).unwrap();
+        assert_eq!(got.outs[0].features.data, want.features.data, "grouped split == oracle");
+    }
+
+    #[test]
+    fn attention_layer_refuses_multi_way_splits() {
+        let cfg = ChipConfig::fat();
+        let spec = ModelSpec::synthetic_transformer(6, 8, 2, 2, 0.5, 0x7E62);
+        let qkv = &spec.layers[0];
+        assert!(qkv.attn.is_some());
+        // whole-layer "split" (ways = 1) stays legal — the probe and the
+        // DP rely on it — but any real cut is refused
+        assert!(TensorPlan::split(qkv, &cfg, 1).is_ok());
+        let err = TensorPlan::split(qkv, &cfg, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("attention"), "{err:#}");
+        assert_eq!(TensorPlan::min_ways(qkv, &cfg).unwrap(), 1);
+        // an attention layer over capacity is hopeless, not splittable
+        let mut tiny = cfg;
+        tiny.cmas = 1;
+        tiny.wreg_entries_per_cma = 8;
+        let err = TensorPlan::min_ways(qkv, &tiny).unwrap_err();
+        assert!(format!("{err:#}").contains("no KN split can help"), "{err:#}");
+    }
+
+    #[test]
+    fn workload_models_serve_byte_identically_under_auto_plans() {
+        // tentpole acceptance at the TP layer: both new compute shapes go
+        // through plan_auto and serve byte-identically to the single-chip
+        // oracle, conserving register writes.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let specs = [
+            ModelSpec::synthetic_transformer(6, 8, 2, 2, 0.5, 0x7E63),
+            ModelSpec::synthetic_mobilenet(1, 16, 6, 0.5, 0x7E64, 4),
+        ];
+        for spec in specs {
+            let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+            let plan = plan_auto(&cfg, &spec, 3, &hw).unwrap();
+            assert!(plan.chips() <= 3, "{}", spec.name);
+            let mut tp = TensorParallelSession::new(cfg, spec.clone(), plan, hw).unwrap();
+            assert_eq!(
+                tp.loading_total().weight_reg_writes,
+                oracle.loading().weight_reg_writes,
+                "{}: conservation across the plan",
+                spec.name
+            );
+            let mut rng = Rng::new(0x7E65);
+            for i in 0..2 {
+                let x = spec.random_input(&mut rng);
+                let want = oracle.infer(&x).unwrap();
+                let got = tp.infer(&x).unwrap();
+                assert_eq!(
+                    got.outs[0].features.data, want.features.data,
+                    "{} request {i}: auto plan must match the oracle",
+                    spec.name
+                );
+                assert_eq!(got.outs[0].logits, want.logits, "{}", spec.name);
+            }
+        }
+
+        // and a fully split mobilenet (every layer 2-way, grouped layers
+        // cut at group boundaries) matches too
+        let spec = ModelSpec::synthetic_mobilenet(1, 16, 6, 0.5, 0x7E66, 4);
+        let mut oracle = ChipSession::new(cfg, spec.clone()).unwrap();
+        let n_layers = spec.layers.len();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, n_layers, 2)]).unwrap();
+        let mut tp = TensorParallelSession::new(cfg, spec.clone(), plan, hw).unwrap();
+        let x = spec.random_input(&mut Rng::new(0x7E67));
+        let want = oracle.infer(&x).unwrap();
+        let got = tp.infer(&x).unwrap();
+        assert_eq!(got.outs[0].features.data, want.features.data, "2-way mobilenet == oracle");
+        assert_eq!(got.outs[0].logits, want.logits);
     }
 }

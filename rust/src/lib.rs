@@ -15,8 +15,9 @@
 //!   bit-accurate executions over a CMA and analytic timing models.
 //! - [`ternary`] — TWN quantization (eq. 7), Table III weight encoding,
 //!   2-bit packing, sparsity statistics.
-//! - [`nn`] — minimal tensor + CNN layer reference implementations and the
-//!   ResNet-18 geometry table.
+//! - [`nn`] — minimal tensor + CNN layer reference implementations, the
+//!   ResNet-18 geometry table, the ternary op IR ([`nn::ops`]), and the
+//!   non-conv workload builders ([`nn::workloads`]).
 //! - [`mapping`] — Img2Col and the five data-mapping schemes of Table VII
 //!   (Direct-OS, Img2Col-OS/IS/WS/CS) with the CMA grid planner of Fig. 9.
 //! - [`coordinator`] — the 4096-CMA chip: scheduler, DPU (BN + ReLU),
@@ -30,6 +31,33 @@
 //!   manifest/signature plumbing is real and tested.
 //! - [`error`] — in-tree `anyhow`-style error type and macros (the image is
 //!   offline; the crate is dependency-free).
+//!
+//! ## Ternary op IR
+//!
+//! Every serving layer is a [`coordinator::model::LayerSpec`]: a
+//! [`nn::ops::LayerOp`] — `Conv` (a plain [`nn::resnet::ConvLayer`]),
+//! `GroupedConv` ([`nn::ops::GroupedConvLayer`]: `groups` independent
+//! convs over contiguous channel slices; depthwise is `cg = kg = 1`),
+//! or `Gemm` ([`nn::ops::GemmLayer`], lowered to a degenerate 1x1 conv
+//! whose Img2Col is the identity) — plus the per-channel epilogue
+//! (folded BN gamma/beta + ReLU, optional 2x2 max pool, and for
+//! fused-QKV layers the multi-head attention-score epilogue on the
+//! DPU).  Every op answers the same planning questions through one
+//! interface: `units()` (its native conv execution units with channel
+//! offsets), `kn()` / `kn_granularity()` (legal KN cut points —
+//! grouped convs only split at group boundaries), `slice_kn()` (tensor
+//! parallelism), `with_batch_factor()` (micro-batch fusion), `macs()`
+//! and `weights()` — so the grid mapper, the sharder, the auto-planner,
+//! the threaded servers, and the serving engine are all op-kind
+//! agnostic and the byte-identity contracts below hold per op kind,
+//! not just for conv chains.  Workload builders beyond ResNet live in
+//! [`nn::workloads`] (`ternary_transformer_block`,
+//! `mobilenet_style_backbone`; `ModelSpec::synthetic_transformer` /
+//! `synthetic_mobilenet` attach synthetic ternary weights).  CLI:
+//! `fat workload --net transformer|mobilenet [--auto --chips N
+//! [--serve]]`, with the same oracle self-checks as `fat resnet`;
+//! `benches/workloads.rs` compares the three compute shapes on equal
+//! chips.
 //!
 //! ## The runtime / session layer
 //!

@@ -8,7 +8,7 @@ use fat_imc::coordinator::engine::{
 };
 use fat_imc::coordinator::model::ModelSpec;
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
-use fat_imc::coordinator::session::{wreg_footprint, ChipSession};
+use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession};
 use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
 use fat_imc::coordinator::tensor_parallel::{
     plan_auto, profile_layers, HybridPlan, TensorParallelSession,
@@ -16,6 +16,7 @@ use fat_imc::coordinator::tensor_parallel::{
 use fat_imc::error::Result;
 use fat_imc::mapping::schemes::{evaluate_all, HwParams};
 use fat_imc::nn::layers::TernaryFilter;
+use fat_imc::nn::ops::LayerOp;
 use fat_imc::nn::resnet::{resnet18_conv_layers, ConvLayer};
 use fat_imc::nn::tensor::Tensor4;
 use fat_imc::report::{ratio, Table};
@@ -80,6 +81,7 @@ fn run(raw: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "resnet" => cmd_resnet(&args),
+        "workload" => cmd_workload(&args),
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
         "reliability" => cmd_reliability(&args),
@@ -679,7 +681,7 @@ fn cmd_resnet(args: &Args) -> Result<()> {
     println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
     if auto {
         let chips = args.get_usize("chips", 2)?;
-        return run_resnet_auto(chip_cfg, spec, chips, n_req, serve);
+        return run_hybrid_auto(chip_cfg, spec, chips, n_req, serve);
     }
     if shards > 1 {
         return run_resnet_sharded(chip_cfg, spec, shards, n_req);
@@ -691,15 +693,24 @@ fn cmd_resnet(args: &Args) -> Result<()> {
         &["layer", "C", "HxW", "KN", "s", "tiles", "steps", "wreg writes"],
     );
     for (ls, pl) in session.spec().layers.iter().zip(session.model().planned_layers()) {
-        let writes: u64 = pl.tiles.iter().map(|w| w.wreg_writes).sum();
+        let writes: u64 =
+            pl.units.iter().flat_map(|u| u.tiles.iter()).map(|w| w.wreg_writes).sum();
+        let tiles: usize = pl.units.iter().map(|u| u.plan.assignments.len()).sum();
+        let steps: usize = pl.units.iter().map(|u| u.plan.steps).sum();
+        let (_, c, h, w) = ls.op.in_geometry();
+        let stride = match ls.op {
+            LayerOp::Conv(l) => l.stride,
+            LayerOp::GroupedConv(g) => g.stride,
+            LayerOp::Gemm(_) => 1,
+        };
         t.row(vec![
-            ls.layer.name.into(),
-            format!("{}", ls.layer.c),
-            format!("{}x{}", ls.layer.h, ls.layer.w),
-            format!("{}", ls.layer.kn),
-            format!("{}", ls.layer.stride),
-            format!("{}", pl.plan.assignments.len()),
-            format!("{}", pl.plan.steps),
+            ls.op.name().into(),
+            format!("{c}"),
+            format!("{h}x{w}"),
+            format!("{}", ls.op.kn()),
+            format!("{stride}"),
+            format!("{tiles}"),
+            format!("{steps}"),
             format!("{writes}"),
         ]);
     }
@@ -748,6 +759,126 @@ fn cmd_resnet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fat workload`: serve the op IR's non-conv compute shapes — a ternary
+/// transformer block (fused-QKV GEMMs with the DPU attention epilogue)
+/// or a MobileNet-style depthwise/pointwise backbone (grouped convs) —
+/// on the single-chip session, or through the auto-planned hybrid fabric
+/// (`--auto --chips N`) and the threaded server (`--serve`), proving
+/// bit-exactness against the single-chip oracle on the way.
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.allow(&[
+        "net", "seq", "dim", "heads", "ffn", "batch", "input", "width", "classes",
+        "sparsity", "requests", "fidelity", "auto", "chips", "serve",
+    ])?;
+    let auto = args.get_bool("auto");
+    let serve = args.get_bool("serve");
+    if serve && !auto {
+        fat_imc::bail!("--serve replays the auto plan through the hybrid server; add --auto");
+    }
+    if !auto && args.get("chips").is_some() {
+        fat_imc::bail!("--chips needs --auto");
+    }
+    let sparsity = args.get_f64("sparsity", 0.6)?;
+    let n_req = args.get_usize("requests", 4)?.max(1);
+    let spec = match args.get_or("net", "transformer") {
+        "transformer" => {
+            let seq = args.get_usize("seq", 8)?;
+            let dim = args.get_usize("dim", 8)?;
+            let heads = args.get_usize("heads", 2)?;
+            let ffn = args.get_usize("ffn", 2)?;
+            ModelSpec::synthetic_transformer(seq, dim, heads, ffn, sparsity, 0xE2E)
+        }
+        "mobilenet" => {
+            let batch = args.get_usize("batch", 1)?;
+            let input = args.get_usize("input", 16)?;
+            let width = args.get_usize("width", 8)?;
+            let classes = args.get_usize("classes", 10)?;
+            ModelSpec::synthetic_mobilenet(batch, input, width, sparsity, 0xE2E, classes)
+        }
+        other => fat_imc::bail!("--net must be transformer or mobilenet, got `{other}`"),
+    };
+    let mut chip_cfg = ChipConfig::fat();
+    if let Some(f) = fidelity_flag(args)? {
+        chip_cfg.fidelity = f;
+    }
+    let planner = chip_cfg.planner();
+    println!(
+        "{}: {} op-IR layers, {} ternary weights, sparsity {:.0}%",
+        spec.name,
+        spec.layers.len(),
+        spec.weight_count(),
+        spec.sparsity() * 100.0
+    );
+    let mut t = Table::new(
+        "op IR (what the planner sees)",
+        &["layer", "op", "in NxCxHxW", "KN", "wreg", "MACs"],
+    );
+    for ls in &spec.layers {
+        let (n, c, h, w) = ls.op.in_geometry();
+        let kind = match ls.op {
+            LayerOp::Conv(l) => format!("conv {}x{}/s{}", l.kh, l.kw, l.stride),
+            LayerOp::GroupedConv(g) => format!("grouped conv x{}", g.groups),
+            LayerOp::Gemm(g) => format!("gemm {}x{}x{}", g.m, g.k, g.n),
+        };
+        let kind = match ls.attn {
+            Some(a) => format!("{kind} +attn({})", a.heads),
+            None => kind,
+        };
+        t.row(vec![
+            ls.op.name().into(),
+            kind,
+            format!("{n}x{c}x{h}x{w}"),
+            format!("{}", ls.op.kn()),
+            format!("{}", op_wreg_footprint(&ls.op, &planner)),
+            format!("{}", ls.op.macs()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("compute path: {:?} fidelity", chip_cfg.effective_fidelity());
+
+    if auto {
+        let chips = args.get_usize("chips", 2)?;
+        return run_hybrid_auto(chip_cfg, spec, chips, n_req, serve);
+    }
+
+    // single-chip weight-stationary serving
+    let mut session = ChipSession::new(chip_cfg, spec.clone())?;
+    let loading = *session.loading();
+    println!(
+        "one-time load: {} register writes, {:.1} us simulated",
+        loading.weight_reg_writes,
+        loading.weight_load_ns / 1e3
+    );
+    let mut rng = Rng::new(0xE2E);
+    let xs: Vec<Tensor4> = (0..n_req).map(|_| spec.random_input(&mut rng)).collect();
+    let t0 = std::time::Instant::now();
+    let outs = session.run_batch(&xs)?;
+    let host_s = t0.elapsed().as_secs_f64();
+    let compute_ns: f64 = outs.iter().map(|o| o.metrics.latency_ns).sum();
+    let dpu_ns: f64 = outs.iter().map(|o| o.metrics.dpu_ns).sum();
+    println!("served {n_req} requests in {host_s:.2} s host time");
+    println!(
+        "  simulated compute : {:.1} us ({:.1} us DPU incl. attention)",
+        compute_ns / 1e3,
+        dpu_ns / 1e3
+    );
+    println!(
+        "  per-request weight-register writes: {} (weights are resident)",
+        outs.iter().map(|o| o.metrics.weight_reg_writes).sum::<u64>()
+    );
+    if let Some(logits) = &outs[0].logits {
+        let row = &logits[0];
+        let top = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!("  request 0 logits[0]: argmax class {top} of {}", row.len());
+    }
+    Ok(())
+}
+
 /// `fat resnet --shards N`: cut the model at layer boundaries into N
 /// footprint-balanced shards, serve it as a chip pipeline, charge the
 /// inter-chip link at every boundary, and prove bit-exactness against the
@@ -766,7 +897,7 @@ fn run_resnet_sharded(cfg: ChipConfig, spec: ModelSpec, shards: usize, n_req: us
     for (i, (&(a, b), &fp)) in plan.ranges.iter().zip(&plan.footprints).enumerate() {
         t.row(vec![
             format!("{}", i + 1),
-            format!("{}..{}", spec.layers[a].layer.name, spec.layers[b - 1].layer.name),
+            format!("{}..{}", spec.layers[a].op.name(), spec.layers[b - 1].op.name()),
             format!("{}", b - a),
             format!("{fp}"),
         ]);
@@ -869,7 +1000,7 @@ fn print_hybrid_plan(spec: &ModelSpec, plan: &HybridPlan, chips_asked: usize) {
         let (a, b) = st.range;
         t.row(vec![
             format!("{}", i + 1),
-            format!("{}..{}", spec.layers[a].layer.name, spec.layers[b - 1].layer.name),
+            format!("{}..{}", spec.layers[a].op.name(), spec.layers[b - 1].op.name()),
             format!("{}", st.ways),
             format!("{}", st.chip_footprints.iter().max().expect("at least one chip")),
             format!("{:.1}", st.est_ns / 1e3),
@@ -882,11 +1013,13 @@ fn print_hybrid_plan(spec: &ModelSpec, plan: &HybridPlan, chips_asked: usize) {
     );
 }
 
-/// `fat resnet --auto --chips N`: latency-balanced hybrid serving — the
-/// auto-planner composes layer-boundary stages with per-layer KN splits,
-/// loads the model across the chosen chips, and proves bit-exactness
-/// against a capacity-unlimited single-chip oracle.
-fn run_resnet_auto(
+/// `fat resnet --auto --chips N` / `fat workload --auto --chips N`:
+/// latency-balanced hybrid serving — the auto-planner composes
+/// layer-boundary stages with per-layer KN splits, loads the model across
+/// the chosen chips, and proves bit-exactness against a
+/// capacity-unlimited single-chip oracle.  Spec-generic: any op-IR model
+/// (conv, grouped conv, GEMM + attention) goes through unchanged.
+fn run_hybrid_auto(
     cfg: ChipConfig,
     spec: ModelSpec,
     chips: usize,
@@ -1031,11 +1164,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
     );
     let mut lat_weights = Vec::with_capacity(prof.len());
     for (ls, &(ways, ns)) in spec.layers.iter().zip(&prof) {
-        let fp = wreg_footprint(&ls.layer, &planner);
+        let fp = op_wreg_footprint(&ls.op, &planner);
         lat_weights.push(ns.max(1.0) as u64);
         t.row(vec![
-            ls.layer.name.into(),
-            format!("{}", ls.layer.kn),
+            ls.op.name().into(),
+            format!("{}", ls.op.kn()),
             format!("{fp}"),
             format!("{ways}"),
             format!("{:.1}", ns / 1e3),

@@ -5,6 +5,18 @@
 //! available CMAs.  When the matrix exceeds the chip, the planner emits
 //! *steps* (Fig. 9 (b)/(c)) and prioritizes the J dimension so immediate
 //! accumulation results are reused before activations are evicted.
+//!
+//! Op-IR note: the planner is op-kind agnostic — it only ever sees a
+//! plain [`ConvLayer`], one per execution unit of a
+//! `nn::ops::LayerOp` (`coordinator::session` plans a grouped conv as
+//! `groups` independent unit grids).  Two degenerate geometries are
+//! load-bearing: a lowered GEMM (`nn::ops::GemmLayer::lower`) is a
+//! 1x1/s1/p0 conv whose Img2Col matrix *is* the activation matrix
+//! (N*I = b*m columns, J = k rows), and a depthwise unit has `kn = 1`
+//! with a tiny J (`cg*kh*kw`), so its grid degenerates to many small
+//! single-filter plans whose register footprints are summed per unit by
+//! `coordinator::session::op_wreg_footprint`.  Neither shape needs
+//! special cases here — the tiling math below already covers them.
 
 use crate::nn::resnet::ConvLayer;
 

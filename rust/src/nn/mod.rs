@@ -6,8 +6,11 @@
 //! module is deliberately straightforward CPU code.
 
 pub mod layers;
+pub mod ops;
 pub mod resnet;
 pub mod tensor;
+pub mod workloads;
 
+pub use ops::{GemmLayer, GroupedConvLayer, LayerOp, OpUnit};
 pub use resnet::{resnet18_conv_layers, ConvLayer};
 pub use tensor::Tensor4;

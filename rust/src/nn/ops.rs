@@ -1,0 +1,389 @@
+//! The ternary op IR: the layer shapes the accelerator can execute.
+//!
+//! Historically the serving stack hardcoded one shape — a dense 2-D
+//! convolution ([`ConvLayer`]).  The SACU + fast-addition scheme is
+//! op-agnostic: anything that lowers to a ternary dot product maps onto
+//! the CMAs through Img2Col.  [`LayerOp`] names the three shapes the
+//! stack serves and gives every consumer one vocabulary:
+//!
+//! - [`LayerOp::Conv`] — the classic dense convolution, unchanged.
+//! - [`LayerOp::GroupedConv`] — grouped/depthwise convolution: `groups`
+//!   independent convs over disjoint input-channel slices (depthwise is
+//!   the `cg = kg = 1` special case).  Stresses the mapper very
+//!   differently from 3x3 convs: tiny per-group KN, high layer count.
+//! - [`LayerOp::Gemm`] — a ternary GEMM `y[b] = x[b] @ w` lowered to a
+//!   1x1 conv with degenerate geometry (`kh = kw = 1`, `h = m`,
+//!   `w = 1`): Img2Col of that geometry is the identity, so the GEMM
+//!   streams through the existing conv machinery untouched.
+//!
+//! Every op decomposes into [`OpUnit`]s — plain `ConvLayer`s the chip
+//! executes natively, plus the channel offsets placing each unit's input
+//! and output inside the layer's tensors.  Conv and Gemm are one unit; a
+//! grouped conv is one unit per group.  Everything downstream (grid
+//! planning, register packing, footprints, KN splitting) operates on
+//! units, which is how the op refactor keeps the conv paths
+//! byte-identical to the pre-IR stack.
+
+use crate::nn::resnet::ConvLayer;
+
+/// A ternary GEMM: `b` independent `(m x k) @ (k x n)` products sharing
+/// one resident ternary weight matrix.  Weights are n-major rows of
+/// length k — exactly `TernaryFilter` with `c = k, kh = kw = 1` — so the
+/// committed python kernel (`python/compile/kernels/ternary_gemm.py`,
+/// `y = x @ w`) and the chip path share one layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmLayer {
+    pub name: &'static str,
+    /// Independent GEMMs per request (the batch dimension).
+    pub b: usize,
+    /// Rows of the activation matrix (e.g. transformer sequence length).
+    pub m: usize,
+    /// Reduction dimension.
+    pub k: usize,
+    /// Output features — the KN dimension on the chip.
+    pub n: usize,
+}
+
+impl GemmLayer {
+    /// The degenerate conv geometry this GEMM lowers to.  A 1x1 kernel at
+    /// stride 1 makes Img2Col the identity layout: column `(b, m)` holds
+    /// activation row `m` of batch `b`, J runs over `k`.
+    pub fn lower(&self) -> ConvLayer {
+        ConvLayer {
+            name: self.name,
+            n: self.b,
+            c: self.k,
+            h: self.m,
+            w: 1,
+            kn: self.n,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+        }
+    }
+}
+
+/// A grouped convolution: `groups` independent convs, group `g` reading
+/// input channels `[c_offset + g*cg, c_offset + (g+1)*cg)` and producing
+/// output channels `[g*kg, (g+1)*kg)`.  Depthwise is `cg = kg = 1` with
+/// `groups` equal to the channel count.
+///
+/// `c_offset`/`c_in` record where the groups sit inside the *incoming*
+/// tensor: an unsliced layer has `c_offset = 0, c_in = groups * cg`; a
+/// KN slice (always cut at group boundaries) keeps the full `c_in` and
+/// bumps `c_offset`, so every slice still consumes the same gathered
+/// activation tensor — the contract filter-dimension tensor parallelism
+/// relies on for plain convs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupedConvLayer {
+    pub name: &'static str,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Independent groups.
+    pub groups: usize,
+    /// Input channels per group.
+    pub cg: usize,
+    /// Output filters per group — the KN split granularity.
+    pub kg: usize,
+    /// Input channel where group 0 starts (non-zero only on KN slices).
+    pub c_offset: usize,
+    /// Channels the incoming tensor carries (>= c_offset + groups * cg).
+    pub c_in: usize,
+}
+
+impl GroupedConvLayer {
+    /// A depthwise layer over `c` channels: one 1-in/1-out group per
+    /// channel.
+    pub fn depthwise(name: &'static str, base: ConvLayer) -> Self {
+        Self {
+            name,
+            n: base.n,
+            h: base.h,
+            w: base.w,
+            kh: base.kh,
+            kw: base.kw,
+            stride: base.stride,
+            pad: base.pad,
+            groups: base.c,
+            cg: 1,
+            kg: 1,
+            c_offset: 0,
+            c_in: base.c,
+        }
+    }
+
+    /// Total output channels across groups.
+    pub fn kn(&self) -> usize {
+        self.groups * self.kg
+    }
+
+    /// The plain conv one group executes (channel placement aside).
+    pub fn unit(&self) -> ConvLayer {
+        ConvLayer {
+            name: self.name,
+            n: self.n,
+            c: self.cg,
+            h: self.h,
+            w: self.w,
+            kn: self.kg,
+            kh: self.kh,
+            kw: self.kw,
+            stride: self.stride,
+            pad: self.pad,
+        }
+    }
+}
+
+/// One native execution unit of an op: a plain conv plus the channel
+/// offsets placing it inside the layer.  `c0` is the first input channel
+/// the unit reads from the incoming tensor; `k0` the first output
+/// channel (== filter row) it produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpUnit {
+    pub conv: ConvLayer,
+    pub c0: usize,
+    pub k0: usize,
+}
+
+/// A ternary layer op — the IR every serving layer dispatches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerOp {
+    Conv(ConvLayer),
+    GroupedConv(GroupedConvLayer),
+    Gemm(GemmLayer),
+}
+
+impl LayerOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerOp::Conv(l) => l.name,
+            LayerOp::GroupedConv(g) => g.name,
+            LayerOp::Gemm(g) => g.name,
+        }
+    }
+
+    /// The batch dimension (independent requests folded per tensor).
+    pub fn batch(&self) -> usize {
+        match self {
+            LayerOp::Conv(l) => l.n,
+            LayerOp::GroupedConv(g) => g.n,
+            LayerOp::Gemm(g) => g.b,
+        }
+    }
+
+    /// Raw output channels (before any epilogue reshaping).
+    pub fn kn(&self) -> usize {
+        match self {
+            LayerOp::Conv(l) => l.kn,
+            LayerOp::GroupedConv(g) => g.kn(),
+            LayerOp::Gemm(g) => g.n,
+        }
+    }
+
+    /// The tensor geometry this op consumes: (n, c, h, w).
+    pub fn in_geometry(&self) -> (usize, usize, usize, usize) {
+        match self {
+            LayerOp::Conv(l) => (l.n, l.c, l.h, l.w),
+            LayerOp::GroupedConv(g) => (g.n, g.c_in, g.h, g.w),
+            LayerOp::Gemm(g) => (g.b, g.k, g.m, 1),
+        }
+    }
+
+    /// The conv output geometry: (n, kn, oh, ow) — before pool/epilogue.
+    pub fn out_geometry(&self) -> (usize, usize, usize, usize) {
+        match self {
+            LayerOp::Conv(l) => (l.n, l.kn, l.oh(), l.ow()),
+            LayerOp::GroupedConv(g) => {
+                let u = g.unit();
+                (g.n, g.kn(), u.oh(), u.ow())
+            }
+            LayerOp::Gemm(g) => (g.b, g.n, g.m, 1),
+        }
+    }
+
+    /// Resident ternary weight count.
+    pub fn weights(&self) -> usize {
+        let (kn, c, kh, kw) = self.filter_dims();
+        kn * c * kh * kw
+    }
+
+    /// Multiply-accumulates of the dense op.
+    pub fn macs(&self) -> u64 {
+        match self {
+            LayerOp::Conv(l) => l.macs(),
+            LayerOp::GroupedConv(g) => g.groups as u64 * g.unit().macs(),
+            LayerOp::Gemm(g) => g.lower().macs(),
+        }
+    }
+
+    /// The `TernaryFilter` dims holding this op's weights:
+    /// (kn, c, kh, kw) with rows in output-channel order.  A grouped
+    /// conv's rows are unit-local (length `cg * kh * kw`), so row `k`
+    /// belongs to group `k / kg`.
+    pub fn filter_dims(&self) -> (usize, usize, usize, usize) {
+        match self {
+            LayerOp::Conv(l) => (l.kn, l.c, l.kh, l.kw),
+            LayerOp::GroupedConv(g) => (g.kn(), g.cg, g.kh, g.kw),
+            LayerOp::Gemm(g) => (g.n, g.k, 1, 1),
+        }
+    }
+
+    /// The KN-split granularity: slices must be multiples of this (a
+    /// grouped conv cannot be cut inside a group — the group's filters
+    /// share input channels no other chip would hold).
+    pub fn kn_granularity(&self) -> usize {
+        match self {
+            LayerOp::GroupedConv(g) => g.kg,
+            _ => 1,
+        }
+    }
+
+    /// This op serving `k` fused requests per tensor.
+    pub fn with_batch_factor(&self, k: usize) -> LayerOp {
+        match *self {
+            LayerOp::Conv(mut l) => {
+                l.n *= k;
+                LayerOp::Conv(l)
+            }
+            LayerOp::GroupedConv(mut g) => {
+                g.n *= k;
+                LayerOp::GroupedConv(g)
+            }
+            LayerOp::Gemm(mut g) => {
+                g.b *= k;
+                LayerOp::Gemm(g)
+            }
+        }
+    }
+
+    /// The native execution units: plain convs plus channel placement.
+    pub fn units(&self) -> Vec<OpUnit> {
+        match self {
+            LayerOp::Conv(l) => vec![OpUnit { conv: *l, c0: 0, k0: 0 }],
+            LayerOp::Gemm(g) => vec![OpUnit { conv: g.lower(), c0: 0, k0: 0 }],
+            LayerOp::GroupedConv(g) => {
+                let u = g.unit();
+                (0..g.groups)
+                    .map(|gi| OpUnit { conv: u, c0: g.c_offset + gi * g.cg, k0: gi * g.kg })
+                    .collect()
+            }
+        }
+    }
+
+    /// The contiguous output-channel slice `[k0, k1)` of this op — the
+    /// per-chip unit of KN tensor parallelism.  The caller (`LayerSpec::
+    /// slice_kn`) has already checked granularity; this only reshapes
+    /// geometry.  Grouped slices keep `c_in` (they consume the full
+    /// gathered tensor) and advance `c_offset` to their first group.
+    pub fn slice_kn(&self, k0: usize, k1: usize) -> LayerOp {
+        debug_assert!(k0 < k1 && k1 <= self.kn(), "bad KN slice [{k0}, {k1})");
+        debug_assert!(k0 % self.kn_granularity() == 0 && k1 % self.kn_granularity() == 0);
+        match *self {
+            LayerOp::Conv(mut l) => {
+                l.kn = k1 - k0;
+                LayerOp::Conv(l)
+            }
+            LayerOp::Gemm(mut g) => {
+                g.n = k1 - k0;
+                LayerOp::Gemm(g)
+            }
+            LayerOp::GroupedConv(mut g) => {
+                g.c_offset += (k0 / g.kg) * g.cg;
+                g.groups = (k1 - k0) / g.kg;
+                LayerOp::GroupedConv(g)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dw(c: usize) -> GroupedConvLayer {
+        GroupedConvLayer::depthwise(
+            "dw",
+            ConvLayer { name: "dw", n: 2, c, h: 8, w: 8, kn: c, kh: 3, kw: 3, stride: 1, pad: 1 },
+        )
+    }
+
+    #[test]
+    fn gemm_lowers_to_degenerate_conv() {
+        let g = GemmLayer { name: "g", b: 3, m: 16, k: 8, n: 12 };
+        let l = g.lower();
+        assert_eq!((l.n, l.c, l.h, l.w), (3, 8, 16, 1));
+        assert_eq!((l.kn, l.kh, l.kw, l.stride, l.pad), (12, 1, 1, 1, 0));
+        assert_eq!((l.oh(), l.ow()), (16, 1), "1x1/s1/p0 preserves spatial");
+        let op = LayerOp::Gemm(g);
+        assert_eq!(op.in_geometry(), (3, 8, 16, 1));
+        assert_eq!(op.out_geometry(), (3, 12, 16, 1));
+        assert_eq!(op.weights(), 8 * 12);
+        assert_eq!(op.macs(), 3 * 16 * 8 * 12);
+        assert_eq!(op.units().len(), 1);
+    }
+
+    #[test]
+    fn grouped_units_partition_channels() {
+        let g = dw(6);
+        let op = LayerOp::GroupedConv(g);
+        assert_eq!(op.kn(), 6);
+        assert_eq!(op.kn_granularity(), 1);
+        assert_eq!(op.in_geometry(), (2, 6, 8, 8));
+        assert_eq!(op.weights(), 6 * 9, "one 3x3 kernel per channel");
+        let units = op.units();
+        assert_eq!(units.len(), 6);
+        for (i, u) in units.iter().enumerate() {
+            assert_eq!((u.c0, u.k0), (i, i));
+            assert_eq!((u.conv.c, u.conv.kn), (1, 1));
+        }
+        // dense macs / c: each output channel reduces over 1 channel
+        let dense = ConvLayer {
+            name: "d", n: 2, c: 6, h: 8, w: 8, kn: 6, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        assert_eq!(op.macs(), dense.macs() / 6);
+    }
+
+    #[test]
+    fn grouped_slice_advances_channel_offset() {
+        let mut g = dw(8);
+        g.kg = 2;
+        g.cg = 2;
+        g.groups = 4; // 4 groups x (2 in -> 2 out), kn = 8 over c_in = 8
+        let op = LayerOp::GroupedConv(g);
+        let s = op.slice_kn(4, 8);
+        match s {
+            LayerOp::GroupedConv(sg) => {
+                assert_eq!(sg.groups, 2);
+                assert_eq!(sg.c_offset, 4);
+                assert_eq!(sg.c_in, 8, "slices consume the full gathered tensor");
+                let units = s.units();
+                assert_eq!(units[0].c0, 4);
+                assert_eq!(units[1].c0, 6);
+                assert_eq!(units[0].k0, 0, "output channels are slice-local");
+            }
+            _ => panic!("slice changed op kind"),
+        }
+        assert_eq!(s.in_geometry(), op.in_geometry());
+    }
+
+    #[test]
+    fn batch_factor_scales_every_op_kind() {
+        let conv = LayerOp::Conv(ConvLayer {
+            name: "c", n: 2, c: 3, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1,
+        });
+        let gemm = LayerOp::Gemm(GemmLayer { name: "g", b: 1, m: 4, k: 3, n: 5 });
+        let grp = LayerOp::GroupedConv(dw(4));
+        for (op, n0) in [(conv, 2), (gemm, 1), (grp, 2)] {
+            let b = op.with_batch_factor(3);
+            assert_eq!(b.batch(), 3 * n0);
+            assert_eq!(b.kn(), op.kn());
+            assert_eq!(b.weights(), op.weights());
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Workload geometry builders beyond ResNet-style conv chains: the two
+//! genuinely different compute shapes the op IR exists for.
+//!
+//! - [`ternary_transformer_block`] — one transformer block as ternary
+//!   GEMMs through the SACU path: a fused QKV projection (with the
+//!   multi-head attention-score epilogue on the DPU), the output
+//!   projection, and the two FFN matmuls.  FATNN (see PAPERS.md) argues
+//!   ternary quantizes transformers well; here the whole block is four
+//!   [`GemmLayer`]s against resident 2-bit registers.
+//! - [`mobilenet_style_backbone`] — alternating depthwise/pointwise
+//!   stages.  Depthwise convs stress the mapper the opposite way from
+//!   3x3 ResNet convs: tiny per-group KN and reduction length, many
+//!   small layers.
+//!
+//! These return geometry only ([`WorkloadLayer`]: an op plus its
+//! epilogue flags); `coordinator::model::ModelSpec::synthetic_ops`
+//! attaches synthetic ternary weights and folded BN to make a servable
+//! model (`ModelSpec::synthetic_transformer` / `synthetic_mobilenet`).
+
+use crate::nn::ops::{GemmLayer, GroupedConvLayer, LayerOp};
+use crate::nn::resnet::ConvLayer;
+
+/// One layer of a workload: the op, plus the epilogue the DPU applies
+/// after BN + ReLU (multi-head attention scores and/or the 2x2 max
+/// pool).  Pure geometry — no weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadLayer {
+    pub op: LayerOp,
+    /// `Some(heads)` applies the multi-head attention-score epilogue:
+    /// the op's 3d output channels are read as fused Q/K/V and reduced
+    /// to d attended channels.
+    pub attn_heads: Option<usize>,
+    /// Apply the DPU's 2x2/s2 max pool after BN + ReLU.
+    pub pool_after: bool,
+}
+
+impl WorkloadLayer {
+    /// A layer with no epilogue beyond BN + ReLU.
+    pub fn plain(op: LayerOp) -> Self {
+        Self { op, attn_heads: None, pool_after: false }
+    }
+}
+
+/// One ternary transformer block over a `seq x d_model` activation
+/// (carried as a `(1, d_model, seq, 1)` tensor: channels are features,
+/// spatial is the token axis).  Four ternary GEMMs: fused QKV (3d
+/// outputs + attention epilogue folding them back to d), the output
+/// projection, and an `ffn_mult`-wide FFN up/down pair.
+pub fn ternary_transformer_block(
+    seq: usize,
+    d_model: usize,
+    heads: usize,
+    ffn_mult: usize,
+) -> Vec<WorkloadLayer> {
+    assert!(seq > 0 && d_model > 0 && ffn_mult >= 1, "degenerate transformer block");
+    assert!(heads >= 1 && d_model % heads == 0, "d_model must divide into heads");
+    let gemm = |name: &'static str, k: usize, n: usize| {
+        LayerOp::Gemm(GemmLayer { name, b: 1, m: seq, k, n })
+    };
+    vec![
+        WorkloadLayer {
+            op: gemm("qkv", d_model, 3 * d_model),
+            attn_heads: Some(heads),
+            pool_after: false,
+        },
+        WorkloadLayer::plain(gemm("proj", d_model, d_model)),
+        WorkloadLayer::plain(gemm("ffn_up", d_model, ffn_mult * d_model)),
+        WorkloadLayer::plain(gemm("ffn_down", ffn_mult * d_model, d_model)),
+    ]
+}
+
+/// A MobileNet-style backbone: a 3x3/s2 stem, then four depthwise /
+/// pointwise stage pairs with stride-2 downsampling (and channel
+/// doubling) on alternating stages.  `width` is the stem's output
+/// channel count; the deepest stage carries `8 * width` channels.
+pub fn mobilenet_style_backbone(batch: usize, input_hw: usize, width: usize) -> Vec<WorkloadLayer> {
+    assert!(batch > 0 && width >= 2, "degenerate backbone");
+    assert!(input_hw >= 8, "input too small for three downsamples");
+    let stem = ConvLayer {
+        name: "stem",
+        n: batch,
+        c: 3,
+        h: input_hw,
+        w: input_hw,
+        kn: width,
+        kh: 3,
+        kw: 3,
+        stride: 2,
+        pad: 1,
+    };
+    let mut h = stem.oh();
+    let mut c = width;
+    let mut out = vec![WorkloadLayer::plain(LayerOp::Conv(stem))];
+    // (depthwise name, pointwise name, depthwise stride, channel mult)
+    let stages: [(&'static str, &'static str, usize, usize); 4] = [
+        ("dw1", "pw1", 1, 2),
+        ("dw2", "pw2", 2, 2),
+        ("dw3", "pw3", 1, 1),
+        ("dw4", "pw4", 2, 2),
+    ];
+    for (dw_name, pw_name, stride, mult) in stages {
+        let base = ConvLayer {
+            name: dw_name,
+            n: batch,
+            c,
+            h,
+            w: h,
+            kn: c,
+            kh: 3,
+            kw: 3,
+            stride,
+            pad: 1,
+        };
+        let dw = GroupedConvLayer::depthwise(dw_name, base);
+        h = dw.unit().oh();
+        out.push(WorkloadLayer::plain(LayerOp::GroupedConv(dw)));
+        let pw = ConvLayer {
+            name: pw_name,
+            n: batch,
+            c,
+            h,
+            w: h,
+            kn: c * mult,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+        };
+        out.push(WorkloadLayer::plain(LayerOp::Conv(pw)));
+        c = pw.kn;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transformer_block_chains_feature_dims() {
+        let ws = ternary_transformer_block(16, 8, 2, 4);
+        assert_eq!(ws.len(), 4);
+        // qkv: d -> 3d, folded back to d by the attention epilogue
+        assert_eq!(ws[0].op.in_geometry(), (1, 8, 16, 1));
+        assert_eq!(ws[0].op.kn(), 24);
+        assert_eq!(ws[0].attn_heads, Some(2));
+        // proj consumes the d attended channels
+        assert_eq!(ws[1].op.in_geometry(), (1, 8, 16, 1));
+        assert_eq!(ws[2].op.kn(), 32, "ffn_up widens by ffn_mult");
+        assert_eq!(ws[3].op.in_geometry().1, 32);
+        assert_eq!(ws[3].op.kn(), 8, "block output returns to d_model");
+        for w in &ws {
+            assert_eq!(w.op.out_geometry().2, 16, "token axis survives every GEMM");
+        }
+    }
+
+    #[test]
+    fn mobilenet_backbone_alternates_and_chains() {
+        let ws = mobilenet_style_backbone(2, 16, 8);
+        assert_eq!(ws.len(), 9, "stem + 4 x (dw, pw)");
+        let mut prev_out: Option<(usize, usize, usize, usize)> = None;
+        for w in &ws {
+            let (n, c, h, ww) = w.op.in_geometry();
+            if let Some((pn, pc, ph, pw)) = prev_out {
+                assert_eq!((n, c, h, ww), (pn, pc, ph, pw), "{} chains", w.op.name());
+            }
+            let (on, oc, oh, ow) = w.op.out_geometry();
+            prev_out = Some((on, oc, oh, ow));
+        }
+        // depthwise layers are grouped, pointwise are plain 1x1 convs
+        assert!(matches!(ws[1].op, LayerOp::GroupedConv(_)));
+        match ws[2].op {
+            LayerOp::Conv(l) => assert_eq!((l.kh, l.kw), (1, 1)),
+            _ => panic!("pw must be a plain conv"),
+        }
+        // three stride-2 points: 16 -> 8 (stem) -> 4 (dw2) -> 2 (dw4)
+        assert_eq!(ws.last().unwrap().op.out_geometry().2, 2);
+        assert_eq!(ws.last().unwrap().op.kn(), 64, "8 * width deep end");
+    }
+}

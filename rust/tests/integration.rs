@@ -533,6 +533,275 @@ fn all_four_sa_designs_drive_a_correct_layer() {
 }
 
 #[test]
+fn workload_models_serve_byte_identically_across_every_path() {
+    // The op-IR tentpole contract, end to end: a ternary transformer
+    // block (GEMMs + attention epilogue) and a mobilenet-style backbone
+    // (grouped + pointwise convs) must produce byte-identical outputs on
+    // (1) the single-chip oracle, (2) the auto-planned hybrid fabric,
+    // (3) the threaded hybrid server, and (4) the continuous-batching
+    // serving engine — with register writes conserved across chips.
+    use fat_imc::coordinator::engine::{
+        EngineConfig, EngineRequest, SchedPolicy, ServingEngine, SloClass,
+    };
+    use fat_imc::coordinator::model::ModelSpec;
+    use fat_imc::coordinator::server::{InferenceServer, Request, ServingMode};
+    use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession};
+    use fat_imc::coordinator::tensor_parallel::{plan_auto, TensorParallelSession};
+    use fat_imc::mapping::schemes::HwParams;
+
+    let specs = [
+        ModelSpec::synthetic_transformer(6, 8, 2, 2, 0.5, 0x1A01),
+        ModelSpec::synthetic_mobilenet(1, 16, 6, 0.5, 0x1A02, 4),
+    ];
+    for spec in specs {
+        // Shrink the register files so the planner must actually shard:
+        // ~60% of the model, but never below the largest single layer
+        // (the transformer's attention layers cannot be KN-split).
+        let full = ChipConfig::fat();
+        let planner = full.planner();
+        let footprints: Vec<u64> =
+            spec.layers.iter().map(|ls| op_wreg_footprint(&ls.op, &planner)).collect();
+        let total: u64 = footprints.iter().sum();
+        let biggest = *footprints.iter().max().expect("at least one layer");
+        // (few CMAs so the per-CMA rounding can't hand back the whole
+        // model's worth of registers on these tiny geometries)
+        let mut cfg = full;
+        cfg.cmas = 8;
+        cfg.wreg_entries_per_cma =
+            (((total * 60 / 100).max(biggest)) as usize).div_ceil(cfg.cmas).max(1);
+        let hw = HwParams::default();
+
+        let mut big = cfg;
+        big.wreg_entries_per_cma = big.wreg_entries_per_cma.max(1 << 20);
+        let mut oracle = ChipSession::new(big, spec.clone()).expect("oracle session");
+        let mut rng = Rng::new(0x1A03);
+        let xs: Vec<Tensor4> = (0..3).map(|_| spec.random_input(&mut rng)).collect();
+        let want: Vec<_> =
+            xs.iter().map(|x| oracle.infer(x).expect("oracle inference")).collect();
+
+        // (2) the auto-planned hybrid fabric, inline
+        let plan = (2..=8)
+            .find_map(|c| plan_auto(&cfg, &spec, c, &hw).ok())
+            .expect("a hybrid plan within 8 chips");
+        assert!(plan.chips() >= 2, "{}: the shrunken chip must force multi-chip", spec.name);
+        let mut tp = TensorParallelSession::new(cfg, spec.clone(), plan.clone(), hw)
+            .expect("plan fits the small chips");
+        assert_eq!(
+            tp.loading_total().weight_reg_writes,
+            oracle.loading().weight_reg_writes,
+            "{}: register writes must be conserved across chips",
+            spec.name
+        );
+        let tp_outs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let mut ho = tp.infer(x).expect("hybrid inference");
+                ho.outs.pop().expect("one request in, one output out")
+            })
+            .collect();
+        for (i, (got, w)) in tp_outs.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got.features.data, w.features.data,
+                "{}: request {i} hybrid features diverged from the oracle",
+                spec.name
+            );
+            assert_eq!(got.logits, w.logits, "{}: request {i} logits diverged", spec.name);
+        }
+
+        // (3) the threaded hybrid server: byte-identical outputs AND
+        // metrics to the inline session running the same plan
+        let server = InferenceServer::start_with_hw(
+            cfg,
+            ServingMode::Hybrid { plan: plan.clone(), max_batch: 1 },
+            spec.clone(),
+            hw,
+        )
+        .expect("hybrid server starts");
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(Request { id: id as u64, x: x.clone() }).expect("submit");
+        }
+        let mut responses = server
+            .collect_timeout(xs.len(), std::time::Duration::from_secs(600))
+            .expect("all submitted requests must come back");
+        server.shutdown();
+        responses.sort_by_key(|r| r.id);
+        for (r, w) in responses.iter().zip(&tp_outs) {
+            assert_eq!(r.features.data, w.features.data, "{}: server features", spec.name);
+            assert_eq!(r.logits, w.logits, "{}: server logits", spec.name);
+            assert_eq!(r.metrics, w.metrics, "{}: server metrics", spec.name);
+        }
+
+        // (4) the serving engine on the same plan: replay its exact fused
+        // windows through a fresh inline session — outputs and metrics
+        // must match, and the features must still equal the oracle's
+        let trace: Vec<EngineRequest> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| EngineRequest {
+                id: i as u64,
+                x: x.clone(),
+                class: SloClass::Batch,
+                arrival_us: 0.0,
+                deadline_us: 1e12,
+            })
+            .collect();
+        let mut engine = ServingEngine::new(
+            cfg,
+            spec.clone(),
+            plan,
+            hw,
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: Some(16) },
+        )
+        .expect("engine loads");
+        let report = engine.run_trace(trace).expect("trace serves");
+        assert_eq!(report.stats.served, xs.len() as u64, "{}: nothing shed", spec.name);
+        let mut replay_outs = Vec::new();
+        for window in &report.batch_log {
+            let refs: Vec<&Tensor4> = window.iter().map(|&id| &xs[id as usize]).collect();
+            let mut ho = tp.infer_many(&refs).expect("replay window");
+            replay_outs.append(&mut ho.outs);
+        }
+        assert_eq!(report.responses.len(), replay_outs.len());
+        for (r, w) in report.responses.iter().zip(&replay_outs) {
+            assert_eq!(r.features.data, w.features.data, "{}: engine features", spec.name);
+            assert_eq!(r.logits, w.logits, "{}: engine logits", spec.name);
+            assert_eq!(r.metrics, w.metrics, "{}: engine metrics", spec.name);
+        }
+        for r in &report.responses {
+            assert_eq!(
+                r.features.data, want[r.id as usize].features.data,
+                "{}: engine request {} diverged from the oracle",
+                spec.name, r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_path_matches_the_python_ternary_gemm_golden_vectors() {
+    // Committed fixture from `python/tools/gen_gemm_golden.py`: a small
+    // `y = x @ w` computed the way the L1 Pallas kernel
+    // (`python/compile/kernels/ternary_gemm.py`) computes it — two masked
+    // accumulations and one subtraction.  All values are integers < 2^24,
+    // so the f32 interchange is exact and the comparison is bit-for-bit.
+    use fat_imc::nn::ops::GemmLayer;
+
+    let text = include_str!("golden/ternary_gemm.golden");
+    let (mut m, mut k, mut n) = (0usize, 0usize, 0usize);
+    let (mut x, mut w, mut y): (Vec<f32>, Vec<i8>, Vec<f32>) = (vec![], vec![], vec![]);
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next().unwrap() {
+            "m" => m = it.next().unwrap().parse().unwrap(),
+            "k" => k = it.next().unwrap().parse().unwrap(),
+            "n" => n = it.next().unwrap().parse().unwrap(),
+            "x" => x = it.map(|v| v.parse().unwrap()).collect(),
+            "w" => w = it.map(|v| v.parse().unwrap()).collect(),
+            "y" => y = it.map(|v| v.parse().unwrap()).collect(),
+            other => panic!("unknown golden tag `{other}`"),
+        }
+    }
+    assert_eq!(x.len(), m * k, "fixture x shape");
+    assert_eq!(w.len(), k * n, "fixture w shape");
+    assert_eq!(y.len(), m * n, "fixture y shape");
+
+    // the lowered conv consumes (1, k, m, 1): channel kk holds x column kk
+    let gemm = GemmLayer { name: "golden", b: 1, m, k, n };
+    let layer = gemm.lower();
+    let mut xt = Tensor4::zeros(1, k, m, 1);
+    for mi in 0..m {
+        for kk in 0..k {
+            xt.data[kk * m + mi] = x[mi * k + kk];
+        }
+    }
+    // filter row ni is w's column ni (fixture w is row-major k x n)
+    let mut wt = vec![0i8; n * k];
+    for kk in 0..k {
+        for ni in 0..n {
+            wt[ni * k + kk] = w[kk * n + ni];
+        }
+    }
+    let f = TernaryFilter::new(n, k, 1, 1, wt);
+    let run = FatChip::new(ChipConfig::fat()).run_conv_layer(&xt, &f, &layer);
+    for mi in 0..m {
+        for ni in 0..n {
+            assert_eq!(
+                run.output.data[ni * m + mi],
+                y[mi * n + ni],
+                "y[{mi}][{ni}] diverged from the python kernel's golden value"
+            );
+        }
+    }
+    // the in-tree reference conv agrees with both sides of the interchange
+    assert_eq!(run.output.data, conv2d_ternary(&xt, &f, 1, 0).data);
+}
+
+#[test]
+fn cli_workload_smoke() {
+    // `fat workload --net ...` prints the op-IR table and serves the
+    // model; --auto self-checks bit-exactness + register-write
+    // conservation vs the oracle and --serve replays through the hybrid
+    // server (a divergence exits non-zero).
+    let exe = env!("CARGO_BIN_EXE_fat");
+    let out = std::process::Command::new(exe)
+        .args(["workload", "--net", "transformer", "--requests", "2"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "workload transformer failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("op IR"), "{text}");
+    assert!(text.contains("gemm"), "{text}");
+    assert!(text.contains("+attn(2)"), "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args([
+            "workload", "--net", "mobilenet", "--input", "8", "--width", "4", "--requests",
+            "2", "--auto", "--chips", "3", "--serve",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "workload mobilenet --auto --serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("grouped conv"), "{text}");
+    assert!(text.contains("register-write conservation"), "{text}");
+    assert!(text.contains("bit-identical to the single-chip oracle"), "{text}");
+    assert!(text.contains("replaying the plan through the hybrid server"), "{text}");
+
+    // flag discipline: bad nets and orphaned flags are clean errors
+    let out = std::process::Command::new(exe)
+        .args(["workload", "--net", "alexnet"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("transformer"));
+    let out = std::process::Command::new(exe)
+        .args(["workload", "--net", "transformer", "--serve"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--auto"));
+    let out = std::process::Command::new(exe)
+        .args(["workload", "--net", "transformer", "--chips", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn cli_loadgen_smoke() {
     // `fat loadgen` replays one deterministic Poisson trace through the
     // SLO engine and the dequeue-fusion baseline; its in-binary gates
