@@ -1,0 +1,322 @@
+//! Fault-tolerance bench: the serving engine under injected chip
+//! failures.  Claims gated:
+//! (1) the fault-free path through the tolerant fabric is bit-identical
+//! (outputs AND metrics, report for report) to the plain engine, with
+//! zero failover counters firing — robustness costs nothing when
+//! nothing fails;
+//! (2) a fail-stop on ANY fleet chip of a 3-chip hybrid plan with a
+//! spare loses zero accepted requests: every request is served exactly
+//! once, byte-identical to the solo oracle, and the recovering window
+//! is charged the real weight-reload cost;
+//! (3) with no spare left, the engine shed the failed windows as typed
+//! `failed` notices instead of hanging or panicking — conservation
+//! `served + shed + failed == admitted` holds exactly;
+//! (4) under a seeded Poisson chip-failure process (MTBF in windows)
+//! every accepted request is still served-or-shed exactly once and the
+//! surviving outputs stay byte-identical to the oracle;
+//! (5) silent transient corruption that provably flips outputs on a
+//! blind engine is caught by the ABFT checksum and re-executed to
+//! byte-clean outputs, with the retry metered.
+//! `finish()` writes `BENCH_fault_tolerance.json` (uploaded by CI).
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::engine::{
+    EngineConfig, EngineRequest, SchedPolicy, ServingEngine, SloClass,
+};
+use fat_imc::coordinator::failover::{ArmedFault, FailoverConfig};
+use fat_imc::coordinator::reliability::{poisson_chip_failures, ChipFault};
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::coordinator::tensor_parallel::HybridPlan;
+use fat_imc::mapping::schemes::HwParams;
+use fat_imc::nn::resnet::ConvLayer;
+use fat_imc::nn::tensor::Tensor4;
+use fat_imc::report::Table;
+use fat_imc::testutil::{seed_mix, Rng};
+
+/// Three chained layers whose KN widths (8, 6, 4) admit the 2-way TP
+/// split of the 3-chip hybrid plan under test.
+fn wide_kn(seed: u64) -> ModelSpec {
+    let geo = vec![
+        ConvLayer { name: "f1", n: 1, c: 3, h: 8, w: 8, kn: 8, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "f2", n: 1, c: 8, h: 8, w: 8, kn: 6, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ConvLayer { name: "f3", n: 1, c: 6, h: 4, w: 4, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+    ];
+    ModelSpec::synthetic("ftol", &geo, false, 0.5, seed, Some(5))
+}
+
+/// All-at-once arrival trace: with `max_batch` 2 the engine forms fused
+/// windows [0,1], [2,3], ... deterministically.
+fn flat_trace(xs: &[Tensor4]) -> Vec<EngineRequest> {
+    xs.iter()
+        .enumerate()
+        .map(|(i, x)| EngineRequest {
+            id: i as u64,
+            x: x.clone(),
+            class: SloClass::Batch,
+            arrival_us: 0.0,
+            deadline_us: 1e15,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut run = BenchRun::new("fault_tolerance");
+    let cfg = ChipConfig::fat();
+    let hw = HwParams::default();
+    let spec = wide_kn(0xF701);
+    let mut rng = Rng::new(0xF702);
+    let xs: Vec<Tensor4> = (0..6).map(|_| spec.random_input(&mut rng)).collect();
+    // mixed plan: a single-chip stage + a 2-way TP group, 3 chips total
+    let plan = HybridPlan::manual(&spec, &cfg, &[(0, 1, 1), (1, 3, 2)]).expect("plan");
+    let config = EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: Some(8) };
+    let mut oracle = ChipSession::new(cfg, spec.clone()).expect("oracle session");
+    let clean: Vec<_> = xs.iter().map(|x| oracle.infer(x).expect("oracle run")).collect();
+
+    // ---- (1) the fault-free path costs nothing ---------------------------
+    let mut plain = ServingEngine::new(cfg, spec.clone(), plan.clone(), hw, SchedPolicy::SloEdf, config)
+        .expect("plain engine");
+    let plain_report = plain.run_trace(flat_trace(&xs)).expect("plain replay");
+    let mut tolerant = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        plan.clone(),
+        hw,
+        SchedPolicy::SloEdf,
+        config,
+        FailoverConfig { spares: 1, ..Default::default() },
+        Vec::new(),
+    )
+    .expect("tolerant engine");
+    let tolerant_report = tolerant.run_trace(flat_trace(&xs)).expect("tolerant replay");
+    run.time("fault-free trace replay, host time", || {
+        ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan.clone(),
+            hw,
+            SchedPolicy::SloEdf,
+            config,
+            FailoverConfig { spares: 1, ..Default::default() },
+            Vec::new(),
+        )
+        .expect("tolerant engine")
+        .run_trace(flat_trace(&xs))
+        .expect("tolerant replay")
+    });
+    run.check(
+        "fault-free: tolerant report is bit-identical to the plain engine",
+        tolerant_report == plain_report,
+        "outputs, metrics, or accounting diverged with no fault armed".into(),
+    );
+    run.check(
+        "fault-free: zero failover counters fire",
+        plain_report.responses.iter().chain(&tolerant_report.responses).all(|r| {
+            r.metrics.failovers == 0 && r.metrics.retried_windows == 0 && r.metrics.reload_ns == 0.0
+        }),
+        "a fault-free window carried a nonzero recovery counter".into(),
+    );
+
+    // ---- (2) fail-stop on every fleet chip, one spare --------------------
+    let mut table = Table::new(
+        "fail-stop at window 1, one spare (6 requests, window 2)",
+        &["killed chip", "served", "failed", "failovers", "reload us", "byte-identical"],
+    );
+    let mut lost_none = true;
+    let mut all_identical = true;
+    let mut reload_charged = true;
+    for chip in 0..plan.chips() {
+        let mut engine = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan.clone(),
+            hw,
+            SchedPolicy::SloEdf,
+            config,
+            FailoverConfig { spares: 1, ..Default::default() },
+            vec![ArmedFault { chip, fault: ChipFault::FailStop { at_request: 1 } }],
+        )
+        .expect("tolerant engine");
+        let report = engine.run_trace(flat_trace(&xs)).expect("failover replay");
+        let stats = report.stats;
+        lost_none &= stats.served == 6
+            && stats.failed == 0
+            && stats.served + stats.shed + stats.failed == stats.admitted;
+        let identical = report
+            .responses
+            .iter()
+            .all(|r| {
+                let want = &clean[r.id as usize];
+                r.features.data == want.features.data && r.logits == want.logits
+            });
+        all_identical &= identical;
+        let tel = engine.failover_telemetry();
+        reload_charged &= tel.failovers == 1 && tel.reload_ns > 0.0 && tel.quarantined == 1;
+        table.row(vec![
+            format!("{chip}"),
+            format!("{}", stats.served),
+            format!("{}", stats.failed),
+            format!("{}", tel.failovers),
+            format!("{:.1}", tel.reload_ns / 1e3),
+            format!("{identical}"),
+        ]);
+    }
+    println!("{}", table.render());
+    run.time("fail-stop failover replay, host time", || {
+        let mut engine = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan.clone(),
+            hw,
+            SchedPolicy::SloEdf,
+            config,
+            FailoverConfig { spares: 1, ..Default::default() },
+            vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 1 } }],
+        )
+        .expect("tolerant engine");
+        engine.run_trace(flat_trace(&xs)).expect("failover replay")
+    });
+    run.check(
+        "fail-stop on any fleet chip: zero accepted requests lost",
+        lost_none,
+        "a fail-stop with a spare shed or failed a request".into(),
+    );
+    run.check(
+        "fail-stop on any fleet chip: survivors byte-identical to the solo oracle",
+        all_identical,
+        "a failover re-plan changed outputs".into(),
+    );
+    run.check(
+        "fail-stop on any fleet chip: the real weight reload is charged",
+        reload_charged,
+        "a failover recovered without paying reload latency".into(),
+    );
+
+    // ---- (3) no spare: typed shed, never a hang --------------------------
+    let mut engine = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        HybridPlan::manual(&spec, &cfg, &[(0, 3, 1)]).expect("solo plan"),
+        hw,
+        SchedPolicy::SloEdf,
+        config,
+        FailoverConfig::default(),
+        vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 0 } }],
+    )
+    .expect("tolerant engine");
+    let report = engine.run_trace(flat_trace(&xs)).expect("the trace completes");
+    run.check(
+        "no spare: every request fails exactly once, typed, conservation exact",
+        report.stats.failed == 6
+            && report.stats.served == 0
+            && report.failed.len() == 6
+            && report.stats.served + report.stats.shed + report.stats.failed
+                == report.stats.admitted
+            && report.failed.iter().all(|f| f.reason.contains("fail-stopped")),
+        format!("{:?}", report.stats),
+    );
+
+    // ---- (4) Poisson chip-failure process --------------------------------
+    let fleet = plan.chips() + 1;
+    let xs_long: Vec<Tensor4> = (0..24).map(|_| spec.random_input(&mut rng)).collect();
+    let schedule = poisson_chip_failures(fleet, 4.0, 12, seed_mix(0xF703, 0));
+    let faults: Vec<ArmedFault> =
+        schedule.iter().map(|&(chip, fault)| ArmedFault { chip, fault }).collect();
+    let mut engine = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        plan.clone(),
+        hw,
+        SchedPolicy::SloEdf,
+        EngineConfig { max_batch: 2, queue_windows: 12, queue_depth: Some(24) },
+        FailoverConfig { spares: 1, ..Default::default() },
+        faults.clone(),
+    )
+    .expect("tolerant engine");
+    let report = engine.run_trace(flat_trace(&xs_long)).expect("mtbf replay");
+    let stats = report.stats;
+    let identical = report.responses.iter().all(|r| {
+        let want = &xs_long[r.id as usize];
+        let out = oracle.infer(want).expect("oracle run");
+        r.features.data == out.features.data && r.logits == out.logits
+    });
+    println!(
+        "  mtbf 4 windows over a {fleet}-chip fleet: {} failures drawn, {} served / {} shed / \
+{} failed of {} admitted ({} failovers absorbed)",
+        faults.len(),
+        stats.served,
+        stats.shed,
+        stats.failed,
+        stats.admitted,
+        engine.failover_telemetry().failovers,
+    );
+    run.check(
+        "poisson failures: accepted requests are served-or-shed exactly once, none lost",
+        stats.served + stats.shed + stats.failed == stats.admitted
+            && stats.admitted == 24
+            && report.responses.len() as u64 == stats.served
+            && report.failed.len() as u64 == stats.failed,
+        format!("{stats:?}"),
+    );
+    run.check(
+        "poisson failures: the process actually fired and survivors stay byte-identical",
+        !faults.is_empty() && identical,
+        format!("{} failures drawn; identical={identical}", faults.len()),
+    );
+
+    // ---- (5) SDC: checksum catches provable corruption -------------------
+    let solo_plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 1)]).expect("solo plan");
+    let sdc_fault =
+        vec![ArmedFault { chip: 0, fault: ChipFault::Transient { ber: 0.25, window: 1 } }];
+    let sdc_config = EngineConfig { max_batch: 1, queue_windows: 4, queue_depth: Some(4) };
+    let mut blind = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        solo_plan.clone(),
+        hw,
+        SchedPolicy::SloEdf,
+        sdc_config,
+        FailoverConfig::default(),
+        sdc_fault.clone(),
+    )
+    .expect("blind engine");
+    let blind_report = blind.run_trace(flat_trace(&xs[..2])).expect("blind replay");
+    let corrupted = blind_report.responses[0].logits != clean[0].logits;
+    let mut checked = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        solo_plan,
+        hw,
+        SchedPolicy::SloEdf,
+        sdc_config,
+        FailoverConfig { sdc_check: true, ..Default::default() },
+        sdc_fault,
+    )
+    .expect("checked engine");
+    let checked_report = checked.run_trace(flat_trace(&xs[..2])).expect("checked replay");
+    let restored = checked_report.responses.iter().all(|r| {
+        let want = &clean[r.id as usize];
+        r.features.data == want.features.data && r.logits == want.logits
+    });
+    run.check(
+        "sdc: the armed transient provably corrupts a blind engine",
+        corrupted,
+        "ber 0.25 on window 0 left the blind outputs untouched".into(),
+    );
+    run.check(
+        "sdc: the checksum catches the corruption and re-executes to clean outputs",
+        restored
+            && checked_report.responses[0].metrics.retried_windows == 1
+            && checked.failover_telemetry().retried_windows == 1
+            && checked.failover_telemetry().failovers == 0,
+        "the ABFT checksum missed the corruption or failed to restore outputs".into(),
+    );
+
+    // Host-time regression guard against the committed baseline (same
+    // 5x-tolerance scheme as hotpath; the behavioral gates above run on
+    // the virtual clock and are exact).  Regenerate by copying a
+    // representative CI `BENCH_fault_tolerance.json` over the baseline.
+    run.check_against_baseline("BENCH_fault_tolerance.baseline.json", 5.0);
+
+    run.finish();
+}

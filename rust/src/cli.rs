@@ -214,6 +214,15 @@ COMMANDS:
                            boundary as one transfer, and the per-leg hop
                            latency amortizes over the batch
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
+      --inject-fail-stop <chip:req>
+                           arm a fail-stop fault on fleet chip <chip> at
+                           window <req> (hybrid mode only): the engine
+                           quarantines the chip, re-plans over the
+                           survivors (paying the real weight reload), and
+                           replays the window; with no spare left the
+                           window sheds as Failed instead of hanging
+      --spares <n>         idle spare chips failover may re-plan onto
+                           (default 0; needs --inject-fail-stop)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   loadgen                  open-loop Poisson load generator vs the
                            continuous-batching serving engine: replay one
@@ -245,6 +254,13 @@ COMMANDS:
                            priority in the SLO queue (default 0.25)
       --chips <n>          serve the engine on the auto-planner's hybrid
                            plan for n chips (default 1 = single chip)
+      --chip-mtbf <w>      mean windows to chip failure: draw a seeded
+                           Poisson fail-stop schedule over the fleet
+                           (chips + spares) and replay the trace through
+                           the fault-tolerant engine; conservation
+                           becomes served + shed + failed == admitted
+      --spares <n>         idle spare chips failover may re-plan onto
+                           (default 0; needs --chip-mtbf)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model

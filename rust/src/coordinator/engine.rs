@@ -57,9 +57,10 @@ use crate::testutil::{seed_mix, Rng};
 
 use super::accelerator::ChipConfig;
 use super::exec::{self, StageRunner};
+use super::failover::{ArmedFault, FailoverConfig, FailoverTelemetry, TolerantFabric};
 use super::metrics::ChipMetrics;
 use super::server::SubmitError;
-use super::session::{finalize_outputs, HeadSpec, ModelOutput, ModelSpec};
+use super::session::ModelSpec;
 use super::tensor_parallel::HybridPlan;
 
 /// Service classes, ordered: `Interactive` is always scheduled ahead of
@@ -129,6 +130,22 @@ pub struct ShedNotice {
     pub shed_us: f64,
 }
 
+/// A failed request: admitted, dispatched, and lost because its window
+/// exhausted the failover retry budget (e.g. a fail-stopped chip with no
+/// spare to re-plan onto).  The engine sheds these explicitly instead of
+/// hanging or panicking — conservation stays
+/// `admitted == served + shed + failed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailNotice {
+    pub id: u64,
+    pub class: SloClass,
+    pub deadline_us: f64,
+    /// Virtual time when the window was abandoned, µs.
+    pub failed_us: f64,
+    /// The terminal [`super::failover::WindowFailure`] reason.
+    pub reason: String,
+}
+
 /// First-class accounting: every offered request is exactly one of
 /// rejected (backpressure), shed (overload), or served.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -146,6 +163,9 @@ pub struct EngineStats {
     pub windows: u64,
     /// Widest window dispatched.
     pub max_window: usize,
+    /// Admitted, then lost to an unrecoverable window failure (failover
+    /// retries exhausted).  Zero on every fault-free path.
+    pub failed: u64,
 }
 
 /// Everything a trace replay produced, bit-reproducible per trace.
@@ -153,6 +173,9 @@ pub struct EngineStats {
 pub struct TraceReport {
     pub responses: Vec<EngineResponse>,
     pub shed: Vec<ShedNotice>,
+    /// Requests lost to unrecoverable window failures, in failure order.
+    /// Empty on every fault-free trace.
+    pub failed: Vec<FailNotice>,
     /// Ids refused at admission, in arrival order.
     pub rejected: Vec<u64>,
     /// The exact fused-window compositions, in dispatch order — replay
@@ -270,41 +293,17 @@ impl SchedQueue {
     }
 }
 
-/// The loaded stage fabric a window runs on: exactly the state
-/// [`super::tensor_parallel::TensorParallelSession`] holds, so a fused
-/// window reproduces the inline session byte for byte.
-struct Fabric {
-    cfg: ChipConfig,
-    hw: HwParams,
-    stages: Vec<StageRunner>,
-    head: Option<HeadSpec>,
-}
-
-impl Fabric {
-    /// Run one fused window through the resident stages.  This is the
-    /// inline `infer_many` recipe verbatim — per-request requant scales
-    /// ride [`super::session::QuantActivations::scales`] and the final
-    /// re-split divides each request by its own scale, so fused runs are
-    /// bit-identical to solo runs.
-    fn run_window(&mut self, picked: &[Pending]) -> Result<Vec<ModelOutput>> {
-        if picked.len() > 1 {
-            exec::ensure_fused_capacity(&self.stages, &self.cfg, picked.len())?;
-        }
-        let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
-        let (act, entry) = self.stages[0].entry().quantize_entry(&xs)?;
-        let run = exec::run_stages(&mut self.stages, act, entry, &self.hw, &mut [])?;
-        Ok(finalize_outputs(self.head.as_ref(), run.act, run.metrics))
-    }
-}
-
 /// The continuous-batching engine: a bounded SLO queue scheduling fused
-/// windows onto one resident stage fabric.
+/// windows onto one resident stage fabric — since ISSUE 9 wrapped in
+/// the fault-tolerance layer ([`TolerantFabric`]), which is byte-
+/// transparent on the fault-free path and recovers (quarantine +
+/// re-plan + replay) when chip faults are armed.
 ///
 /// Use [`Self::run_trace`] for deterministic open-loop replay (the load
 /// generator, benches, and every determinism test), or [`Self::serve`]
 /// to mount the same scheduler on a host thread for live submission.
 pub struct ServingEngine {
-    fabric: Fabric,
+    fabric: TolerantFabric,
     input_geometry: (usize, usize, usize, usize),
     max_batch: usize,
     queue: SchedQueue,
@@ -327,6 +326,36 @@ impl ServingEngine {
         policy: SchedPolicy,
         config: EngineConfig,
     ) -> Result<Self> {
+        Self::with_fault_tolerance(
+            cfg,
+            spec,
+            plan,
+            hw,
+            policy,
+            config,
+            FailoverConfig::default(),
+            Vec::new(),
+        )
+    }
+
+    /// [`Self::new`] with the fault-tolerance layer configured: `faults`
+    /// are armed per fleet chip (`plan.chips() + ftc.spares` ordinals),
+    /// and a [`super::exec::StageError`] mid-trace quarantines the chip,
+    /// re-plans over the survivors, and replays the window instead of
+    /// killing the engine.  With no faults armed and a default `ftc`
+    /// this is exactly [`Self::new`] — the clean path stays bit-equal
+    /// (outputs AND metrics) to the pre-failover engine.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_fault_tolerance(
+        cfg: ChipConfig,
+        spec: ModelSpec,
+        plan: HybridPlan,
+        hw: HwParams,
+        policy: SchedPolicy,
+        config: EngineConfig,
+        ftc: FailoverConfig,
+        faults: Vec<ArmedFault>,
+    ) -> Result<Self> {
         ensure!(
             hw.link_bytes_per_ns > 0.0 && hw.link_latency_ns >= 0.0,
             "inter-chip link needs positive bandwidth and non-negative latency"
@@ -339,13 +368,12 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
         ensure!(config.max_batch >= 1, "the fusion window needs at least one slot");
         ensure!(config.queue_windows >= 1, "admission needs at least one window of queue");
         spec.validate()?;
-        let head = spec.head.clone();
         let input_geometry = spec.input_geometry();
-        let stages = exec::build_stages(cfg, exec::hybrid_stage_plans(&spec, &plan, cfg.fault)?)?;
-        let max_batch = exec::clamp_batch_window(&stages, &cfg, config.max_batch);
+        let fabric = TolerantFabric::new(cfg, spec, plan, hw, ftc, faults)?;
+        let max_batch = exec::clamp_batch_window(fabric.stages(), &cfg, config.max_batch);
         let depth = config.queue_depth.unwrap_or(config.queue_windows * max_batch).max(1);
         Ok(Self {
-            fabric: Fabric { cfg, hw, stages, head },
+            fabric,
             input_geometry,
             max_batch,
             queue: SchedQueue { policy, depth, pending: Vec::new(), seq: 0 },
@@ -383,7 +411,13 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
     /// One-time loading metrics per stage (registers are written once;
     /// serving never rewrites them).
     pub fn loading_metrics(&self) -> Vec<ChipMetrics> {
-        self.fabric.stages.iter().map(StageRunner::loading).collect()
+        self.fabric.stages().iter().map(StageRunner::loading).collect()
+    }
+
+    /// Cumulative fault-tolerance counters: zero everywhere unless a
+    /// failover or checksum retry actually fired.
+    pub fn failover_telemetry(&self) -> FailoverTelemetry {
+        self.fabric.telemetry()
     }
 
     /// Replay an arrival trace on a virtual clock advanced by each fused
@@ -400,6 +434,7 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
         let mut arrivals: VecDeque<EngineRequest> = trace.into();
         let mut responses = Vec::new();
         let mut shed = Vec::new();
+        let mut failed = Vec::new();
         let mut rejected = Vec::new();
         let mut batch_log: Vec<Vec<u64>> = Vec::new();
         let mut t_us = 0.0f64;
@@ -453,7 +488,31 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
             // (d) one fused run; the virtual clock advances by its
             // simulated latency
             let start_us = t_us;
-            let outs = self.fabric.run_window(&picked)?;
+            let run = {
+                let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
+                self.fabric.run_window(&xs)
+            };
+            let outs = match run {
+                Ok(outs) => outs,
+                Err(f) => {
+                    // Unrecoverable window: retries exhausted.  Charge
+                    // the wasted attempts to the clock and shed the
+                    // whole window as `failed` — conservation holds,
+                    // the trace keeps replaying.
+                    t_us += f.elapsed_ns / 1e3;
+                    for p in picked {
+                        stats.failed += 1;
+                        failed.push(FailNotice {
+                            id: p.id,
+                            class: p.class,
+                            deadline_us: p.deadline_us,
+                            failed_us: t_us,
+                            reason: f.reason.clone(),
+                        });
+                    }
+                    continue;
+                }
+            };
             let window_us = outs[0].metrics.latency_ns / 1e3;
             t_us += window_us;
             self.est_window_us = window_us;
@@ -482,7 +541,7 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                 });
             }
         }
-        Ok(TraceReport { responses, shed, rejected, batch_log, stats, makespan_us: t_us })
+        Ok(TraceReport { responses, shed, failed, rejected, batch_log, stats, makespan_us: t_us })
     }
 
     /// Mount the engine on a host scheduler thread for live submission:
@@ -523,8 +582,30 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                 continue;
             }
             let start_us = t0.elapsed().as_secs_f64() * 1e6;
-            let outs =
-                fabric.run_window(&picked).expect("admitted requests were validated at submit");
+            let run = {
+                let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
+                fabric.run_window(&xs)
+            };
+            let outs = match run {
+                Ok(outs) => outs,
+                Err(f) => {
+                    // Unrecoverable window: account every request as
+                    // failed and keep serving — the scheduler thread
+                    // must never die with requests in flight.
+                    let mut st = sched.state.lock().expect("engine state lock");
+                    st.stats.failed += picked.len() as u64;
+                    drop(st);
+                    for p in picked {
+                        let _ = tx_out.send(EngineReply::Failed {
+                            id: p.id,
+                            class: p.class,
+                            deadline_us: p.deadline_us,
+                            reason: f.reason.clone(),
+                        });
+                    }
+                    continue;
+                }
+            };
             est_window_us = outs[0].metrics.latency_ns / 1e3;
             let finish_us = t0.elapsed().as_secs_f64() * 1e6;
             let fused = picked.len();
@@ -576,12 +657,16 @@ struct LiveShared {
     wake: Condvar,
 }
 
-/// What the live engine hands back per admitted request: served, or
-/// shed with its deadline already unmeetable.
+/// What the live engine hands back per admitted request: served, shed
+/// with its deadline already unmeetable, or failed because the window
+/// exhausted its failover retries.  Exactly one reply per admitted
+/// request, always — a chip failure sheds explicitly instead of letting
+/// [`EngineServer::collect_timeout`] block to its deadline.
 #[derive(Debug, Clone, PartialEq)]
 pub enum EngineReply {
     Served(EngineResponse),
     Shed { id: u64, class: SloClass, deadline_us: f64 },
+    Failed { id: u64, class: SloClass, deadline_us: f64, reason: String },
 }
 
 impl EngineReply {
@@ -589,6 +674,7 @@ impl EngineReply {
         match self {
             EngineReply::Served(r) => r.id,
             EngineReply::Shed { id, .. } => *id,
+            EngineReply::Failed { id, .. } => *id,
         }
     }
 }
@@ -630,6 +716,16 @@ impl EngineServer {
         if st.closed {
             return Err(SubmitError::Closed);
         }
+        // A dead scheduler thread means nothing will ever drain the
+        // queue: refuse instead of accepting requests into a void.
+        let scheduler_dead = match self.scheduler.as_ref() {
+            Some(h) => h.is_finished(),
+            None => true,
+        };
+        if scheduler_dead {
+            st.closed = true;
+            return Err(SubmitError::Closed);
+        }
         st.stats.offered += 1;
         if st.queue.admit(id, x, class, now_us, now_us + deadline_rel_us) {
             st.stats.admitted += 1;
@@ -654,7 +750,19 @@ impl EngineServer {
             }
             match self.rx_out.recv_timeout(deadline - now) {
                 Ok(r) => collected.push_back(r),
-                Err(_) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // The scheduler thread is gone; no further replies
+                    // can ever arrive.  Fail now instead of blocking to
+                    // the caller's deadline.
+                    ensure!(
+                        collected.len() >= n,
+                        "engine closed: the scheduler thread is gone after {} of {n} replies; \
+completed replies stay buffered",
+                        collected.len()
+                    );
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
             }
         }
         ensure!(
@@ -682,12 +790,19 @@ replies stay buffered",
         self.depth
     }
 
-    fn close_and_join(&mut self) {
+    /// Stop admitting without joining: subsequent `submit` calls return
+    /// [`SubmitError::Closed`]; the scheduler keeps draining what was
+    /// already admitted and exits when the queue is empty.
+    pub fn close(&self) {
         {
             let mut st = self.shared.state.lock().expect("engine state lock");
             st.closed = true;
         }
         self.shared.wake.notify_all();
+    }
+
+    fn close_and_join(&mut self) {
+        self.close();
         if let Some(h) = self.scheduler.take() {
             let _ = h.join();
         }
@@ -1149,6 +1264,9 @@ mod tests {
             .map(|r| match r {
                 EngineReply::Served(resp) => resp,
                 EngineReply::Shed { id, .. } => panic!("request {id} shed under huge deadline"),
+                EngineReply::Failed { id, reason, .. } => {
+                    panic!("request {id} failed with no fault armed: {reason}")
+                }
             })
             .collect();
         served.sort_by_key(|r| r.id);
@@ -1251,5 +1369,302 @@ mod tests {
                     .any(|(x, y)| x.arrival_us != y.arrival_us),
             "a different seed must draw a different trace"
         );
+    }
+
+    #[test]
+    fn fail_stop_with_no_spare_fails_windows_without_losing_accounting() {
+        use crate::coordinator::reliability::ChipFault;
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xF50);
+        let mut rng = Rng::new(0xF51);
+        let xs: Vec<Tensor4> = (0..4).map(|_| spec.random_input(&mut rng)).collect();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, spec.layers.len(), 1)]).expect("plan");
+        let mut engine = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec,
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: Some(8) },
+            FailoverConfig::default(),
+            vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 0 } }],
+        )
+        .expect("engine loads");
+        let trace: Vec<EngineRequest> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| req(i as u64, x.clone(), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report =
+            engine.run_trace(trace).expect("the trace completes even though every window fails");
+
+        assert_eq!(report.stats.served, 0);
+        assert_eq!(report.stats.failed, 4);
+        assert_eq!(
+            report.stats.served + report.stats.shed + report.stats.failed,
+            report.stats.admitted,
+            "conservation must hold under fail-stop"
+        );
+        assert_eq!(report.failed.len(), 4, "each admitted request fails exactly once");
+        let mut ids: Vec<u64> = report.failed.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(
+            report.failed.iter().all(|f| f.reason.contains("fail-stopped")),
+            "the notice must carry the terminal failover reason, got {:?}",
+            report.failed[0].reason
+        );
+        // a pre-flight fail-stop is refused before any compute and the
+        // default retry policy charges no backoff, so the virtual clock
+        // never advances — failing fast must not fabricate latency
+        assert_eq!(report.makespan_us, 0.0);
+    }
+
+    #[test]
+    fn fail_stop_with_a_spare_fails_over_replays_and_charges_the_reload() {
+        use crate::coordinator::reliability::ChipFault;
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(0xF60);
+        let mut rng = Rng::new(0xF61);
+        let xs: Vec<Tensor4> = (0..6).map(|_| spec.random_input(&mut rng)).collect();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 2)]).expect("plan");
+        let mut engine = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: Some(8) },
+            FailoverConfig { spares: 1, ..Default::default() },
+            vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 1 } }],
+        )
+        .expect("engine loads");
+        let trace: Vec<EngineRequest> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| req(i as u64, x.clone(), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report = engine.run_trace(trace).expect("trace serves through the failover");
+
+        assert_eq!(report.stats.served, 6);
+        assert_eq!(report.stats.failed, 0);
+        assert_eq!(report.stats.shed, 0);
+        assert_eq!(report.batch_log, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+
+        // outputs stay byte-identical to the solo oracle across the
+        // quarantine + re-plan
+        let mut oracle = ChipSession::new(cfg, spec).expect("oracle");
+        for r in &report.responses {
+            let w = oracle.infer(&xs[r.id as usize]).expect("oracle run");
+            assert_eq!(r.features.data, w.features.data, "failover broke features on {}", r.id);
+            assert_eq!(r.logits, w.logits, "failover broke logits on {}", r.id);
+        }
+
+        // the recovery is charged exactly once, on the window that hit
+        // the fail-stop (responses land in window order, 2 per window)
+        let by_window = |w: usize| &report.responses[2 * w].metrics;
+        assert_eq!(by_window(0).failovers, 0);
+        assert_eq!(by_window(0).reload_ns, 0.0);
+        assert_eq!(by_window(1).failovers, 1);
+        assert_eq!(by_window(1).retried_windows, 1);
+        assert!(by_window(1).reload_ns > 0.0, "re-resident weights must cost time");
+        assert!(by_window(1).weight_reg_writes > 0, "re-resident weights must cost writes");
+        assert!(by_window(1).weight_load_ns >= by_window(1).reload_ns);
+        assert_eq!(by_window(2).failovers, 0);
+        assert_eq!(by_window(2).reload_ns, 0.0);
+        assert_eq!(by_window(2).retried_windows, 0);
+
+        let tel = engine.failover_telemetry();
+        assert_eq!(tel.failovers, 1);
+        assert_eq!(tel.quarantined, 1);
+        assert!(tel.reload_ns > 0.0);
+    }
+
+    #[test]
+    fn transient_corruption_is_checksum_retried_to_clean_outputs() {
+        use crate::coordinator::reliability::ChipFault;
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xF70);
+        let mut rng = Rng::new(0xF71);
+        let xs: Vec<Tensor4> = (0..2).map(|_| spec.random_input(&mut rng)).collect();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, spec.layers.len(), 1)]).expect("plan");
+        let fault =
+            vec![ArmedFault { chip: 0, fault: ChipFault::Transient { ber: 0.25, window: 1 } }];
+        let trace = |xs: &[Tensor4]| -> Vec<EngineRequest> {
+            xs.iter()
+                .enumerate()
+                .map(|(i, x)| req(i as u64, x.clone(), SloClass::Batch, 0.0, FOREVER))
+                .collect()
+        };
+
+        // first, prove the corruption is real: a blind engine (no SDC
+        // check) diverges from the oracle on the corrupted window
+        let mut blind = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan.clone(),
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 1, queue_windows: 4, queue_depth: Some(4) },
+            FailoverConfig::default(),
+            fault.clone(),
+        )
+        .expect("engine loads");
+        let blind_report = blind.run_trace(trace(&xs)).expect("blind trace serves");
+        let mut oracle = ChipSession::new(cfg, spec.clone()).expect("oracle");
+        let clean: Vec<_> =
+            xs.iter().map(|x| oracle.infer(x).expect("oracle run")).collect();
+        assert_ne!(
+            blind_report.responses[0].logits, clean[0].logits,
+            "the armed transient must actually corrupt window 0"
+        );
+        assert_eq!(blind_report.responses[1].logits, clean[1].logits);
+
+        // the checksum catches the same deterministic corruption and
+        // re-executes to clean outputs, metering the retry
+        let mut checked = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec,
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 1, queue_windows: 4, queue_depth: Some(4) },
+            FailoverConfig { sdc_check: true, ..Default::default() },
+            fault,
+        )
+        .expect("engine loads");
+        let report = checked.run_trace(trace(&xs)).expect("checked trace serves");
+        assert_eq!(report.stats.served, 2);
+        assert_eq!(report.stats.failed, 0);
+        for (r, w) in report.responses.iter().zip(&clean) {
+            assert_eq!(r.features.data, w.features.data, "SDC retry must restore features");
+            assert_eq!(r.logits, w.logits, "SDC retry must restore logits");
+        }
+        assert_eq!(report.responses[0].metrics.retried_windows, 1, "the retry is metered");
+        assert_eq!(report.responses[1].metrics.retried_windows, 0);
+        assert_eq!(checked.failover_telemetry().retried_windows, 1);
+        assert_eq!(checked.failover_telemetry().failovers, 0, "no chip was quarantined");
+    }
+
+    #[test]
+    fn live_submit_taxonomy_close_and_dead_scheduler_collect() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xF80);
+        let mut rng = Rng::new(0xF81);
+        let x = spec.random_input(&mut rng);
+        let engine = ServingEngine::single_chip(
+            cfg,
+            spec,
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 1, queue_windows: 1, queue_depth: Some(1) },
+        )
+        .expect("engine loads");
+        let geometry = engine.input_geometry();
+        let server = engine.serve();
+
+        match server.submit(9, Tensor4::zeros(1, 1, 2, 2), SloClass::Batch, 1e9) {
+            Err(SubmitError::ShapeMismatch { id, got, want }) => {
+                assert_eq!(id, 9);
+                assert_eq!(got, (1, 1, 2, 2));
+                assert_eq!(want, geometry);
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        assert!(matches!(
+            server.submit(10, x.clone(), SloClass::Batch, 0.0),
+            Err(SubmitError::InvalidDeadline { .. })
+        ));
+        assert!(matches!(
+            server.submit(11, x.clone(), SloClass::Batch, f64::INFINITY),
+            Err(SubmitError::InvalidDeadline { .. })
+        ));
+
+        let mut accepted = 0usize;
+        let mut saturated = false;
+        for id in 0..10_000u64 {
+            match server.submit(id, x.clone(), SloClass::Batch, 1e12) {
+                Ok(()) => accepted += 1,
+                Err(SubmitError::QueueFull { depth }) => {
+                    assert_eq!(depth, 1);
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(saturated, "a depth-1 queue must refuse under a tight submit loop");
+        assert!(accepted >= 1);
+
+        // close() stops admission but still drains what was admitted
+        server.close();
+        assert!(matches!(
+            server.submit(99, x.clone(), SloClass::Batch, 1e12),
+            Err(SubmitError::Closed)
+        ));
+        let drained =
+            server.collect_timeout(accepted, Duration::from_secs(600)).expect("admitted drain");
+        assert_eq!(drained.len(), accepted);
+
+        // the scheduler has exited; collecting one more reply must fail
+        // promptly with the closed error instead of blocking to deadline
+        let t = Instant::now();
+        let err = server.collect_timeout(1, Duration::from_secs(600)).expect_err("no replies left");
+        assert!(
+            t.elapsed() < Duration::from_secs(60),
+            "a dead scheduler must not block collect_timeout to its deadline"
+        );
+        let msg = format!("{err}");
+        assert!(msg.contains("engine closed"), "got: {msg}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn live_engine_replies_failed_instead_of_hanging_under_fail_stop() {
+        use crate::coordinator::reliability::ChipFault;
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0xF90);
+        let mut rng = Rng::new(0xF91);
+        let xs: Vec<Tensor4> = (0..4).map(|_| spec.random_input(&mut rng)).collect();
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, spec.layers.len(), 1)]).expect("plan");
+        let engine = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec,
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: Some(8) },
+            FailoverConfig::default(),
+            vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 0 } }],
+        )
+        .expect("engine loads");
+        let server = engine.serve();
+        for (id, x) in xs.iter().enumerate() {
+            server.submit(id as u64, x.clone(), SloClass::Batch, 1e12).expect("deep queue admits");
+        }
+        let replies = server
+            .collect_timeout(4, Duration::from_secs(600))
+            .expect("every admitted request gets exactly one reply");
+        let mut ids: Vec<u64> = replies
+            .iter()
+            .map(|r| match r {
+                EngineReply::Failed { id, reason, .. } => {
+                    assert!(reason.contains("fail-stopped"), "got: {reason}");
+                    *id
+                }
+                other => panic!("expected Failed under a dead chip, got {other:?}"),
+            })
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "exactly one reply per admitted request");
+        let stats = server.stats();
+        assert_eq!(stats.admitted, 4);
+        assert_eq!(stats.failed, 4);
+        assert_eq!(stats.served, 0);
+        assert_eq!(
+            stats.served + stats.shed + stats.failed,
+            stats.admitted,
+            "conservation must hold on the live path too"
+        );
+        server.shutdown();
     }
 }

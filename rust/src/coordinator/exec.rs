@@ -34,6 +34,7 @@
 //! the serving test suites pin outputs *and* full [`ChipMetrics`] across
 //! the paths.
 
+use std::fmt;
 use std::sync::mpsc;
 
 use crate::coordinator::accelerator::{ChipConfig, SenseFault};
@@ -115,10 +116,57 @@ pub fn drain_batch<T>(rx: &mpsc::Receiver<T>, max_batch: usize) -> Option<Vec<T>
     Some(batch)
 }
 
+/// A typed, *recoverable* stage failure: the chip-level faults the
+/// failover layer ([`crate::coordinator::failover`]) quarantines and
+/// re-plans around, as opposed to a plain crate error (a caller bug the
+/// submit-time validation should have caught).  `stage` indexes the
+/// pipeline stage, `chip` the slice within it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageError {
+    /// A chip of the stage stopped responding — a fail-stop fault, or a
+    /// slice thread that panicked (the join mapping in [`run_tp_stage`]
+    /// surfaces the panic as an error instead of poisoning the fabric).
+    ChipFailed { stage: usize, chip: usize, reason: String },
+    /// The stage ran past its watchdog deadline (a hung chip): its
+    /// per-request latency, stall included, blew the budget derived
+    /// from the profiled plan ([`watchdog_budgets`]).
+    DeadlineExceeded { stage: usize, chip: usize, elapsed_ns: f64, budget_ns: f64 },
+}
+
+impl fmt::Display for StageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ChipFailed { stage, chip, reason } => {
+                write!(f, "stage {stage} chip {chip} failed: {reason}")
+            }
+            Self::DeadlineExceeded { stage, chip, elapsed_ns, budget_ns } => write!(
+                f,
+                "stage {stage} chip {chip} blew its watchdog deadline: \
+{elapsed_ns:.0} ns elapsed against a {budget_ns:.0} ns budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StageError {}
+
+/// Per-stage watchdog deadlines from a profiled plan: `factor` times the
+/// auto-planner's estimated per-request stage latency
+/// (`HybridStagePlan::est_ns`).  Manual plans carry `est_ns = 0`, which
+/// reads as "uncalibrated" — the failover layer then learns a budget
+/// from the first clean window instead of tripping on a guess.
+pub fn watchdog_budgets(plan: &HybridPlan, factor: f64) -> Vec<f64> {
+    plan.stages.iter().map(|s| s.est_ns * factor).collect()
+}
+
 /// One resident layer of a tensor-parallel group: `ways` single-layer
 /// slice sessions, chip `c` holding filters `slices[c]`.
 pub struct TpLayer {
     pub slices: Vec<ChipSession>,
+    /// Test/injection hook: the slice whose thread deliberately panics
+    /// on its next run, modeling a chip crashing mid-window.  `None`
+    /// (always, outside fault-tolerance tests) runs every slice.
+    pub poison_slice: Option<usize>,
 }
 
 /// Plan-side description of one pipeline stage, ready to load.
@@ -162,7 +210,7 @@ impl StagePlan {
                     for sub in row {
                         slices.push(ChipSession::new(stage_cfg, sub)?);
                     }
-                    layers.push(TpLayer { slices });
+                    layers.push(TpLayer { slices, poison_slice: None });
                 }
                 ensure!(!layers.is_empty(), "a TP group needs at least one layer");
                 Ok(StageRunner::Tp { layers })
@@ -295,6 +343,18 @@ impl StageRunner {
         }
     }
 
+    /// Arm (or clear) the deliberate-panic injection hook on one slice
+    /// of a TP stage ([`TpLayer::poison_slice`]): that slice's thread
+    /// panics on its next run, modeling a chip crash mid-window.  A
+    /// no-op on shard stages, whose single chip has no slice threads.
+    pub fn poison_tp_slice(&mut self, slice: Option<usize>) {
+        if let StageRunner::Tp { layers } = self {
+            for tl in layers {
+                tl.poison_slice = slice;
+            }
+        }
+    }
+
     /// (Re)arm or disarm sensing-fault injection on every chip of the
     /// stage without reloading any registers.
     pub fn set_fault(&mut self, fault: Option<SenseFault>) {
@@ -353,6 +413,18 @@ impl StageRunner {
     }
 }
 
+/// Best-effort text of a slice thread's panic payload (`panic!` with a
+/// literal or a formatted string covers every panic in this crate).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
 /// Advance a fused tensor through one tensor-parallel group: per layer,
 /// every slice chip computes its filters' partial feature map **on its
 /// own thread** (the chips are parallel hardware; joining in slice-index
@@ -372,6 +444,7 @@ pub fn run_tp_stage(
         // fan out / fan in: each slice session is owned by exactly one
         // thread, so its served counter (the fault-salt source) advances
         // exactly as on the inline path
+        let poison = tl.poison_slice;
         let results: Vec<Result<(Tensor4, ChipMetrics)>> = if ways == 1 {
             vec![tl.slices[0].run_layer_raw(0, &act)]
         } else {
@@ -380,11 +453,30 @@ pub fn run_tp_stage(
                 let handles: Vec<_> = tl
                     .slices
                     .iter_mut()
-                    .map(|s| scope.spawn(move || s.run_layer_raw(0, act)))
+                    .enumerate()
+                    .map(|(c, s)| {
+                        scope.spawn(move || {
+                            if poison == Some(c) {
+                                panic!("injected chip crash on slice {c}");
+                            }
+                            s.run_layer_raw(0, act)
+                        })
+                    })
                     .collect();
+                // a panicked slice thread is a crashed chip, not a caller
+                // bug: map the join error onto the stage's Result channel
+                // so the fabric (and the failover layer above it) stays
+                // alive instead of the panic cascading through the server
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("TP slice thread panicked"))
+                    .enumerate()
+                    .map(|(c, h)| match h.join() {
+                        Ok(r) => r,
+                        Err(payload) => Err(crate::anyhow!(
+                            "TP slice thread {c} panicked: {}",
+                            panic_message(&payload)
+                        )),
+                    })
                     .collect()
             })
         };
@@ -644,6 +736,85 @@ mod tests {
         };
         assert_eq!(g2.q.data, w2.q.data);
         assert_eq!(gm2, wm2);
+    }
+
+    #[test]
+    fn poisoned_slice_thread_surfaces_a_typed_error_not_a_panic() {
+        // ISSUE 9 satellite: a panicking TP slice thread used to
+        // `.expect()` in the join and take the whole server down.  The
+        // join mapping must surface it as an Err on the stage channel
+        // and leave the fabric reusable.
+        let cfg = ChipConfig::fat();
+        let hw = HwParams::default();
+        let spec = wide_kn(43);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 3)]).unwrap();
+        let build = || {
+            build_stages(cfg, hybrid_stage_plans(&spec, &plan, None).unwrap()).unwrap()
+        };
+        let mut stages = build();
+        let x = spec.random_input(&mut Rng::new(0xDE01));
+        let (act, entry) = stages[0].entry().quantize_entry(&[&x]).unwrap();
+
+        stages[0].poison_tp_slice(Some(1));
+        let err = match run_stages(&mut stages, act, entry, &hw, &mut []) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("a poisoned slice must fail the stage"),
+        };
+        assert!(err.contains("panicked"), "error must name the panic: {err}");
+        assert!(err.contains("slice thread 1"), "error must name the slice: {err}");
+        assert!(err.contains("injected chip crash"), "payload must ride along: {err}");
+
+        // the fabric is not poisoned: clear the hook and the surviving
+        // stages serve the next window byte-identically to a fresh build
+        stages[0].poison_tp_slice(None);
+        let x2 = spec.random_input(&mut Rng::new(0xDE02));
+        let (act2, entry2) = stages[0].entry().quantize_entry(&[&x2]).unwrap();
+        let got = run_stages(&mut stages, act2, entry2, &hw, &mut [])
+            .expect("cleared fabric serves again");
+        let mut fresh = build();
+        let (act3, entry3) = fresh[0].entry().quantize_entry(&[&x2]).unwrap();
+        let want = run_stages(&mut fresh, act3, entry3, &hw, &mut []).unwrap();
+        assert_eq!(got.act.q.data, want.act.q.data, "post-crash run must match a fresh build");
+        assert_eq!(got.act.scales, want.act.scales);
+        assert_eq!(got.metrics, want.metrics);
+    }
+
+    #[test]
+    fn stage_error_display_names_stage_chip_and_cause() {
+        let e = StageError::ChipFailed { stage: 2, chip: 1, reason: "thread panicked".into() };
+        let s = e.to_string();
+        assert!(s.contains("stage 2") && s.contains("chip 1") && s.contains("panicked"), "{s}");
+        let d = StageError::DeadlineExceeded {
+            stage: 0,
+            chip: 3,
+            elapsed_ns: 5000.0,
+            budget_ns: 1000.0,
+        };
+        let s = d.to_string();
+        assert!(s.contains("watchdog") && s.contains("5000") && s.contains("1000"), "{s}");
+    }
+
+    #[test]
+    fn watchdog_budgets_scale_the_profiled_stage_estimates() {
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(47);
+        // manual plans are unprofiled: every budget reads uncalibrated
+        let manual = HybridPlan::manual(&spec, &cfg, &[(0, 3, 2)]).unwrap();
+        assert_eq!(watchdog_budgets(&manual, 8.0), vec![0.0]);
+        // auto plans carry est_ns: budgets are factor x estimate, per stage
+        let auto = crate::coordinator::tensor_parallel::plan_auto(
+            &cfg,
+            &spec,
+            3,
+            &HwParams::default(),
+        )
+        .unwrap();
+        let budgets = watchdog_budgets(&auto, 8.0);
+        assert_eq!(budgets.len(), auto.stages.len());
+        for (b, st) in budgets.iter().zip(&auto.stages) {
+            assert!(st.est_ns > 0.0, "plan_auto must profile every stage");
+            assert_eq!(*b, st.est_ns * 8.0);
+        }
     }
 
     #[test]

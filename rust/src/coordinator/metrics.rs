@@ -43,6 +43,19 @@ pub struct ChipMetrics {
     /// all-gather.  A fused micro-batch pays its legs **once** per run,
     /// which is how batching amortizes hop latency over requests.
     pub xfer_legs: u64,
+    /// Chip quarantines + re-plans this run absorbed
+    /// ([`crate::coordinator::failover`]).  Zero on every fault-free
+    /// path — the fault-tolerance layer never perturbs clean metrics.
+    pub failovers: u64,
+    /// Windows re-executed after a stage failure or a failed ABFT
+    /// output checksum.  Zero on every fault-free path.
+    pub retried_windows: u64,
+    /// Weight-register reload latency charged by failover re-planning,
+    /// ns, already folded into `latency_ns` (and double-booked into
+    /// `weight_load_ns`, whose loading-vs-compute split it belongs to);
+    /// kept separate so the *recovery* cost is visible against the
+    /// one-time residency cost.  Zero on every fault-free path.
+    pub reload_ns: f64,
 }
 
 impl ChipMetrics {
@@ -80,6 +93,9 @@ impl ChipMetrics {
         self.xfer_bytes += other.xfer_bytes;
         self.xfer_ns += other.xfer_ns;
         self.xfer_legs += other.xfer_legs;
+        self.failovers += other.failovers;
+        self.retried_windows += other.retried_windows;
+        self.reload_ns += other.reload_ns;
     }
 
     /// Fold per-chip metrics of chips working in **parallel** on one layer
@@ -95,6 +111,9 @@ impl ChipMetrics {
         self.dpu_ns += max(|m| m.dpu_ns);
         self.weight_load_ns += max(|m| m.weight_load_ns);
         self.xfer_ns += max(|m| m.xfer_ns);
+        // reload latency rides the critical path like weight_load_ns;
+        // the recovery event counters sum like every other event count
+        self.reload_ns += max(|m| m.reload_ns);
         for m in chips {
             self.energy_pj += m.energy_pj;
             self.senses += m.senses;
@@ -104,6 +123,8 @@ impl ChipMetrics {
             self.weight_reg_writes += m.weight_reg_writes;
             self.xfer_bytes += m.xfer_bytes;
             self.xfer_legs += m.xfer_legs;
+            self.failovers += m.failovers;
+            self.retried_windows += m.retried_windows;
         }
     }
 
@@ -223,6 +244,39 @@ mod tests {
         let mut a = ChipMetrics { xfer_legs: 2, ..Default::default() };
         a.add(&ChipMetrics { xfer_legs: 3, ..Default::default() });
         assert_eq!(a.xfer_legs, 5);
+    }
+
+    #[test]
+    fn failover_counters_sum_in_add_and_fold_like_their_kind_in_parallel() {
+        // add(): everything sums, reload_ns included
+        let mut a = ChipMetrics {
+            failovers: 1,
+            retried_windows: 2,
+            reload_ns: 10.0,
+            ..Default::default()
+        };
+        a.add(&ChipMetrics {
+            failovers: 2,
+            retried_windows: 1,
+            reload_ns: 5.0,
+            ..Default::default()
+        });
+        assert_eq!(a.failovers, 3);
+        assert_eq!(a.retried_windows, 3);
+        assert_eq!(a.reload_ns, 15.0);
+        // parallel chips: reload latency follows the critical path (max,
+        // like weight_load_ns), the event counters sum across chips
+        let mut m = ChipMetrics::default();
+        let x = ChipMetrics { failovers: 1, reload_ns: 30.0, ..Default::default() };
+        let y = ChipMetrics { failovers: 1, retried_windows: 2, reload_ns: 10.0, ..Default::default() };
+        m.absorb_parallel_chips(&[x, y]);
+        assert_eq!(m.failovers, 2);
+        assert_eq!(m.retried_windows, 2);
+        assert_eq!(m.reload_ns, 30.0, "slowest reload bounds the group");
+        // and the defaults stay zero so fault-free metric equality
+        // assertions across the crate are untouched by the new fields
+        assert_eq!(ChipMetrics::default().failovers, 0);
+        assert_eq!(ChipMetrics::default().reload_ns, 0.0);
     }
 
     #[test]

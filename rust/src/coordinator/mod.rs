@@ -43,12 +43,23 @@
 //! - [`reliability`] — the §IV-A3 sensing-reliability analysis at model
 //!   scale: [`reliability::sweep_model`] drives a resident model through
 //!   either serving topology at swept sense/link bit-error rates and
-//!   reports accuracy vs the fault-free oracle.
+//!   reports accuracy vs the fault-free oracle; plus the chip-level
+//!   fault model ([`reliability::ChipFault`]: fail-stop / hang /
+//!   transient corruption, deterministic per-window schedules via
+//!   [`reliability::poisson_chip_failures`]);
+//! - [`failover`] — fault *tolerance* on top of the fault model:
+//!   [`failover::TolerantFabric`] wraps the engine's stage fabric with
+//!   pre-flight fail-stop detection, per-stage watchdogs, chip
+//!   quarantine + [`tensor_parallel::plan_auto`] re-planning (charging
+//!   the real weight-reload cost), bounded retries, and an optional
+//!   ABFT output checksum against a Ledger shadow for silent-corruption
+//!   detection.
 
 pub mod accelerator;
 pub mod dpu;
 pub mod engine;
 pub mod exec;
+pub mod failover;
 pub mod metrics;
 pub mod model;
 pub mod reliability;
@@ -61,13 +72,18 @@ pub mod tensor_parallel;
 pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
 pub use dpu::Dpu;
 pub use engine::{
-    poisson_trace, EngineConfig, EngineRequest, EngineResponse, EngineServer, EngineStats,
-    SchedPolicy, ServingEngine, SloClass, TraceConfig, TraceReport,
+    poisson_trace, EngineConfig, EngineReply, EngineRequest, EngineResponse, EngineServer,
+    EngineStats, FailNotice, SchedPolicy, ServingEngine, SloClass, TraceConfig, TraceReport,
 };
-pub use exec::{StagePlan, StageRunner};
+pub use exec::{StageError, StagePlan, StageRunner};
+pub use failover::{
+    ArmedFault, FailoverConfig, FailoverTelemetry, RetryPolicy, TolerantFabric, WindowFailure,
+};
 pub use metrics::ChipMetrics;
 pub use model::{AttnSpec, HeadSpec, LayerSpec, ModelSpec};
-pub use reliability::{default_ber_grid, sweep_model, SweepConfig, SweepReport};
+pub use reliability::{
+    default_ber_grid, poisson_chip_failures, sweep_model, ChipFault, SweepConfig, SweepReport,
+};
 pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response, ServingMode, SubmitError};
 pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};

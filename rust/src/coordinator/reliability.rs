@@ -39,7 +39,7 @@ use crate::coordinator::accelerator::{ChipConfig, SenseFault};
 use crate::coordinator::model::ModelSpec;
 use crate::coordinator::session::{ChipSession, ModelOutput};
 use crate::coordinator::sharding::PipelineSession;
-use crate::error::{ensure, Result};
+use crate::error::{bail, ensure, Result};
 use crate::mapping::schemes::HwParams;
 use crate::nn::tensor::Tensor4;
 use crate::report::Table;
@@ -481,6 +481,99 @@ impl SweepReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// Chip-level fault model — the *tolerance* counterpart of the accuracy
+// sweep above.  The sweep asks "what does a given BER cost in accuracy";
+// these faults ask "what does a failing chip cost in availability" and
+// are consumed by [`crate::coordinator::failover`], which quarantines
+// the chip, re-plans over the survivors, and replays the window.
+// ---------------------------------------------------------------------
+
+/// A fault armed against one chip of a serving fleet.  All variants are
+/// deterministic: the same armed set against the same request trace
+/// produces the same failure schedule regardless of thread timing,
+/// because faults trigger on the fabric's *window counter*, not on wall
+/// clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChipFault {
+    /// The chip dies permanently once the fabric has started
+    /// `at_request` windows: every later window it participates in
+    /// fails until failover quarantines it.
+    FailStop {
+        /// Window ordinal (0-based) at which the chip stops responding.
+        at_request: u64,
+    },
+    /// The chip stalls for `stall_ns` on every window from `at_request`
+    /// on — a sick-but-alive chip.  A stall within the stage's watchdog
+    /// budget is absorbed as latency; past the budget it trips the
+    /// watchdog and is handled exactly like a fail-stop.
+    Hang {
+        /// Window ordinal (0-based) at which the stall begins.
+        at_request: u64,
+        /// Extra latency the chip adds to every affected window, ns.
+        stall_ns: f64,
+    },
+    /// The chip computes with corrupted senses (BER `ber` per column
+    /// sense, the [`SenseFault`] model) for the first `window` windows,
+    /// then recovers — a transient margin excursion.  Undetectable
+    /// without the ABFT output checksum
+    /// ([`crate::coordinator::failover::FailoverConfig::sdc_check`]):
+    /// the chip still answers on time, just wrongly.
+    Transient {
+        /// Per-column-sense bit-flip probability while the fault lasts.
+        ber: f64,
+        /// Number of leading windows the corruption persists for.
+        window: u64,
+    },
+}
+
+impl ChipFault {
+    /// Parse the CLI's `--inject-fail-stop chip:req` argument.
+    pub fn parse_fail_stop(s: &str) -> Result<(usize, ChipFault)> {
+        let Some((chip, req)) = s.split_once(':') else {
+            bail!("--inject-fail-stop wants chip:req (e.g. 0:2), got {s:?}");
+        };
+        let chip: usize = chip
+            .trim()
+            .parse()
+            .map_err(|_| crate::anyhow!("bad chip ordinal in --inject-fail-stop {s:?}"))?;
+        let req: u64 = req
+            .trim()
+            .parse()
+            .map_err(|_| crate::anyhow!("bad request ordinal in --inject-fail-stop {s:?}"))?;
+        Ok((chip, ChipFault::FailStop { at_request: req }))
+    }
+}
+
+/// Draw a deterministic Poisson fail-stop schedule for a fleet: each
+/// chip's time-to-failure is exponential with mean `mtbf_windows`
+/// (memoryless, the standard fleet-reliability model), measured in
+/// serving windows; chips whose draw lands past `horizon_windows` never
+/// fail.  Per-chip streams are decorrelated via [`seed_mix`] so the
+/// schedule replays identically regardless of fleet size changes
+/// elsewhere in the run.
+pub fn poisson_chip_failures(
+    chips: usize,
+    mtbf_windows: f64,
+    horizon_windows: u64,
+    seed: u64,
+) -> Vec<(usize, ChipFault)> {
+    let mut armed = Vec::new();
+    if mtbf_windows <= 0.0 {
+        return armed;
+    }
+    for c in 0..chips {
+        let mut rng = Rng::new(seed_mix(seed, c as u64));
+        // inverse-CDF exponential draw; 1 - u keeps ln() off exact zero
+        let u = rng.f64();
+        let ttf = -(1.0 - u).ln() * mtbf_windows;
+        if ttf <= horizon_windows as f64 {
+            armed.push((c, ChipFault::FailStop { at_request: ttf as u64 }));
+        }
+    }
+    armed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -718,5 +811,51 @@ mod tests {
         let lo = anchors.last().unwrap().1; // FAT
         let hi = anchors[0].1; // three-operand designs
         assert!(g.contains(&lo) && g.contains(&hi), "{g:?} must contain {lo} and {hi}");
+    }
+
+    #[test]
+    fn fail_stop_parses_chip_and_request_ordinals() {
+        assert_eq!(
+            ChipFault::parse_fail_stop("2:7").unwrap(),
+            (2, ChipFault::FailStop { at_request: 7 })
+        );
+        assert_eq!(
+            ChipFault::parse_fail_stop(" 0 : 0 ").unwrap(),
+            (0, ChipFault::FailStop { at_request: 0 })
+        );
+        for bad in ["", "3", "x:1", "1:y", ":", "1:"] {
+            assert!(ChipFault::parse_fail_stop(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_mtbf_shaped() {
+        // same seed -> same schedule, bit for bit
+        let a = poisson_chip_failures(8, 5.0, 100, 0xFA17);
+        let b = poisson_chip_failures(8, 5.0, 100, 0xFA17);
+        assert_eq!(a, b);
+        // per-chip streams are decorrelated: a different seed moves draws
+        let c = poisson_chip_failures(8, 5.0, 100, 0xFA18);
+        assert_ne!(a, c, "different seeds must not replay the same schedule");
+        // a tiny MTBF against a long horizon kills (essentially) the
+        // whole fleet; P(survive) = exp(-100/0.5) per chip
+        let doomed = poisson_chip_failures(8, 0.5, 100, 0xFA17);
+        assert_eq!(doomed.len(), 8, "mtbf << horizon must fail every chip");
+        for (c, f) in &doomed {
+            assert!(*c < 8);
+            match f {
+                ChipFault::FailStop { at_request } => {
+                    assert!(*at_request <= 100, "failure inside the horizon")
+                }
+                other => panic!("poisson schedule arms fail-stops only, got {other:?}"),
+            }
+        }
+        // an enormous MTBF (or a disabled one) arms nothing
+        assert!(poisson_chip_failures(8, 1e12, 100, 0xFA17).is_empty());
+        assert!(poisson_chip_failures(8, 0.0, 100, 0xFA17).is_empty());
+        // growing the fleet keeps the existing chips' draws (seed_mix per
+        // chip ordinal, not a shared stream)
+        let wide = poisson_chip_failures(16, 5.0, 100, 0xFA17);
+        assert_eq!(&wide[..a.len()], &a[..], "chip draws are position-stable");
     }
 }

@@ -368,13 +368,15 @@ worker slice holds {}; use fewer workers or ServingMode::Pipelined",
                             }
                         };
                         let t0 = Instant::now();
-                        // shapes were validated at submit, so infer cannot
-                        // fail; a panic here is loud, a dropped response
-                        // would deadlock the caller's collect()
+                        // shapes were validated at submit, so infer should
+                        // not fail; if a chip dies anyway (e.g. a poisoned
+                        // slice thread), exit the worker loop instead of
+                        // panicking — dropping the channels flips callers
+                        // to SubmitError::Closed rather than poisoning the
+                        // shared queue lock under every other worker
                         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
                         let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
-                        let outs =
-                            session.infer_many(&xs).expect("requests validated at submit");
+                        let Ok(outs) = session.infer_many(&xs) else { break };
                         fan_out(&tx_out, ids, outs, t0.elapsed().as_secs_f64() * 1e6);
                     }
                 })
@@ -504,10 +506,10 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
                         let Some(batch) = exec::drain_batch(rx, max_batch) else { break };
                         let t0 = Instant::now();
                         let xs: Vec<&Tensor4> = batch.iter().map(|r| &r.x).collect();
-                        let (act, m) = runner
-                            .entry()
-                            .quantize_entry(&xs)
-                            .expect("requests validated at submit");
+                        // shapes were validated at submit; a failure here
+                        // is a dying chip — exit the stage loop so the
+                        // channel cascade shuts the fabric down cleanly
+                        let Ok((act, m)) = runner.entry().quantize_entry(&xs) else { break };
                         (batch.iter().map(|r| r.id).collect::<Vec<u64>>(), act, m, t0)
                     } else {
                         let rx = in_msg.as_ref().expect("inner stage has a stage channel");
@@ -523,8 +525,11 @@ the layer-pipeline path (ServingMode::Pipelined / PipelineSession)"
                         }
                         (msg.ids, msg.act, m, msg.t0)
                     };
-                    let (act, m) =
-                        runner.run(act, &hw).expect("stage geometry chained by the plan");
+                    // stage geometry is chained by the plan, so run should
+                    // not fail; a typed stage error (a panicked TP slice
+                    // thread included) breaks the loop — the dropped
+                    // channels cascade shutdown instead of a worker panic
+                    let Ok((act, m)) = runner.run(act, &hw) else { break };
                     let mut metrics = metrics;
                     metrics.add(&m);
                     if let Some(tx) = &out_msg {
@@ -1517,5 +1522,59 @@ exactly like the plain pipeline's", r.id);
         server.submit(Request { id: 0, x: spec2.random_input(&mut rng) }).unwrap();
         let _ = server.collect(1);
         drop(server); // pipelined teardown must cascade, not hang
+    }
+
+    #[test]
+    fn submit_error_taxonomy_is_complete_and_typed() {
+        let spec = small_spec(0xA0);
+        let mut rng = Rng::new(0xA1);
+        let mut server = InferenceServer::start_bounded(
+            ChipConfig::fat(),
+            ServingMode::Replicated { workers: 1, max_batch: 1 },
+            spec.clone(),
+            HwParams::default(),
+            1,
+        )
+        .unwrap();
+
+        // ShapeMismatch: rejected up front, with both geometries named
+        match server.try_submit(Request { id: 7, x: Tensor4::zeros(1, 1, 2, 2) }) {
+            Err(SubmitError::ShapeMismatch { id, got, want }) => {
+                assert_eq!(id, 7);
+                assert_eq!(got, (1, 1, 2, 2));
+                assert_eq!(want, spec.input_geometry());
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+
+        // QueueFull: a depth-1 queue under a tight submit loop must push
+        // back (submission is microseconds, a window is milliseconds)
+        let mut accepted = 0usize;
+        let mut saturated = false;
+        for id in 0..10_000u64 {
+            match server.try_submit(request(id, &spec, &mut rng)) {
+                Ok(()) => accepted += 1,
+                Err(SubmitError::QueueFull { depth }) => {
+                    assert_eq!(depth, 1);
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(saturated, "a depth-1 queue must refuse under a tight submit loop");
+        let drained =
+            server.collect_timeout(accepted, Duration::from_secs(600)).expect("admitted drain");
+        assert_eq!(drained.len(), accepted);
+
+        // Closed: once the request channel is gone (shutdown path), both
+        // submit forms refuse instead of queueing into a void
+        drop(server.tx.take());
+        assert!(matches!(
+            server.try_submit(request(9_999, &spec, &mut rng)),
+            Err(SubmitError::Closed)
+        ));
+        let err = server.submit(request(9_998, &spec, &mut rng)).expect_err("closed");
+        assert!(format!("{err}").contains("closed"), "got: {err}");
     }
 }

@@ -314,6 +314,23 @@ weight-register entries but holds {capacity}; use more chips or shorter stages"
     pub fn est_interval_ns(&self) -> f64 {
         self.stages.iter().map(|s| s.est_ns).fold(0.0, f64::max)
     }
+
+    /// The canonical chip numbering of the plan: stage `si` occupies
+    /// `ways` consecutive fleet ordinals, in stage order — row `si` lists
+    /// them, `assignment[si][c]` being the fleet chip that holds slice
+    /// `c`.  This is the identity the failover layer
+    /// ([`crate::coordinator::failover`]) quarantines and re-plans by.
+    pub fn chip_assignment(&self) -> Vec<Vec<usize>> {
+        let mut next = 0usize;
+        self.stages
+            .iter()
+            .map(|s| {
+                let row: Vec<usize> = (next..next + s.ways).collect();
+                next += s.ways;
+                row
+            })
+            .collect()
+    }
 }
 
 /// Memoizing per-(layer, ways) cost probe for the auto-planner: builds a
@@ -718,6 +735,20 @@ mod tests {
         cfg.cmas = 3;
         cfg.wreg_entries_per_cma = 100;
         cfg
+    }
+
+    #[test]
+    fn chip_assignment_numbers_stage_chips_consecutively() {
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(0xA551);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 1, 1), (1, 2, 2), (2, 3, 1)])
+            .expect("mixed plan");
+        assert_eq!(plan.chip_assignment(), vec![vec![0], vec![1, 2], vec![3]]);
+        assert_eq!(
+            plan.chip_assignment().iter().map(Vec::len).sum::<usize>(),
+            plan.chips(),
+            "every chip of the plan appears exactly once"
+        );
     }
 
     #[test]

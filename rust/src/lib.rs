@@ -282,6 +282,32 @@
 //!   --bers 0,1e-6,1e-3,2.6e-2 [--workers 2 | --shards 2
 //!   --link-bers 0,1e-6,1e-4,1e-3]`; see `examples/reliability.rs` and
 //!   `benches/reliability_sweep.rs`.
+//!
+//! ## Fault tolerance
+//!
+//! Reliability answers "how wrong do outputs get"; fault *tolerance*
+//! answers "does serving survive".  The chip fault model
+//! ([`coordinator::reliability::ChipFault`]: fail-stop, hang, transient
+//! corruption — armed per fleet chip, or drawn as a seeded Poisson
+//! schedule by [`coordinator::reliability::poisson_chip_failures`])
+//! drives [`coordinator::failover::TolerantFabric`], the recovery layer
+//! under the serving engine: pre-flight fail-stop detection, per-stage
+//! watchdog deadlines profiled from the plan, panic containment for TP
+//! slice threads (a typed [`coordinator::exec::StageError`], never a
+//! poisoned fabric), chip quarantine + re-planning over the survivors
+//! (+ idle spares) with the *real* weight-reload cost charged to the
+//! recovering window ([`coordinator::metrics::ChipMetrics::reload_ns`]),
+//! bounded retries that shed exhausted windows as typed failures
+//! (`EngineReply::Failed` / `TraceReport::failed`) instead of hanging
+//! collectors, and an optional ABFT output checksum against a
+//! Ledger-fidelity shadow for silent-corruption detection.  Contracts:
+//! conservation is exact (`served + shed + failed == admitted`, one
+//! reply per request), surviving outputs stay byte-identical to the
+//! solo oracle across a re-plan, and the fault-free path is
+//! bit-identical — outputs AND metrics — to the plain engine with every
+//! recovery counter at zero.  CLI: `fat serve --mode hybrid
+//! --inject-fail-stop chip:req --spares n` and `fat loadgen --chip-mtbf
+//! windows --spares n`; see `benches/fault_tolerance.rs`.
 
 pub mod addition;
 pub mod array;

@@ -4,9 +4,11 @@ use fat_imc::cli::{Args, HELP};
 use fat_imc::config::FatConfig;
 use fat_imc::coordinator::accelerator::{ChipConfig, FatChip};
 use fat_imc::coordinator::engine::{
-    poisson_trace, EngineConfig, SchedPolicy, ServingEngine, TraceConfig,
+    poisson_trace, EngineConfig, EngineReply, SchedPolicy, ServingEngine, SloClass, TraceConfig,
 };
+use fat_imc::coordinator::failover::{ArmedFault, FailoverConfig};
 use fat_imc::coordinator::model::ModelSpec;
+use fat_imc::coordinator::reliability::{poisson_chip_failures, ChipFault};
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
 use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession};
 use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
@@ -353,7 +355,7 @@ perturbing the hot path"
 fn cmd_serve(args: &Args) -> Result<()> {
     args.allow(&[
         "requests", "workers", "batch", "input", "scale", "sparsity", "classes", "mode",
-        "shards", "chips", "max-batch", "fidelity",
+        "shards", "chips", "max-batch", "fidelity", "inject-fail-stop", "spares",
     ])?;
     let n_req = args.get_usize("requests", 16)?.max(1);
     let workers = args.get_usize("workers", 4)?;
@@ -369,6 +371,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut chip_cfg = ChipConfig::fat();
     if let Some(f) = fidelity_flag(args)? {
         chip_cfg.fidelity = f;
+    }
+    // fault injection rides the fault-tolerant engine path, which only
+    // exists for hybrid plans (failover re-plans over the fleet)
+    if let Some(s) = args.get("inject-fail-stop") {
+        if args.get_or("mode", "replicated") != "hybrid" {
+            fat_imc::bail!("--inject-fail-stop needs --mode hybrid (failover re-plans the fleet)");
+        }
+        let (chip, fault) = ChipFault::parse_fail_stop(s)?;
+        let spares = args.get_usize("spares", 0)?;
+        return serve_fault_tolerant(chip_cfg, spec, chips, max_batch, n_req, spares, chip, fault);
+    }
+    if args.get("spares").is_some() {
+        fat_imc::bail!("--spares only matters with --inject-fail-stop (idle spares for failover)");
     }
     // mode-mismatched flags are an error, not silently dropped: a user who
     // asks for --shards must not end up benchmarking an unsharded pool
@@ -487,6 +502,104 @@ naive path would have paid the {:.1} us load {n_req} more times",
     Ok(())
 }
 
+/// `fat serve --mode hybrid --inject-fail-stop chip:req [--spares n]`:
+/// mount the fault-tolerant engine live, kill the named fleet chip at the
+/// named window, and prove the serving contract under failure — every
+/// submitted request gets exactly one reply (served / shed / failed),
+/// served outputs stay byte-identical to a solo oracle, and the recovery
+/// pays the real weight-reload cost.
+#[allow(clippy::too_many_arguments)]
+fn serve_fault_tolerant(
+    cfg: ChipConfig,
+    spec: ModelSpec,
+    chips: usize,
+    max_batch: usize,
+    n_req: usize,
+    spares: usize,
+    chip: usize,
+    fault: ChipFault,
+) -> Result<()> {
+    let hw = HwParams::default();
+    let plan = plan_auto(&cfg, &spec, chips, &hw)?;
+    print_hybrid_plan(&spec, &plan, chips);
+    println!(
+        "arming {fault:?} on fleet chip {chip} ({} plan chips + {spares} spares)",
+        plan.chips()
+    );
+    let engine = ServingEngine::with_fault_tolerance(
+        cfg,
+        spec.clone(),
+        plan,
+        hw,
+        SchedPolicy::SloEdf,
+        EngineConfig { max_batch, queue_windows: 4, queue_depth: Some(n_req.max(1)) },
+        FailoverConfig { spares, ..Default::default() },
+        vec![ArmedFault { chip, fault }],
+    )?;
+    let server = engine.serve();
+
+    let mut rng = Rng::new(7);
+    let xs: Vec<Tensor4> = (0..n_req).map(|_| spec.random_input(&mut rng)).collect();
+    println!("pushing {n_req} requests through the live fault-tolerant engine...");
+    for (id, x) in xs.iter().enumerate() {
+        server
+            .submit(id as u64, x.clone(), SloClass::Batch, 1e12)
+            .map_err(|e| fat_imc::anyhow!("submit {id}: {e}"))?;
+    }
+    let replies = server.collect_timeout(n_req, std::time::Duration::from_secs(600))?;
+    let stats = server.stats();
+    server.shutdown();
+
+    let mut served = Vec::new();
+    let mut shed = 0usize;
+    let mut failed = Vec::new();
+    for r in replies {
+        match r {
+            EngineReply::Served(resp) => served.push(resp),
+            EngineReply::Shed { .. } => shed += 1,
+            EngineReply::Failed { id, reason, .. } => failed.push((id, reason)),
+        }
+    }
+    // each recovering window carries the failover charge once, shared by
+    // its fused requests
+    let reload_ns: f64 =
+        served.iter().map(|r| r.metrics.reload_ns / r.batched as f64).sum();
+    let failovers: f64 =
+        served.iter().map(|r| r.metrics.failovers as f64 / r.batched as f64).sum();
+    println!(
+        "  replies: {} served, {shed} shed, {} failed (exactly one per request)",
+        served.len(),
+        failed.len()
+    );
+    if let Some((id, reason)) = failed.first() {
+        println!("  first failure (request {id}): {reason}");
+    }
+    println!(
+        "  failovers absorbed: {failovers:.0}, weight-reload paid: {:.1} us",
+        reload_ns / 1e3
+    );
+    fat_imc::ensure!(
+        stats.served + stats.shed + stats.failed == stats.admitted
+            && stats.admitted == n_req as u64,
+        "accounting must conserve requests under fail-stop, got {stats:?}"
+    );
+
+    // served outputs must be byte-identical to the solo oracle even when
+    // their window was replayed across a failover re-plan
+    let mut oracle = ChipSession::new(cfg, spec)?;
+    for r in &served {
+        let want = oracle.infer(&xs[r.id as usize])?;
+        fat_imc::ensure!(
+            r.features.data == want.features.data && r.logits == want.logits,
+            "request {} diverged from the solo oracle after failover",
+            r.id
+        );
+    }
+    println!("  served outputs byte-identical to the solo oracle");
+    println!("serve OK (fault-tolerant)");
+    Ok(())
+}
+
 /// Open-loop Poisson load vs the continuous-batching engine: replay one
 /// deterministic arrival trace through the SLO-aware engine AND the
 /// dequeue-fusion baseline scheduler on a virtual clock, print both
@@ -496,6 +609,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     args.allow(&[
         "rate", "load", "duration", "seed", "window", "queue-windows", "deadline-us",
         "interactive", "chips", "fidelity", "batch", "input", "scale", "sparsity", "classes",
+        "chip-mtbf", "spares",
     ])?;
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
@@ -537,6 +651,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         interactive_deadline_us: 0.5 * deadline_us,
     };
     let trace = poisson_trace(&spec, &tc)?;
+
+    // optional chip-failure process: a seeded Poisson fail-stop schedule
+    // over the fleet (plan chips + spares), replayed identically through
+    // both schedulers so the comparison stays apples-to-apples
+    let mtbf = args.get("chip-mtbf").map(|_| args.get_f64("chip-mtbf", 0.0)).transpose()?;
+    let spares = args.get_usize("spares", 0)?;
+    if mtbf.is_none() && args.get("spares").is_some() {
+        fat_imc::bail!("--spares only matters with --chip-mtbf (idle spares for failover)");
+    }
+    if let Some(m) = mtbf {
+        fat_imc::ensure!(m > 0.0, "--chip-mtbf must be a positive window count, got {m}");
+    }
     println!(
         "model {}: solo simulated latency {:.1} us ({:.0} req/s solo service rate)",
         spec.name, solo_us, service_rate
@@ -558,11 +684,40 @@ seed {seed:#x}",
 
     let build = |policy: SchedPolicy| -> Result<ServingEngine> {
         let config = EngineConfig { max_batch: window, queue_windows, queue_depth: None };
-        if chips > 1 {
-            let plan = plan_auto(&cfg, &spec, chips, &hw)?;
-            ServingEngine::new(cfg, spec.clone(), plan, hw, policy, config)
+        let plan = if chips > 1 {
+            plan_auto(&cfg, &spec, chips, &hw)?
         } else {
-            ServingEngine::single_chip(cfg, spec.clone(), policy, config)
+            HybridPlan::manual(&spec, &cfg, &[(0, spec.layers.len(), 1)])?
+        };
+        match mtbf {
+            Some(m) => {
+                let fleet = chips.max(1) + spares;
+                let horizon = trace.len() as u64;
+                let schedule = poisson_chip_failures(
+                    fleet,
+                    m,
+                    horizon,
+                    fat_imc::testutil::seed_mix(seed, 0xFA17),
+                );
+                let faults: Vec<ArmedFault> =
+                    schedule.iter().map(|&(chip, fault)| ArmedFault { chip, fault }).collect();
+                println!(
+                    "  chip-failure process: mtbf {m} windows over a {fleet}-chip fleet \
+({} failures drawn for a {horizon}-window horizon)",
+                    faults.len()
+                );
+                ServingEngine::with_fault_tolerance(
+                    cfg,
+                    spec.clone(),
+                    plan,
+                    hw,
+                    policy,
+                    config,
+                    FailoverConfig { spares, ..Default::default() },
+                    faults,
+                )
+            }
+            None => ServingEngine::new(cfg, spec.clone(), plan, hw, policy, config),
         }
     };
     let mut engine = build(SchedPolicy::SloEdf)?;
@@ -606,23 +761,41 @@ seed {seed:#x}",
     }
 
     // sanity gates (the CI smoke runs this command in overload and relies
-    // on a non-zero exit when they fail)
+    // on a non-zero exit when they fail); under a chip-failure process
+    // conservation widens to include windows lost to exhausted failover
     for (name, rep) in [("slo-edf", &engine_report), ("fifo-dequeue", &fifo_report)] {
         fat_imc::ensure!(
             rep.stats.admitted + rep.stats.rejected == rep.stats.offered
-                && rep.stats.served + rep.stats.shed == rep.stats.admitted,
+                && rep.stats.served + rep.stats.shed + rep.stats.failed == rep.stats.admitted,
             "{name}: accounting must conserve requests, got {:?}",
             rep.stats
         );
+        if mtbf.is_none() {
+            fat_imc::ensure!(
+                rep.stats.failed == 0 && rep.failed.is_empty(),
+                "{name}: no request may fail without a chip-failure process, got {:?}",
+                rep.stats
+            );
+        }
     }
-    // 2% tie tolerance: at underload the two schedulers serve the same
-    // requests and differ only in data-dependent fused-window latencies
-    fat_imc::ensure!(
-        engine_report.goodput_rps() >= 0.98 * fifo_report.goodput_rps(),
-        "the SLO engine must not lose goodput to the dequeue-fusion baseline: {:.1} vs {:.1} r/s",
-        engine_report.goodput_rps(),
-        fifo_report.goodput_rps()
-    );
+    if mtbf.is_some() {
+        println!(
+            "\nchip failures: slo-edf lost {} requests to exhausted failover, \
+fifo-dequeue {} (all accounted, none hung)",
+            engine_report.stats.failed, fifo_report.stats.failed
+        );
+    } else {
+        // 2% tie tolerance: at underload the two schedulers serve the same
+        // requests and differ only in data-dependent fused-window latencies
+        // (with chip failures armed the goodput comparison is skipped: a
+        // failure landing mid-window penalizes the schedulers unevenly)
+        fat_imc::ensure!(
+            engine_report.goodput_rps() >= 0.98 * fifo_report.goodput_rps(),
+            "the SLO engine must not lose goodput to the dequeue-fusion baseline: {:.1} vs {:.1} r/s",
+            engine_report.goodput_rps(),
+            fifo_report.goodput_rps()
+        );
+    }
     println!(
         "\ngoodput: slo-edf {:.1} r/s vs fifo-dequeue {:.1} r/s ({:.2}x)",
         engine_report.goodput_rps(),
