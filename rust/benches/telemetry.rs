@@ -1,0 +1,146 @@
+//! Telemetry bench: the observability layer must be free when disabled
+//! and honest when armed.
+//!
+//! Claims gated (all on the engine's virtual clock, so bit-reproducible
+//! per seed):
+//! (1) spans are a read-only derivation of the charged metrics — a run
+//! with a `TraceBuffer` + `MetricsRegistry` armed returns a `TraceReport`
+//! byte-identical to the default `NullSink` run;
+//! (2) the exported Chrome trace JSON and Prometheus exposition are
+//! byte-identical across two identical traced runs;
+//! (3) the exported trace passes `validate_chrome_trace` (per-track
+//! monotone timestamps, non-negative durations, proper span nesting) and
+//! covers the request lifecycle (admit -> queue -> serve -> reply) plus
+//! the per-stage compute/reduce/dpu legs;
+//! (4) host-time overhead of the armed sink is recorded (the NullSink
+//! hotpath cost is gated by `BENCH_hotpath.baseline.json`, which this
+//! PR's instrumentation must not move).
+//! `finish()` writes `BENCH_telemetry.json` (uploaded by CI).
+
+use std::sync::Arc;
+
+use fat_imc::bench_harness::BenchRun;
+use fat_imc::coordinator::accelerator::ChipConfig;
+use fat_imc::coordinator::engine::{
+    poisson_trace, EngineConfig, SchedPolicy, ServingEngine, TraceConfig, TraceReport,
+};
+use fat_imc::coordinator::session::{ChipSession, ModelSpec};
+use fat_imc::coordinator::telemetry::{
+    chrome_trace_json, validate_chrome_trace, MetricsRegistry, TraceBuffer,
+};
+use fat_imc::nn::resnet::ConvLayer;
+use fat_imc::testutil::Rng;
+
+const WINDOW: usize = 2;
+const REQUESTS: f64 = 80.0;
+
+fn small_spec(seed: u64) -> ModelSpec {
+    let geo = vec![
+        ConvLayer { name: "t1", n: 1, c: 2, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "t2", n: 1, c: 4, h: 8, w: 8, kn: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+    ];
+    ModelSpec::synthetic("telem", &geo, false, 0.5, seed, Some(3))
+}
+
+fn engine(cfg: ChipConfig, spec: &ModelSpec) -> ServingEngine {
+    ServingEngine::single_chip(
+        cfg,
+        spec.clone(),
+        SchedPolicy::SloEdf,
+        EngineConfig { max_batch: WINDOW, queue_windows: 8, queue_depth: None },
+    )
+    .expect("engine builds")
+}
+
+fn main() {
+    let mut run = BenchRun::new("telemetry");
+    let cfg = ChipConfig::fat();
+    let spec = small_spec(0x7E00);
+
+    // anchor the offered rate to the solo simulated latency so the replay
+    // is moderately loaded (some queueing, no pathological shed) at any
+    // model scale
+    let mut oracle = ChipSession::new(cfg, spec.clone()).expect("oracle session");
+    let solo_us = oracle
+        .infer(&spec.random_input(&mut Rng::new(0x7E01)))
+        .expect("solo infer")
+        .metrics
+        .latency_ns
+        / 1e3;
+    drop(oracle);
+    let rate = 2.0 * 1e6 / solo_us;
+    let tc = TraceConfig {
+        rate_rps: rate,
+        duration_s: REQUESTS / rate,
+        seed: 0x7E10,
+        deadline_us: 8.0 * solo_us,
+        interactive_share: 0.25,
+        interactive_deadline_us: 4.0 * solo_us,
+    };
+    let trace = poisson_trace(&spec, &tc).expect("trace draws");
+
+    // ---- host-time overhead: disabled sink vs armed buffer --------------
+    run.time("run_trace, NullSink (default)", || {
+        engine(cfg, &spec).run_trace(trace.clone()).expect("replay")
+    });
+    run.time("run_trace, TraceBuffer + registry armed", || {
+        let mut e = engine(cfg, &spec);
+        e.set_trace_sink(Arc::new(TraceBuffer::new()));
+        e.set_metrics_registry(Arc::new(MetricsRegistry::new()));
+        e.run_trace(trace.clone()).expect("replay")
+    });
+
+    // ---- read-only derivation + deterministic export --------------------
+    let null_rep = engine(cfg, &spec).run_trace(trace.clone()).expect("null replay");
+    let traced = || -> (TraceReport, String, String) {
+        let mut e = engine(cfg, &spec);
+        let buf = Arc::new(TraceBuffer::new());
+        let reg = Arc::new(MetricsRegistry::new());
+        e.set_trace_sink(buf.clone());
+        e.set_metrics_registry(reg.clone());
+        let rep = e.run_trace(trace.clone()).expect("traced replay");
+        (rep, chrome_trace_json(&buf.snapshot()), reg.expose())
+    };
+    let (rep1, json1, prom1) = traced();
+    let (rep2, json2, prom2) = traced();
+
+    run.check(
+        "armed telemetry leaves the report byte-identical to NullSink",
+        rep1 == null_rep,
+        "a span or metric emission perturbed the serving decisions".into(),
+    );
+    run.check(
+        "trace JSON + metrics exposition byte-identical across reruns",
+        json1 == json2 && prom1 == prom2,
+        format!("{} vs {} trace bytes", json1.len(), json2.len()),
+    );
+    match validate_chrome_trace(&json1) {
+        Ok(s) => {
+            run.check(
+                "exported trace validates (nesting, monotone ts)",
+                s.spans > 0 && s.instants > 0 && s.tracks >= 2,
+                format!("{} events / {} spans / {} tracks", s.events, s.spans, s.tracks),
+            );
+        }
+        Err(e) => {
+            run.check("exported trace validates (nesting, monotone ts)", false, format!("{e:#}"))
+        }
+    }
+    let legs = ["\"admit\"", "\"queue\"", "\"serve\"", "\"reply\"", "\"compute\"", "\"reduce\""];
+    for needle in legs {
+        run.check(
+            &format!("trace covers {needle}"),
+            json1.contains(needle),
+            "lifecycle leg missing from the exported trace".into(),
+        );
+    }
+    run.check(
+        "exposition carries the request counters",
+        prom1.contains("fat_requests_admitted_total")
+            && prom1.contains("fat_request_latency_us_count"),
+        prom1[..prom1.len().min(400)].to_string(),
+    );
+
+    run.check_against_baseline("BENCH_telemetry.baseline.json", 5.0);
+    run.finish();
+}

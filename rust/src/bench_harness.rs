@@ -7,6 +7,11 @@
 
 use std::time::Instant;
 
+/// Version of the `BENCH_*.json` record shape.  Bump when a field changes
+/// meaning or layout; readers treat a *missing* field as version 1 (the
+/// committed baselines predate versioning and stay readable as-is).
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
 /// One measured statistic.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
@@ -39,15 +44,25 @@ pub fn fmt_ns(ns: f64) -> String {
 /// (`sorted[round((len-1) * q)]`) — the same convention the serving
 /// percentile reports have always used, now shared so p50/p99/p999 agree
 /// across the CLI, the benches, and the load generator.
+///
+/// Total over its whole domain: an empty sample yields `0.0` (the latency
+/// reports print that for "no requests served" rather than panicking a
+/// whole run), a single sample answers every quantile, and `q` is clamped
+/// into `[0, 1]` so a caller-computed `0.9999999...` rounding artifact
+/// cannot index out of bounds.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty sample");
-    assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1], got {q}");
-    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let idx = (((sorted.len() - 1) as f64 * q).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
 }
 
 /// Sort once, then read several quantiles (e.g. `&[0.50, 0.99, 0.999]`).
+/// NaN-safe: `total_cmp` sorts NaNs to the end instead of panicking.
 pub fn percentiles(mut xs: Vec<f64>, qs: &[f64]) -> Vec<f64> {
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
     qs.iter().map(|&q| percentile(&xs, q)).collect()
 }
 
@@ -123,6 +138,7 @@ impl BenchRun {
         let mut s = String::with_capacity(512);
         s.push_str("{\n");
         s.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        s.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
         s.push_str(&format!(
             "  \"host_elapsed_s\": {:.3},\n",
             self.t0.elapsed().as_secs_f64()
@@ -300,6 +316,24 @@ mod tests {
     }
 
     #[test]
+    fn percentile_is_total_on_edge_inputs() {
+        // empty sample: 0.0 for every quantile, never a panic
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentiles(Vec::new(), &[0.0, 0.5, 1.0]), vec![0.0, 0.0, 0.0]);
+        // q = 0.0 / 1.0 hit the exact extremes
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        // out-of-range q is clamped rather than indexing out of bounds
+        assert_eq!(percentile(&xs, -0.3), 1.0);
+        assert_eq!(percentile(&xs, 1.7), 4.0);
+        // NaNs sort to the end under total_cmp; real quantiles stay usable
+        let ps = percentiles(vec![f64::NAN, 2.0, 1.0], &[0.0, 0.5]);
+        assert_eq!(ps[0], 1.0);
+        assert_eq!(ps[1], 2.0);
+    }
+
+    #[test]
     fn fmt_ns_units() {
         assert_eq!(fmt_ns(12.3), "12.3 ns");
         assert_eq!(fmt_ns(12_300.0), "12.30 us");
@@ -324,6 +358,7 @@ mod tests {
         run.check("always bad", false, "line1\nline2".into());
         let json = run.to_json();
         assert!(json.contains("\"name\": \"json demo\""));
+        assert!(json.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
         assert!(json.contains("\"label\": \"tiny \\\"loop\\\"\""), "{json}");
         assert!(json.contains("\"median_ns\": "));
         assert!(json.contains("\"mad_ns\": "));

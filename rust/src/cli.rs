@@ -223,6 +223,14 @@ COMMANDS:
                            window sheds as Failed instead of hanging
       --spares <n>         idle spare chips failover may re-plan onto
                            (default 0; needs --inject-fail-stop)
+      --trace-out <file>   write a Chrome/Perfetto trace-event JSON of the
+                           run (hybrid mode only): window + per-stage
+                           compute/reduce/dpu/all-gather spans on the
+                           simulated clock, plus failover events; open in
+                           ui.perfetto.dev — self-validated before writing
+      --metrics-out <file> write Prometheus text-format metrics of the run
+                           (hybrid mode only): fat_* counters, gauges,
+                           latency histograms
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   loadgen                  open-loop Poisson load generator vs the
                            continuous-batching serving engine: replay one
@@ -261,6 +269,13 @@ COMMANDS:
                            becomes served + shed + failed == admitted
       --spares <n>         idle spare chips failover may re-plan onto
                            (default 0; needs --chip-mtbf)
+      --trace-out <file>   write a Chrome/Perfetto trace-event JSON of the
+                           slo-edf run: per-request admit/queue/serve/reply
+                           spans, per-stage chip legs, failover events —
+                           all on the simulated clock, byte-identical per
+                           seed; self-validated before writing
+      --metrics-out <file> write Prometheus text-format metrics of the
+                           slo-edf run (fat_* counters/gauges/histograms)
       --fidelity <f>       ledger (default) | bit-serial (as in infer)
       --batch/--input/--scale/--sparsity/--classes   model knobs (as resnet)
   reliability              accuracy-vs-BER sweep (paper §IV-A3 at model

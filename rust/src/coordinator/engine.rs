@@ -43,6 +43,15 @@
 //!
 //! [`ServingEngine::serve`] lifts the same scheduler onto a host thread
 //! with wall-clock deadlines for live submission ([`EngineServer`]).
+//!
+//! Observability (ISSUE 10): [`ServingEngine::set_trace_sink`] records
+//! every request's lifecycle and every fused window as spans on the
+//! simulated clock (the fabric adds stage/leg/recovery spans to the same
+//! stream), and [`ServingEngine::set_metrics_registry`] meters per-window
+//! counters/gauges/histograms; [`TraceReport::stall_attribution`]
+//! derives the queueing-vs-compute-vs-xfer-vs-reload split.  Both are
+//! read-only derivations — determinism and byte-identity are untouched,
+//! and without a sink/registry nothing is recorded or allocated.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -61,6 +70,9 @@ use super::failover::{ArmedFault, FailoverConfig, FailoverTelemetry, TolerantFab
 use super::metrics::ChipMetrics;
 use super::server::SubmitError;
 use super::session::ModelSpec;
+use super::telemetry::{
+    MetricsRegistry, NullSink, StallAttribution, TraceEvent, TraceSink, COORD_PID, WINDOW_TID,
+};
 use super::tensor_parallel::HybridPlan;
 
 /// Service classes, ordered: `Interactive` is always scheduled ahead of
@@ -201,6 +213,34 @@ impl TraceReport {
     pub fn served_latencies_us(&self) -> Vec<f64> {
         self.responses.iter().map(EngineResponse::latency_us).collect()
     }
+
+    /// Served-latency percentiles, µs, one per `q` — routed through the
+    /// total [`crate::bench_harness::percentiles`] helper, so an empty
+    /// report yields zeros instead of panicking.
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        crate::bench_harness::percentiles(self.served_latencies_us(), qs)
+    }
+
+    /// Where the served requests' time went: queueing (admission →
+    /// window dispatch) plus the fabric legs of each window, read from
+    /// the responses' [`ChipMetrics`] breakdown.  A window's metrics are
+    /// shared by its `batched` requests, so each component is divided by
+    /// the fused width — every window is attributed exactly once.
+    /// Recovery backoff and SDC-wasted runs have no breakdown field of
+    /// their own and land in the compute component.
+    pub fn stall_attribution(&self) -> StallAttribution {
+        let mut a = StallAttribution::default();
+        for r in &self.responses {
+            a.queue_ns += (r.start_us - r.arrival_us) * 1e3;
+            let k = r.batched.max(1) as f64;
+            a.compute_ns += r.metrics.mac_compute_ns() / k;
+            a.reduce_ns += r.metrics.reduce_ns / k;
+            a.dpu_ns += r.metrics.dpu_ns / k;
+            a.xfer_ns += r.metrics.xfer_ns / k;
+            a.reload_ns += r.metrics.reload_ns / k;
+        }
+        a
+    }
 }
 
 /// Engine sizing.  `max_batch` is clamped to what every chip's weight
@@ -311,6 +351,14 @@ pub struct ServingEngine {
     /// feasibility horizon for shed-on-overload.  Starts at 0 (shed only
     /// the already-expired until a window has run).
     est_window_us: f64,
+    /// Span sink shared with the fabric ([`NullSink`] until
+    /// [`Self::set_trace_sink`] installs a recorder): the engine draws
+    /// the request-lifecycle and window tracks, the fabric the
+    /// stage/leg/recovery ones.
+    sink: Arc<dyn TraceSink>,
+    /// Metrics registry; `None` (the default) skips every registry
+    /// update, so an un-instrumented engine pays nothing.
+    registry: Option<Arc<MetricsRegistry>>,
 }
 
 impl ServingEngine {
@@ -378,6 +426,8 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
             max_batch,
             queue: SchedQueue { policy, depth, pending: Vec::new(), seq: 0 },
             est_window_us: 0.0,
+            sink: Arc::new(NullSink),
+            registry: None,
         })
     }
 
@@ -420,6 +470,27 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
         self.fabric.telemetry()
     }
 
+    /// Install a span recorder, shared with the fault-tolerance fabric:
+    /// the engine records each request's lifecycle (`admit → queue →
+    /// serve → reply|shed|failed`) and the fused-window track on its
+    /// simulated clock; the fabric records stage/leg spans and every
+    /// recovery event into the same stream.  Spans are a read-only
+    /// derivation of the virtual clock and the charged metrics —
+    /// outputs, metrics, and scheduling are byte-for-byte unchanged.
+    pub fn set_trace_sink(&mut self, sink: Arc<dyn TraceSink>) {
+        self.fabric.set_trace_sink(Arc::clone(&sink));
+        self.sink = sink;
+    }
+
+    /// Install a metrics registry: per-window counters (served / shed /
+    /// failed / windows, per-leg busy ns), queue-depth gauges, and
+    /// latency histograms, Prometheus-exposable via
+    /// [`MetricsRegistry::expose`].  Without one (the default) no
+    /// registry update ever runs.
+    pub fn set_metrics_registry(&mut self, registry: Arc<MetricsRegistry>) {
+        self.registry = Some(registry);
+    }
+
     /// Replay an arrival trace on a virtual clock advanced by each fused
     /// window's *simulated* latency.  Admission, window compositions,
     /// shedding, outputs, and percentiles are all functions of the trace
@@ -455,11 +526,36 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                     "request {} needs a finite deadline at or after its arrival",
                     r.id
                 );
+                let (rid, arr) = (r.id, r.arrival_us);
                 if self.queue.admit(r.id, r.x, r.class, r.arrival_us, r.deadline_us) {
                     stats.admitted += 1;
+                    if self.sink.enabled() {
+                        self.sink.emit(TraceEvent::instant(
+                            "admit",
+                            "request",
+                            COORD_PID,
+                            rid as u32,
+                            arr * 1e3,
+                        ));
+                    }
+                    if let Some(reg) = &self.registry {
+                        reg.counter_add("fat_requests_admitted_total", 1.0);
+                    }
                 } else {
                     stats.rejected += 1;
-                    rejected.push(r.id);
+                    rejected.push(rid);
+                    if self.sink.enabled() {
+                        self.sink.emit(TraceEvent::instant(
+                            "rejected",
+                            "request",
+                            COORD_PID,
+                            rid as u32,
+                            arr * 1e3,
+                        ));
+                    }
+                    if let Some(reg) = &self.registry {
+                        reg.counter_add("fat_requests_rejected_total", 1.0);
+                    }
                 }
             }
             // (b) idle: jump the clock to the next arrival, or finish
@@ -475,6 +571,27 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                 self.queue.form_window(t_us + self.est_window_us, self.max_batch);
             for p in dropped {
                 stats.shed += 1;
+                if self.sink.enabled() {
+                    let track = p.id as u32;
+                    self.sink.emit(TraceEvent::span(
+                        "queue",
+                        "request",
+                        COORD_PID,
+                        track,
+                        p.arrival_us * 1e3,
+                        (t_us - p.arrival_us) * 1e3,
+                    ));
+                    self.sink.emit(TraceEvent::instant(
+                        "shed",
+                        "request",
+                        COORD_PID,
+                        track,
+                        t_us * 1e3,
+                    ));
+                }
+                if let Some(reg) = &self.registry {
+                    reg.counter_add("fat_requests_shed_total", 1.0);
+                }
                 shed.push(ShedNotice {
                     id: p.id,
                     class: p.class,
@@ -490,7 +607,7 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
             let start_us = t_us;
             let run = {
                 let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
-                self.fabric.run_window(&xs)
+                self.fabric.run_window_at(&xs, t_us * 1e3)
             };
             let outs = match run {
                 Ok(outs) => outs,
@@ -500,8 +617,40 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                     // whole window as `failed` — conservation holds,
                     // the trace keeps replaying.
                     t_us += f.elapsed_ns / 1e3;
+                    if self.sink.enabled() {
+                        self.sink.emit(
+                            TraceEvent::span(
+                                "window (failed)",
+                                "window",
+                                COORD_PID,
+                                WINDOW_TID,
+                                start_us * 1e3,
+                                f.elapsed_ns,
+                            )
+                            .arg("reason", f.reason.clone()),
+                        );
+                    }
+                    if let Some(reg) = &self.registry {
+                        reg.counter_add("fat_requests_failed_total", picked.len() as f64);
+                        reg.counter_add("fat_windows_failed_total", 1.0);
+                    }
                     for p in picked {
                         stats.failed += 1;
+                        if self.sink.enabled() {
+                            let track = p.id as u32;
+                            self.sink.emit(TraceEvent::span(
+                                "queue",
+                                "request",
+                                COORD_PID,
+                                track,
+                                p.arrival_us * 1e3,
+                                (start_us - p.arrival_us) * 1e3,
+                            ));
+                            self.sink.emit(
+                                TraceEvent::instant("failed", "request", COORD_PID, track, t_us * 1e3)
+                                    .arg("reason", f.reason.clone()),
+                            );
+                        }
                         failed.push(FailNotice {
                             id: p.id,
                             class: p.class,
@@ -513,18 +662,72 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                     continue;
                 }
             };
-            let window_us = outs[0].metrics.latency_ns / 1e3;
+            let window_ns = outs[0].metrics.latency_ns;
+            let window_us = window_ns / 1e3;
             t_us += window_us;
             self.est_window_us = window_us;
             stats.windows += 1;
             stats.max_window = stats.max_window.max(picked.len());
             batch_log.push(picked.iter().map(|p| p.id).collect());
             let fused = picked.len();
+            if self.sink.enabled() {
+                self.sink.emit(
+                    TraceEvent::span(
+                        format!("window {}", stats.windows - 1),
+                        "window",
+                        COORD_PID,
+                        WINDOW_TID,
+                        start_us * 1e3,
+                        window_ns,
+                    )
+                    .arg("fused", format!("{fused}")),
+                );
+            }
+            if let Some(reg) = &self.registry {
+                let wm = outs[0].metrics;
+                reg.counter_add("fat_windows_total", 1.0);
+                reg.counter_add("fat_requests_served_total", fused as f64);
+                reg.gauge_set("fat_queue_depth", self.queue.pending.len() as f64);
+                reg.gauge_set("fat_window_width", fused as f64);
+                reg.observe("fat_window_latency_us", window_us);
+                reg.counter_add("fat_busy_compute_ns_total", wm.mac_compute_ns());
+                reg.counter_add("fat_busy_reduce_ns_total", wm.reduce_ns);
+                reg.counter_add("fat_busy_dpu_ns_total", wm.dpu_ns);
+                reg.counter_add("fat_busy_xfer_ns_total", wm.xfer_ns);
+                reg.counter_add("fat_reload_ns_total", wm.reload_ns);
+            }
             for (p, out) in picked.into_iter().zip(outs) {
                 let on_time = t_us <= p.deadline_us;
                 stats.served += 1;
                 if on_time {
                     stats.on_time += 1;
+                }
+                if self.sink.enabled() {
+                    let track = p.id as u32;
+                    self.sink.emit(TraceEvent::span(
+                        "queue",
+                        "request",
+                        COORD_PID,
+                        track,
+                        p.arrival_us * 1e3,
+                        (start_us - p.arrival_us) * 1e3,
+                    ));
+                    self.sink.emit(TraceEvent::span(
+                        "serve",
+                        "request",
+                        COORD_PID,
+                        track,
+                        start_us * 1e3,
+                        window_ns,
+                    ));
+                    self.sink.emit(
+                        TraceEvent::instant("reply", "request", COORD_PID, track, t_us * 1e3)
+                            .arg("on_time", format!("{on_time}")),
+                    );
+                }
+                if let Some(reg) = &self.registry {
+                    reg.observe("fat_request_latency_us", t_us - p.arrival_us);
+                    reg.counter_add("fat_queue_wait_us_total", start_us - p.arrival_us);
                 }
                 responses.push(EngineResponse {
                     id: p.id,
@@ -546,9 +749,24 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
 
     /// Mount the engine on a host scheduler thread for live submission:
     /// same queue, same window re-forming, wall-clock deadlines.
+    ///
+    /// Telemetry on the live path stays on the **simulated** clock: the
+    /// scheduler thread keeps a cumulative virtual time advanced by each
+    /// window's simulated latency, so the fabric's stage/leg spans and
+    /// the window track remain deterministic per window sequence even
+    /// though admission timing is wall-clock.  Request-lifecycle spans
+    /// (whose arrival times are wall-clock) are not drawn here — use
+    /// [`Self::run_trace`] for the full per-request timeline.
     pub fn serve(self) -> EngineServer {
-        let ServingEngine { mut fabric, input_geometry, max_batch, queue, mut est_window_us } =
-            self;
+        let ServingEngine {
+            mut fabric,
+            input_geometry,
+            max_batch,
+            queue,
+            mut est_window_us,
+            sink,
+            registry,
+        } = self;
         let depth = queue.depth;
         let shared = Arc::new(LiveShared {
             state: Mutex::new(LiveState { queue, closed: false, stats: EngineStats::default() }),
@@ -557,6 +775,8 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
         let (tx_out, rx_out) = mpsc::channel::<EngineReply>();
         let t0 = Instant::now();
         let sched = Arc::clone(&shared);
+        // the live path's virtual clock: spans stay on simulated time
+        let mut sim_ns = 0.0f64;
         let scheduler = std::thread::spawn(move || loop {
             let mut st = sched.state.lock().expect("engine state lock");
             while st.queue.is_empty() && !st.closed {
@@ -571,6 +791,11 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
             let (picked, dropped) = st.queue.form_window(now_us + est_window_us, max_batch);
             st.stats.shed += dropped.len() as u64;
             drop(st);
+            if !dropped.is_empty() {
+                if let Some(reg) = &registry {
+                    reg.counter_add("fat_requests_shed_total", dropped.len() as f64);
+                }
+            }
             for p in dropped {
                 let _ = tx_out.send(EngineReply::Shed {
                     id: p.id,
@@ -584,7 +809,7 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
             let start_us = t0.elapsed().as_secs_f64() * 1e6;
             let run = {
                 let xs: Vec<&Tensor4> = picked.iter().map(|p| &p.x).collect();
-                fabric.run_window(&xs)
+                fabric.run_window_at(&xs, sim_ns)
             };
             let outs = match run {
                 Ok(outs) => outs,
@@ -592,6 +817,24 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                     // Unrecoverable window: account every request as
                     // failed and keep serving — the scheduler thread
                     // must never die with requests in flight.
+                    if sink.enabled() {
+                        sink.emit(
+                            TraceEvent::span(
+                                "window (failed)",
+                                "window",
+                                COORD_PID,
+                                WINDOW_TID,
+                                sim_ns,
+                                f.elapsed_ns,
+                            )
+                            .arg("reason", f.reason.clone()),
+                        );
+                    }
+                    if let Some(reg) = &registry {
+                        reg.counter_add("fat_requests_failed_total", picked.len() as f64);
+                        reg.counter_add("fat_windows_failed_total", 1.0);
+                    }
+                    sim_ns += f.elapsed_ns;
                     let mut st = sched.state.lock().expect("engine state lock");
                     st.stats.failed += picked.len() as u64;
                     drop(st);
@@ -606,17 +849,47 @@ live on the layer-pipeline path (PipelineSession / the reliability sweep)"
                     continue;
                 }
             };
-            est_window_us = outs[0].metrics.latency_ns / 1e3;
+            let window_ns = outs[0].metrics.latency_ns;
+            est_window_us = window_ns / 1e3;
             let finish_us = t0.elapsed().as_secs_f64() * 1e6;
             let fused = picked.len();
             let on_time_count =
                 picked.iter().filter(|p| finish_us <= p.deadline_us).count() as u64;
             let mut st = sched.state.lock().expect("engine state lock");
             st.stats.windows += 1;
+            let window_id = st.stats.windows - 1;
             st.stats.max_window = st.stats.max_window.max(fused);
             st.stats.served += fused as u64;
             st.stats.on_time += on_time_count;
+            let queued_now = st.queue.pending.len();
             drop(st);
+            if sink.enabled() {
+                sink.emit(
+                    TraceEvent::span(
+                        format!("window {window_id}"),
+                        "window",
+                        COORD_PID,
+                        WINDOW_TID,
+                        sim_ns,
+                        window_ns,
+                    )
+                    .arg("fused", format!("{fused}")),
+                );
+            }
+            if let Some(reg) = &registry {
+                let wm = outs[0].metrics;
+                reg.counter_add("fat_windows_total", 1.0);
+                reg.counter_add("fat_requests_served_total", fused as f64);
+                reg.gauge_set("fat_queue_depth", queued_now as f64);
+                reg.gauge_set("fat_window_width", fused as f64);
+                reg.observe("fat_window_latency_us", window_ns / 1e3);
+                reg.counter_add("fat_busy_compute_ns_total", wm.mac_compute_ns());
+                reg.counter_add("fat_busy_reduce_ns_total", wm.reduce_ns);
+                reg.counter_add("fat_busy_dpu_ns_total", wm.dpu_ns);
+                reg.counter_add("fat_busy_xfer_ns_total", wm.xfer_ns);
+                reg.counter_add("fat_reload_ns_total", wm.reload_ns);
+            }
+            sim_ns += window_ns;
             for (p, out) in picked.into_iter().zip(outs) {
                 let _ = tx_out.send(EngineReply::Served(EngineResponse {
                     id: p.id,
@@ -900,7 +1173,11 @@ pub fn poisson_trace(spec: &ModelSpec, tc: &TraceConfig) -> Result<Vec<EngineReq
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::reliability::ChipFault;
     use crate::coordinator::session::ChipSession;
+    use crate::coordinator::telemetry::{
+        chrome_trace_json, validate_chrome_trace, TraceBuffer, TraceSummary,
+    };
     use crate::nn::resnet::ConvLayer;
 
     /// Two small chained layers (the server tests' model shape).
@@ -983,6 +1260,107 @@ mod tests {
     }
 
     const FOREVER: f64 = 1e15;
+
+    /// One fully-instrumented faulty run: a 2-way TP engine with a spare,
+    /// chip 0 fail-stopping at window 1, traced and metered end to end.
+    /// Returns the exported trace JSON, the metrics exposition, and the
+    /// validator's summary.
+    fn traced_faulty_run() -> (String, String, TraceSummary) {
+        let cfg = ChipConfig::fat();
+        let spec = wide_kn(0x7E1E);
+        let plan = HybridPlan::manual(&spec, &cfg, &[(0, 3, 2)]).expect("plan");
+        let ftc = FailoverConfig { spares: 1, ..Default::default() };
+        let faults = vec![ArmedFault { chip: 0, fault: ChipFault::FailStop { at_request: 1 } }];
+        let mut eng = ServingEngine::with_fault_tolerance(
+            cfg,
+            spec.clone(),
+            plan,
+            HwParams::default(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 8, queue_depth: None },
+            ftc,
+            faults,
+        )
+        .expect("engine");
+        let buf = Arc::new(TraceBuffer::new());
+        let reg = Arc::new(MetricsRegistry::new());
+        eng.set_trace_sink(Arc::clone(&buf) as Arc<dyn TraceSink>);
+        eng.set_metrics_registry(Arc::clone(&reg));
+        let mut rng = Rng::new(0x7E1F);
+        let trace: Vec<EngineRequest> = (0..6)
+            .map(|i| req(i, spec.random_input(&mut rng), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report = eng.run_trace(trace).expect("trace");
+        assert_eq!(report.stats.served, 6, "every request must be served");
+        assert_eq!(eng.failover_telemetry().failovers, 1, "the armed fail-stop must fire");
+        let json = chrome_trace_json(&buf.snapshot());
+        let summary = validate_chrome_trace(&json).expect("exported trace must validate");
+        (json, reg.expose(), summary)
+    }
+
+    #[test]
+    fn telemetry_is_byte_identical_across_faulty_runs_and_covers_the_lifecycle() {
+        let (j1, m1, s1) = traced_faulty_run();
+        let (j2, m2, s2) = traced_faulty_run();
+        assert_eq!(j1, j2, "two identical runs must export byte-identical trace JSON");
+        assert_eq!(m1, m2, "two identical runs must expose identical metrics");
+        assert_eq!(s1, s2);
+        assert!(s1.spans > 0 && s1.instants > 0 && s1.tracks > 3, "{s1:?}");
+        // admit→reply lifecycle plus the failover events, all one stream
+        for needle in [
+            "\"admit\"", "\"queue\"", "\"serve\"", "\"reply\"", "stage0@chip",
+            "\"compute\"", "\"reduce\"", "\"dpu\"", "chip_failed", "\"quarantine\"",
+            "weight_reload", "\"replan\"",
+        ] {
+            assert!(j1.contains(needle), "trace must contain {needle}");
+        }
+        for needle in [
+            "fat_requests_admitted_total 6",
+            "fat_requests_served_total 6",
+            "fat_windows_total 3",
+            "fat_reload_ns_total",
+            "fat_request_latency_us_count 6",
+        ] {
+            assert!(m1.contains(needle), "metrics must contain {needle}:\n{m1}");
+        }
+    }
+
+    #[test]
+    fn stall_attribution_accounts_queueing_and_reload() {
+        let cfg = ChipConfig::fat();
+        let spec = small_spec(0x57A1);
+        let mut rng = Rng::new(0x57A2);
+        let mut eng = ServingEngine::single_chip(
+            cfg,
+            spec.clone(),
+            SchedPolicy::SloEdf,
+            EngineConfig { max_batch: 2, queue_windows: 4, queue_depth: None },
+        )
+        .expect("engine");
+        let trace: Vec<EngineRequest> = (0..4)
+            .map(|i| req(i, spec.random_input(&mut rng), SloClass::Batch, 0.0, FOREVER))
+            .collect();
+        let report = eng.run_trace(trace).expect("trace");
+        let a = report.stall_attribution();
+        assert!(a.compute_ns > 0.0, "served windows must attribute compute time");
+        assert!(a.queue_ns > 0.0, "later windows queued behind the first");
+        assert_eq!(a.reload_ns, 0.0, "no failover on the clean path");
+        assert!(a.total_ns() > 0.0);
+        assert!(!a.summary().is_empty());
+        // percentile path routes through the total helper: empty is 0.0
+        let empty = TraceReport {
+            responses: vec![],
+            shed: vec![],
+            failed: vec![],
+            rejected: vec![],
+            batch_log: vec![],
+            stats: EngineStats::default(),
+            makespan_us: 0.0,
+        };
+        assert_eq!(empty.latency_percentiles(&[0.5, 0.99]), vec![0.0, 0.0]);
+        let ps = report.latency_percentiles(&[0.0, 0.5, 1.0]);
+        assert!(ps[0] <= ps[1] && ps[1] <= ps[2]);
+    }
 
     #[test]
     fn trace_serving_is_byte_identical_to_the_inline_oracle_under_reforming() {

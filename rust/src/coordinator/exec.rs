@@ -45,6 +45,7 @@ use crate::coordinator::session::{
     QuantActivations,
 };
 use crate::coordinator::sharding::ShardPlan;
+use crate::coordinator::telemetry::TraceEvent;
 use crate::coordinator::tensor_parallel::{
     allgather_cost, broadcast_cost, concat_channels, HybridPlan,
 };
@@ -97,6 +98,46 @@ pub fn charge_gather(metrics: &mut ChipMetrics, chunks: &[u64], hw: &HwParams) {
     metrics.xfer_ns += ns;
     metrics.latency_ns += ns;
     metrics.xfer_legs += legs;
+}
+
+/// The telemetry spans for one chip's completed stage run starting at
+/// simulated time `t0_ns`: the enclosing `stage{i}@chip{j}` span
+/// (duration = the run's full `latency_ns`) with its sequential legs as
+/// children — `weight_load → compute → reduce → dpu → all_gather` — each
+/// leg's duration read straight from the [`ChipMetrics`] breakdown the
+/// run already produced.  Telemetry is a *derivation* of the metrics,
+/// never a second accounting: the legs tile the stage span exactly
+/// because every breakdown field is already folded into `latency_ns`
+/// (the clamp in [`ChipMetrics::mac_compute_ns`] keeps that true even
+/// against rounding).  Zero-length legs are skipped.  Returned rather
+/// than emitted so the failover walk can buffer spans and drop them when
+/// an attempt dies mid-window — failed attempts charge no fabric time,
+/// so they draw no fabric spans either.
+pub fn stage_leg_spans(pid: u32, stage: usize, t0_ns: f64, m: &ChipMetrics) -> Vec<TraceEvent> {
+    let tid = stage as u32;
+    let mut out = vec![TraceEvent::span(
+        format!("stage{stage}@chip{pid}"),
+        "stage",
+        pid,
+        tid,
+        t0_ns,
+        m.latency_ns,
+    )];
+    let mut t = t0_ns;
+    let legs: [(&'static str, f64); 5] = [
+        ("weight_load", m.weight_load_ns),
+        ("compute", m.mac_compute_ns()),
+        ("reduce", m.reduce_ns),
+        ("dpu", m.dpu_ns),
+        ("all_gather", m.xfer_ns),
+    ];
+    for (name, dur) in legs {
+        if dur > 0.0 {
+            out.push(TraceEvent::span(name, "leg", pid, tid, t, dur));
+        }
+        t += dur;
+    }
+    out
 }
 
 /// Queue-depth-aware micro-batch drain: block for one item, then take

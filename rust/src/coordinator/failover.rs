@@ -43,9 +43,12 @@ use crate::coordinator::exec::{self, StageError, StageRunner};
 use crate::coordinator::metrics::ChipMetrics;
 use crate::coordinator::model::ModelSpec;
 use crate::coordinator::reliability::ChipFault;
+use std::sync::Arc;
+
 use crate::coordinator::session::{
     finalize_outputs, ChipSession, HeadSpec, ModelOutput, QuantActivations,
 };
+use crate::coordinator::telemetry::{NullSink, TraceEvent, TraceSink, COORD_PID, WINDOW_TID};
 use crate::coordinator::tensor_parallel::{plan_auto, HybridPlan};
 use crate::error::{ensure, Result};
 use crate::mapping::schemes::HwParams;
@@ -174,6 +177,10 @@ pub struct TolerantFabric {
     /// Fault-free Ledger oracle for the ABFT checksum (`sdc_check`).
     shadow: Option<ChipSession>,
     telemetry: FailoverTelemetry,
+    /// Span sink ([`NullSink`] unless the engine installs a recorder):
+    /// stage/leg spans for clean windows, plus every recovery event
+    /// (watchdog fire, quarantine, weight reload, re-plan, SDC retry).
+    sink: Arc<dyn TraceSink>,
 }
 
 impl TolerantFabric {
@@ -240,6 +247,7 @@ stage latency trips on healthy chips",
             ftc,
             shadow,
             telemetry: FailoverTelemetry::default(),
+            sink: Arc::new(NullSink),
         })
     }
 
@@ -268,6 +276,13 @@ stage latency trips on healthy chips",
         self.telemetry
     }
 
+    /// Install a span recorder (the engine shares its own sink here).
+    /// Spans are a read-only derivation of the charged metrics — the
+    /// fault-free byte-identity contract is unaffected by recording.
+    pub fn set_trace_sink(&mut self, sink: Arc<dyn TraceSink>) {
+        self.sink = sink;
+    }
+
     /// Serve one fused window with recovery: detect armed faults,
     /// quarantine + re-plan + replay on a [`StageError`], re-execute on
     /// an SDC checksum mismatch, and give up (typed, never hanging)
@@ -281,6 +296,17 @@ stage latency trips on healthy chips",
     pub fn run_window(
         &mut self,
         xs: &[&Tensor4],
+    ) -> std::result::Result<Vec<ModelOutput>, WindowFailure> {
+        self.run_window_at(xs, 0.0)
+    }
+
+    /// [`Self::run_window`] with the window's simulated start time in ns
+    /// — the timeline origin every span this window draws is placed on.
+    /// The engine passes its virtual clock; standalone callers pass 0.
+    pub fn run_window_at(
+        &mut self,
+        xs: &[&Tensor4],
+        t0_ns: f64,
     ) -> std::result::Result<Vec<ModelOutput>, WindowFailure> {
         let window = self.windows;
         self.windows += 1;
@@ -302,7 +328,11 @@ stage latency trips on healthy chips",
             if attempts > 1 {
                 extra.latency_ns += self.ftc.retry.backoff_us * 1e3;
             }
-            match self.try_window(xs, window) {
+            // this attempt starts after every charge accumulated so far
+            // (backoffs, reloads, wasted SDC runs) — span timelines and
+            // charged metrics stay one accounting
+            let at = t0_ns + extra.latency_ns;
+            match self.try_window(xs, window, at) {
                 Ok((act, metrics)) => {
                     if self.shadow.is_some() && !self.checksum_ok(xs, &act, metrics)? {
                         // silent corruption caught: charge the wasted
@@ -310,6 +340,19 @@ stage latency trips on healthy chips",
                         self.telemetry.retried_windows += 1;
                         extra.retried_windows += 1;
                         extra.latency_ns += metrics.latency_ns;
+                        if self.sink.enabled() {
+                            self.sink.emit(
+                                TraceEvent::span(
+                                    "sdc_retry",
+                                    "failover",
+                                    COORD_PID,
+                                    WINDOW_TID,
+                                    at,
+                                    metrics.latency_ns,
+                                )
+                                .arg("window", format!("{window}")),
+                            );
+                        }
                         continue;
                     }
                     let mut final_metrics = metrics;
@@ -325,7 +368,23 @@ stage latency trips on healthy chips",
                         StageError::DeadlineExceeded { stage, chip, .. } => (*stage, *chip),
                     };
                     let fleet_chip = self.assignment[stage][chip];
-                    if let Err(fatal) = self.failover(fleet_chip, &mut extra) {
+                    if self.sink.enabled() {
+                        let name = match &e {
+                            StageError::ChipFailed { .. } => "chip_failed",
+                            StageError::DeadlineExceeded { .. } => "watchdog_fire",
+                        };
+                        self.sink.emit(
+                            TraceEvent::instant(
+                                name,
+                                "failover",
+                                fleet_chip as u32,
+                                stage as u32,
+                                at,
+                            )
+                            .arg("detail", e.to_string()),
+                        );
+                    }
+                    if let Err(fatal) = self.failover(fleet_chip, &mut extra, at) {
                         return Err(WindowFailure {
                             reason: format!("{e}; failover impossible: {fatal}"),
                             elapsed_ns: extra.latency_ns,
@@ -342,6 +401,7 @@ stage latency trips on healthy chips",
         &mut self,
         xs: &[&Tensor4],
         window: u64,
+        at_ns: f64,
     ) -> std::result::Result<(QuantActivations, ChipMetrics), TryError> {
         // pre-flight: a fail-stopped chip refuses the window before any
         // compute (the coordinator's dispatch RPC fails immediately)
@@ -378,7 +438,7 @@ stage latency trips on healthy chips",
         for &(si, f) in &to_arm {
             self.stages[si].set_fault(Some(f));
         }
-        let result = self.walk(xs, window);
+        let result = self.walk(xs, window, at_ns);
         // disarm: back to the construction-time arming (normally None)
         for &(si, _) in &to_arm {
             self.stages[si].set_fault(self.cfg.fault);
@@ -395,29 +455,61 @@ stage latency trips on healthy chips",
 
     /// The exact [`exec::run_stages`] charge sequence (the engine's
     /// protected fabric passes no link streams), plus the hang/watchdog
-    /// model per stage.
+    /// model per stage.  When a sink is installed, the walk also draws
+    /// the window's fabric timeline starting at `at_ns` — entry
+    /// quantization, per-stage boundary legs, and each slice chip's
+    /// stage/leg spans ([`exec::stage_leg_spans`]) — **buffered** and
+    /// flushed only on success: a failed attempt charges no fabric time,
+    /// so it leaves no fabric spans (only the failure instants the
+    /// recovery loop emits).
     fn walk(
         &mut self,
         xs: &[&Tensor4],
         window: u64,
+        at_ns: f64,
     ) -> std::result::Result<(QuantActivations, ChipMetrics), TryError> {
         if xs.len() > 1 {
             exec::ensure_fused_capacity(&self.stages, &self.cfg, xs.len())
                 .map_err(|e| TryError::Fatal(e.to_string()))?;
         }
+        let trace = self.sink.enabled();
+        let mut events: Vec<TraceEvent> = Vec::new();
         let k = xs.len();
         let (mut act, mut metrics) = self.stages[0]
             .entry()
             .quantize_entry(xs)
             .map_err(|e| TryError::Fatal(e.to_string()))?;
+        let mut cursor = at_ns;
+        if trace && metrics.latency_ns > 0.0 {
+            events.push(TraceEvent::span(
+                "quantize_entry",
+                "leg",
+                self.assignment[0][0] as u32,
+                0,
+                cursor,
+                metrics.latency_ns,
+            ));
+        }
+        cursor += metrics.latency_ns;
         for si in 0..self.stages.len() {
             if si > 0 {
-                exec::charge_boundary_leg(
+                let leg = exec::charge_boundary_leg(
                     &mut metrics,
                     act.wire_bytes(),
                     self.stages[si].ways(),
                     &self.hw,
                 );
+                if trace && leg > 0.0 {
+                    events.push(TraceEvent::span(
+                        "xfer_in",
+                        "leg",
+                        self.assignment[si][0] as u32,
+                        si as u32,
+                        cursor,
+                        leg,
+                    ));
+                }
+                cursor += leg;
             }
             let stall = self.stall_on(si, window);
             let (next, mut m) = match self.stages[si].run(act, &self.hw) {
@@ -452,8 +544,19 @@ stage latency trips on healthy chips",
                 // the first clean (stall-free) window
                 self.budgets_ns[si] = m.latency_ns / k as f64 * self.ftc.watchdog_factor;
             }
+            if trace {
+                // the folded stage metrics are the group's critical path:
+                // every slice chip is occupied for that span
+                for &p in &self.assignment[si] {
+                    events.extend(exec::stage_leg_spans(p as u32, si, cursor, &m));
+                }
+            }
             act = next;
             metrics.add(&m);
+            cursor += m.latency_ns;
+        }
+        for ev in events {
+            self.sink.emit(ev);
         }
         Ok((act, metrics))
     }
@@ -499,7 +602,9 @@ stage latency trips on healthy chips",
 
     /// Quarantine `fleet_chip`, re-plan over the survivors, pay the
     /// weight reload, refresh the assignment and watchdog budgets.
-    fn failover(&mut self, fleet_chip: usize, extra: &mut ChipMetrics) -> Result<()> {
+    /// `at_ns` is the failed attempt's start time — the reload span is
+    /// drawn there, exactly where its latency is charged.
+    fn failover(&mut self, fleet_chip: usize, extra: &mut ChipMetrics, at_ns: f64) -> Result<()> {
         if !self.quarantined.contains(&fleet_chip) {
             self.quarantined.push(fleet_chip);
         }
@@ -535,6 +640,34 @@ stage latency trips on healthy chips",
         self.telemetry.retried_windows += 1;
         self.telemetry.reload_ns += reload.weight_load_ns;
         self.telemetry.quarantined = self.quarantined.len();
+        if self.sink.enabled() {
+            self.sink.emit(
+                TraceEvent::instant("quarantine", "failover", COORD_PID, WINDOW_TID, at_ns)
+                    .arg("chip", format!("{fleet_chip}")),
+            );
+            self.sink.emit(
+                TraceEvent::span(
+                    "weight_reload",
+                    "failover",
+                    COORD_PID,
+                    WINDOW_TID,
+                    at_ns,
+                    reload.weight_load_ns,
+                )
+                .arg("chip", format!("{fleet_chip}")),
+            );
+            self.sink.emit(
+                TraceEvent::instant(
+                    "replan",
+                    "failover",
+                    COORD_PID,
+                    WINDOW_TID,
+                    at_ns + reload.weight_load_ns,
+                )
+                .arg("stages", format!("{}", plan.stages.len()))
+                .arg("chips", format!("{}", plan.chips())),
+            );
+        }
         // surviving fleet ordinals fill the new plan's slots in order
         let healthy: Vec<usize> =
             (0..self.fleet).filter(|c| !self.quarantined.contains(c)).collect();

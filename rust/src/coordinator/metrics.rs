@@ -136,6 +136,17 @@ impl ChipMetrics {
         self.latency_ns - self.weight_load_ns - self.xfer_ns
     }
 
+    /// Latency attributable to the analog MAC path alone: total latency
+    /// minus every explicit breakdown leg (digital reduction, DPU
+    /// epilogue, weight loading, inter-chip transfer).  This is the
+    /// "compute" leg of a telemetry stage span
+    /// ([`crate::coordinator::telemetry`]); clamped at zero so breakdown
+    /// rounding can never produce a negative span duration.
+    pub fn mac_compute_ns(&self) -> f64 {
+        (self.latency_ns - self.reduce_ns - self.dpu_ns - self.weight_load_ns - self.xfer_ns)
+            .max(0.0)
+    }
+
     /// Energy-delay product, pJ*ns (Fig. 11's efficiency metric).
     pub fn edp(&self) -> f64 {
         self.energy_pj * self.latency_ns
@@ -277,6 +288,22 @@ mod tests {
         // assertions across the crate are untouched by the new fields
         assert_eq!(ChipMetrics::default().failovers, 0);
         assert_eq!(ChipMetrics::default().reload_ns, 0.0);
+    }
+
+    #[test]
+    fn mac_compute_subtracts_every_leg_and_clamps() {
+        let m = ChipMetrics {
+            latency_ns: 100.0,
+            reduce_ns: 10.0,
+            dpu_ns: 5.0,
+            weight_load_ns: 20.0,
+            xfer_ns: 15.0,
+            ..Default::default()
+        };
+        assert_eq!(m.mac_compute_ns(), 50.0);
+        // legs sum past the total (inconsistent breakdown) → clamped, not negative
+        let bad = ChipMetrics { latency_ns: 1.0, reduce_ns: 5.0, ..Default::default() };
+        assert_eq!(bad.mac_compute_ns(), 0.0);
     }
 
     #[test]

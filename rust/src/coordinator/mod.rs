@@ -53,7 +53,14 @@
 //!   quarantine + [`tensor_parallel::plan_auto`] re-planning (charging
 //!   the real weight-reload cost), bounded retries, and an optional
 //!   ABFT output checksum against a Ledger shadow for silent-corruption
-//!   detection.
+//!   detection;
+//! - [`telemetry`] — deterministic observability over all of the above:
+//!   a simulated-clock span tracer ([`telemetry::TraceSink`], recorded
+//!   by the engine/fabric, exported as Chrome/Perfetto trace-event JSON
+//!   via [`telemetry::chrome_trace_json`] — byte-identical across
+//!   identical runs) and a metrics registry with Prometheus text
+//!   exposition ([`telemetry::MetricsRegistry`]), surfaced by `fat serve
+//!   / fat loadgen --trace-out --metrics-out`.
 
 pub mod accelerator;
 pub mod dpu;
@@ -67,6 +74,7 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod sharding;
+pub mod telemetry;
 pub mod tensor_parallel;
 
 pub use accelerator::{ChipConfig, FatChip, LayerRun, SenseFault, TileWeights};
@@ -88,4 +96,8 @@ pub use scheduler::{analytic_layer_metrics, analytic_network, AnalyticReport};
 pub use server::{InferenceServer, Request, Response, ServingMode, SubmitError};
 pub use session::{ChipSession, LoadedModel, ModelOutput, QuantActivations};
 pub use sharding::{PipelineSession, ShardPlan};
+pub use telemetry::{
+    chrome_trace_json, validate_chrome_trace, MetricsRegistry, NullSink, StallAttribution,
+    TraceBuffer, TraceEvent, TraceSink, TraceSummary,
+};
 pub use tensor_parallel::{plan_auto, HybridPlan, TensorParallelSession, TensorPlan};

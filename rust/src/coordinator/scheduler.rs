@@ -7,7 +7,9 @@
 //! two models are cross-checked on small layers in integration tests.
 //! Served execution never comes through here — resident sessions and the
 //! serving stack run the simulated chip on the [`super::exec`] stage
-//! fabric; this module prices what is too big to simulate.
+//! fabric; this module prices what is too big to simulate.  (It is
+//! likewise invisible to [`super::telemetry`]: spans trace *served*
+//! windows, not analytic estimates.)
 
 use crate::addition::scheme;
 use crate::circuit::sense_amp::SaKind;

@@ -63,6 +63,11 @@
 //! and metrics, an order of magnitude less host time per request), and
 //! armed fault injection auto-demotes the affected chips to bit-serial
 //! execution.
+//!
+//! This threaded front-end has no telemetry hooks of its own; a traced
+//! hybrid serve (`fat serve --mode hybrid --trace-out`) rides the
+//! engine fabric instead, where [`super::telemetry`] records spans on
+//! the simulated clock.
 
 use std::collections::VecDeque;
 use std::fmt;

@@ -46,6 +46,12 @@
 //! outputs and `ChipMetrics` to bit-serial execution and an order of
 //! magnitude faster in host time; arming fault injection at a positive
 //! BER auto-demotes the chip to bit-serial.
+//!
+//! The per-stage [`ChipMetrics`] a session charges are also what the
+//! observability layer draws: [`super::telemetry`] derives its
+//! compute/reduce/dpu/all-gather spans *read-only* from these fields
+//! ([`ChipMetrics::mac_compute_ns`] is the subtraction that makes the
+//! legs tile the stage span), so tracing can never perturb a result.
 
 use std::collections::HashMap;
 

@@ -1,0 +1,684 @@
+//! Deterministic telemetry: span tracing and a metrics registry for the
+//! serving stack (ISSUE 10's tentpole).
+//!
+//! Everything above the chip simulator runs on a *simulated* clock —
+//! [`super::engine::ServingEngine::run_trace`] advances virtual time by
+//! each fused window's modeled latency — so observability here is not
+//! sampling a wall clock, it is *recording the simulation*: two
+//! identical runs must produce **byte-identical** trace files, the same
+//! determinism contract the outputs and metrics already obey.
+//!
+//! Three pieces:
+//!
+//! 1. **Spans** — [`TraceEvent`]s emitted through the [`TraceSink`]
+//!    trait.  The serving stack ([`super::engine`], [`super::failover`],
+//!    [`super::exec`]) records a request's lifecycle
+//!    (`admit → queue → window → stage[i]@chip[j]` with
+//!    compute / reduce / dpu / all-gather legs `→ reply | shed | failed`)
+//!    and every recovery event (watchdog fire, quarantine, re-plan,
+//!    weight reload, window replay, SDC retry) into the same stream.
+//!    The default sink is [`NullSink`] — `enabled()` is `false` and
+//!    every emission is skipped before any `format!` runs, so the
+//!    disabled hot path costs one virtual call per window, not per
+//!    span (the hotpath bench gates this).
+//! 2. **Export** — [`chrome_trace_json`] writes the buffered events as
+//!    Chrome trace-event JSON (`pid` = fleet chip, `tid` = stage /
+//!    request track, `ts` = simulated ns) that <https://ui.perfetto.dev>
+//!    opens directly; [`validate_chrome_trace`] is the self-check the
+//!    CLI runs on every file it writes (parses, spans nest, `ts`
+//!    monotone per track, no negative durations).
+//! 3. **Metrics** — [`MetricsRegistry`]: deterministic counters, gauges,
+//!    and fixed log-bucketed histograms with Prometheus text exposition
+//!    (`fat serve` / `fat loadgen --metrics-out`), plus the derived
+//!    per-window stall attribution ([`StallAttribution`]) the
+//!    [`super::engine::TraceReport`] summarizes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::error::{ensure, Result};
+use crate::minijson::{self, Json};
+
+/// `pid` of the engine/coordinator process in the trace (fleet chips use
+/// their ordinal).
+pub const COORD_PID: u32 = u32::MAX;
+
+/// `tid` of the fused-window track on the coordinator process (request
+/// lifecycle tracks use the request id).
+pub const WINDOW_TID: u32 = u32::MAX;
+
+/// One trace event on the simulated clock.  `phase` is the Chrome
+/// trace-event phase: `'X'` (complete span, `dur_ns` long) or `'i'`
+/// (instant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category: "request", "window", "stage", "leg", "failover".
+    pub cat: &'static str,
+    pub phase: char,
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_ns: f64,
+    pub dur_ns: f64,
+    /// Extra key/values rendered into the event's `args` object.
+    pub args: Vec<(&'static str, String)>,
+}
+
+impl TraceEvent {
+    pub fn span(
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        ts_ns: f64,
+        dur_ns: f64,
+    ) -> Self {
+        Self { name: name.into(), cat, phase: 'X', pid, tid, ts_ns, dur_ns, args: Vec::new() }
+    }
+
+    pub fn instant(
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        ts_ns: f64,
+    ) -> Self {
+        Self { name: name.into(), cat, phase: 'i', pid, tid, ts_ns, dur_ns: 0.0, args: Vec::new() }
+    }
+
+    /// Builder-style extra argument.
+    pub fn arg(mut self, key: &'static str, value: impl Into<String>) -> Self {
+        self.args.push((key, value.into()));
+        self
+    }
+}
+
+/// Where the serving stack sends its spans.  The default implementation
+/// is a no-op — recorders check [`TraceSink::enabled`] *before* building
+/// event names, so a disabled sink never allocates.
+pub trait TraceSink: Send + Sync {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn emit(&self, _ev: TraceEvent) {}
+}
+
+/// The disabled sink (default everywhere): nothing is recorded, nothing
+/// is allocated.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// An in-memory recording sink.  Share it as `Arc<TraceBuffer>` with the
+/// engine (the live `serve()` thread emits from another thread, hence
+/// the mutex); drain with [`TraceBuffer::snapshot`] after the run.
+#[derive(Debug, Default)]
+pub struct TraceBuffer {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("trace buffer lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy the recorded events (emission order).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.lock().expect("trace buffer lock").clone()
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&self, ev: TraceEvent) {
+        self.events.lock().expect("trace buffer lock").push(ev);
+    }
+}
+
+/// JSON string literal with the same escaping the bench records use.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Deterministic JSON number: Rust's shortest-roundtrip `f64` formatting
+/// is stable across runs and platforms, which is what makes the trace
+/// files byte-identical.  Non-finite values never reach the writer
+/// (simulated times are finite by construction); render them as 0 rather
+/// than emitting invalid JSON.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Render events as a Chrome/Perfetto trace-event JSON document.
+///
+/// Events are stably sorted by timestamp (emission order breaks ties),
+/// which gives every track a monotone `ts` sequence; metadata events
+/// name the processes ("chip N" / "engine") and tracks ("stage N" /
+/// "request N" / "windows") so the Perfetto UI reads like the fabric.
+/// `ts` and `dur` are **simulated nanoseconds**.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut ordered: Vec<&TraceEvent> = events.iter().collect();
+    // ts ascending; longer span first on ties, so a parent starting at
+    // the same instant as its first child sorts before it (the stable
+    // sort keeps emission order for exact ties)
+    ordered.sort_by(|a, b| a.ts_ns.total_cmp(&b.ts_ns).then(b.dur_ns.total_cmp(&a.dur_ns)));
+    let pids: BTreeSet<u32> = ordered.iter().map(|e| e.pid).collect();
+    let tracks: BTreeSet<(u32, u32)> = ordered.iter().map(|e| (e.pid, e.tid)).collect();
+
+    let mut s = String::with_capacity(256 + events.len() * 96);
+    s.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |s: &mut String, line: String| {
+        if !first {
+            s.push_str(",\n");
+        }
+        first = false;
+        s.push_str(&line);
+    };
+    for &pid in &pids {
+        let pname = if pid == COORD_PID { "engine".to_string() } else { format!("chip {pid}") };
+        push(
+            &mut s,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\"args\":{{\"name\":{}}}}}",
+                esc(&pname)
+            ),
+        );
+    }
+    for &(pid, tid) in &tracks {
+        let tname = if pid == COORD_PID {
+            if tid == WINDOW_TID {
+                "windows".to_string()
+            } else {
+                format!("request {tid}")
+            }
+        } else {
+            format!("stage {tid}")
+        };
+        push(
+            &mut s,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+\"args\":{{\"name\":{}}}}}",
+                esc(&tname)
+            ),
+        );
+    }
+    for ev in ordered {
+        let mut line = format!(
+            "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":{}",
+            esc(&ev.name),
+            esc(ev.cat),
+            ev.phase,
+            ev.pid,
+            ev.tid,
+            num(ev.ts_ns)
+        );
+        match ev.phase {
+            'X' => {
+                let _ = write!(line, ",\"dur\":{}", num(ev.dur_ns));
+            }
+            // instant events carry a scope instead of a duration
+            _ => line.push_str(",\"s\":\"t\""),
+        }
+        if !ev.args.is_empty() {
+            line.push_str(",\"args\":{");
+            for (i, (k, v)) in ev.args.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                let _ = write!(line, "{}:{}", esc(k), esc(v));
+            }
+            line.push('}');
+        }
+        line.push('}');
+        push(&mut s, line);
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+/// What [`validate_chrome_trace`] measured while checking a trace file.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Complete (`ph: "X"`) spans.
+    pub spans: usize,
+    /// Instant (`ph: "i"`) events.
+    pub instants: usize,
+    /// Distinct `(pid, tid)` tracks carrying events.
+    pub tracks: usize,
+}
+
+/// Structural validation of a Chrome trace-event JSON document — the
+/// self-check `--trace-out` runs before reporting success, and the CI
+/// smoke's gate: the document parses, every span has a finite `ts` and a
+/// non-negative `dur`, `ts` is monotone non-decreasing per `(pid, tid)`
+/// track, and spans on a track nest (a span starting inside an open span
+/// ends inside it too — the tree Perfetto renders).
+pub fn validate_chrome_trace(json: &str) -> Result<TraceSummary> {
+    // slack for f64 ulp noise when µs clocks are rescaled to ns: at a
+    // 1e12 ns timestamp one ulp is ~2.4e-4, so a fixed 1e-3 ns tolerance
+    // covers every realistic trace while staying far below visible scale
+    const EPS: f64 = 1e-3;
+    let doc = minijson::parse(json)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::error::anyhow!("trace document has no traceEvents array"))?;
+    let mut summary = TraceSummary::default();
+    // per-track state: last ts seen, stack of open span end times
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut open: BTreeMap<(u64, u64), Vec<f64>> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::error::anyhow!("event {i} has no ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        ensure!(ph == "X" || ph == "i", "event {i}: unsupported phase {ph:?}");
+        let field = |k: &str| -> Result<f64> {
+            ev.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::error::anyhow!("event {i} ({ph}) has no numeric {k}"))
+        };
+        let (pid, tid) = (field("pid")? as u64, field("tid")? as u64);
+        let ts = field("ts")?;
+        ensure!(ts >= 0.0, "event {i}: negative ts {ts}");
+        let track = (pid, tid);
+        if let Some(&prev) = last_ts.get(&track) {
+            ensure!(
+                ts >= prev - EPS,
+                "track ({pid},{tid}): ts went backwards at event {i} ({ts} after {prev})"
+            );
+        }
+        last_ts.insert(track, ts);
+        summary.events += 1;
+        if ph == "i" {
+            summary.instants += 1;
+            continue;
+        }
+        summary.spans += 1;
+        let dur = field("dur")?;
+        ensure!(dur >= 0.0, "event {i}: negative dur {dur}");
+        let stack = open.entry(track).or_default();
+        // close every span that ended before this one starts
+        while stack.last().is_some_and(|&end| end <= ts + EPS) {
+            stack.pop();
+        }
+        if let Some(&end) = stack.last() {
+            ensure!(
+                ts + dur <= end + EPS,
+                "track ({pid},{tid}): span at event {i} ([{ts}, {}]) escapes its \
+enclosing span (ends {end})",
+                ts + dur
+            );
+        }
+        stack.push(ts + dur);
+    }
+    summary.tracks = last_ts.len();
+    Ok(summary)
+}
+
+/// One deterministic log-bucketed histogram: powers-of-4 bucket bounds
+/// from 1 up (16 finite buckets ≈ 1 ns .. 1 s in ns, or 1 µs .. 18 min
+/// in µs) plus +Inf.  Fixed bounds — never data-dependent — so two
+/// identical runs expose identical text.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        let bounds: Vec<f64> = (0..16).map(|i| 4f64.powi(i)).collect();
+        let counts = vec![0; bounds.len() + 1];
+        Self { bounds, counts, sum: 0.0, count: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        let idx =
+            self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// Deterministic metrics registry with Prometheus text exposition.
+///
+/// Names are stored in [`BTreeMap`]s, so [`MetricsRegistry::expose`]
+/// renders in one fixed order regardless of update order; histograms use
+/// fixed log buckets ([`Histogram`]).  Interior-mutexed so the engine,
+/// the live serve thread, and the CLI can share one registry behind an
+/// `Arc` — updates are per *window*, never per MAC, so the lock is cold.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Registry>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&self, name: &str, v: f64) {
+        let mut r = self.inner.lock().expect("metrics lock");
+        *r.counters.entry(sanitize(name)).or_insert(0.0) += v;
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut r = self.inner.lock().expect("metrics lock");
+        r.gauges.insert(sanitize(name), v);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut r = self.inner.lock().expect("metrics lock");
+        r.hists.entry(sanitize(name)).or_default().observe(v);
+    }
+
+    /// Current counter value (0 when never touched) — for tests and
+    /// report summaries.
+    pub fn counter(&self, name: &str) -> f64 {
+        self.inner.lock().expect("metrics lock").counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner.lock().expect("metrics lock").gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Prometheus text exposition format, deterministically ordered.
+    pub fn expose(&self) -> String {
+        let r = self.inner.lock().expect("metrics lock");
+        let mut s = String::new();
+        for (name, v) in &r.counters {
+            let _ = writeln!(s, "# TYPE {name} counter\n{name} {}", num(*v));
+        }
+        for (name, v) in &r.gauges {
+            let _ = writeln!(s, "# TYPE {name} gauge\n{name} {}", num(*v));
+        }
+        for (name, h) in &r.hists {
+            let _ = writeln!(s, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => num(*b),
+                    None => "+Inf".to_string(),
+                };
+                let _ = writeln!(s, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(s, "{name}_sum {}\n{name}_count {}", num(h.sum), h.count);
+        }
+        s
+    }
+}
+
+/// Prometheus metric names: `[a-zA-Z0-9_:]`, anything else becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+/// Where a served request's time went, summed over a
+/// [`super::engine::TraceReport`]: queueing before dispatch, then the
+/// window's simulated legs (its shared metrics divided by the fused
+/// width, so each window is attributed once).  All fields in ns.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StallAttribution {
+    /// Admission → window dispatch.
+    pub queue_ns: f64,
+    /// CMA/SACU accumulation (latency minus every explicit leg).
+    pub compute_ns: f64,
+    /// Digital reduction units.
+    pub reduce_ns: f64,
+    /// DPU epilogue (BN + activation + pooling / attention scores).
+    pub dpu_ns: f64,
+    /// Inter-chip boundary legs and all-gathers.
+    pub xfer_ns: f64,
+    /// Failover weight reloads (recovery, not steady state).
+    pub reload_ns: f64,
+}
+
+impl StallAttribution {
+    pub fn total_ns(&self) -> f64 {
+        self.queue_ns + self.compute_ns + self.reduce_ns + self.dpu_ns + self.xfer_ns
+            + self.reload_ns
+    }
+
+    /// The dominant component's name (ties break toward the earlier
+    /// pipeline phase), or "idle" when nothing was recorded.
+    pub fn dominant(&self) -> &'static str {
+        let parts = [
+            ("queueing", self.queue_ns),
+            ("compute", self.compute_ns),
+            ("reduce", self.reduce_ns),
+            ("dpu", self.dpu_ns),
+            ("xfer", self.xfer_ns),
+            ("reload", self.reload_ns),
+        ];
+        let mut best = ("idle", 0.0f64);
+        for (name, v) in parts {
+            if v > best.1 {
+                best = (name, v);
+            }
+        }
+        best.0
+    }
+
+    /// One CLI line: percentages of the total, dominant first in reading
+    /// order.
+    pub fn summary(&self) -> String {
+        let total = self.total_ns();
+        if total <= 0.0 {
+            return "no served time to attribute".to_string();
+        }
+        let pct = |v: f64| 100.0 * v / total;
+        format!(
+            "queueing {:.1}% | compute {:.1}% | reduce {:.1}% | dpu {:.1}% | xfer {:.1}% \
+| reload {:.1}% (dominant: {})",
+            pct(self.queue_ns),
+            pct(self.compute_ns),
+            pct(self.reduce_ns),
+            pct(self.dpu_ns),
+            pct(self.xfer_ns),
+            pct(self.reload_ns),
+            self.dominant()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_buffer_records() {
+        assert!(!NullSink.enabled());
+        NullSink.emit(TraceEvent::instant("x", "request", 0, 0, 1.0)); // no-op
+        let buf = TraceBuffer::new();
+        assert!(buf.enabled());
+        assert!(buf.is_empty());
+        buf.emit(TraceEvent::span("s", "stage", 1, 2, 10.0, 5.0).arg("k", "v"));
+        assert_eq!(buf.len(), 1);
+        let evs = buf.snapshot();
+        assert_eq!(evs[0].name, "s");
+        assert_eq!(evs[0].args, vec![("k", "v".to_string())]);
+    }
+
+    fn demo_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::span("window 0", "window", COORD_PID, WINDOW_TID, 0.0, 100.0),
+            TraceEvent::span("stage0@chip0", "stage", 0, 0, 0.0, 40.0),
+            TraceEvent::span("compute", "leg", 0, 0, 0.0, 30.0),
+            TraceEvent::span("reduce", "leg", 0, 0, 30.0, 10.0),
+            TraceEvent::span("stage1@chip1", "stage", 1, 1, 45.0, 55.0),
+            TraceEvent::instant("reply", "request", COORD_PID, 7, 100.0),
+        ]
+    }
+
+    #[test]
+    fn chrome_writer_emits_valid_nesting_and_metadata() {
+        let json = chrome_trace_json(&demo_events());
+        let sum = validate_chrome_trace(&json).expect("valid trace");
+        assert_eq!(sum.spans, 5);
+        assert_eq!(sum.instants, 1);
+        assert_eq!(sum.events, 6);
+        assert_eq!(sum.tracks, 4);
+        assert!(json.contains("\"process_name\""), "{json}");
+        assert!(json.contains("chip 1"));
+        assert!(json.contains("\"engine\""));
+        assert!(json.contains("\"windows\""));
+        assert!(json.contains("request 7"));
+        assert!(json.contains("stage 0"));
+    }
+
+    #[test]
+    fn chrome_writer_is_byte_deterministic() {
+        let evs = demo_events();
+        assert_eq!(chrome_trace_json(&evs), chrome_trace_json(&evs));
+    }
+
+    #[test]
+    fn validator_rejects_broken_traces() {
+        // not JSON at all
+        assert!(validate_chrome_trace("not json").is_err());
+        // no traceEvents
+        assert!(validate_chrome_trace("{\"other\": 1}").is_err());
+        // negative duration
+        let bad = chrome_trace_json(&[TraceEvent::span("s", "stage", 0, 0, 5.0, -1.0)]);
+        assert!(validate_chrome_trace(&bad).is_err(), "negative dur must fail");
+        // a span escaping its enclosing span
+        let escape = chrome_trace_json(&[
+            TraceEvent::span("outer", "stage", 0, 0, 0.0, 10.0),
+            TraceEvent::span("inner", "leg", 0, 0, 5.0, 50.0),
+        ]);
+        assert!(validate_chrome_trace(&escape).is_err(), "non-nesting spans must fail");
+        // sibling spans that merely touch are fine
+        let siblings = chrome_trace_json(&[
+            TraceEvent::span("a", "leg", 0, 0, 0.0, 10.0),
+            TraceEvent::span("b", "leg", 0, 0, 10.0, 10.0),
+        ]);
+        assert!(validate_chrome_trace(&siblings).is_ok());
+    }
+
+    #[test]
+    fn histogram_uses_fixed_log_buckets() {
+        let mut h = Histogram::default();
+        h.observe(1.0); // le=1
+        h.observe(3.0); // le=4
+        h.observe(5.0); // le=16
+        h.observe(1e30); // +Inf
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1e30 + 9.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[2], 1);
+        assert_eq!(*h.counts.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn registry_exposes_prometheus_text_deterministically() {
+        let r = MetricsRegistry::new();
+        r.counter_add("fat_requests_served_total", 3.0);
+        r.counter_add("fat_requests_served_total", 2.0);
+        r.gauge_set("fat_queue_depth", 7.0);
+        r.observe("fat_request_latency_us", 3.0);
+        r.observe("fat_request_latency_us", 100.0);
+        assert_eq!(r.counter("fat_requests_served_total"), 5.0);
+        assert_eq!(r.gauge("fat_queue_depth"), 7.0);
+        let text = r.expose();
+        assert!(text.contains("# TYPE fat_requests_served_total counter"), "{text}");
+        assert!(text.contains("fat_requests_served_total 5"));
+        assert!(text.contains("# TYPE fat_queue_depth gauge"));
+        assert!(text.contains("fat_queue_depth 7"));
+        assert!(text.contains("fat_request_latency_us_bucket{le=\"4\"} 1"));
+        assert!(text.contains("fat_request_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("fat_request_latency_us_count 2"));
+        // byte-identical on re-exposition and across update orderings
+        assert_eq!(text, r.expose());
+        let r2 = MetricsRegistry::new();
+        r2.observe("fat_request_latency_us", 100.0);
+        r2.gauge_set("fat_queue_depth", 7.0);
+        r2.observe("fat_request_latency_us", 3.0);
+        r2.counter_add("fat_requests_served_total", 5.0);
+        assert_eq!(text, r2.expose());
+        // names are sanitized, never emitted raw
+        r.counter_add("bad name{x}", 1.0);
+        assert!(r.expose().contains("bad_name_x_ 1"));
+    }
+
+    #[test]
+    fn stall_attribution_summarizes_and_names_the_dominant() {
+        let a = StallAttribution {
+            queue_ns: 10.0,
+            compute_ns: 70.0,
+            reduce_ns: 5.0,
+            dpu_ns: 5.0,
+            xfer_ns: 10.0,
+            reload_ns: 0.0,
+        };
+        assert_eq!(a.total_ns(), 100.0);
+        assert_eq!(a.dominant(), "compute");
+        assert!(a.summary().contains("compute 70.0%"), "{}", a.summary());
+        assert_eq!(StallAttribution::default().dominant(), "idle");
+        assert_eq!(StallAttribution::default().summary(), "no served time to attribute");
+    }
+}

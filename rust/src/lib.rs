@@ -308,6 +308,42 @@
 //! recovery counter at zero.  CLI: `fat serve --mode hybrid
 //! --inject-fail-stop chip:req --spares n` and `fat loadgen --chip-mtbf
 //! windows --spares n`; see `benches/fault_tolerance.rs`.
+//!
+//! ## Observability: deterministic tracing and metrics
+//!
+//! [`coordinator::telemetry`] instruments the whole serving stack on the
+//! **simulated** clock, so telemetry is as reproducible as the serving
+//! results themselves:
+//!
+//! - **Span tracing** — every request's lifecycle (`admit` → `queue` →
+//!   window dispatch → per-stage `compute` / `reduce` / `dpu` /
+//!   `all_gather` legs → `reply` / `shed` / `failed`) plus every
+//!   failover event (`chip_failed` / `watchdog_fire` instants,
+//!   `quarantine`, `weight_reload`, `replan`, `sdc_retry`) is recorded
+//!   through the [`coordinator::telemetry::TraceSink`] trait.  The
+//!   default [`coordinator::telemetry::NullSink`] reports
+//!   `enabled() == false`, so the hot path never formats an event —
+//!   spans are a *read-only derivation* of the already-charged
+//!   [`coordinator::metrics::ChipMetrics`], and an armed run returns a
+//!   report byte-identical to an untraced one (bench-gated).
+//! - **Chrome/Perfetto export** —
+//!   [`coordinator::telemetry::chrome_trace_json`] renders a
+//!   [`coordinator::telemetry::TraceBuffer`] as trace-event JSON
+//!   (pid = fleet chip, tid = stage / request, `ts`/`dur` = simulated
+//!   ns); [`coordinator::telemetry::validate_chrome_trace`] re-parses
+//!   it with [`minijson`] and checks per-track timestamp monotonicity
+//!   and span nesting.  Identical runs export byte-identical files.
+//! - **Metrics registry** — [`coordinator::telemetry::MetricsRegistry`]
+//!   holds `fat_*` counters, gauges, and fixed log-bucket histograms
+//!   with deterministic Prometheus text exposition, and
+//!   `TraceReport::stall_attribution` derives where served requests'
+//!   time went (queueing vs compute vs reduce vs dpu vs transfer vs
+//!   reload).
+//!
+//! CLI: `fat loadgen --trace-out run.json --metrics-out run.prom` and
+//! `fat serve --mode hybrid [--inject-fail-stop chip:req] --trace-out
+//! f.json` (both self-validate the trace before writing); see
+//! `examples/trace_export.rs` and `benches/telemetry.rs`.
 
 pub mod addition;
 pub mod array;
@@ -318,6 +354,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod mapping;
+pub mod minijson;
 pub mod nn;
 pub mod report;
 pub mod runtime;

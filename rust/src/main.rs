@@ -12,6 +12,9 @@ use fat_imc::coordinator::reliability::{poisson_chip_failures, ChipFault};
 use fat_imc::coordinator::server::{latency_percentiles, InferenceServer, Request, ServingMode};
 use fat_imc::coordinator::session::{op_wreg_footprint, ChipSession};
 use fat_imc::coordinator::sharding::{PipelineSession, ShardPlan};
+use fat_imc::coordinator::telemetry::{
+    chrome_trace_json, validate_chrome_trace, MetricsRegistry, TraceBuffer,
+};
 use fat_imc::coordinator::tensor_parallel::{
     plan_auto, profile_layers, HybridPlan, TensorParallelSession,
 };
@@ -37,6 +40,34 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Export what a traced run collected: self-validate the Chrome trace
+/// before writing it (an invalid trace is a bug in the instrumentation,
+/// not a file for the user), then write the Prometheus exposition.
+fn export_telemetry(
+    buf: Option<&std::sync::Arc<TraceBuffer>>,
+    registry: Option<&std::sync::Arc<MetricsRegistry>>,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> Result<()> {
+    if let (Some(buf), Some(path)) = (buf, trace_out) {
+        let json = chrome_trace_json(&buf.snapshot());
+        let s = validate_chrome_trace(&json)
+            .map_err(|e| fat_imc::anyhow!("exported trace failed self-validation: {e:#}"))?;
+        std::fs::write(path, &json).map_err(|e| fat_imc::anyhow!("writing {path}: {e}"))?;
+        println!(
+            "  trace: {} events ({} spans, {} instants) on {} tracks -> {path} \
+(open in ui.perfetto.dev)",
+            s.events, s.spans, s.instants, s.tracks
+        );
+    }
+    if let (Some(reg), Some(path)) = (registry, metrics_out) {
+        let text = reg.expose();
+        std::fs::write(path, &text).map_err(|e| fat_imc::anyhow!("writing {path}: {e}"))?;
+        println!("  metrics: {} lines of Prometheus text -> {path}", text.lines().count());
+    }
+    Ok(())
 }
 
 /// `--fidelity ledger|bit-serial`; `None` keeps the config's default.
@@ -356,6 +387,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.allow(&[
         "requests", "workers", "batch", "input", "scale", "sparsity", "classes", "mode",
         "shards", "chips", "max-batch", "fidelity", "inject-fail-stop", "spares",
+        "trace-out", "metrics-out",
     ])?;
     let n_req = args.get_usize("requests", 16)?.max(1);
     let workers = args.get_usize("workers", 4)?;
@@ -372,6 +404,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(f) = fidelity_flag(args)? {
         chip_cfg.fidelity = f;
     }
+    // telemetry rides the engine fabric, which only exists for hybrid
+    // plans (the replicated/pipelined servers have no trace hooks)
+    let trace_out = args.get("trace-out");
+    let metrics_out = args.get("metrics-out");
+    if (trace_out.is_some() || metrics_out.is_some())
+        && args.get_or("mode", "replicated") != "hybrid"
+    {
+        fat_imc::bail!("--trace-out/--metrics-out need --mode hybrid (telemetry rides the engine fabric)");
+    }
     // fault injection rides the fault-tolerant engine path, which only
     // exists for hybrid plans (failover re-plans over the fleet)
     if let Some(s) = args.get("inject-fail-stop") {
@@ -380,7 +421,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let (chip, fault) = ChipFault::parse_fail_stop(s)?;
         let spares = args.get_usize("spares", 0)?;
-        return serve_fault_tolerant(chip_cfg, spec, chips, max_batch, n_req, spares, chip, fault);
+        return serve_on_engine(
+            chip_cfg,
+            spec,
+            chips,
+            max_batch,
+            n_req,
+            spares,
+            vec![ArmedFault { chip, fault }],
+            trace_out,
+            metrics_out,
+        );
     }
     if args.get("spares").is_some() {
         fat_imc::bail!("--spares only matters with --inject-fail-stop (idle spares for failover)");
@@ -410,6 +461,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.get("workers").is_some() || args.get("shards").is_some() {
                 fat_imc::bail!(
                     "hybrid mode plans its own stages from --chips; drop --workers/--shards"
+                );
+            }
+            // a traced serve rides the engine fabric instead of the
+            // threaded InferenceServer (same auto plan, same outputs);
+            // its windows land on the simulated clock, so the trace is
+            // deterministic even though arrivals here are wall-clock
+            if trace_out.is_some() || metrics_out.is_some() {
+                return serve_on_engine(
+                    chip_cfg, spec, chips, max_batch, n_req, 0, Vec::new(), trace_out,
+                    metrics_out,
                 );
             }
             let plan = plan_auto(&chip_cfg, &spec, chips, &HwParams::default())?;
@@ -502,31 +563,37 @@ naive path would have paid the {:.1} us load {n_req} more times",
     Ok(())
 }
 
-/// `fat serve --mode hybrid --inject-fail-stop chip:req [--spares n]`:
-/// mount the fault-tolerant engine live, kill the named fleet chip at the
-/// named window, and prove the serving contract under failure — every
-/// submitted request gets exactly one reply (served / shed / failed),
-/// served outputs stay byte-identical to a solo oracle, and the recovery
-/// pays the real weight-reload cost.
+/// `fat serve --mode hybrid` on the live engine fabric — the path behind
+/// `--inject-fail-stop chip:req [--spares n]` (kill the named fleet chip
+/// at the named window and prove the serving contract under failure:
+/// exactly one reply per request, served outputs byte-identical to a solo
+/// oracle, recovery paying the real weight-reload cost) and behind
+/// `--trace-out`/`--metrics-out` (same engine, no faults armed, telemetry
+/// exported on the simulated clock).
 #[allow(clippy::too_many_arguments)]
-fn serve_fault_tolerant(
+fn serve_on_engine(
     cfg: ChipConfig,
     spec: ModelSpec,
     chips: usize,
     max_batch: usize,
     n_req: usize,
     spares: usize,
-    chip: usize,
-    fault: ChipFault,
+    faults: Vec<ArmedFault>,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
 ) -> Result<()> {
     let hw = HwParams::default();
     let plan = plan_auto(&cfg, &spec, chips, &hw)?;
     print_hybrid_plan(&spec, &plan, chips);
-    println!(
-        "arming {fault:?} on fleet chip {chip} ({} plan chips + {spares} spares)",
-        plan.chips()
-    );
-    let engine = ServingEngine::with_fault_tolerance(
+    for f in &faults {
+        println!(
+            "arming {:?} on fleet chip {} ({} plan chips + {spares} spares)",
+            f.fault,
+            f.chip,
+            plan.chips()
+        );
+    }
+    let mut engine = ServingEngine::with_fault_tolerance(
         cfg,
         spec.clone(),
         plan,
@@ -534,8 +601,16 @@ fn serve_fault_tolerant(
         SchedPolicy::SloEdf,
         EngineConfig { max_batch, queue_windows: 4, queue_depth: Some(n_req.max(1)) },
         FailoverConfig { spares, ..Default::default() },
-        vec![ArmedFault { chip, fault }],
+        faults,
     )?;
+    let trace_buf = trace_out.map(|_| std::sync::Arc::new(TraceBuffer::new()));
+    let registry = metrics_out.map(|_| std::sync::Arc::new(MetricsRegistry::new()));
+    if let Some(buf) = &trace_buf {
+        engine.set_trace_sink(buf.clone());
+    }
+    if let Some(reg) = &registry {
+        engine.set_metrics_registry(reg.clone());
+    }
     let server = engine.serve();
 
     let mut rng = Rng::new(7);
@@ -596,6 +671,7 @@ fn serve_fault_tolerant(
         );
     }
     println!("  served outputs byte-identical to the solo oracle");
+    export_telemetry(trace_buf.as_ref(), registry.as_ref(), trace_out, metrics_out)?;
     println!("serve OK (fault-tolerant)");
     Ok(())
 }
@@ -609,7 +685,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     args.allow(&[
         "rate", "load", "duration", "seed", "window", "queue-windows", "deadline-us",
         "interactive", "chips", "fidelity", "batch", "input", "scale", "sparsity", "classes",
-        "chip-mtbf", "spares",
+        "chip-mtbf", "spares", "trace-out", "metrics-out",
     ])?;
     let batch = args.get_usize("batch", 1)?;
     let input = args.get_usize("input", 16)?;
@@ -721,6 +797,18 @@ seed {seed:#x}",
         }
     };
     let mut engine = build(SchedPolicy::SloEdf)?;
+    // telemetry on the slo-edf side only: the trace replays on the
+    // simulated clock, so identical seeds give byte-identical files
+    let trace_out = args.get("trace-out");
+    let metrics_out = args.get("metrics-out");
+    let trace_buf = trace_out.map(|_| std::sync::Arc::new(TraceBuffer::new()));
+    let registry = metrics_out.map(|_| std::sync::Arc::new(MetricsRegistry::new()));
+    if let Some(buf) = &trace_buf {
+        engine.set_trace_sink(buf.clone());
+    }
+    if let Some(reg) = &registry {
+        engine.set_metrics_registry(reg.clone());
+    }
     if engine.effective_batch() != window {
         println!(
             "  fused window clamped to {} (register capacity), queue depth {}",
@@ -802,6 +890,13 @@ fifo-dequeue {} (all accounted, none hung)",
         fifo_report.goodput_rps(),
         engine_report.goodput_rps() / fifo_report.goodput_rps().max(1e-12)
     );
+    if trace_out.is_some() || metrics_out.is_some() {
+        println!(
+            "\nstall attribution (slo-edf): {}",
+            engine_report.stall_attribution().summary()
+        );
+        export_telemetry(trace_buf.as_ref(), registry.as_ref(), trace_out, metrics_out)?;
+    }
     println!("loadgen OK");
     Ok(())
 }

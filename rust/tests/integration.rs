@@ -802,6 +802,65 @@ fn cli_workload_smoke() {
 }
 
 #[test]
+fn committed_bench_baselines_round_trip_as_json() {
+    // Every committed `BENCH_*.baseline.json` must stay parseable as
+    // strict JSON (the line-oriented `load_baseline` reader is forgiving;
+    // this gate is not) and structurally sound: a non-empty
+    // `measurements` array whose entries carry a string label and a
+    // numeric median.  `schema_version` is optional — the committed
+    // baselines predate versioning and read as version 1 — but when
+    // present it must not exceed the writer's version.
+    use fat_imc::bench_harness::{load_baseline, BenchRun, BENCH_SCHEMA_VERSION};
+    use fat_imc::minijson;
+
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(root).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        if !(name.starts_with("BENCH_") && name.ends_with(".baseline.json")) {
+            continue;
+        }
+        seen += 1;
+        let path = format!("{root}{name}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = minijson::parse(&text).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e:#}"));
+        assert!(doc.get("name").and_then(|v| v.as_str()).is_some(), "{name}: missing name");
+        let version =
+            doc.get("schema_version").and_then(|v| v.as_f64()).unwrap_or(1.0) as u64;
+        assert!(version <= BENCH_SCHEMA_VERSION, "{name}: schema_version {version} too new");
+        let ms = doc
+            .get("measurements")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{name}: missing measurements array"));
+        assert!(!ms.is_empty(), "{name}: no measurements");
+        for m in ms {
+            let label = m
+                .get("label")
+                .and_then(|v| v.as_str())
+                .unwrap_or_else(|| panic!("{name}: measurement without label"));
+            assert!(
+                m.get("median_ns").and_then(|v| v.as_f64()).is_some(),
+                "{name}: {label}: median_ns not numeric"
+            );
+        }
+        // the quick line-oriented reader and the strict parser must agree
+        // on what the baseline contains
+        let quick = load_baseline(&path).unwrap_or_else(|| panic!("{name}: load_baseline"));
+        assert_eq!(quick.len(), ms.len(), "{name}: reader disagreement");
+    }
+    assert!(seen >= 4, "expected the committed baselines, found {seen}");
+
+    // and a freshly written record round-trips at the current version
+    let mut run = BenchRun::new("roundtrip");
+    run.check("structural", true, String::new());
+    let doc = minijson::parse(&run.to_json()).expect("fresh record parses");
+    assert_eq!(
+        doc.get("schema_version").and_then(|v| v.as_f64()),
+        Some(BENCH_SCHEMA_VERSION as f64)
+    );
+}
+
+#[test]
 fn cli_loadgen_smoke() {
     // `fat loadgen` replays one deterministic Poisson trace through the
     // SLO engine and the dequeue-fusion baseline; its in-binary gates
